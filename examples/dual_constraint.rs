@@ -1,0 +1,67 @@
+//! Dual-constraint showdown: run the paper's full method lineup on one
+//! scenario and print the Fig 5/6-style comparison. Scenario selectable
+//! via env (no CLI parsing in examples):
+//!
+//! ```sh
+//! cargo run --release --example dual_constraint                 # NX / YOLO
+//! CORAL_DEVICE=orin CORAL_MODEL=retinanet \
+//!   cargo run --release --example dual_constraint               # hardest case
+//! ```
+
+use coral::device::DeviceKind;
+use coral::experiments::runner::{aggregate, run_method, MethodKind};
+use coral::experiments::scenarios::DUAL_SCENARIOS;
+use coral::models::ModelKind;
+use coral::optimizer::Constraints;
+use coral::util::table;
+
+fn main() {
+    let device = std::env::var("CORAL_DEVICE")
+        .ok()
+        .and_then(|s| DeviceKind::parse(&s))
+        .unwrap_or(DeviceKind::XavierNx);
+    let model = std::env::var("CORAL_MODEL")
+        .ok()
+        .and_then(|s| ModelKind::parse(&s))
+        .unwrap_or(ModelKind::Yolo);
+    let s = DUAL_SCENARIOS
+        .iter()
+        .find(|s| s.device == device && s.model == model)
+        .expect("scenario");
+    let cons = Constraints::dual(s.target_fps, s.budget_mw);
+
+    println!(
+        "Dual-constraint scenario: {device} / {model} — target {} fps, budget {} mW",
+        s.target_fps, s.budget_mw
+    );
+    println!("(10 online iterations per method, 10 seeds; ORACLE = exhaustive)\n");
+
+    let mut rows = Vec::new();
+    for kind in MethodKind::PAPER_LINEUP {
+        let seeds = if kind == MethodKind::Oracle { 1 } else { 10 };
+        let outs: Vec<_> = (0..seeds)
+            .map(|i| run_method(kind, device, model, cons, 0xE0 + i))
+            .collect();
+        let a = aggregate(&outs);
+        rows.push(vec![
+            a.method.to_string(),
+            format!("{:.1}", a.mean_fps),
+            format!("{:.2}", a.mean_mw / 1000.0),
+            format!("{:.0}%", a.feasible_rate * 100.0),
+            format!("{:.0}", a.mean_online_windows),
+            a.offline_windows.to_string(),
+        ]);
+    }
+    print!(
+        "{}",
+        table::render(
+            &["method", "fps", "W", "meets both", "online", "offline"],
+            &rows
+        )
+    );
+    println!(
+        "\npaper's story: CORAL + ORACLE satisfy both constraints; ALERT overshoots\n\
+         the power budget; ALERT-Online's random trials miss the narrow feasible\n\
+         region; presets fail one constraint each."
+    );
+}

@@ -1,0 +1,120 @@
+//! Fleet sweep: CORAL across the whole fleet — every (device, model)
+//! dual-constraint scenario × many seeds — reporting convergence
+//! statistics (feasibility rate, iterations-to-first-feasible, search
+//! cost), plus a multi-model Router demo when artifacts are present.
+//!
+//! ```sh
+//! cargo run --release --example fleet_sweep
+//! ```
+
+use std::time::Duration;
+
+use coral::coordinator::{BatcherConfig, Router, Server, ServerConfig};
+use coral::device::Device;
+use coral::experiments::scenarios::DUAL_SCENARIOS;
+use coral::models::{artifacts_dir, Manifest, ModelKind};
+use coral::optimizer::{Constraints, CoralOptimizer, Optimizer};
+use coral::runtime::PjrtRuntime;
+use coral::util::table;
+use coral::workload::VideoSource;
+
+fn main() -> anyhow::Result<()> {
+    const SEEDS: u64 = 20;
+    println!("CORAL fleet sweep — all 6 dual-constraint scenarios × {SEEDS} seeds\n");
+
+    let mut rows = Vec::new();
+    for s in DUAL_SCENARIOS {
+        let cons = Constraints::dual(s.target_fps, s.budget_mw);
+        let mut feasible = 0u64;
+        let mut first_feasible_iters = Vec::new();
+        let mut cost_s = 0.0;
+        for seed in 0..SEEDS {
+            let mut dev = Device::new(s.device, s.model, 0xF1EE7 + seed);
+            let mut opt = CoralOptimizer::new(dev.space().clone(), cons, seed);
+            let mut first = None;
+            for i in 0..10 {
+                let cfg = opt.propose();
+                let m = dev.run(cfg);
+                opt.observe(cfg, m.throughput_fps, m.power_mw);
+                if first.is_none() && cons.feasible(m.throughput_fps, m.power_mw) {
+                    first = Some(i + 1);
+                }
+            }
+            if opt.best().map(|b| b.feasible).unwrap_or(false) {
+                feasible += 1;
+            }
+            if let Some(f) = first {
+                first_feasible_iters.push(f as f64);
+            }
+            cost_s += dev.sim_clock_s();
+        }
+        let mean_first = if first_feasible_iters.is_empty() {
+            f64::NAN
+        } else {
+            first_feasible_iters.iter().sum::<f64>() / first_feasible_iters.len() as f64
+        };
+        rows.push(vec![
+            s.device.name().to_string(),
+            s.model.name().to_string(),
+            format!("{}/{}", s.target_fps, s.budget_mw),
+            format!("{:.0}%", feasible as f64 / SEEDS as f64 * 100.0),
+            format!("{mean_first:.1}"),
+            format!("{:.0}s", cost_s / SEEDS as f64),
+        ]);
+    }
+    print!(
+        "{}",
+        table::render(
+            &["device", "model", "target/budget", "feasible", "iters to hit", "search cost"],
+            &rows
+        )
+    );
+
+    // --- Router demo: one box serving all three models -----------------
+    match Manifest::load(&artifacts_dir()) {
+        Err(e) => println!("\n(router demo skipped — no artifacts: {e})"),
+        Ok(manifest) => {
+            println!("\nRouter demo: mixed traffic across all three detectors");
+            let rt = PjrtRuntime::cpu()?;
+            let mut router = Router::new();
+            let mut side = 0;
+            for model in ModelKind::ALL {
+                let m = rt.load_model(&manifest, model)?;
+                side = m.input_side();
+                router.register(
+                    model,
+                    Server::new(
+                        m,
+                        ServerConfig {
+                            concurrency: 1,
+                            batcher: BatcherConfig {
+                                max_batch: 2,
+                                max_wait: Duration::from_millis(4),
+                            },
+                        },
+                    ),
+                );
+            }
+            let video = VideoSource::new(side, 30, 3);
+            let total = 45u64;
+            let mut sent = 0u64;
+            let mut done = 0u64;
+            while done < total {
+                if sent < total {
+                    let model = ModelKind::ALL[(sent % 3) as usize];
+                    if router.route(model, sent, video.frame(sent as usize))? {
+                        sent += 1;
+                    }
+                }
+                done += router.tick().len() as u64;
+                if done < total {
+                    std::thread::sleep(Duration::from_micros(200));
+                }
+            }
+            for (model, count) in router.shutdown() {
+                println!("  {model}: {count} frames served");
+            }
+        }
+    }
+    Ok(())
+}

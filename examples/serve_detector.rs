@@ -1,0 +1,102 @@
+//! End-to-end serving driver (the repo's E2E validation, DESIGN.md §5).
+//!
+//! Proves all three layers compose on a real workload:
+//!
+//! 1. loads the AOT-compiled JAX/Pallas YOLO detector (`make artifacts`),
+//! 2. serves the synthetic traffic video through the full coordinator
+//!    (router-less single-model path: batcher → worker pool → PJRT), and
+//! 3. runs CORAL *live*: each iteration applies a hardware configuration
+//!    (concurrency level takes effect on the real worker pool; DVFS on
+//!    the Jetson device model that supplies the power/fps telemetry), and
+//!    reports the real serving metrics next to the simulated telemetry.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example serve_detector
+//! ```
+//!
+//! The recorded run lives in EXPERIMENTS.md §E2E.
+
+use std::time::Duration;
+
+use coral::coordinator::{BatcherConfig, Server, ServerConfig};
+use coral::device::{Device, DeviceKind};
+use coral::models::{artifacts_dir, Manifest, ModelKind};
+use coral::optimizer::{Constraints, CoralOptimizer, Optimizer};
+use coral::runtime::PjrtRuntime;
+use coral::workload::VideoSource;
+
+fn main() -> anyhow::Result<()> {
+    coral::util::logging::init();
+    let model = ModelKind::Yolo;
+    let device = DeviceKind::XavierNx;
+    let cons = Constraints::dual(30.0, 6500.0);
+
+    // --- Layer 1+2: AOT artifacts → PJRT executables --------------------
+    let manifest = Manifest::load(&artifacts_dir())
+        .map_err(|e| anyhow::anyhow!("{e} — run `make artifacts` first"))?;
+    let rt = PjrtRuntime::cpu()?;
+    println!("PJRT platform: {}", rt.platform());
+    let model_rt = rt.load_model(&manifest, model)?;
+    let side = model_rt.input_side();
+    println!(
+        "loaded {} batch variants of {model} ({}x{side} input)\n",
+        model_rt.batch_sizes().len(),
+        side
+    );
+
+    // --- Layer 3: serving stack + device telemetry ----------------------
+    let mut server = Server::new(
+        model_rt,
+        ServerConfig {
+            concurrency: 1,
+            batcher: BatcherConfig { max_batch: 4, max_wait: Duration::from_millis(5) },
+        },
+    );
+    let mut video = VideoSource::new(side, 30, 0xCAFE);
+    let mut jetson = Device::new(device, model, 7);
+    let mut opt = CoralOptimizer::new(jetson.space().clone(), cons, 7);
+
+    println!("CORAL tuning the live server ({device} telemetry, 30 fps / 6.5 W):");
+    const FRAMES_PER_WINDOW: u64 = 60;
+    for i in 0..10 {
+        let cfg = opt.propose();
+        // Apply the configuration: concurrency drives the real worker
+        // pool; DVFS drives the Jetson device model.
+        server.set_concurrency(cfg.concurrency as usize);
+        let m = jetson.run(cfg);
+        let report = server.run_closed_loop(&mut video, FRAMES_PER_WINDOW, 8)?;
+        opt.observe(cfg, m.throughput_fps, m.power_mw);
+        println!(
+            "  it{i:>2}: {cfg}\n        jetson: {:5.1} fps @ {:4.2} W {} | local CPU: {:5.1} fps, p50 {:5.1} ms, p99 {:5.1} ms, batch {:.2}",
+            m.throughput_fps,
+            m.power_mw / 1000.0,
+            if m.failed.is_some() {
+                "FAILED"
+            } else if cons.feasible(m.throughput_fps, m.power_mw) {
+                "ok    "
+            } else {
+                "infeas"
+            },
+            report.throughput_fps,
+            report.latency_p50_ms,
+            report.latency_p99_ms,
+            report.mean_batch,
+        );
+    }
+
+    let best = opt.best().expect("observed");
+    println!(
+        "\nCORAL chose {} -> {:.1} fps @ {:.2} W (feasible: {})",
+        best.config,
+        best.throughput_fps,
+        best.power_mw / 1000.0,
+        best.feasible
+    );
+
+    // Steady-state serving at the chosen configuration.
+    server.set_concurrency(best.config.concurrency as usize);
+    let report = server.run_closed_loop(&mut video, 300, 8)?;
+    println!("steady state (300 frames): {report}");
+    println!("total served: {}", server.shutdown());
+    Ok(())
+}

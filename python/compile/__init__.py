@@ -1,0 +1,5 @@
+"""Build-time Python package: L1 Pallas kernels, L2 JAX detector, AOT lowering.
+
+Never imported on the serving path — `make artifacts` runs once and the
+rust binary consumes artifacts/*.hlo.txt + artifacts/manifest.json.
+"""

@@ -1,0 +1,114 @@
+"""AOT lowering: JAX detector forward → HLO text artifacts for the rust runtime.
+
+Interchange is HLO **text**, not a serialized HloModuleProto: jax ≥ 0.5
+emits protos with 64-bit instruction ids which the image's xla_extension
+0.5.1 (behind the `xla` rust crate) rejects (`proto.id() <= INT_MAX`); the
+text parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md). Lowered with ``return_tuple=True`` — the rust
+side unwraps a 2-tuple (boxes, scores).
+
+Emits one artifact per (variant, batch) plus ``manifest.json`` describing
+every artifact (shapes, param counts, FLOPs) for the rust model registry.
+
+Usage:  cd python && python -m compile.aot --out-dir ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+import time
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# Batch variants the rust dynamic batcher can dispatch to. Keep the list
+# short: each entry is a separate XLA compile at rust start-up.
+BATCH_SIZES = (1, 2, 4, 8)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (the 0.5.1-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_variant(variant: str, batch: int, seed: int = 0,
+                  block_profile: str = "cpu") -> str:
+    fn, in_spec = model.build_forward(variant, batch, seed=seed,
+                                      block_profile=block_profile)
+    return to_hlo_text(jax.jit(fn).lower(in_spec))
+
+
+def build_all(out_dir: str, variants=model.VARIANTS, batches=BATCH_SIZES,
+              seed: int = 0, verbose: bool = True,
+              block_profile: str = "cpu") -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {
+        "format": "hlo-text",
+        "input_layout": "NHWC_f32_0to1",
+        "outputs": ["boxes[B,P,4]", "scores[B,P]"],
+        "seed": seed,
+        "block_profile": block_profile,
+        "artifacts": [],
+    }
+    for variant in variants:
+        spec = model.SPECS[variant]
+        for batch in batches:
+            t0 = time.time()
+            text = lower_variant(variant, batch, seed, block_profile)
+            name = f"{variant}_b{batch}.hlo.txt"
+            path = os.path.join(out_dir, name)
+            with open(path, "w") as f:
+                f.write(text)
+            entry = {
+                "model": variant,
+                "batch": batch,
+                "file": name,
+                "input_shape": [batch, spec.input_size, spec.input_size, 3],
+                "predictions": spec.num_predictions,
+                "num_classes": spec.num_classes,
+                "param_count": model.param_count(spec),
+                "flops_per_image": model.flops_per_image(spec),
+                "sha256": hashlib.sha256(text.encode()).hexdigest(),
+                "bytes": len(text),
+            }
+            manifest["artifacts"].append(entry)
+            if verbose:
+                print(
+                    f"  {name}: {len(text)/1e6:.2f} MB HLO text, "
+                    f"{entry['param_count']:,} params, "
+                    f"{time.time()-t0:.1f}s",
+                    file=sys.stderr,
+                )
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--variants", nargs="*", default=list(model.VARIANTS))
+    ap.add_argument("--batches", nargs="*", type=int, default=list(BATCH_SIZES))
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--block-profile", choices=list(model.BLOCK_PROFILES),
+                    default="cpu",
+                    help="GEMM tile profile: tpu=MXU 128^3 (deployment), "
+                         "cpu=interpret-friendly huge blocks (this runtime)")
+    args = ap.parse_args()
+    manifest = build_all(args.out_dir, args.variants, tuple(args.batches), args.seed,
+                         block_profile=args.block_profile)
+    print(f"wrote {len(manifest['artifacts'])} artifacts to {args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,13 @@
+"""L1 Pallas kernels for the CORAL detector models.
+
+Kernels are authored for a TPU-shaped machine (MXU matmul tiles, VMEM
+block streaming via BlockSpec) but are always lowered with
+``interpret=True`` so the resulting HLO runs on any PJRT backend,
+including the rust CPU client on the serving path.
+"""
+
+from .fused_gemm import fused_gemm, DEFAULT_BLOCK
+from .boxdecode import box_decode
+from . import ref
+
+__all__ = ["fused_gemm", "box_decode", "ref", "DEFAULT_BLOCK"]

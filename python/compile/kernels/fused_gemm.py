@@ -1,0 +1,156 @@
+"""Fused GEMM + bias + activation Pallas kernel.
+
+This is the compute hot-spot of the detector models: every convolution is
+lowered to an im2col patch-matrix times filter-matrix GEMM, so one kernel
+serves the whole backbone and head.
+
+TPU adaptation of the paper's CUDA/TensorRT conv path (DESIGN.md
+§Hardware-Adaptation):
+
+* the GEMM targets the MXU systolic array — tiles default to 128×128,
+  the MXU native shape, instead of tensor-core WMMA fragments;
+* ``BlockSpec`` expresses the HBM→VMEM streaming schedule that a CUDA
+  kernel would express with threadblocks + shared memory: for grid step
+  ``(i, j, k)`` an LHS row panel ``(bm, bk)`` and an RHS col panel
+  ``(bk, bn)`` are resident in VMEM while the f32 accumulator tile
+  ``(bm, bn)`` stays pinned across the ``k`` loop;
+* bias add + activation (SiLU / ReLU) are fused into the epilogue on the
+  VPU, saving one HBM round-trip of the activation tensor.
+
+Lowered with ``interpret=True``: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, so the kernel is emulated as plain HLO (grid → loop). Real
+TPU efficiency is estimated from VMEM footprint + MXU occupancy in
+EXPERIMENTS.md §Perf.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# MXU-native tile. On real TPU hardware (bm, bn) = (128, 128) maps one
+# accumulator tile onto the systolic array; bk = 128 keeps the K panels
+# lane-aligned (8×128 VPU lanes).
+DEFAULT_BLOCK: Tuple[int, int, int] = (128, 128, 128)
+
+_ACTS = ("none", "relu", "silu")
+
+
+def _apply_act(y: jax.Array, act: str) -> jax.Array:
+    if act == "relu":
+        return jnp.maximum(y, 0.0)
+    if act == "silu":
+        return y * jax.nn.sigmoid(y)
+    return y
+
+
+def _gemm_kernel(x_ref, w_ref, b_ref, o_ref, *, act: str, k_steps: int):
+    """Grid point (i, j, k): accumulate x[i,k] @ w[k,j] into o[i,j].
+
+    The output tile doubles as the f32 accumulator (it is pinned in VMEM
+    across the k loop because its BlockSpec ignores the k grid axis); the
+    epilogue (bias + activation) runs once, on the final k step.
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == k_steps - 1)
+    def _epilogue():
+        o_ref[...] = _apply_act(o_ref[...] + b_ref[...], act)
+
+
+def _pad_to(x: jax.Array, axis: int, mult: int) -> jax.Array:
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@functools.partial(jax.jit, static_argnames=("act", "block"))
+def fused_gemm(
+    x: jax.Array,
+    w: jax.Array,
+    b: jax.Array,
+    act: str = "none",
+    block: Optional[Tuple[int, int, int]] = None,
+) -> jax.Array:
+    """``act(x @ w + b)`` via the Pallas MXU kernel.
+
+    Args:
+      x: LHS, shape ``(M, K)`` (im2col patch matrix), f32.
+      w: RHS, shape ``(K, N)`` (filter matrix), f32.
+      b: bias, shape ``(N,)``, f32.
+      act: one of ``"none" | "relu" | "silu"`` fused into the epilogue.
+      block: optional ``(bm, bn, bk)`` tile override; defaults to the
+        MXU-native 128³ clamped to the (padded) problem shape.
+
+    Returns:
+      f32 array of shape ``(M, N)``.
+    """
+    if act not in _ACTS:
+        raise ValueError(f"act must be one of {_ACTS}, got {act!r}")
+    if x.ndim != 2 or w.ndim != 2 or b.ndim != 1:
+        raise ValueError("fused_gemm expects x:(M,K) w:(K,N) b:(N,)")
+    m, k = x.shape
+    k2, n = w.shape
+    if k != k2 or b.shape[0] != n:
+        raise ValueError(f"shape mismatch: x{x.shape} w{w.shape} b{b.shape}")
+
+    bm, bn, bk = block or DEFAULT_BLOCK
+    # Clamp tiles to the problem (small layers), then pad the operands so
+    # every axis is an exact multiple of its tile — BlockSpec grids must
+    # cover the array exactly, mirroring the paper's TensorRT padding.
+    bm, bn, bk = min(bm, m), min(bn, n), min(bk, k)
+    xp = _pad_to(_pad_to(x.astype(jnp.float32), 0, bm), 1, bk)
+    wp = _pad_to(_pad_to(w.astype(jnp.float32), 0, bk), 1, bn)
+    bp = _pad_to(b.astype(jnp.float32).reshape(1, n), 1, bn)
+    mp, kp = xp.shape
+    np_ = wp.shape[1]
+    grid = (mp // bm, np_ // bn, kp // bk)
+
+    out = pl.pallas_call(
+        functools.partial(_gemm_kernel, act=act, k_steps=grid[2]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls.
+    )(xp, wp, bp)
+    return out[:m, :n]
+
+
+def vmem_bytes(block: Tuple[int, int, int] = DEFAULT_BLOCK) -> int:
+    """Estimated VMEM residency of one grid step (f32): LHS + RHS panels,
+    bias row, and the pinned accumulator tile. Used by the §Perf roofline
+    estimate — must stay well under the ~16 MiB/core TPU VMEM budget."""
+    bm, bn, bk = block
+    return 4 * (bm * bk + bk * bn + bn + bm * bn)
+
+
+def mxu_utilization(m: int, n: int, k: int,
+                    block: Tuple[int, int, int] = DEFAULT_BLOCK) -> float:
+    """Fraction of MXU issue slots doing useful work after padding —
+    the §Perf efficiency proxy (real-TPU wall-clock is unavailable here)."""
+    bm, bn, bk = (min(block[0], m), min(block[1], n), min(block[2], k))
+    mp = m + (-m) % bm
+    np_ = n + (-n) % bn
+    kp = k + (-k) % bk
+    return (m * n * k) / float(mp * np_ * kp)

@@ -1,0 +1,49 @@
+"""AOT path: lowering produces loadable HLO text + a complete manifest."""
+
+import json
+import os
+
+import pytest
+
+from compile import aot, model
+
+
+def test_lower_yolo_b1_is_hlo_text():
+    text = aot.lower_variant("yolo", 1)
+    assert "HloModule" in text
+    assert "ENTRY" in text
+    # Tuple return (rust side unwraps a 2-tuple).
+    assert "tuple" in text.lower()
+
+
+def test_lowered_text_mentions_f32_io():
+    text = aot.lower_variant("yolo", 1)
+    assert "f32[1,128,128,3]" in text.replace(" ", "")
+
+
+def test_lower_is_deterministic():
+    a = aot.lower_variant("yolo", 1, seed=0)
+    b = aot.lower_variant("yolo", 1, seed=0)
+    assert a == b
+
+
+def test_build_all_manifest(tmp_path):
+    manifest = aot.build_all(str(tmp_path), variants=("yolo",), batches=(1, 2),
+                             verbose=False)
+    assert len(manifest["artifacts"]) == 2
+    for entry in manifest["artifacts"]:
+        p = tmp_path / entry["file"]
+        assert p.exists()
+        assert p.stat().st_size == entry["bytes"]
+        assert entry["param_count"] == model.param_count(model.SPECS["yolo"])
+    on_disk = json.loads((tmp_path / "manifest.json").read_text())
+    assert on_disk["format"] == "hlo-text"
+    assert on_disk["outputs"] == ["boxes[B,P,4]", "scores[B,P]"]
+
+
+def test_manifest_batch_input_shapes(tmp_path):
+    manifest = aot.build_all(str(tmp_path), variants=("yolo",), batches=(4,),
+                             verbose=False)
+    e = manifest["artifacts"][0]
+    assert e["input_shape"] == [4, model.INPUT_SIZE, model.INPUT_SIZE, 3]
+    assert e["predictions"] == model.SPECS["yolo"].num_predictions

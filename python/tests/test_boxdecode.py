@@ -1,0 +1,76 @@
+"""L1 correctness: Pallas box-decode vs pure-jnp oracle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import box_decode
+from compile.kernels import ref
+
+
+def _case(m, c, seed=0):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    pred = jax.random.normal(k1, (m, 5 + c), jnp.float32) * 3.0
+    anchors = jnp.abs(jax.random.normal(k2, (m, 4), jnp.float32)) * 20.0 + 1.0
+    return pred, anchors
+
+
+def check(m, c, rows, seed=0):
+    pred, anchors = _case(m, c, seed)
+    bx, sc = box_decode(pred, anchors, rows=rows)
+    rbx, rsc = ref.ref_box_decode(pred, anchors)
+    np.testing.assert_allclose(np.asarray(bx), np.asarray(rbx), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(sc), np.asarray(rsc), rtol=1e-5, atol=1e-5)
+
+
+def test_exact_panel():
+    check(128, 8, 128)
+
+
+def test_ragged_rows():
+    check(100, 8, 32)
+
+
+def test_single_row():
+    check(1, 1, 128)
+
+
+def test_many_classes():
+    check(64, 40, 16)
+
+
+def test_scores_in_unit_interval():
+    pred, anchors = _case(256, 8, seed=3)
+    _, sc = box_decode(pred, anchors)
+    s = np.asarray(sc)
+    assert (s >= 0).all() and (s <= 1).all()
+
+
+def test_boxes_well_formed():
+    # x2 >= x1, y2 >= y1 always (widths/heights are non-negative).
+    pred, anchors = _case(256, 8, seed=4)
+    bx, _ = box_decode(pred, anchors)
+    b = np.asarray(bx)
+    assert (b[:, 2] >= b[:, 0]).all()
+    assert (b[:, 3] >= b[:, 1]).all()
+
+
+def test_bad_shapes_raise():
+    pred, anchors = _case(16, 8)
+    with pytest.raises(ValueError):
+        box_decode(pred[:, :5], anchors)  # no class columns
+    with pytest.raises(ValueError):
+        box_decode(pred, anchors[:, :3])
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    m=st.integers(1, 300),
+    c=st.integers(1, 16),
+    rows=st.sampled_from([8, 32, 128]),
+    seed=st.integers(0, 10_000),
+)
+def test_hypothesis_sweep(m, c, rows, seed):
+    check(m, c, rows, seed)

@@ -1,0 +1,115 @@
+"""L1 correctness: Pallas fused GEMM vs pure-jnp oracle.
+
+hypothesis sweeps shapes/blocks/activations; every case asserts
+allclose against ref.ref_fused_gemm — the core correctness signal of the
+kernel layer.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import fused_gemm
+from compile.kernels.fused_gemm import mxu_utilization, vmem_bytes
+from compile.kernels import ref
+
+
+def _rand(key, shape):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+
+
+def check(m, k, n, act, block):
+    x = _rand(m * 7 + 1, (m, k))
+    w = _rand(n * 13 + 2, (k, n))
+    b = _rand(k * 3 + 5, (n,))
+    got = fused_gemm(x, w, b, act=act, block=block)
+    want = ref.ref_fused_gemm(x, w, b, act)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("act", ["none", "relu", "silu"])
+def test_exact_tile_multiple(act):
+    check(32, 16, 24, act, (16, 8, 8))
+
+
+@pytest.mark.parametrize("act", ["none", "relu", "silu"])
+def test_ragged_shapes(act):
+    check(70, 33, 17, act, (16, 16, 8))
+
+
+def test_single_tile():
+    check(8, 8, 8, "silu", (8, 8, 8))
+
+
+def test_tile_larger_than_problem():
+    # Blocks are clamped to the problem shape.
+    check(5, 3, 4, "relu", (128, 128, 128))
+
+
+def test_wide_k_accumulation():
+    # Many k steps: accumulator correctness across the grid's k loop.
+    check(16, 300, 16, "none", (16, 16, 32))
+
+
+def test_default_block():
+    x, w, b = _rand(1, (130, 64)), _rand(2, (64, 130)), _rand(3, (130,))
+    got = fused_gemm(x, w, b, act="silu")
+    want = ref.ref_fused_gemm(x, w, b, "silu")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_bad_act_raises():
+    x, w, b = _rand(1, (4, 4)), _rand(2, (4, 4)), _rand(3, (4,))
+    with pytest.raises(ValueError):
+        fused_gemm(x, w, b, act="gelu")
+
+
+def test_bad_shapes_raise():
+    x, w, b = _rand(1, (4, 5)), _rand(2, (4, 4)), _rand(3, (4,))
+    with pytest.raises(ValueError):
+        fused_gemm(x, w, b)
+
+
+def test_zero_bias_identity():
+    x = jnp.eye(8, dtype=jnp.float32)
+    w = _rand(11, (8, 8))
+    b = jnp.zeros((8,), jnp.float32)
+    got = fused_gemm(x, w, b, act="none", block=(8, 8, 8))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(w), rtol=1e-6, atol=1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 80),
+    k=st.integers(1, 64),
+    n=st.integers(1, 48),
+    act=st.sampled_from(["none", "relu", "silu"]),
+    bm=st.sampled_from([8, 16, 32]),
+    bn=st.sampled_from([8, 16]),
+    bk=st.sampled_from([8, 16]),
+)
+def test_hypothesis_shape_sweep(m, k, n, act, bm, bn, bk):
+    check(m, k, n, act, (bm, bn, bk))
+
+
+# --- §Perf estimators (used by EXPERIMENTS.md §Perf, sanity-pinned here) ---
+
+def test_vmem_budget_default_block():
+    # Default 128³ block must fit comfortably in a 16 MiB VMEM core.
+    assert vmem_bytes((128, 128, 128)) < 16 * 1024 * 1024 // 4
+
+
+def test_mxu_utilization_bounds():
+    assert mxu_utilization(128, 128, 128) == pytest.approx(1.0)
+    u = mxu_utilization(130, 100, 27, (128, 128, 128))
+    assert 0.0 < u < 1.0
+
+
+def test_mxu_utilization_improves_with_fitting_block():
+    bad = mxu_utilization(129, 100, 27, (128, 128, 128))
+    good = mxu_utilization(129, 100, 27, (16, 16, 16))
+    assert good > bad

@@ -1,0 +1,55 @@
+//! §Perf micro-bench: coordinator primitives on the request path —
+//! batcher push/pop, CORAL propose/observe, device-simulator windows —
+//! plus the ablation lineup (DESIGN.md §7).
+use std::path::Path;
+use std::time::Duration;
+
+use coral::coordinator::{Batcher, BatcherConfig, PendingRequest};
+use coral::device::{Device, DeviceKind};
+use coral::experiments::ablation;
+use coral::models::ModelKind;
+use coral::optimizer::{Constraints, CoralOptimizer, Optimizer};
+use coral::util::bench::Bencher;
+
+fn main() {
+    let mut b = Bencher::new(Duration::from_millis(400), 20);
+
+    b.bench("coordinator/batcher_push_pop_batch4", || {
+        let mut batcher = Batcher::new(BatcherConfig {
+            max_batch: 4,
+            max_wait: Duration::from_millis(10),
+        });
+        for i in 0..4u64 {
+            batcher.push(PendingRequest {
+                id: i,
+                pixels: Vec::new(),
+                arrived: Duration::ZERO,
+            });
+        }
+        batcher.pop_ready(Duration::ZERO).map(|v| v.len())
+    });
+
+    b.bench("device/measurement_window", || {
+        let mut dev = Device::new(DeviceKind::XavierNx, ModelKind::Yolo, 1);
+        let cfg = dev.space().midpoint();
+        dev.run(cfg).throughput_fps
+    });
+
+    b.bench("coral/propose_observe_cycle_w10", || {
+        let mut dev = Device::new(DeviceKind::XavierNx, ModelKind::Yolo, 1);
+        let mut opt = CoralOptimizer::new(
+            dev.space().clone(),
+            Constraints::dual(30.0, 6500.0),
+            1,
+        );
+        for _ in 0..10 {
+            let cfg = opt.propose();
+            let m = dev.run(cfg);
+            opt.observe(cfg, m.throughput_fps, m.power_mw);
+        }
+        opt.best().map(|b| b.feasible)
+    });
+
+    // Design-choice ablations (writes results/ablation.csv).
+    ablation::run(Path::new("results"), 10).expect("ablation");
+}

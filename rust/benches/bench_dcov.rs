@@ -1,0 +1,34 @@
+//! §Perf micro-bench: the distance-correlation hot path (recomputed every
+//! CORAL iteration over the sliding window). Compares the per-call
+//! reference against the fused workspace, across window sizes.
+use std::time::Duration;
+
+use coral::stats::dcov::{dcor, DcorWorkspace};
+use coral::util::bench::Bencher;
+use coral::util::Rng;
+
+fn series(n: usize, seed: u64) -> Vec<f64> {
+    let mut r = Rng::new(seed);
+    (0..n).map(|_| r.range_f64(0.0, 100.0)).collect()
+}
+
+fn main() {
+    let mut b = Bencher::new(Duration::from_millis(400), 20);
+    for &w in &[5usize, 10, 20, 50] {
+        let tput = series(w, 1);
+        let power = series(w, 2);
+        let dims: Vec<Vec<f64>> = (0..5).map(|d| series(w, 3 + d)).collect();
+
+        b.bench(&format!("dcov/reference_w{w}_5dims_2metrics"), || {
+            let mut acc = 0.0;
+            for s in &dims {
+                acc += dcor(&tput, s) + dcor(&power, s);
+            }
+            acc
+        });
+        let mut ws = DcorWorkspace::new();
+        b.bench(&format!("dcov/workspace_w{w}_5dims_2metrics"), || {
+            ws.dcor_matrix(&[&tput, &power], &dims)[0][0]
+        });
+    }
+}

@@ -1,0 +1,19 @@
+//! Paper Figure 1: exhaustive power-throughput sweep of YOLO on both
+//! devices. Regenerates results/fig1_*.csv and prints the headline
+//! spreads; also times the sweep itself.
+use std::path::Path;
+use std::time::Duration;
+
+use coral::experiments::fig1;
+use coral::util::bench::Bencher;
+
+fn main() {
+    let out = Path::new("results");
+    fig1::run(out).expect("fig1");
+    // Micro: cost of one full exhaustive sweep (the ORACLE's offline
+    // burden that CORAL avoids).
+    let mut b = Bencher::new(Duration::from_millis(600), 10);
+    b.bench("fig1/exhaustive_sweep_nx", || {
+        fig1::sweep(coral::device::DeviceKind::XavierNx, 1).points.len()
+    });
+}

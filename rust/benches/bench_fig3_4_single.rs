@@ -1,0 +1,26 @@
+//! Paper Figures 3-4: single-constraint (throughput) comparison, YOLO on
+//! both devices. Regenerates results/fig3_4_single.csv and times one
+//! 10-iteration CORAL search.
+use std::path::Path;
+use std::time::Duration;
+
+use coral::device::DeviceKind;
+use coral::experiments::{runner, single};
+use coral::models::ModelKind;
+use coral::optimizer::Constraints;
+use coral::util::bench::Bencher;
+
+fn main() {
+    single::run(Path::new("results"), 10).expect("single");
+    let mut b = Bencher::new(Duration::from_millis(500), 10);
+    b.bench("single/coral_10_iters", || {
+        runner::run_method(
+            runner::MethodKind::Coral,
+            DeviceKind::XavierNx,
+            ModelKind::Yolo,
+            Constraints::max_throughput(),
+            7,
+        )
+        .throughput_fps
+    });
+}

@@ -1,0 +1,25 @@
+//! Paper Figures 5-6: dual-constraint scenario, YOLO on both devices.
+use std::path::Path;
+use std::time::Duration;
+
+use coral::experiments::dual;
+use coral::experiments::runner::{run_method, MethodKind};
+use coral::experiments::scenarios::dual_constraints;
+use coral::device::DeviceKind;
+use coral::models::ModelKind;
+use coral::util::bench::Bencher;
+
+fn main() {
+    dual::run_model(Path::new("results"), ModelKind::Yolo, 10).expect("dual yolo");
+    let mut b = Bencher::new(Duration::from_millis(500), 10);
+    b.bench("dual_yolo/coral_10_iters_nx", || {
+        run_method(
+            MethodKind::Coral,
+            DeviceKind::XavierNx,
+            ModelKind::Yolo,
+            dual_constraints(DeviceKind::XavierNx, ModelKind::Yolo),
+            3,
+        )
+        .feasible
+    });
+}

@@ -1,0 +1,9 @@
+//! Paper Figures 7-8: dual-constraint scenario, FRCNN on both devices.
+use std::path::Path;
+
+use coral::experiments::dual;
+use coral::models::ModelKind;
+
+fn main() {
+    dual::run_model(Path::new("results"), ModelKind::Frcnn, 10).expect("dual frcnn");
+}

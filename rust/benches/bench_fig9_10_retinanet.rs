@@ -1,0 +1,10 @@
+//! Paper Figures 9-10: dual-constraint scenario, RETINANET on both
+//! devices (the paper's hardest case: every baseline fails).
+use std::path::Path;
+
+use coral::experiments::dual;
+use coral::models::ModelKind;
+
+fn main() {
+    dual::run_model(Path::new("results"), ModelKind::RetinaNet, 10).expect("dual retinanet");
+}

@@ -1,0 +1,59 @@
+//! §Perf macro-bench: the real serving hot path — PJRT detector execution
+//! per batch size, and end-to-end coordinator throughput/latency at
+//! several concurrency levels. Needs `make artifacts`.
+use std::time::Duration;
+
+use coral::coordinator::{BatcherConfig, Server, ServerConfig};
+use coral::models::{artifacts_dir, Manifest, ModelKind};
+use coral::runtime::PjrtRuntime;
+use coral::util::bench::Bencher;
+use coral::workload::VideoSource;
+
+fn main() {
+    let manifest = match Manifest::load(&artifacts_dir()) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("skipping runtime bench (no artifacts: {e})");
+            return;
+        }
+    };
+    let rt = PjrtRuntime::cpu().expect("pjrt");
+    let mut b = Bencher::new(Duration::from_millis(1500), 10);
+
+    // Kernel-level: PJRT execute per model/batch.
+    for model in ModelKind::ALL {
+        let m = rt.load_model(&manifest, model).expect("load");
+        let side = m.input_side();
+        let video = VideoSource::new(side, 30, 9);
+        for &batch in &m.batch_sizes() {
+            let mut pixels = Vec::new();
+            for i in 0..batch {
+                pixels.extend_from_slice(&video.frame(i));
+            }
+            b.bench(&format!("pjrt/{}_b{batch}", model.name()), || {
+                m.infer(&pixels, batch).unwrap().len()
+            });
+        }
+    }
+
+    // End-to-end serving at several concurrency levels.
+    for c in [1usize, 2, 4] {
+        let m = rt.load_model(&manifest, ModelKind::Yolo).expect("load");
+        let side = m.input_side();
+        let mut server = Server::new(
+            m,
+            ServerConfig {
+                concurrency: c,
+                batcher: BatcherConfig { max_batch: 4, max_wait: Duration::from_millis(5) },
+            },
+        );
+        let mut video = VideoSource::new(side, 30, 10);
+        let report = server.run_closed_loop(&mut video, 120, 8).expect("serve");
+        println!(
+            "serve yolo c={c}: {:.1} fps p50={:.1}ms p99={:.1}ms batch={:.2}",
+            report.throughput_fps, report.latency_p50_ms, report.latency_p99_ms,
+            report.mean_batch
+        );
+        server.shutdown();
+    }
+}

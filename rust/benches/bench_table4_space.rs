@@ -1,0 +1,16 @@
+//! Paper Table 4: valid-configuration counts per (model, device).
+//! Regenerates results/table4.csv and times the validity filter.
+use std::path::Path;
+use std::time::Duration;
+
+use coral::device::{failure, DeviceKind};
+use coral::models::ModelKind;
+use coral::util::bench::Bencher;
+
+fn main() {
+    coral::experiments::table4::run(Path::new("results")).expect("table4");
+    let mut b = Bencher::new(Duration::from_millis(400), 10);
+    b.bench("table4/validity_filter_nx_retinanet", || {
+        failure::valid_count(DeviceKind::XavierNx, ModelKind::RetinaNet)
+    });
+}

@@ -1,0 +1,130 @@
+//! Tiny argv parser: one positional command (+ optional subcommand),
+//! `--key value` options, `--flag` booleans.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    /// Positional arguments (command first).
+    pub positional: Vec<String>,
+    /// `--key value` pairs.
+    pub options: BTreeMap<String, String>,
+    /// Bare `--flag`s.
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse argv (without the program name).
+    pub fn parse(argv: Vec<String>) -> Result<Args, String> {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(key) = a.strip_prefix("--") {
+                if key.is_empty() {
+                    return Err("empty option name".into());
+                }
+                // --key=value or --key value or --flag
+                if let Some((k, v)) = key.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = it.next().unwrap();
+                    out.options.insert(key.to_string(), v);
+                } else {
+                    out.flags.push(key.to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn command(&self) -> Option<&str> {
+        self.positional.first().map(|s| s.as_str())
+    }
+
+    pub fn sub(&self) -> Option<&str> {
+        self.positional.get(1).map(|s| s.as_str())
+    }
+
+    pub fn opt(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn opt_or(&self, key: &str, default: &str) -> String {
+        self.opt(key).unwrap_or(default).to_string()
+    }
+
+    pub fn opt_f64(&self, key: &str) -> Result<Option<f64>, String> {
+        match self.opt(key) {
+            None => Ok(None),
+            Some(v) => v
+                .parse::<f64>()
+                .map(Some)
+                .map_err(|_| format!("--{key} expects a number, got '{v}'")),
+        }
+    }
+
+    pub fn opt_u64_or(&self, key: &str, default: u64) -> Result<u64, String> {
+        match self.opt(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse::<u64>()
+                .map_err(|_| format!("--{key} expects an integer, got '{v}'")),
+        }
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from).collect()).unwrap()
+    }
+
+    #[test]
+    fn positional_and_options() {
+        let a = parse("experiment dual --out results --seeds 5 --verbose");
+        assert_eq!(a.command(), Some("experiment"));
+        assert_eq!(a.sub(), Some("dual"));
+        assert_eq!(a.opt("out"), Some("results"));
+        assert_eq!(a.opt_u64_or("seeds", 1).unwrap(), 5);
+        assert!(a.has_flag("verbose"));
+    }
+
+    #[test]
+    fn eq_style_options() {
+        let a = parse("optimize --target=30.5 --budget=6500");
+        assert_eq!(a.opt_f64("target").unwrap(), Some(30.5));
+        assert_eq!(a.opt_f64("budget").unwrap(), Some(6500.0));
+        assert_eq!(a.opt_f64("missing").unwrap(), None);
+    }
+
+    #[test]
+    fn flag_before_positional() {
+        let a = parse("serve --fast yolo");
+        // "--fast yolo": yolo is consumed as the value of --fast.
+        assert_eq!(a.opt("fast"), Some("yolo"));
+    }
+
+    #[test]
+    fn bad_numbers_error() {
+        let a = parse("x --seeds abc");
+        assert!(a.opt_u64_or("seeds", 1).is_err());
+        assert!(a.opt_f64("seeds").is_err());
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("cmd");
+        assert_eq!(a.opt_or("out", "results"), "results");
+        assert_eq!(a.opt_u64_or("seeds", 7).unwrap(), 7);
+        assert!(!a.has_flag("x"));
+    }
+}

@@ -1,0 +1,383 @@
+//! CLI command implementations.
+
+use std::path::PathBuf;
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use super::args::Args;
+use crate::coordinator::{BatcherConfig, Server, ServerConfig};
+use crate::device::{failure, Device, DeviceKind, Dim};
+use crate::experiments::{self, runner, scenarios};
+use crate::models::{artifacts_dir, Manifest, ModelKind};
+use crate::optimizer::{Constraints, CoralOptimizer, Optimizer};
+use crate::runtime::PjrtRuntime;
+use crate::util::table;
+use crate::workload::VideoSource;
+
+pub const USAGE: &str = "\
+coral — Covariance-Guided Resource Adaptive Learning (CS.DC 2026 reproduction)
+
+USAGE:
+  coral experiment <fig1|table4|single|dual|ablation|convergence|robustness|all> [--out DIR] [--seeds N]
+  coral optimize  --device <nx|orin> --model <yolo|frcnn|retinanet>
+                  [--target FPS] [--budget MW] [--method NAME] [--iters N] [--seed N]
+                  [--trace FILE.csv]
+  coral sweep     --device <nx|orin> --model <yolo|frcnn|retinanet> [--out DIR]
+  coral serve     [--model M] [--requests N] [--concurrency C] [--batch B] [--inflight K]
+  coral report    <specs|models|scenarios>
+  coral artifacts-check [--dir DIR]
+
+Methods: coral, oracle, alert, alert-online, max-power, default, random.
+";
+
+/// Dispatch a parsed command line.
+pub fn dispatch(args: &Args) -> Result<()> {
+    match args.command() {
+        Some("experiment") => cmd_experiment(args),
+        Some("optimize") => cmd_optimize(args),
+        Some("sweep") => cmd_sweep(args),
+        Some("serve") => cmd_serve(args),
+        Some("report") => cmd_report(args),
+        Some("artifacts-check") => cmd_artifacts_check(args),
+        Some("help") | None => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        Some(other) => bail!("unknown command '{other}'\n{USAGE}"),
+    }
+}
+
+fn parse_device(args: &Args) -> Result<DeviceKind> {
+    let name = args.opt("device").context("--device required (nx|orin)")?;
+    DeviceKind::parse(name).with_context(|| format!("unknown device '{name}'"))
+}
+
+fn parse_model(args: &Args) -> Result<ModelKind> {
+    let name = args.opt_or("model", "yolo");
+    ModelKind::parse(&name).with_context(|| format!("unknown model '{name}'"))
+}
+
+fn out_dir(args: &Args) -> PathBuf {
+    PathBuf::from(args.opt_or("out", "results"))
+}
+
+fn cmd_experiment(args: &Args) -> Result<()> {
+    let out = out_dir(args);
+    let seeds = args.opt_u64_or("seeds", 10).map_err(anyhow::Error::msg)?;
+    std::fs::create_dir_all(&out)?;
+    match args.sub() {
+        Some("fig1") => experiments::fig1::run(&out)?,
+        Some("table4") => experiments::table4::run(&out)?,
+        Some("single") => experiments::single::run(&out, seeds)?,
+        Some("dual") => experiments::dual::run_all(&out, seeds)?,
+        Some("ablation") => experiments::ablation::run(&out, seeds)?,
+        Some("robustness") => experiments::robustness::run(&out, seeds)?,
+        Some("convergence") => experiments::convergence::run(&out, seeds)?,
+        Some("all") | None => experiments::run_all(&out, seeds)?,
+        Some(other) => bail!("unknown experiment '{other}'"),
+    }
+    println!("\nCSV written to {}", out.display());
+    Ok(())
+}
+
+fn cmd_optimize(args: &Args) -> Result<()> {
+    let device = parse_device(args)?;
+    let model = parse_model(args)?;
+    let seed = args.opt_u64_or("seed", 42).map_err(anyhow::Error::msg)?;
+    let iters = args.opt_u64_or("iters", 10).map_err(anyhow::Error::msg)? as usize;
+    let target = args.opt_f64("target").map_err(anyhow::Error::msg)?;
+    let budget = args.opt_f64("budget").map_err(anyhow::Error::msg)?;
+    let cons = match (target, budget) {
+        (Some(t), Some(b)) => Constraints::dual(t, b),
+        (Some(t), None) => Constraints::throughput_only(t),
+        (None, Some(b)) => Constraints::dual(0.0, b),
+        (None, None) => Constraints::max_throughput(),
+    };
+    let method = args.opt_or("method", "coral");
+
+    let trace_path = args.opt("trace").map(std::path::PathBuf::from);
+    if method == "coral" {
+        // Verbose per-iteration trace with the dCor weights.
+        let mut dev = Device::new(device, model, seed);
+        let mut opt = CoralOptimizer::new(dev.space().clone(), cons, seed);
+        let mut trace = crate::workload::Trace::new();
+        println!(
+            "CORAL on {device}/{model} — target {:?} fps, budget {:?} mW",
+            cons.throughput_target_fps, cons.power_budget_mw
+        );
+        for i in 0..iters {
+            let cfg = opt.propose();
+            let m = dev.run(cfg);
+            trace.record(cfg, m.throughput_fps, m.power_mw);
+            opt.observe(cfg, m.throughput_fps, m.power_mw);
+            let (a, b) = opt.weights();
+            println!(
+                "  it{i:>2}: {cfg} -> {:6.1} fps {:6.0} mW {}",
+                m.throughput_fps,
+                m.power_mw,
+                if m.failed.is_some() { "[FAILED]" } else { "" }
+            );
+            let names: Vec<String> = Dim::ALL
+                .iter()
+                .enumerate()
+                .map(|(d, dim)| format!("{}={:.2}/{:.2}", dim.name(), a[d], b[d]))
+                .collect();
+            println!("        dCor(tput/power): {}", names.join(" "));
+        }
+        let best = opt.best().context("no observations")?;
+        println!(
+            "\nbest: {} -> {:.1} fps @ {:.0} mW  feasible={} (PS size {})",
+            best.config,
+            best.throughput_fps,
+            best.power_mw,
+            best.feasible,
+            opt.prohibited_len()
+        );
+        println!(
+            "search cost: {:.0} simulated seconds ({} measurement windows)",
+            dev.sim_clock_s(),
+            dev.windows_run()
+        );
+        if let Some(path) = trace_path {
+            trace.save(&path)?;
+            println!("trace written to {}", path.display());
+        }
+    } else {
+        let kind = runner::MethodKind::parse(&method)
+            .with_context(|| format!("unknown method '{method}'"))?;
+        let o = runner::run_method(kind, device, model, cons, seed);
+        println!(
+            "{}: {:.1} fps @ {:.0} mW feasible={} ({} online + {} offline windows)\n  config: {}",
+            o.method, o.throughput_fps, o.power_mw, o.feasible, o.online_windows,
+            o.offline_windows, o.config
+        );
+    }
+    Ok(())
+}
+
+fn cmd_sweep(args: &Args) -> Result<()> {
+    let device = parse_device(args)?;
+    let model = parse_model(args)?;
+    let out = out_dir(args);
+    std::fs::create_dir_all(&out)?;
+    let mut dev = Device::new(device, model, 0x53EE9);
+    let mut csv = crate::util::csv::Csv::new(&[
+        "cpu_freq_mhz", "cpu_cores", "gpu_freq_mhz", "mem_freq_mhz", "concurrency",
+        "throughput_fps", "power_mw", "latency_ms",
+    ]);
+    for cfg in failure::valid_configs(device, model) {
+        let m = dev.run(cfg);
+        csv.push(vec![
+            cfg.cpu_freq_mhz.to_string(),
+            cfg.cpu_cores.to_string(),
+            cfg.gpu_freq_mhz.to_string(),
+            cfg.mem_freq_mhz.to_string(),
+            cfg.concurrency.to_string(),
+            format!("{:.2}", m.throughput_fps),
+            format!("{:.0}", m.power_mw),
+            format!("{:.2}", m.latency_ms),
+        ]);
+    }
+    let path = out.join(format!("sweep_{}_{}.csv", device.name(), model.name()));
+    csv.save(&path)?;
+    println!(
+        "swept {} valid configs ({} simulated hours) -> {}",
+        csv.rows.len(),
+        dev.sim_clock_s() / 3600.0,
+        path.display()
+    );
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let model = parse_model(args)?;
+    let requests = args.opt_u64_or("requests", 200).map_err(anyhow::Error::msg)?;
+    let concurrency =
+        args.opt_u64_or("concurrency", 2).map_err(anyhow::Error::msg)? as usize;
+    let batch = args.opt_u64_or("batch", 4).map_err(anyhow::Error::msg)? as usize;
+    let inflight = args.opt_u64_or("inflight", 16).map_err(anyhow::Error::msg)? as usize;
+
+    let dir = artifacts_dir();
+    let manifest = Manifest::load(&dir)
+        .with_context(|| format!("loading artifacts from {} (run `make artifacts`)", dir.display()))?;
+    let rt = PjrtRuntime::cpu()?;
+    println!("PJRT platform: {}", rt.platform());
+    let model_rt = rt.load_model(&manifest, model)?;
+    let side = model_rt.input_side();
+    let mut server = Server::new(
+        model_rt,
+        ServerConfig {
+            concurrency,
+            batcher: BatcherConfig { max_batch: batch, max_wait: Duration::from_millis(5) },
+        },
+    );
+    let mut video = VideoSource::new(side, 30, 0xCAFE);
+    println!(
+        "serving {requests} frames of synthetic traffic video ({side}x{side}) \
+         with c={concurrency}, batch<={batch} ..."
+    );
+    let report = server.run_closed_loop(&mut video, requests, inflight)?;
+    println!("{report}");
+    server.shutdown();
+    Ok(())
+}
+
+fn cmd_report(args: &Args) -> Result<()> {
+    match args.sub() {
+        Some("specs") => {
+            println!("Table 1/2 — devices and tunable ranges");
+            let mut rows = Vec::new();
+            for d in DeviceKind::ALL {
+                let s = d.space();
+                rows.push(vec![
+                    d.name().to_string(),
+                    format!("{}-{} MHz x{}", s.min(Dim::CpuFreq), s.max(Dim::CpuFreq),
+                            s.values(Dim::CpuFreq).len()),
+                    format!("{}-{}", s.min(Dim::CpuCores), s.max(Dim::CpuCores)),
+                    format!("{}-{} MHz x{}", s.min(Dim::GpuFreq), s.max(Dim::GpuFreq),
+                            s.values(Dim::GpuFreq).len()),
+                    format!("{:?}", s.values(Dim::MemFreq)),
+                    format!("1-{}", s.max(Dim::Concurrency)),
+                    s.raw_size().to_string(),
+                ]);
+            }
+            print!(
+                "{}",
+                table::render(
+                    &["device", "cpu freq", "cores", "gpu freq", "mem MHz", "conc", "raw size"],
+                    &rows
+                )
+            );
+        }
+        Some("models") => {
+            println!("Table 3 — evaluation models");
+            let mut rows = Vec::new();
+            for m in ModelKind::ALL {
+                let p = m.profile();
+                rows.push(vec![
+                    m.name().to_string(),
+                    format!("{:.1} M", m.params_m()),
+                    format!("{:.1}", m.map()),
+                    format!("{:.0}", p.gpu_work),
+                    format!("{:.2} GB", p.mem_gb_per_instance),
+                ]);
+            }
+            print!(
+                "{}",
+                table::render(&["model", "params (paper)", "mAP", "gpu work", "mem/inst"], &rows)
+            );
+        }
+        Some("scenarios") => {
+            println!("Dual-constraint scenarios (Figs 5-10)");
+            let mut rows = Vec::new();
+            for s in scenarios::DUAL_SCENARIOS {
+                rows.push(vec![
+                    s.figures.to_string(),
+                    s.device.name().to_string(),
+                    s.model.name().to_string(),
+                    format!("{}", s.target_fps),
+                    format!("{}", s.budget_mw),
+                ]);
+            }
+            print!(
+                "{}",
+                table::render(&["figures", "device", "model", "target fps", "budget mW"], &rows)
+            );
+        }
+        _ => bail!("report expects: specs | models | scenarios"),
+    }
+    Ok(())
+}
+
+fn cmd_artifacts_check(args: &Args) -> Result<()> {
+    let dir = args
+        .opt("dir")
+        .map(PathBuf::from)
+        .unwrap_or_else(artifacts_dir);
+    let manifest = Manifest::load(&dir)
+        .with_context(|| format!("no manifest in {} — run `make artifacts`", dir.display()))?;
+    let mut rows = Vec::new();
+    for a in &manifest.artifacts {
+        let exists = a.path.exists();
+        rows.push(vec![
+            a.model.name().to_string(),
+            a.batch.to_string(),
+            format!("{:?}", a.input_shape),
+            a.param_count.to_string(),
+            if exists { "ok".into() } else { "MISSING".into() },
+        ]);
+        if !exists {
+            bail!("artifact missing: {}", a.path.display());
+        }
+    }
+    print!(
+        "{}",
+        table::render(&["model", "batch", "input", "params", "file"], &rows)
+    );
+    println!("{} artifacts OK in {}", manifest.artifacts.len(), dir.display());
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from).collect()).unwrap()
+    }
+
+    #[test]
+    fn unknown_command_errors() {
+        assert!(dispatch(&args("frobnicate")).is_err());
+    }
+
+    #[test]
+    fn help_is_ok() {
+        assert!(dispatch(&args("help")).is_ok());
+    }
+
+    #[test]
+    fn report_subcommands() {
+        assert!(dispatch(&args("report specs")).is_ok());
+        assert!(dispatch(&args("report models")).is_ok());
+        assert!(dispatch(&args("report scenarios")).is_ok());
+        assert!(dispatch(&args("report bogus")).is_err());
+    }
+
+    #[test]
+    fn experiment_table4_smoke() {
+        let dir = std::env::temp_dir().join("coral_cli_exp");
+        let _ = std::fs::remove_dir_all(&dir);
+        let a = args(&format!("experiment table4 --out {} --seeds 1", dir.display()));
+        assert!(dispatch(&a).is_ok());
+        assert!(dir.join("table4.csv").exists());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn optimize_with_trace_writes_csv() {
+        let path = std::env::temp_dir().join("coral_cli_trace.csv");
+        let _ = std::fs::remove_file(&path);
+        let a = args(&format!(
+            "optimize --device orin --model yolo --target 60 --budget 5600 --iters 4 --seed 2 --trace {}",
+            path.display()
+        ));
+        assert!(dispatch(&a).is_ok());
+        let trace = crate::workload::Trace::load(&path).unwrap();
+        assert_eq!(trace.len(), 4);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn optimize_smoke() {
+        let a = args("optimize --device nx --model yolo --target 30 --budget 6500 --iters 3 --seed 1");
+        assert!(dispatch(&a).is_ok());
+    }
+
+    #[test]
+    fn optimize_validates_device() {
+        let a = args("optimize --device toaster");
+        assert!(dispatch(&a).is_err());
+    }
+}

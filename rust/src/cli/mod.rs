@@ -1,0 +1,36 @@
+//! Command-line interface (std-only — the offline mirror has no clap).
+//!
+//! ```text
+//! coral experiment <fig1|table4|single|dual|ablation|all> [--out DIR] [--seeds N]
+//! coral optimize  --device D --model M [--target FPS] [--budget MW]
+//!                 [--method NAME] [--iters N] [--seed N]
+//! coral sweep     --device D --model M [--out DIR]
+//! coral serve     [--model M] [--requests N] [--concurrency C] [--batch B]
+//! coral report    <specs|models>
+//! coral artifacts-check [--dir DIR]
+//! ```
+
+pub mod args;
+pub mod commands;
+
+pub use args::Args;
+
+/// Entry point: parse + dispatch. Returns the process exit code.
+pub fn main_with(argv: Vec<String>) -> i32 {
+    crate::util::logging::init();
+    let args = match Args::parse(argv) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            eprintln!("{}", commands::USAGE);
+            return 2;
+        }
+    };
+    match commands::dispatch(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    }
+}

@@ -1,0 +1,171 @@
+//! Dynamic batcher: accumulates requests and releases a batch when it
+//! reaches the target size or the oldest request hits its deadline —
+//! the standard size-or-timeout policy (vLLM-style), kept as pure logic
+//! (logical clock in, batches out) so it is exhaustively testable.
+
+use std::time::Duration;
+
+/// A queued request (frame already rendered to pixels).
+#[derive(Debug, Clone)]
+pub struct PendingRequest {
+    pub id: u64,
+    /// Flattened HWC f32 pixels.
+    pub pixels: Vec<f32>,
+    /// Arrival time (logical).
+    pub arrived: Duration,
+}
+
+/// Batching policy knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct BatcherConfig {
+    /// Release as soon as this many requests are queued.
+    pub max_batch: usize,
+    /// Release a partial batch once the oldest request has waited this
+    /// long.
+    pub max_wait: Duration,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        BatcherConfig { max_batch: 4, max_wait: Duration::from_millis(10) }
+    }
+}
+
+/// Size-or-deadline dynamic batcher.
+#[derive(Debug)]
+pub struct Batcher {
+    cfg: BatcherConfig,
+    queue: Vec<PendingRequest>,
+}
+
+impl Batcher {
+    pub fn new(cfg: BatcherConfig) -> Batcher {
+        assert!(cfg.max_batch >= 1, "max_batch must be >= 1");
+        Batcher { cfg, queue: Vec::new() }
+    }
+
+    pub fn config(&self) -> BatcherConfig {
+        self.cfg
+    }
+
+    /// Change the target batch size at runtime (the optimizer may tune
+    /// it alongside concurrency).
+    pub fn set_max_batch(&mut self, n: usize) {
+        assert!(n >= 1);
+        self.cfg.max_batch = n;
+    }
+
+    pub fn queued(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Enqueue a request.
+    pub fn push(&mut self, req: PendingRequest) {
+        self.queue.push(req);
+    }
+
+    /// Release the next batch if the policy says so.
+    pub fn pop_ready(&mut self, now: Duration) -> Option<Vec<PendingRequest>> {
+        if self.queue.is_empty() {
+            return None;
+        }
+        let full = self.queue.len() >= self.cfg.max_batch;
+        let expired = now.saturating_sub(self.queue[0].arrived) >= self.cfg.max_wait;
+        if !(full || expired) {
+            return None;
+        }
+        let n = self.queue.len().min(self.cfg.max_batch);
+        Some(self.queue.drain(..n).collect())
+    }
+
+    /// Drain everything immediately (shutdown).
+    pub fn drain_all(&mut self) -> Vec<PendingRequest> {
+        std::mem::take(&mut self.queue)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    fn req(id: u64, at_ms: u64) -> PendingRequest {
+        PendingRequest { id, pixels: vec![0.0; 4], arrived: Duration::from_millis(at_ms) }
+    }
+
+    fn cfg(max_batch: usize, wait_ms: u64) -> BatcherConfig {
+        BatcherConfig { max_batch, max_wait: Duration::from_millis(wait_ms) }
+    }
+
+    #[test]
+    fn releases_on_size() {
+        let mut b = Batcher::new(cfg(2, 1000));
+        b.push(req(0, 0));
+        assert!(b.pop_ready(Duration::from_millis(1)).is_none());
+        b.push(req(1, 1));
+        let batch = b.pop_ready(Duration::from_millis(1)).unwrap();
+        assert_eq!(batch.len(), 2);
+        assert_eq!(b.queued(), 0);
+    }
+
+    #[test]
+    fn releases_on_deadline() {
+        let mut b = Batcher::new(cfg(8, 10));
+        b.push(req(0, 0));
+        assert!(b.pop_ready(Duration::from_millis(9)).is_none());
+        let batch = b.pop_ready(Duration::from_millis(10)).unwrap();
+        assert_eq!(batch.len(), 1);
+    }
+
+    #[test]
+    fn oversize_queue_releases_max_batch_only() {
+        let mut b = Batcher::new(cfg(2, 1000));
+        for i in 0..5 {
+            b.push(req(i, 0));
+        }
+        assert_eq!(b.pop_ready(Duration::ZERO).unwrap().len(), 2);
+        assert_eq!(b.queued(), 3);
+    }
+
+    #[test]
+    fn fifo_order_preserved() {
+        let mut b = Batcher::new(cfg(3, 0));
+        for i in 0..3 {
+            b.push(req(i, 0));
+        }
+        let ids: Vec<u64> = b.pop_ready(Duration::ZERO).unwrap().iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn drain_all_empties() {
+        let mut b = Batcher::new(cfg(4, 1000));
+        b.push(req(0, 0));
+        b.push(req(1, 0));
+        assert_eq!(b.drain_all().len(), 2);
+        assert_eq!(b.queued(), 0);
+        assert!(b.pop_ready(Duration::from_secs(10)).is_none());
+    }
+
+    #[test]
+    fn prop_no_request_lost_or_duplicated() {
+        prop::check("batcher conservation", 100, |g| {
+            let mut b = Batcher::new(cfg(g.rng.range_usize(1, 6), g.rng.range_usize(0, 20) as u64));
+            let n = g.rng.range_usize(1, 40);
+            let mut seen = Vec::new();
+            let mut t = 0u64;
+            for id in 0..n as u64 {
+                t += g.rng.range_usize(0, 5) as u64;
+                b.push(req(id, t));
+                if g.rng.chance(0.5) {
+                    if let Some(batch) = b.pop_ready(Duration::from_millis(t)) {
+                        seen.extend(batch.iter().map(|r| r.id));
+                    }
+                }
+            }
+            seen.extend(b.drain_all().iter().map(|r| r.id));
+            let want: Vec<u64> = (0..n as u64).collect();
+            prop::assert_eq_dbg(&seen, &want)
+        });
+    }
+}

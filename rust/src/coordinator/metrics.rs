@@ -1,0 +1,124 @@
+//! Serving metrics: completed/failed counts, end-to-end latency
+//! distribution, batch-size histogram, throughput gauge.
+
+use std::time::Duration;
+
+use crate::stats::summary;
+
+/// Accumulated serving metrics.
+#[derive(Debug, Clone, Default)]
+pub struct ServerMetrics {
+    completed: u64,
+    failed: u64,
+    latencies_ms: Vec<f64>,
+    exec_ms: Vec<f64>,
+    batch_sizes: Vec<usize>,
+    first_completion: Option<Duration>,
+    last_completion: Option<Duration>,
+}
+
+impl ServerMetrics {
+    pub fn new() -> ServerMetrics {
+        ServerMetrics::default()
+    }
+
+    /// Record a completed batch.
+    pub fn record_batch(
+        &mut self,
+        batch_size: usize,
+        exec_time: Duration,
+        request_latencies: &[Duration],
+        now: Duration,
+        failed: bool,
+    ) {
+        if failed {
+            self.failed += batch_size as u64;
+            return;
+        }
+        self.completed += batch_size as u64;
+        self.batch_sizes.push(batch_size);
+        self.exec_ms.push(exec_time.as_secs_f64() * 1000.0);
+        for l in request_latencies {
+            self.latencies_ms.push(l.as_secs_f64() * 1000.0);
+        }
+        if self.first_completion.is_none() {
+            self.first_completion = Some(now);
+        }
+        self.last_completion = Some(now);
+    }
+
+    pub fn completed(&self) -> u64 {
+        self.completed
+    }
+
+    pub fn failed(&self) -> u64 {
+        self.failed
+    }
+
+    /// Requests per second over the completion span.
+    pub fn throughput_fps(&self) -> f64 {
+        match (self.first_completion, self.last_completion) {
+            (Some(a), Some(b)) if b > a && self.completed > 1 => {
+                (self.completed - 1) as f64 / (b - a).as_secs_f64()
+            }
+            _ => f64::NAN,
+        }
+    }
+
+    /// End-to-end latency percentile (ms).
+    pub fn latency_ms(&self, pct: f64) -> f64 {
+        summary::percentile(&self.latencies_ms, pct)
+    }
+
+    /// Mean executor time per batch (ms).
+    pub fn mean_exec_ms(&self) -> f64 {
+        summary::mean(&self.exec_ms)
+    }
+
+    /// Mean released batch size (batching efficiency).
+    pub fn mean_batch_size(&self) -> f64 {
+        if self.batch_sizes.is_empty() {
+            return f64::NAN;
+        }
+        self.batch_sizes.iter().sum::<usize>() as f64 / self.batch_sizes.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ms(v: u64) -> Duration {
+        Duration::from_millis(v)
+    }
+
+    #[test]
+    fn accumulates_batches() {
+        let mut m = ServerMetrics::new();
+        m.record_batch(2, ms(10), &[ms(15), ms(20)], ms(100), false);
+        m.record_batch(1, ms(12), &[ms(30)], ms(200), false);
+        assert_eq!(m.completed(), 3);
+        assert_eq!(m.failed(), 0);
+        assert!((m.mean_batch_size() - 1.5).abs() < 1e-12);
+        assert_eq!(m.latency_ms(100.0), 30.0);
+        assert!((m.mean_exec_ms() - 11.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn throughput_over_span() {
+        let mut m = ServerMetrics::new();
+        m.record_batch(1, ms(1), &[ms(1)], ms(0), false);
+        m.record_batch(1, ms(1), &[ms(1)], ms(500), false);
+        m.record_batch(1, ms(1), &[ms(1)], ms(1000), false);
+        assert!((m.throughput_fps() - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn failures_counted_separately() {
+        let mut m = ServerMetrics::new();
+        m.record_batch(3, ms(1), &[], ms(10), true);
+        assert_eq!(m.failed(), 3);
+        assert_eq!(m.completed(), 0);
+        assert!(m.throughput_fps().is_nan());
+    }
+}

@@ -1,0 +1,25 @@
+//! L3 serving coordinator.
+//!
+//! The system CORAL tunes: a request router feeding per-model dynamic
+//! batchers, a worker pool whose size is the paper's **concurrency
+//! level** (the application-level knob presets ignore, §II-A1), and
+//! serving metrics. Threads + channels (std) own the event loop; the
+//! PJRT executables run real inference on the hot path.
+//!
+//! ```text
+//! clients → Router → Batcher (size/deadline) → WorkerPool (c workers)
+//!                                                  └→ PJRT executables
+//!               completions → ServerMetrics (fps, latency percentiles)
+//! ```
+
+pub mod batcher;
+pub mod metrics;
+pub mod router;
+pub mod server;
+pub mod worker;
+
+pub use batcher::{Batcher, BatcherConfig, PendingRequest};
+pub use metrics::ServerMetrics;
+pub use router::Router;
+pub use server::{Server, ServerConfig, ServeReport};
+pub use worker::{BatchJob, BatchResult, WorkerPool};

@@ -1,0 +1,102 @@
+//! Request router: front door mapping each request's model to its
+//! serving stack. The paper evaluates one model at a time; the router
+//! generalizes the coordinator to multi-model edge boxes (the fleet
+//! example) with per-model queues and a shared admission policy.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+use super::server::Server;
+use crate::models::ModelKind;
+use crate::runtime::Detections;
+
+/// Multi-model front door.
+pub struct Router {
+    servers: BTreeMap<ModelKind, Server>,
+    /// Reject new work once a model's batcher backlog exceeds this.
+    pub admission_limit: usize,
+    rejected: u64,
+}
+
+impl Router {
+    pub fn new() -> Router {
+        Router { servers: BTreeMap::new(), admission_limit: 256, rejected: 0 }
+    }
+
+    /// Register a model's serving stack.
+    pub fn register(&mut self, model: ModelKind, server: Server) {
+        self.servers.insert(model, server);
+    }
+
+    pub fn models(&self) -> Vec<ModelKind> {
+        self.servers.keys().copied().collect()
+    }
+
+    pub fn server(&self, model: ModelKind) -> Option<&Server> {
+        self.servers.get(&model)
+    }
+
+    pub fn server_mut(&mut self, model: ModelKind) -> Option<&mut Server> {
+        self.servers.get_mut(&model)
+    }
+
+    /// Requests rejected by admission control.
+    pub fn rejected(&self) -> u64 {
+        self.rejected
+    }
+
+    /// Route one request. Errors on unknown models; sheds load (returns
+    /// Ok(false)) when the target queue is saturated.
+    pub fn route(&mut self, model: ModelKind, id: u64, pixels: Vec<f32>) -> Result<bool> {
+        let limit = self.admission_limit;
+        let server = match self.servers.get_mut(&model) {
+            Some(s) => s,
+            None => bail!("no server registered for model {model}"),
+        };
+        if server.backlog() >= limit {
+            self.rejected += 1;
+            return Ok(false);
+        }
+        server.submit(id, pixels);
+        Ok(true)
+    }
+
+    /// Pump every server; returns completions as (model, id, detections).
+    pub fn tick(&mut self) -> Vec<(ModelKind, u64, Detections)> {
+        let mut out = Vec::new();
+        for (&model, server) in self.servers.iter_mut() {
+            for (id, det) in server.tick() {
+                out.push((model, id, det));
+            }
+        }
+        out
+    }
+
+    /// Shut everything down; returns per-model completion counts.
+    pub fn shutdown(self) -> Vec<(ModelKind, u64)> {
+        self.servers
+            .into_iter()
+            .map(|(m, s)| (m, s.shutdown()))
+            .collect()
+    }
+}
+
+impl Default for Router {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unknown_model_is_an_error() {
+        let mut r = Router::new();
+        assert!(r.route(ModelKind::Yolo, 0, vec![0.0]).is_err());
+        assert!(r.models().is_empty());
+        assert_eq!(r.rejected(), 0);
+    }
+}

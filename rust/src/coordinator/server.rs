@@ -1,0 +1,238 @@
+//! The serving event loop: batcher → worker pool → metrics, with
+//! runtime-adjustable concurrency (the knob CORAL tunes live).
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use super::batcher::{Batcher, BatcherConfig, PendingRequest};
+use super::metrics::ServerMetrics;
+use super::worker::{BatchJob, ShareableRuntime, WorkerPool};
+use crate::runtime::{Detections, ModelRuntime};
+use crate::workload::VideoSource;
+
+/// Server construction knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct ServerConfig {
+    /// Inference workers (the paper's concurrency level).
+    pub concurrency: usize,
+    /// Batching policy.
+    pub batcher: BatcherConfig,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig { concurrency: 2, batcher: BatcherConfig::default() }
+    }
+}
+
+/// Steady-state report of a serving run.
+#[derive(Debug, Clone)]
+pub struct ServeReport {
+    pub requests: u64,
+    pub failed: u64,
+    pub throughput_fps: f64,
+    pub latency_p50_ms: f64,
+    pub latency_p95_ms: f64,
+    pub latency_p99_ms: f64,
+    pub mean_batch: f64,
+    pub mean_exec_ms: f64,
+    pub concurrency: usize,
+    pub wall_s: f64,
+}
+
+impl std::fmt::Display for ServeReport {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{} reqs in {:.2}s: {:.1} fps, p50 {:.1} ms, p95 {:.1} ms, p99 {:.1} ms, \
+             batch {:.2}, exec {:.1} ms, c={}",
+            self.requests,
+            self.wall_s,
+            self.throughput_fps,
+            self.latency_p50_ms,
+            self.latency_p95_ms,
+            self.latency_p99_ms,
+            self.mean_batch,
+            self.mean_exec_ms,
+            self.concurrency
+        )
+    }
+}
+
+/// Single-model serving stack.
+pub struct Server {
+    runtime: Arc<ShareableRuntime>,
+    pool: WorkerPool,
+    batcher: Batcher,
+    metrics: ServerMetrics,
+    start: Instant,
+    inflight_batches: usize,
+    total_submitted: u64,
+}
+
+impl Server {
+    pub fn new(runtime: ModelRuntime, cfg: ServerConfig) -> Server {
+        let runtime = Arc::new(ShareableRuntime(runtime));
+        let pool = WorkerPool::new(Arc::clone(&runtime), cfg.concurrency);
+        Server {
+            runtime,
+            pool,
+            batcher: Batcher::new(cfg.batcher),
+            metrics: ServerMetrics::new(),
+            start: Instant::now(),
+            inflight_batches: 0,
+            total_submitted: 0,
+        }
+    }
+
+    /// Elapsed logical time.
+    pub fn now(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    pub fn metrics(&self) -> &ServerMetrics {
+        &self.metrics
+    }
+
+    pub fn concurrency(&self) -> usize {
+        self.pool.size()
+    }
+
+    /// Requests queued or in flight (admission-control signal).
+    pub fn backlog(&self) -> usize {
+        self.batcher.queued() + self.inflight_batches * self.batcher.config().max_batch
+    }
+
+    /// Model input side (square pixels).
+    pub fn input_side(&self) -> usize {
+        self.runtime.0.input_side()
+    }
+
+    /// Change the live concurrency level: drains in-flight work, swaps
+    /// the worker pool (what `nvpmodel`-style reconfiguration does to the
+    /// app layer; the measurement warm-up after this is the optimizer's
+    /// problem, as on real hardware).
+    pub fn set_concurrency(&mut self, c: usize) {
+        if c == self.pool.size() {
+            return;
+        }
+        // Drain in-flight batches so no request is lost.
+        while self.inflight_batches > 0 {
+            if let Some(r) = self.pool.recv_timeout(Duration::from_secs(30)) {
+                self.absorb(r);
+            } else {
+                break;
+            }
+        }
+        let old = std::mem::replace(
+            &mut self.pool,
+            WorkerPool::new(Arc::clone(&self.runtime), c),
+        );
+        for r in old.shutdown() {
+            self.absorb(r);
+        }
+    }
+
+    /// Enqueue one frame.
+    pub fn submit(&mut self, id: u64, pixels: Vec<f32>) {
+        let req = PendingRequest { id, pixels, arrived: self.now() };
+        self.batcher.push(req);
+        self.total_submitted += 1;
+    }
+
+    fn absorb(&mut self, r: super::worker::BatchResult) -> Vec<(u64, Detections)> {
+        self.inflight_batches -= 1;
+        let now = self.now();
+        let lats: Vec<Duration> =
+            r.arrived.iter().map(|&a| now.saturating_sub(a)).collect();
+        self.metrics
+            .record_batch(r.ids.len(), r.exec_time, &lats, now, r.error.is_some());
+        if let Some(e) = &r.error {
+            log::warn!("batch failed on worker {}: {e}", r.worker);
+            return Vec::new();
+        }
+        r.ids.into_iter().zip(r.detections).collect()
+    }
+
+    /// Pump the loop: release due batches to the pool, collect finished
+    /// ones. Returns completed `(id, detections)` pairs.
+    pub fn tick(&mut self) -> Vec<(u64, Detections)> {
+        let now = self.now();
+        // Keep the pool fed, but do not queue unboundedly: at most 2
+        // batches in flight per worker (backpressure).
+        while self.inflight_batches < self.pool.size() * 2 {
+            match self.batcher.pop_ready(now) {
+                Some(batch) => {
+                    let mut ids = Vec::with_capacity(batch.len());
+                    let mut arrived = Vec::with_capacity(batch.len());
+                    let mut pixels = Vec::new();
+                    for r in batch {
+                        ids.push(r.id);
+                        arrived.push(r.arrived);
+                        pixels.extend_from_slice(&r.pixels);
+                    }
+                    self.pool.submit(BatchJob { ids, arrived, pixels });
+                    self.inflight_batches += 1;
+                }
+                None => break,
+            }
+        }
+        let mut done = Vec::new();
+        while let Some(r) = self.pool.try_recv() {
+            done.extend(self.absorb(r));
+        }
+        done
+    }
+
+    /// Drive a closed loop: `inflight` outstanding frames from `video`,
+    /// `total` completions. Returns the steady-state report.
+    pub fn run_closed_loop(
+        &mut self,
+        video: &mut VideoSource,
+        total: u64,
+        inflight: usize,
+    ) -> Result<ServeReport> {
+        assert_eq!(video.side(), self.input_side(), "video must match model input");
+        let t0 = self.now();
+        let mut next_id = 0u64;
+        let mut outstanding = 0usize;
+        let mut completed = 0u64;
+        while completed < total {
+            while outstanding < inflight && next_id < total {
+                self.submit(next_id, video.next_frame());
+                next_id += 1;
+                outstanding += 1;
+            }
+            let done = self.tick();
+            completed += done.len() as u64;
+            outstanding -= done.len();
+            if done.is_empty() {
+                std::thread::sleep(Duration::from_micros(200));
+            }
+        }
+        let wall = (self.now() - t0).as_secs_f64();
+        Ok(ServeReport {
+            requests: completed,
+            failed: self.metrics.failed(),
+            throughput_fps: completed as f64 / wall,
+            latency_p50_ms: self.metrics.latency_ms(50.0),
+            latency_p95_ms: self.metrics.latency_ms(95.0),
+            latency_p99_ms: self.metrics.latency_ms(99.0),
+            mean_batch: self.metrics.mean_batch_size(),
+            mean_exec_ms: self.metrics.mean_exec_ms(),
+            concurrency: self.pool.size(),
+            wall_s: wall,
+        })
+    }
+
+    /// Shut down, returning total completed count.
+    pub fn shutdown(self) -> u64 {
+        let done = self.metrics.completed();
+        self.pool.shutdown();
+        done
+    }
+}
+
+// Integration tests (real PJRT + artifacts) in rust/tests/.

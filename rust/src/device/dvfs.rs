@@ -1,0 +1,389 @@
+//! DVFS + concurrency configuration space (paper Eq. 5).
+//!
+//! A configuration is the 5-tuple `s = (s_cpu, c_cpu, s_gpu, s_mem, c)`.
+//! The space is a discrete grid per device (paper Table 2 ranges with
+//! ~100 MHz steps, §IV-A); this module provides enumeration, clamping/
+//! rounding onto the grid (Algorithm 2's `MINMAX(ROUND(v), r)`), indexing
+//! and neighbourhood moves.
+
+use super::specs::DeviceKind;
+
+/// One hardware configuration (paper Eq. 5).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct HwConfig {
+    /// CPU frequency, MHz.
+    pub cpu_freq_mhz: u32,
+    /// Active CPU cores.
+    pub cpu_cores: u32,
+    /// GPU frequency, MHz.
+    pub gpu_freq_mhz: u32,
+    /// Memory (EMC) frequency, MHz.
+    pub mem_freq_mhz: u32,
+    /// Concurrency level: number of inference instances.
+    pub concurrency: u32,
+}
+
+/// Configuration dimensions, in the canonical order used everywhere
+/// (sliding-window columns, correlation weights, search steps).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dim {
+    CpuFreq,
+    CpuCores,
+    GpuFreq,
+    MemFreq,
+    Concurrency,
+}
+
+impl Dim {
+    pub const ALL: [Dim; 5] =
+        [Dim::CpuFreq, Dim::CpuCores, Dim::GpuFreq, Dim::MemFreq, Dim::Concurrency];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Dim::CpuFreq => "cpu_freq_mhz",
+            Dim::CpuCores => "cpu_cores",
+            Dim::GpuFreq => "gpu_freq_mhz",
+            Dim::MemFreq => "mem_freq_mhz",
+            Dim::Concurrency => "concurrency",
+        }
+    }
+
+    pub fn index(self) -> usize {
+        match self {
+            Dim::CpuFreq => 0,
+            Dim::CpuCores => 1,
+            Dim::GpuFreq => 2,
+            Dim::MemFreq => 3,
+            Dim::Concurrency => 4,
+        }
+    }
+}
+
+impl HwConfig {
+    /// Number of tunable dimensions.
+    pub const NDIMS: usize = 5;
+
+    /// Configuration as an f64 vector in [`Dim::ALL`] order.
+    pub fn as_vec(&self) -> [f64; Self::NDIMS] {
+        [
+            self.cpu_freq_mhz as f64,
+            self.cpu_cores as f64,
+            self.gpu_freq_mhz as f64,
+            self.mem_freq_mhz as f64,
+            self.concurrency as f64,
+        ]
+    }
+
+    /// Build from an f64 vector (values must already be on-grid).
+    pub fn from_vec(v: [f64; Self::NDIMS]) -> HwConfig {
+        HwConfig {
+            cpu_freq_mhz: v[0] as u32,
+            cpu_cores: v[1] as u32,
+            gpu_freq_mhz: v[2] as u32,
+            mem_freq_mhz: v[3] as u32,
+            concurrency: v[4] as u32,
+        }
+    }
+
+    /// Value along one dimension.
+    pub fn get(&self, dim: Dim) -> u32 {
+        match dim {
+            Dim::CpuFreq => self.cpu_freq_mhz,
+            Dim::CpuCores => self.cpu_cores,
+            Dim::GpuFreq => self.gpu_freq_mhz,
+            Dim::MemFreq => self.mem_freq_mhz,
+            Dim::Concurrency => self.concurrency,
+        }
+    }
+
+    /// Copy with one dimension replaced.
+    pub fn with(&self, dim: Dim, value: u32) -> HwConfig {
+        let mut c = *self;
+        match dim {
+            Dim::CpuFreq => c.cpu_freq_mhz = value,
+            Dim::CpuCores => c.cpu_cores = value,
+            Dim::GpuFreq => c.gpu_freq_mhz = value,
+            Dim::MemFreq => c.mem_freq_mhz = value,
+            Dim::Concurrency => c.concurrency = value,
+        }
+        c
+    }
+
+    /// Stable hash-input encoding.
+    pub fn key(&self) -> [u64; 5] {
+        [
+            self.cpu_freq_mhz as u64,
+            self.cpu_cores as u64,
+            self.gpu_freq_mhz as u64,
+            self.mem_freq_mhz as u64,
+            self.concurrency as u64,
+        ]
+    }
+}
+
+impl std::fmt::Display for HwConfig {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "cpu={}MHzx{} gpu={}MHz mem={}MHz conc={}",
+            self.cpu_freq_mhz, self.cpu_cores, self.gpu_freq_mhz, self.mem_freq_mhz,
+            self.concurrency
+        )
+    }
+}
+
+/// The discrete configuration grid of one device.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ConfigSpace {
+    device: DeviceKind,
+    dims: [Vec<u32>; HwConfig::NDIMS],
+}
+
+impl ConfigSpace {
+    pub fn new(
+        device: DeviceKind,
+        cpu_freqs: Vec<u32>,
+        cpu_cores: Vec<u32>,
+        gpu_freqs: Vec<u32>,
+        mem_freqs: Vec<u32>,
+        concurrency: Vec<u32>,
+    ) -> ConfigSpace {
+        let dims = [cpu_freqs, cpu_cores, gpu_freqs, mem_freqs, concurrency];
+        for (i, d) in dims.iter().enumerate() {
+            assert!(!d.is_empty(), "dimension {i} empty");
+            assert!(d.windows(2).all(|w| w[0] < w[1]), "dimension {i} not sorted/unique");
+        }
+        ConfigSpace { device, dims }
+    }
+
+    pub fn device(&self) -> DeviceKind {
+        self.device
+    }
+
+    /// Allowed values along one dimension (sorted ascending).
+    pub fn values(&self, dim: Dim) -> &[u32] {
+        &self.dims[dim.index()]
+    }
+
+    pub fn min(&self, dim: Dim) -> u32 {
+        *self.values(dim).first().unwrap()
+    }
+
+    pub fn max(&self, dim: Dim) -> u32 {
+        *self.values(dim).last().unwrap()
+    }
+
+    /// Total grid size (before failure exclusion — paper's "raw" count).
+    pub fn raw_size(&self) -> usize {
+        self.dims.iter().map(|d| d.len()).product()
+    }
+
+    /// Is `cfg` exactly on the grid?
+    pub fn contains(&self, cfg: &HwConfig) -> bool {
+        Dim::ALL
+            .iter()
+            .all(|&d| self.values(d).binary_search(&cfg.get(d)).is_ok())
+    }
+
+    /// Snap a continuous value onto the grid: nearest allowed value
+    /// (Algorithm 2's `MINMAX(ROUND(v), r)` — clamp + round in one).
+    pub fn snap(&self, dim: Dim, v: f64) -> u32 {
+        let vals = self.values(dim);
+        let mut best = vals[0];
+        let mut best_d = f64::INFINITY;
+        for &x in vals {
+            let d = (x as f64 - v).abs();
+            if d < best_d {
+                best_d = d;
+                best = x;
+            }
+        }
+        best
+    }
+
+    /// Snap a full vector onto the grid.
+    pub fn snap_config(&self, v: [f64; HwConfig::NDIMS]) -> HwConfig {
+        let mut out = [0u32; HwConfig::NDIMS];
+        for (i, &d) in Dim::ALL.iter().enumerate() {
+            out[i] = self.snap(d, v[i]);
+        }
+        HwConfig {
+            cpu_freq_mhz: out[0],
+            cpu_cores: out[1],
+            gpu_freq_mhz: out[2],
+            mem_freq_mhz: out[3],
+            concurrency: out[4],
+        }
+    }
+
+    /// Enumerate the full grid in lexicographic order.
+    pub fn enumerate(&self) -> Vec<HwConfig> {
+        let mut out = Vec::with_capacity(self.raw_size());
+        for &cf in &self.dims[0] {
+            for &cc in &self.dims[1] {
+                for &gf in &self.dims[2] {
+                    for &mf in &self.dims[3] {
+                        for &c in &self.dims[4] {
+                            out.push(HwConfig {
+                                cpu_freq_mhz: cf,
+                                cpu_cores: cc,
+                                gpu_freq_mhz: gf,
+                                mem_freq_mhz: mf,
+                                concurrency: c,
+                            });
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Lexicographic index of an on-grid configuration.
+    pub fn index_of(&self, cfg: &HwConfig) -> Option<usize> {
+        let mut idx = 0usize;
+        for &d in &Dim::ALL {
+            let vals = self.values(d);
+            let pos = vals.binary_search(&cfg.get(d)).ok()?;
+            idx = idx * vals.len() + pos;
+        }
+        Some(idx)
+    }
+
+    /// The "middle" configuration — a neutral starting point for online
+    /// search when no preset is given.
+    pub fn midpoint(&self) -> HwConfig {
+        let mid = |d: Dim| {
+            let v = self.values(d);
+            v[v.len() / 2]
+        };
+        HwConfig {
+            cpu_freq_mhz: mid(Dim::CpuFreq),
+            cpu_cores: mid(Dim::CpuCores),
+            gpu_freq_mhz: mid(Dim::GpuFreq),
+            mem_freq_mhz: mid(Dim::MemFreq),
+            concurrency: mid(Dim::Concurrency),
+        }
+    }
+
+    /// Uniform random on-grid configuration.
+    pub fn random(&self, rng: &mut crate::util::Rng) -> HwConfig {
+        let pick = |d: Dim, rng: &mut crate::util::Rng| {
+            let v = self.values(d);
+            v[rng.below(v.len())]
+        };
+        HwConfig {
+            cpu_freq_mhz: pick(Dim::CpuFreq, rng),
+            cpu_cores: pick(Dim::CpuCores, rng),
+            gpu_freq_mhz: pick(Dim::GpuFreq, rng),
+            mem_freq_mhz: pick(Dim::MemFreq, rng),
+            concurrency: pick(Dim::Concurrency, rng),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::Rng;
+
+    fn nx() -> ConfigSpace {
+        DeviceKind::XavierNx.space()
+    }
+
+    #[test]
+    fn enumerate_matches_raw_size_and_is_unique() {
+        let s = nx();
+        let all = s.enumerate();
+        assert_eq!(all.len(), s.raw_size());
+        let mut sorted = all.clone();
+        sorted.sort();
+        sorted.dedup();
+        assert_eq!(sorted.len(), all.len());
+        assert!(all.iter().all(|c| s.contains(c)));
+    }
+
+    #[test]
+    fn index_of_is_enumeration_order() {
+        let s = DeviceKind::OrinNano.space();
+        for (i, cfg) in s.enumerate().iter().enumerate().step_by(97) {
+            assert_eq!(s.index_of(cfg), Some(i));
+        }
+    }
+
+    #[test]
+    fn index_of_off_grid_is_none() {
+        let s = nx();
+        let mut c = s.midpoint();
+        c.cpu_freq_mhz = 1234;
+        assert_eq!(s.index_of(&c), None);
+        assert!(!s.contains(&c));
+    }
+
+    #[test]
+    fn snap_picks_nearest() {
+        let s = nx();
+        assert_eq!(s.snap(Dim::CpuFreq, 1200.0), 1190);
+        assert_eq!(s.snap(Dim::CpuFreq, 1345.0), 1390);
+        assert_eq!(s.snap(Dim::CpuFreq, -1e9), 1190);
+        assert_eq!(s.snap(Dim::CpuFreq, 1e9), 1908);
+        assert_eq!(s.snap(Dim::Concurrency, 2.4), 2);
+    }
+
+    #[test]
+    fn snap_is_idempotent_and_in_range() {
+        prop::check("snap idempotent", 200, |g| {
+            let s = if g.rng.chance(0.5) {
+                DeviceKind::XavierNx.space()
+            } else {
+                DeviceKind::OrinNano.space()
+            };
+            let v = [
+                g.rng.range_f64(-100.0, 4000.0),
+                g.rng.range_f64(-2.0, 10.0),
+                g.rng.range_f64(-100.0, 2000.0),
+                g.rng.range_f64(0.0, 5000.0),
+                g.rng.range_f64(-1.0, 9.0),
+            ];
+            let cfg = s.snap_config(v);
+            prop::assert_true(s.contains(&cfg), "snapped config on grid")?;
+            let again = s.snap_config(cfg.as_vec());
+            prop::assert_eq_dbg(&again, &cfg)
+        });
+    }
+
+    #[test]
+    fn random_configs_are_on_grid() {
+        let s = DeviceKind::OrinNano.space();
+        let mut rng = Rng::new(5);
+        for _ in 0..200 {
+            assert!(s.contains(&s.random(&mut rng)));
+        }
+    }
+
+    #[test]
+    fn midpoint_on_grid() {
+        for d in DeviceKind::ALL {
+            let s = d.space();
+            assert!(s.contains(&s.midpoint()));
+        }
+    }
+
+    #[test]
+    fn with_and_get_round_trip() {
+        let c = nx().midpoint();
+        for &d in &Dim::ALL {
+            let c2 = c.with(d, c.get(d));
+            assert_eq!(c, c2);
+        }
+        let c3 = c.with(Dim::GpuFreq, 510);
+        assert_eq!(c3.gpu_freq_mhz, 510);
+    }
+
+    #[test]
+    fn as_vec_from_vec_round_trip() {
+        let c = nx().midpoint();
+        assert_eq!(HwConfig::from_vec(c.as_vec()), c);
+    }
+}

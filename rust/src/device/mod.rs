@@ -1,0 +1,21 @@
+//! Jetson device simulator.
+//!
+//! Substitutes the paper's physical Xavier NX / Orin Nano boards
+//! (DESIGN.md §2): a 5-dimensional DVFS + concurrency configuration space
+//! with the paper's exact tunable ranges (Table 2), analytic latency and
+//! power models reproducing the paper's response-surface structure
+//! (non-linear, interacting, with the Fig. 1 iso-throughput/iso-power
+//! spreads), a config-failure model reproducing Table 4's valid-config
+//! counts, and an optional thermal-throttle extension.
+
+pub mod dvfs;
+pub mod failure;
+pub mod perf;
+pub mod power;
+pub mod sim;
+pub mod specs;
+pub mod thermal;
+
+pub use dvfs::{ConfigSpace, Dim, HwConfig};
+pub use sim::{Device, Measured};
+pub use specs::DeviceKind;

@@ -1,0 +1,209 @@
+//! Analytic latency/throughput model (DESIGN.md §2).
+//!
+//! Deterministic "true" performance of a (device, model, configuration)
+//! triple; measurement noise and per-chip variation are layered on top by
+//! [`super::sim::Device`]. The structure is a three-stage pipeline
+//! (CPU pre/post-processing, GPU kernels, memory traffic) with
+//! concurrency-driven overlap, GPU contention and memory-bus
+//! interference — producing the paper's phenomena:
+//!
+//! * concurrency = 1 serializes CPU and GPU stages → the GPU idles and
+//!   throughput is well below GPU capacity (why presets underperform);
+//! * moderate concurrency pipelines the stages → throughput approaches
+//!   GPU capacity, at sub-linear contention cost;
+//! * high concurrency adds memory-bus interference → non-monotone gains;
+//! * memory frequency rescales effective GPU speed (bandwidth-bound
+//!   phases), more for heavier models;
+//! * parameters interact non-linearly (the reason the paper uses
+//!   distance correlation rather than per-parameter linear models).
+
+use super::dvfs::HwConfig;
+use super::specs::DeviceKind;
+use crate::models::ModelKind;
+
+/// Deterministic performance of one configuration.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PerfPoint {
+    /// Steady-state throughput, frames per second.
+    pub throughput_fps: f64,
+    /// Mean end-to-end latency per frame at this concurrency (ms).
+    pub latency_ms: f64,
+    /// GPU busy fraction [0, 1].
+    pub gpu_util: f64,
+    /// CPU busy fraction of the active cores [0, 1].
+    pub cpu_util: f64,
+    /// Memory-subsystem busy fraction [0, 1].
+    pub mem_util: f64,
+}
+
+/// Stage times of one frame (ms) — exposed for tests and §Perf analysis.
+#[derive(Debug, Clone, Copy)]
+pub struct StageTimes {
+    /// GPU kernel time including concurrency contention.
+    pub gpu_ms: f64,
+    /// CPU pre/post-processing time on one thread.
+    pub cpu_ms: f64,
+    /// Memory traffic time.
+    pub mem_ms: f64,
+}
+
+/// Per-frame stage times under configuration `cfg`.
+pub fn stage_times(dev: DeviceKind, model: ModelKind, cfg: &HwConfig) -> StageTimes {
+    let p = dev.model_params();
+    let prof = model.profile();
+    let c = cfg.concurrency.max(1) as f64;
+
+    // Memory-bandwidth efficiency saturates with the EMC clock; GPU
+    // kernels are partially bandwidth-bound, so it rescales GPU speed.
+    let mem_eff = cfg.mem_freq_mhz as f64 / (cfg.mem_freq_mhz as f64 + p.mem_half_mhz);
+
+    let gpu_exclusive =
+        prof.gpu_work / (cfg.gpu_freq_mhz as f64 * p.gpu_arch_eff * mem_eff);
+    // Shared SMs: each extra resident instance inflates kernel time.
+    let gpu_ms = gpu_exclusive * (1.0 + p.gpu_contention * (c - 1.0));
+
+    let cpu_ms = prof.cpu_work / (cfg.cpu_freq_mhz as f64 * p.cpu_arch_eff);
+    let mem_ms = prof.mem_work / cfg.mem_freq_mhz as f64;
+    StageTimes { gpu_ms, cpu_ms, mem_ms }
+}
+
+/// Evaluate the deterministic model.
+pub fn evaluate(dev: DeviceKind, model: ModelKind, cfg: &HwConfig) -> PerfPoint {
+    let p = dev.model_params();
+    let c = cfg.concurrency.max(1) as f64;
+    let cores = cfg.cpu_cores.max(1) as f64;
+    let t = stage_times(dev, model, cfg);
+
+    // Per-instance serial latency: an instance must pre-process, launch,
+    // and post-process each frame; a quarter of the memory traffic is not
+    // hidden behind compute.
+    let serial_ms = t.cpu_ms + t.gpu_ms + 0.25 * t.mem_ms;
+
+    // Resource capacities (frames/ms).
+    let cap_gpu = 1.0 / t.gpu_ms;
+    let cpu_threads = (c * p.cpu_threads_per_instance).min(cores * p.cpu_usable_frac);
+    let cap_cpu = cpu_threads / t.cpu_ms;
+    let cap_mem = 1.0 / t.mem_ms;
+
+    // c instances in flight, gated by the binding resource, degraded by
+    // memory-bus interference between instances.
+    let interference = (1.0 - p.mem_interference * (c - 1.0)).max(0.2);
+    let tput_ms = (c / serial_ms).min(cap_gpu).min(cap_cpu).min(cap_mem) * interference;
+
+    let throughput_fps = tput_ms * 1000.0;
+    let latency_ms = c / tput_ms;
+
+    PerfPoint {
+        throughput_fps,
+        latency_ms,
+        gpu_util: (tput_ms * t.gpu_ms).clamp(0.0, 1.0),
+        cpu_util: (tput_ms * t.cpu_ms / (cores * p.cpu_usable_frac)).clamp(0.0, 1.0),
+        mem_util: (tput_ms * t.mem_ms).clamp(0.0, 1.0),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::dvfs::Dim;
+    use crate::util::prop;
+
+    fn cfg(cpu: u32, cores: u32, gpu: u32, mem: u32, c: u32) -> HwConfig {
+        HwConfig {
+            cpu_freq_mhz: cpu,
+            cpu_cores: cores,
+            gpu_freq_mhz: gpu,
+            mem_freq_mhz: mem,
+            concurrency: c,
+        }
+    }
+
+    #[test]
+    fn gpu_freq_monotone_at_fixed_everything_else() {
+        let lo = evaluate(DeviceKind::XavierNx, ModelKind::Yolo, &cfg(1908, 6, 510, 1866, 2));
+        let hi = evaluate(DeviceKind::XavierNx, ModelKind::Yolo, &cfg(1908, 6, 1100, 1866, 2));
+        assert!(hi.throughput_fps > lo.throughput_fps);
+    }
+
+    #[test]
+    fn concurrency_pipelines_then_saturates() {
+        // c=2 must beat c=1 (pipeline overlap); the marginal gain must
+        // shrink (contention + interference) — the paper's non-linearity.
+        let f = |c| {
+            evaluate(DeviceKind::OrinNano, ModelKind::Yolo, &cfg(1510, 6, 624, 3199, c))
+                .throughput_fps
+        };
+        let t1 = f(1);
+        let t2 = f(2);
+        let t5 = f(5);
+        assert!(t2 > t1 * 1.2, "pipelining gain: {t1} -> {t2}");
+        assert!(t5 < t2 * 1.5, "saturation: {t2} -> {t5}");
+    }
+
+    #[test]
+    fn heavier_models_are_slower() {
+        let c = cfg(1908, 6, 1100, 1866, 2);
+        let y = evaluate(DeviceKind::XavierNx, ModelKind::Yolo, &c).throughput_fps;
+        let f = evaluate(DeviceKind::XavierNx, ModelKind::Frcnn, &c).throughput_fps;
+        let r = evaluate(DeviceKind::XavierNx, ModelKind::RetinaNet, &c).throughput_fps;
+        assert!(y > 2.0 * f && f > 1.5 * r, "y={y} f={f} r={r}");
+    }
+
+    #[test]
+    fn orin_outpaces_nx_on_yolo() {
+        // Fig 1: Orin reaches ~75 fps where NX tops out ~40.
+        let nx = DeviceKind::XavierNx.preset_max_power().with(Dim::Concurrency, 2);
+        let orin = DeviceKind::OrinNano.preset_max_power().with(Dim::Concurrency, 2);
+        let t_nx = evaluate(DeviceKind::XavierNx, ModelKind::Yolo, &nx).throughput_fps;
+        let t_orin = evaluate(DeviceKind::OrinNano, ModelKind::Yolo, &orin).throughput_fps;
+        assert!(t_orin > 1.5 * t_nx, "orin={t_orin} nx={t_nx}");
+    }
+
+    #[test]
+    fn interaction_gpu_gain_depends_on_concurrency() {
+        // The benefit of a GPU frequency step is larger when the pipeline
+        // is GPU-bound (c>=2) than when it is serialized (c=1): a
+        // non-additive interaction — exactly what dCor must detect and a
+        // linear per-parameter model misses.
+        let gain = |c| {
+            let lo =
+                evaluate(DeviceKind::XavierNx, ModelKind::Yolo, &cfg(1190, 2, 630, 1866, c));
+            let hi =
+                evaluate(DeviceKind::XavierNx, ModelKind::Yolo, &cfg(1190, 2, 1100, 1866, c));
+            hi.throughput_fps / lo.throughput_fps
+        };
+        assert!(gain(3) > gain(1) * 1.05, "g3={} g1={}", gain(3), gain(1));
+    }
+
+    #[test]
+    fn utils_in_unit_interval_and_latency_consistent() {
+        prop::check("perf sanity over random configs", 150, |g| {
+            let dev = *g.rng.choose(&DeviceKind::ALL);
+            let model = *g.rng.choose(&ModelKind::ALL);
+            let space = dev.space();
+            let mut rng = g.rng.fork(1);
+            let c = space.random(&mut rng);
+            let p = evaluate(dev, model, &c);
+            prop::assert_true(p.throughput_fps > 0.0, "tput > 0")?;
+            prop::assert_true((0.0..=1.0).contains(&p.gpu_util), "gpu util")?;
+            prop::assert_true((0.0..=1.0).contains(&p.cpu_util), "cpu util")?;
+            prop::assert_true((0.0..=1.0).contains(&p.mem_util), "mem util")?;
+            // Little's law: latency == concurrency / throughput.
+            prop::assert_close(
+                p.latency_ms,
+                c.concurrency as f64 / (p.throughput_fps / 1000.0),
+                1e-6,
+            )
+        });
+    }
+
+    #[test]
+    fn mem_freq_matters_more_for_heavy_models() {
+        let rel_gain = |m: ModelKind| {
+            let lo = evaluate(DeviceKind::XavierNx, m, &cfg(1908, 6, 1100, 1500, 2));
+            let hi = evaluate(DeviceKind::XavierNx, m, &cfg(1908, 6, 1100, 1866, 2));
+            hi.throughput_fps / lo.throughput_fps
+        };
+        assert!(rel_gain(ModelKind::RetinaNet) >= rel_gain(ModelKind::Yolo) * 0.999);
+    }
+}

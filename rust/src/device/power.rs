@@ -1,0 +1,148 @@
+//! Analytic power model (DESIGN.md §2).
+//!
+//! Deterministic "true" power of a (device, model, configuration) triple,
+//! given the utilizations produced by [`super::perf`]. Rail structure
+//! mirrors tegrastats' INA3221 channels on the paper's boards:
+//!
+//! ```text
+//! P = P_static                                   (SoC, board, rails)
+//!   + c_cpu · idle(f_cpu)                        (clock-scaled core idle)
+//!   + k_cpu · c_cpu · (f_cpu/1e3)^γcpu · u_cpu   (CPU dynamic)
+//!   + k_gpu · (f_gpu/1e3)^γgpu · (i + (1−i)·u_gpu)  (GPU dynamic+idle)
+//!   + k_mem · (f_mem/1e3) · (0.3 + 0.7·u_mem)    (EMC)
+//! ```
+//!
+//! γ ≈ 2–2.2 reflects the DVFS V∝f operating region (P ∝ C·V²·f). Power
+//! and throughput therefore interact through the *same* utilizations,
+//! giving the paper's non-linear joint response surface.
+
+use super::dvfs::HwConfig;
+use super::perf::PerfPoint;
+use super::specs::DeviceKind;
+
+/// Per-rail breakdown (mW), matching the tegrastats channels the paper
+/// samples.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PowerBreakdown {
+    pub static_mw: f64,
+    pub cpu_mw: f64,
+    pub gpu_mw: f64,
+    pub mem_mw: f64,
+}
+
+impl PowerBreakdown {
+    pub fn total_mw(&self) -> f64 {
+        self.static_mw + self.cpu_mw + self.gpu_mw + self.mem_mw
+    }
+}
+
+/// Evaluate the deterministic power model.
+pub fn evaluate(dev: DeviceKind, cfg: &HwConfig, perf: &PerfPoint) -> PowerBreakdown {
+    let p = dev.model_params();
+    let cores = cfg.cpu_cores.max(1) as f64;
+    let f_cpu = cfg.cpu_freq_mhz as f64 / 1000.0;
+    let f_gpu = cfg.gpu_freq_mhz as f64 / 1000.0;
+    let f_mem = cfg.mem_freq_mhz as f64 / 1000.0;
+
+    // Clock-gated but powered cores: idle draw grows with the pinned
+    // clock (jetson_clocks-style governors keep V·f high).
+    let cpu_idle = p.cpu_idle_mw_per_core * cores * f_cpu.powf(1.5);
+    let cpu_dyn = p.cpu_dyn_mw * cores * f_cpu.powf(p.cpu_gamma) * perf.cpu_util;
+
+    let gpu_mw = p.gpu_dyn_mw
+        * f_gpu.powf(p.gpu_gamma)
+        * (p.gpu_idle_frac + (1.0 - p.gpu_idle_frac) * perf.gpu_util);
+
+    let mem_mw = p.mem_dyn_mw * f_mem * (0.3 + 0.7 * perf.mem_util);
+
+    PowerBreakdown {
+        static_mw: p.static_mw,
+        cpu_mw: cpu_idle + cpu_dyn,
+        gpu_mw,
+        mem_mw,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::perf;
+    use crate::models::ModelKind;
+    use crate::util::prop;
+
+    fn full(dev: DeviceKind, cfg: &HwConfig) -> (PerfPoint, PowerBreakdown) {
+        let pf = perf::evaluate(dev, ModelKind::Yolo, cfg);
+        let pw = evaluate(dev, cfg, &pf);
+        (pf, pw)
+    }
+
+    #[test]
+    fn max_preset_draws_more_than_default() {
+        for dev in DeviceKind::ALL {
+            let (_, hi) = full(dev, &dev.preset_max_power());
+            let (_, lo) = full(dev, &dev.preset_default());
+            assert!(hi.total_mw() > lo.total_mw(), "{dev}");
+        }
+    }
+
+    #[test]
+    fn nx_power_range_is_jetson_class() {
+        // NX module: ~3.5 W floor to ~9 W under full load (DESIGN.md §6).
+        let space = DeviceKind::XavierNx.space();
+        let mut lo = f64::INFINITY;
+        let mut hi = 0.0f64;
+        for cfg in space.enumerate() {
+            let (_, pw) = full(DeviceKind::XavierNx, &cfg);
+            lo = lo.min(pw.total_mw());
+            hi = hi.max(pw.total_mw());
+        }
+        assert!(lo > 2500.0 && lo < 5000.0, "floor {lo}");
+        assert!(hi > 7000.0 && hi < 11_000.0, "peak {hi}");
+    }
+
+    #[test]
+    fn rails_positive_and_additive() {
+        prop::check("power rails sane", 120, |g| {
+            let dev = *g.rng.choose(&DeviceKind::ALL);
+            let model = *g.rng.choose(&ModelKind::ALL);
+            let mut rng = g.rng.fork(2);
+            let cfg = dev.space().random(&mut rng);
+            let pf = perf::evaluate(dev, model, &cfg);
+            let pw = evaluate(dev, &cfg, &pf);
+            prop::assert_true(pw.static_mw > 0.0, "static")?;
+            prop::assert_true(pw.cpu_mw > 0.0, "cpu")?;
+            prop::assert_true(pw.gpu_mw > 0.0, "gpu")?;
+            prop::assert_true(pw.mem_mw > 0.0, "mem")?;
+            prop::assert_close(
+                pw.total_mw(),
+                pw.static_mw + pw.cpu_mw + pw.gpu_mw + pw.mem_mw,
+                1e-9,
+            )
+        });
+    }
+
+    #[test]
+    fn gpu_rail_scales_with_clock_and_util() {
+        let dev = DeviceKind::XavierNx;
+        let base = dev.preset_default();
+        let mut hi_clk = base;
+        hi_clk.gpu_freq_mhz = 1100;
+        let (pf_a, pw_a) = full(dev, &base);
+        let pf_b = perf::evaluate(dev, ModelKind::Yolo, &hi_clk);
+        let pw_b = evaluate(dev, &hi_clk, &pf_b);
+        assert!(pw_b.gpu_mw > pw_a.gpu_mw);
+        assert!(pf_b.throughput_fps > pf_a.throughput_fps);
+    }
+
+    #[test]
+    fn more_cores_cost_idle_power() {
+        let dev = DeviceKind::OrinNano;
+        let mut a = dev.preset_default();
+        a.cpu_cores = 2;
+        let mut b = a;
+        b.cpu_cores = 6;
+        let (_, pa) = full(dev, &a);
+        let (_, pb) = full(dev, &b);
+        assert!(pb.cpu_mw > pa.cpu_mw + 200.0);
+    }
+}

@@ -1,0 +1,275 @@
+//! The simulated Jetson board: applies configurations (nvpmodel-style),
+//! runs measurement windows with the paper's telemetry discipline
+//! (2 s warm-up, 1 Hz samples), and layers per-chip variation +
+//! measurement noise on the deterministic models.
+
+use super::dvfs::{ConfigSpace, HwConfig};
+use super::failure::{self, FailureKind};
+use super::perf;
+use super::power;
+use super::specs::DeviceKind;
+use super::thermal::ThermalModel;
+use crate::models::ModelKind;
+use crate::util::rng::{hash_unit, Rng};
+
+/// One aggregated measurement window (what the optimizer observes).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Measured {
+    pub config: HwConfig,
+    /// Mean throughput over the window (fps). 0 for failed configs.
+    pub throughput_fps: f64,
+    /// Mean module power over the window (mW).
+    pub power_mw: f64,
+    /// Mean per-frame latency (ms). ∞ for failed configs.
+    pub latency_ms: f64,
+    pub gpu_util: f64,
+    pub cpu_util: f64,
+    pub mem_util: f64,
+    /// Set when the configuration failed to run (paper §IV-A exclusions).
+    pub failed: Option<FailureKind>,
+}
+
+/// Timing constants of the paper's measurement loop (§IV-A).
+pub const WARMUP_S: f64 = 2.0;
+pub const SAMPLES_PER_WINDOW: usize = 5;
+
+/// A simulated Jetson device running one model.
+#[derive(Debug, Clone)]
+pub struct Device {
+    kind: DeviceKind,
+    model: ModelKind,
+    space: ConfigSpace,
+    current: HwConfig,
+    rng: Rng,
+    thermal: Option<ThermalModel>,
+    /// Multiplier on measurement noise (robustness experiments).
+    noise_scale: f64,
+    /// Simulated wall-clock spent in warm-up + measurement (s) — used to
+    /// report search cost (CORAL's 10 iterations vs ORACLE's exhaustive
+    /// sweep).
+    sim_clock_s: f64,
+    windows_run: u64,
+}
+
+impl Device {
+    /// Create a device running `model`, at the manufacturer default
+    /// preset. `seed` drives only measurement noise; the underlying
+    /// response surface is deterministic per (device, model, config).
+    pub fn new(kind: DeviceKind, model: ModelKind, seed: u64) -> Device {
+        Device {
+            kind,
+            model,
+            space: kind.space(),
+            current: kind.preset_default(),
+            rng: Rng::new(seed ^ (kind.id() << 32) ^ model.id()),
+            thermal: None,
+            noise_scale: 1.0,
+            sim_clock_s: 0.0,
+            windows_run: 0,
+        }
+    }
+
+    /// Enable the thermal-throttle extension (ablation benches).
+    pub fn with_thermal(mut self, t: ThermalModel) -> Device {
+        self.thermal = Some(t);
+        self
+    }
+
+    /// Scale measurement noise (robustness experiments): 1.0 = the
+    /// calibrated tegrastats-class noise, 0.0 = noise-free oracle reads.
+    pub fn with_noise_scale(mut self, scale: f64) -> Device {
+        assert!(scale >= 0.0);
+        self.noise_scale = scale;
+        self
+    }
+
+    pub fn kind(&self) -> DeviceKind {
+        self.kind
+    }
+
+    pub fn model(&self) -> ModelKind {
+        self.model
+    }
+
+    pub fn space(&self) -> &ConfigSpace {
+        &self.space
+    }
+
+    pub fn current_config(&self) -> HwConfig {
+        self.current
+    }
+
+    /// Simulated seconds spent measuring so far.
+    pub fn sim_clock_s(&self) -> f64 {
+        self.sim_clock_s
+    }
+
+    pub fn windows_run(&self) -> u64 {
+        self.windows_run
+    }
+
+    /// Apply a configuration (nvpmodel + app concurrency). Off-grid
+    /// values are snapped to the grid, as nvpmodel does.
+    pub fn apply(&mut self, cfg: HwConfig) -> HwConfig {
+        self.current = self.space.snap_config(cfg.as_vec());
+        self.current
+    }
+
+    /// Noise-free ground truth (used by tests and the ORACLE's *ranking*
+    /// verification — the ORACLE baseline itself measures like everyone
+    /// else).
+    pub fn true_point(&self, cfg: &HwConfig) -> (perf::PerfPoint, power::PowerBreakdown) {
+        let mut pf = perf::evaluate(self.kind, self.model, cfg);
+        if let Some(t) = &self.thermal {
+            let derate = t.clock_factor();
+            pf.throughput_fps *= derate;
+            pf.latency_ms /= derate;
+        }
+        let pw = power::evaluate(self.kind, cfg, &pf);
+        (pf, pw)
+    }
+
+    /// Apply `cfg` and run one measurement window: 2 s warm-up, then
+    /// [`SAMPLES_PER_WINDOW`] 1 Hz samples averaged — the optimizer's
+    /// single observation. Failed configurations return a window with
+    /// `failed` set, zero throughput and idle-ish power (the inference
+    /// crashed; the board still draws power).
+    pub fn run(&mut self, cfg: HwConfig) -> Measured {
+        let applied = self.apply(cfg);
+        let window_s = WARMUP_S + SAMPLES_PER_WINDOW as f64;
+        self.sim_clock_s += window_s;
+        self.windows_run += 1;
+
+        if let Some(kind) = failure::check(self.kind, self.model, &applied) {
+            let p = self.kind.model_params();
+            if let Some(t) = &mut self.thermal {
+                t.step(p.static_mw, window_s);
+            }
+            return Measured {
+                config: applied,
+                throughput_fps: 0.0,
+                power_mw: p.static_mw
+                    * self.rng.noise_factor(p.noise_rel * self.noise_scale),
+                latency_ms: f64::INFINITY,
+                gpu_util: 0.0,
+                cpu_util: 0.0,
+                mem_util: 0.0,
+                failed: Some(kind),
+            };
+        }
+
+        let (pf, pw) = self.true_point(&applied);
+        if let Some(t) = &mut self.thermal {
+            t.step(pw.total_mw(), window_s);
+        }
+
+        // Per-chip variation: consistent across repeated visits to the
+        // same configuration (manufacturing spread, binning).
+        let p = self.kind.model_params();
+        let mut key = applied.key().to_vec();
+        key.extend_from_slice(&[self.model.id(), self.kind.id(), 0x1077]);
+        let lot_t = 1.0 + p.lottery_rel * 2.0 * (hash_unit(&key) - 0.5);
+        *key.last_mut().unwrap() = 0x1077 + 1;
+        let lot_p = 1.0 + p.lottery_rel * 2.0 * (hash_unit(&key) - 0.5);
+
+        // Measurement noise shrinks with window averaging.
+        let rel = p.noise_rel * self.noise_scale / (SAMPLES_PER_WINDOW as f64).sqrt();
+        let tput = pf.throughput_fps * lot_t * self.rng.noise_factor(rel);
+        let pwr = pw.total_mw() * lot_p * self.rng.noise_factor(rel);
+
+        Measured {
+            config: applied,
+            throughput_fps: tput,
+            power_mw: pwr,
+            latency_ms: applied.concurrency as f64 / (tput / 1000.0),
+            gpu_util: pf.gpu_util,
+            cpu_util: pf.cpu_util,
+            mem_util: pf.mem_util,
+            failed: None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::dvfs::Dim;
+
+    #[test]
+    fn repeated_runs_are_consistent_not_identical() {
+        let mut d = Device::new(DeviceKind::XavierNx, ModelKind::Yolo, 1);
+        let cfg = d.space().midpoint();
+        let a = d.run(cfg);
+        let b = d.run(cfg);
+        assert!(a.throughput_fps != b.throughput_fps, "noise present");
+        let rel = (a.throughput_fps - b.throughput_fps).abs() / a.throughput_fps;
+        assert!(rel < 0.05, "noise bounded: {rel}");
+    }
+
+    #[test]
+    fn same_seed_same_trace() {
+        let mut d1 = Device::new(DeviceKind::OrinNano, ModelKind::Frcnn, 9);
+        let mut d2 = Device::new(DeviceKind::OrinNano, ModelKind::Frcnn, 9);
+        let cfg = d1.space().midpoint();
+        assert_eq!(d1.run(cfg), d2.run(cfg));
+    }
+
+    #[test]
+    fn failed_config_reports_failure() {
+        // RetinaNet at max concurrency on NX exceeds the memory budget.
+        let mut d = Device::new(DeviceKind::XavierNx, ModelKind::RetinaNet, 3);
+        let mut cfg = d.space().midpoint();
+        cfg.concurrency = 3;
+        let m = d.run(cfg);
+        assert!(m.failed.is_some());
+        assert_eq!(m.throughput_fps, 0.0);
+        assert!(m.power_mw > 1000.0, "board still draws power");
+    }
+
+    #[test]
+    fn apply_snaps_to_grid() {
+        let mut d = Device::new(DeviceKind::XavierNx, ModelKind::Yolo, 0);
+        let applied = d.apply(HwConfig {
+            cpu_freq_mhz: 1333,
+            cpu_cores: 9,
+            gpu_freq_mhz: 0,
+            mem_freq_mhz: 1700,
+            concurrency: 2,
+        });
+        assert!(d.space().contains(&applied));
+        assert_eq!(applied.cpu_cores, 6);
+        assert_eq!(applied.gpu_freq_mhz, 510);
+    }
+
+    #[test]
+    fn sim_clock_advances_per_window() {
+        let mut d = Device::new(DeviceKind::XavierNx, ModelKind::Yolo, 0);
+        let cfg = d.space().midpoint();
+        d.run(cfg);
+        d.run(cfg);
+        assert_eq!(d.windows_run(), 2);
+        assert!((d.sim_clock_s() - 2.0 * (WARMUP_S + SAMPLES_PER_WINDOW as f64)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn noise_scale_zero_gives_lottery_only_reads() {
+        let mut a = Device::new(DeviceKind::XavierNx, ModelKind::Yolo, 1).with_noise_scale(0.0);
+        let cfg = a.space().midpoint();
+        let m1 = a.run(cfg);
+        let m2 = a.run(cfg);
+        assert_eq!(m1.throughput_fps, m2.throughput_fps, "no sampling noise");
+    }
+
+    #[test]
+    fn thermal_extension_derates_under_sustained_load() {
+        let mut d = Device::new(DeviceKind::XavierNx, ModelKind::Yolo, 0)
+            .with_thermal(ThermalModel::default());
+        let cfg = DeviceKind::XavierNx.preset_max_power().with(Dim::Concurrency, 2);
+        let first = d.run(cfg).throughput_fps;
+        for _ in 0..100 {
+            d.run(cfg);
+        }
+        let later = d.run(cfg).throughput_fps;
+        assert!(later < first * 0.95, "throttled: {first} -> {later}");
+    }
+}

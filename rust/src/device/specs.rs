@@ -1,0 +1,270 @@
+//! Device data sheets: paper Tables 1 + 2, the manufacturer preset modes,
+//! and the calibrated parameters of the analytic power/latency models.
+
+use super::dvfs::{ConfigSpace, HwConfig};
+
+/// The two evaluation boards (paper Table 1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum DeviceKind {
+    /// NVIDIA Jetson Xavier NX — 6× Carmel @1.9 GHz, 384-core Volta
+    /// @1100 MHz, 8 GB LPDDR4X, JetPack 5.1.
+    XavierNx,
+    /// NVIDIA Jetson Orin Nano — 6× Cortex-A78AE @1.5 GHz, 1024-core
+    /// Ampere @625 MHz, 8 GB LPDDR5, JetPack 6.1.
+    OrinNano,
+}
+
+impl DeviceKind {
+    pub const ALL: [DeviceKind; 2] = [DeviceKind::XavierNx, DeviceKind::OrinNano];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            DeviceKind::XavierNx => "xavier-nx",
+            DeviceKind::OrinNano => "orin-nano",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<DeviceKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "xavier-nx" | "xavier_nx" | "xaviernx" | "nx" => Some(DeviceKind::XavierNx),
+            "orin-nano" | "orin_nano" | "orinnano" | "orin" => Some(DeviceKind::OrinNano),
+            _ => None,
+        }
+    }
+
+    /// Stable small id (hash inputs).
+    pub fn id(self) -> u64 {
+        match self {
+            DeviceKind::XavierNx => 0,
+            DeviceKind::OrinNano => 1,
+        }
+    }
+
+    /// Tunable parameter grid (paper Table 2, discretized with the
+    /// paper's ~100 MHz steps; §IV-A: 2160 raw configs on NX, 1600 on
+    /// Orin). Endpoints match the data-sheet ranges.
+    pub fn space(self) -> ConfigSpace {
+        match self {
+            DeviceKind::XavierNx => ConfigSpace::new(
+                self,
+                // 8 CPU frequencies, 1190–1908 MHz.
+                vec![1190, 1290, 1390, 1490, 1590, 1690, 1790, 1908],
+                // 5 core counts, 2–6.
+                vec![2, 3, 4, 5, 6],
+                // 6 GPU frequencies, 510–1100 MHz.
+                vec![510, 630, 750, 870, 990, 1100],
+                // 3 memory frequencies, 1500–1866 MHz.
+                vec![1500, 1690, 1866],
+                // 3 concurrency levels.
+                vec![1, 2, 3],
+            ),
+            DeviceKind::OrinNano => ConfigSpace::new(
+                self,
+                // 8 CPU frequencies, 806–1510 MHz.
+                vec![806, 906, 1006, 1106, 1206, 1306, 1406, 1510],
+                vec![2, 3, 4, 5, 6],
+                // 4 GPU frequencies, 306–624 MHz.
+                vec![306, 412, 518, 624],
+                // 2 memory frequencies (LPDDR5 operating points).
+                vec![2133, 3199],
+                // 5 concurrency levels.
+                vec![1, 2, 3, 4, 5],
+            ),
+        }
+    }
+
+    /// Manufacturer max-performance preset (`nvpmodel` highest mode +
+    /// `jetson_clocks`): everything pinned to max, app-level concurrency
+    /// left at the framework default of 1 — presets do not manage
+    /// application knobs (paper §II-A1).
+    pub fn preset_max_power(self) -> HwConfig {
+        let s = self.space();
+        HwConfig {
+            cpu_freq_mhz: s.max(super::dvfs::Dim::CpuFreq),
+            cpu_cores: s.max(super::dvfs::Dim::CpuCores),
+            gpu_freq_mhz: s.max(super::dvfs::Dim::GpuFreq),
+            mem_freq_mhz: s.max(super::dvfs::Dim::MemFreq),
+            concurrency: 1,
+        }
+    }
+
+    /// Manufacturer default power mode (NX: 10 W desktop default — 4
+    /// cores capped mid-clock; Orin Nano: 7 W default).
+    pub fn preset_default(self) -> HwConfig {
+        match self {
+            DeviceKind::XavierNx => HwConfig {
+                cpu_freq_mhz: 1390,
+                cpu_cores: 4,
+                gpu_freq_mhz: 630,
+                mem_freq_mhz: 1690,
+                concurrency: 1,
+            },
+            DeviceKind::OrinNano => HwConfig {
+                cpu_freq_mhz: 1006,
+                cpu_cores: 4,
+                gpu_freq_mhz: 412,
+                mem_freq_mhz: 2133,
+                concurrency: 1,
+            },
+        }
+    }
+
+    /// Calibrated analytic-model parameters (see `perf.rs` / `power.rs`;
+    /// calibration anchors in DESIGN.md §6, verified by
+    /// `device::sim::tests` and EXPERIMENTS.md).
+    pub fn model_params(self) -> DeviceModelParams {
+        match self {
+            DeviceKind::XavierNx => DeviceModelParams {
+                gpu_arch_eff: 1.0,
+                cpu_arch_eff: 1.0,
+                mem_half_mhz: 600.0,
+                gpu_contention: 0.16,
+                mem_interference: 0.035,
+                cpu_threads_per_instance: 2.0,
+                cpu_usable_frac: 0.9, // cgroups 90 % cap (paper §IV-A)
+                static_mw: 2350.0,
+                cpu_idle_mw_per_core: 110.0,
+                cpu_dyn_mw: 260.0,
+                cpu_gamma: 2.2,
+                gpu_dyn_mw: 2900.0,
+                gpu_gamma: 2.0,
+                gpu_idle_frac: 0.12,
+                mem_dyn_mw: 520.0,
+                mem_gb_budget: 7.4,
+                noise_rel: 0.015,
+                lottery_rel: 0.03,
+            },
+            DeviceKind::OrinNano => DeviceModelParams {
+                // 1024 Ampere cores @ ≤624 MHz vs 384 Volta @ ≤1100 MHz:
+                // much higher per-MHz throughput.
+                gpu_arch_eff: 3.35,
+                cpu_arch_eff: 1.18, // A78AE IPC edge over Carmel
+                mem_half_mhz: 900.0,
+                gpu_contention: 0.10,
+                mem_interference: 0.025,
+                cpu_threads_per_instance: 2.0,
+                cpu_usable_frac: 0.9,
+                static_mw: 2050.0,
+                cpu_idle_mw_per_core: 90.0,
+                cpu_dyn_mw: 300.0,
+                cpu_gamma: 2.2,
+                gpu_dyn_mw: 6300.0,
+                gpu_gamma: 2.0,
+                gpu_idle_frac: 0.10,
+                mem_dyn_mw: 260.0,
+                mem_gb_budget: 7.4,
+                noise_rel: 0.015,
+                lottery_rel: 0.03,
+            },
+        }
+    }
+}
+
+impl std::fmt::Display for DeviceKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Calibrated constants of the analytic device model.
+///
+/// Latency model (perf.rs): stage times scale as work / effective-clock;
+/// power model (power.rs): static + per-rail dynamic terms with DVFS
+/// exponents (P_dyn ∝ f^γ, γ ≈ 2–2.2 in the V∝f region).
+#[derive(Debug, Clone, Copy)]
+pub struct DeviceModelParams {
+    /// GPU per-MHz throughput multiplier (architecture + core count).
+    pub gpu_arch_eff: f64,
+    /// CPU per-MHz throughput multiplier (IPC).
+    pub cpu_arch_eff: f64,
+    /// Memory half-saturation clock: GPU efficiency = f_mem/(f_mem+half).
+    pub mem_half_mhz: f64,
+    /// GPU time inflation per extra concurrent instance (shared SMs).
+    pub gpu_contention: f64,
+    /// Throughput loss per extra instance from memory-bus interference.
+    pub mem_interference: f64,
+    /// CPU threads one inference instance keeps busy (pre/post-process).
+    pub cpu_threads_per_instance: f64,
+    /// Usable CPU fraction (cgroup cap from the paper's setup).
+    pub cpu_usable_frac: f64,
+    /// Idle/base power: SoC, carrier board, rails (mW).
+    pub static_mw: f64,
+    /// Per-active-core idle power (mW).
+    pub cpu_idle_mw_per_core: f64,
+    /// CPU dynamic power coefficient (mW at 1 GHz, 1 core, 100 % util).
+    pub cpu_dyn_mw: f64,
+    /// CPU DVFS exponent.
+    pub cpu_gamma: f64,
+    /// GPU dynamic power coefficient (mW at 1 GHz, 100 % util).
+    pub gpu_dyn_mw: f64,
+    /// GPU DVFS exponent.
+    pub gpu_gamma: f64,
+    /// GPU idle draw as a fraction of its dynamic term at current clock.
+    pub gpu_idle_frac: f64,
+    /// Memory dynamic power coefficient (mW at 1 GHz, 100 % util).
+    pub mem_dyn_mw: f64,
+    /// Usable device memory before configs start failing (GB of 8 GB).
+    pub mem_gb_budget: f64,
+    /// Telemetry measurement noise (relative sigma per 1 s sample).
+    pub noise_rel: f64,
+    /// Per-configuration deterministic "chip lottery" spread.
+    pub lottery_rel: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::dvfs::Dim;
+
+    #[test]
+    fn table2_space_sizes() {
+        // §IV-A: 5·8·6·3·3 = 2160 on NX, 5·8·4·2·5 = 1600 on Orin.
+        assert_eq!(DeviceKind::XavierNx.space().raw_size(), 2160);
+        assert_eq!(DeviceKind::OrinNano.space().raw_size(), 1600);
+    }
+
+    #[test]
+    fn table2_ranges() {
+        let nx = DeviceKind::XavierNx.space();
+        assert_eq!(nx.min(Dim::CpuFreq), 1190);
+        assert_eq!(nx.max(Dim::CpuFreq), 1908);
+        assert_eq!(nx.min(Dim::GpuFreq), 510);
+        assert_eq!(nx.max(Dim::GpuFreq), 1100);
+        assert_eq!(nx.max(Dim::Concurrency), 3);
+        let orin = DeviceKind::OrinNano.space();
+        assert_eq!(orin.min(Dim::CpuFreq), 806);
+        assert_eq!(orin.max(Dim::CpuFreq), 1510);
+        assert_eq!(orin.max(Dim::GpuFreq), 624);
+        assert_eq!(orin.max(Dim::Concurrency), 5);
+        assert_eq!(orin.values(Dim::MemFreq), &[2133, 3199]);
+    }
+
+    #[test]
+    fn presets_are_in_space() {
+        for d in DeviceKind::ALL {
+            let s = d.space();
+            assert!(s.contains(&d.preset_max_power()), "{d} max");
+            assert!(s.contains(&d.preset_default()), "{d} default");
+        }
+    }
+
+    #[test]
+    fn max_preset_dominates_default() {
+        for d in DeviceKind::ALL {
+            let hi = d.preset_max_power();
+            let lo = d.preset_default();
+            assert!(hi.cpu_freq_mhz > lo.cpu_freq_mhz);
+            assert!(hi.gpu_freq_mhz > lo.gpu_freq_mhz);
+            assert!(hi.cpu_cores >= lo.cpu_cores);
+        }
+    }
+
+    #[test]
+    fn names_round_trip() {
+        for d in DeviceKind::ALL {
+            assert_eq!(DeviceKind::parse(d.name()), Some(d));
+        }
+        assert_eq!(DeviceKind::parse("NX"), Some(DeviceKind::XavierNx));
+        assert_eq!(DeviceKind::parse("orin"), Some(DeviceKind::OrinNano));
+    }
+}

@@ -1,0 +1,109 @@
+//! Thermal-throttle extension (off by default).
+//!
+//! The paper's short measurement windows avoid sustained throttling, but
+//! a deployed optimizer will meet it; this first-order RC thermal model
+//! lets the ablation benches inject it: junction temperature integrates
+//! power, and past the throttle point the effective GPU clock derates —
+//! CORAL then sees the drifting environment through its sliding window.
+
+/// First-order thermal model with a soft throttle curve.
+#[derive(Debug, Clone)]
+pub struct ThermalModel {
+    /// Junction temperature (°C).
+    pub temp_c: f64,
+    /// Ambient (°C).
+    pub ambient_c: f64,
+    /// °C per (W·s) of heating.
+    pub heat_per_ws: f64,
+    /// Fraction of the excess over ambient shed per second.
+    pub cool_rate: f64,
+    /// Throttling starts here (°C).
+    pub throttle_start_c: f64,
+    /// Full derate reached here (°C).
+    pub throttle_full_c: f64,
+    /// Max clock derate at full throttle (fraction of nominal).
+    pub max_derate: f64,
+}
+
+impl Default for ThermalModel {
+    fn default() -> Self {
+        ThermalModel {
+            temp_c: 35.0,
+            ambient_c: 35.0,
+            heat_per_ws: 0.6,
+            cool_rate: 0.08,
+            throttle_start_c: 70.0,
+            throttle_full_c: 95.0,
+            max_derate: 0.35,
+        }
+    }
+}
+
+impl ThermalModel {
+    pub fn temperature_c(&self) -> f64 {
+        self.temp_c
+    }
+
+    /// Advance the model by `dt_s` seconds at `power_mw` draw.
+    pub fn step(&mut self, power_mw: f64, dt_s: f64) {
+        let heat = power_mw / 1000.0 * self.heat_per_ws * dt_s;
+        let cool = (self.temp_c - self.ambient_c) * self.cool_rate * dt_s;
+        self.temp_c += heat - cool;
+    }
+
+    /// Effective clock multiplier at the current temperature, in
+    /// `[1 − max_derate, 1]`.
+    pub fn clock_factor(&self) -> f64 {
+        if self.temp_c <= self.throttle_start_c {
+            return 1.0;
+        }
+        let span = self.throttle_full_c - self.throttle_start_c;
+        let frac = ((self.temp_c - self.throttle_start_c) / span).clamp(0.0, 1.0);
+        1.0 - self.max_derate * frac
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cool_device_does_not_throttle() {
+        let t = ThermalModel::default();
+        assert_eq!(t.clock_factor(), 1.0);
+    }
+
+    #[test]
+    fn sustained_load_heats_and_throttles() {
+        let mut t = ThermalModel::default();
+        for _ in 0..600 {
+            t.step(9000.0, 1.0);
+        }
+        assert!(t.temperature_c() > t.throttle_start_c);
+        assert!(t.clock_factor() < 1.0);
+        assert!(t.clock_factor() >= 1.0 - t.max_derate);
+    }
+
+    #[test]
+    fn equilibrium_is_bounded() {
+        let mut t = ThermalModel::default();
+        for _ in 0..10_000 {
+            t.step(9000.0, 1.0);
+        }
+        let eq = t.temperature_c();
+        t.step(9000.0, 1.0);
+        assert!((t.temperature_c() - eq).abs() < 0.05, "settled");
+    }
+
+    #[test]
+    fn idle_cools_back_to_ambient() {
+        let mut t = ThermalModel::default();
+        for _ in 0..300 {
+            t.step(9000.0, 1.0);
+        }
+        for _ in 0..2000 {
+            t.step(0.0, 1.0);
+        }
+        assert!((t.temperature_c() - t.ambient_c).abs() < 1.0);
+    }
+}

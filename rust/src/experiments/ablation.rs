@@ -1,0 +1,152 @@
+//! Ablations of CORAL's design choices (DESIGN.md §7): dCor weighting,
+//! window size, heuristic variant, anchor interpretation, iteration
+//! budget. Not in the paper's evaluation — they justify the design the
+//! paper asserts.
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::device::DeviceKind;
+use crate::models::ModelKind;
+use crate::optimizer::coral::{Anchor, CoralConfig, Heuristic};
+use crate::optimizer::Constraints;
+use crate::util::csv::Csv;
+use crate::util::table;
+
+use super::runner::{run_method_with, MethodKind};
+use super::scenarios::dual_constraints;
+
+/// One ablation variant.
+pub struct Variant {
+    pub name: &'static str,
+    pub cfg: CoralConfig,
+    pub budget: usize,
+}
+
+/// The ablation lineup.
+pub fn variants() -> Vec<Variant> {
+    let base = CoralConfig::default();
+    vec![
+        Variant { name: "coral (default)", cfg: base, budget: 10 },
+        Variant {
+            name: "no-dcor (gamma=1)",
+            cfg: CoralConfig { use_dcor: false, ..base },
+            budget: 10,
+        },
+        Variant {
+            name: "heuristic off",
+            cfg: CoralConfig { heuristic: Heuristic::Off, ..base },
+            budget: 10,
+        },
+        Variant {
+            name: "heuristic freq-min",
+            cfg: CoralConfig { heuristic: Heuristic::FreqMin, ..base },
+            budget: 10,
+        },
+        Variant {
+            name: "heuristic cores-min",
+            cfg: CoralConfig { heuristic: Heuristic::CoresMin, ..base },
+            budget: 10,
+        },
+        Variant {
+            name: "anchor best/second",
+            cfg: CoralConfig { anchor: Anchor::BestSecond, ..base },
+            budget: 10,
+        },
+        Variant {
+            name: "revisits allowed",
+            cfg: CoralConfig { avoid_revisits: false, ..base },
+            budget: 10,
+        },
+        Variant { name: "window W=3", cfg: CoralConfig { window: 3, ..base }, budget: 10 },
+        Variant { name: "window W=5", cfg: CoralConfig { window: 5, ..base }, budget: 10 },
+        Variant { name: "budget 5", cfg: base, budget: 5 },
+        Variant { name: "budget 20", cfg: base, budget: 20 },
+        Variant { name: "budget 40", cfg: base, budget: 40 },
+    ]
+}
+
+/// Feasibility rate + mean efficiency of one variant on one scenario.
+pub fn run_variant(
+    v: &Variant,
+    device: DeviceKind,
+    model: ModelKind,
+    cons: Constraints,
+    seeds: u64,
+) -> (f64, f64) {
+    let mut feasible = 0u64;
+    let mut eff_sum = 0.0;
+    for s in 0..seeds {
+        let o = run_method_with(
+            MethodKind::Coral,
+            device,
+            model,
+            cons,
+            0xAB1A + s,
+            v.cfg,
+            v.budget,
+        );
+        if o.feasible {
+            feasible += 1;
+            eff_sum += o.throughput_fps / o.power_mw * 1000.0;
+        }
+    }
+    let rate = feasible as f64 / seeds as f64;
+    let eff = if feasible > 0 { eff_sum / feasible as f64 } else { f64::NAN };
+    (rate, eff)
+}
+
+/// Regenerate the ablation table into `<out>/ablation.csv`.
+pub fn run(out_dir: &Path, seeds: u64) -> Result<()> {
+    let device = DeviceKind::XavierNx;
+    let model = ModelKind::Yolo;
+    let cons = dual_constraints(device, model);
+    let mut csv = Csv::new(&["variant", "budget", "feasible_rate", "mean_fps_per_w"]);
+    let mut rows = Vec::new();
+    println!("Ablations — CORAL variants on {device}/{model} dual constraints");
+    for v in variants() {
+        let (rate, eff) = run_variant(&v, device, model, cons, seeds);
+        csv.push(vec![
+            v.name.into(),
+            v.budget.to_string(),
+            format!("{rate:.2}"),
+            format!("{eff:.2}"),
+        ]);
+        rows.push(vec![
+            v.name.to_string(),
+            v.budget.to_string(),
+            format!("{:.0}%", rate * 100.0),
+            format!("{eff:.2}"),
+        ]);
+    }
+    print!(
+        "{}",
+        table::render(&["variant", "budget", "feasible", "fps/W"], &rows)
+    );
+    csv.save(&out_dir.join("ablation.csv"))?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn larger_budget_never_hurts_much() {
+        let device = DeviceKind::XavierNx;
+        let model = ModelKind::Yolo;
+        let cons = dual_constraints(device, model);
+        let base = CoralConfig::default();
+        let small = run_variant(
+            &Variant { name: "b5", cfg: base, budget: 5 },
+            device, model, cons, 8,
+        );
+        let large = run_variant(
+            &Variant { name: "b20", cfg: base, budget: 20 },
+            device, model, cons, 8,
+        );
+        assert!(large.0 >= small.0, "budget 20 ({}) >= budget 5 ({})", large.0, small.0);
+        assert!(large.0 >= 0.8, "20 iterations should converge: {}", large.0);
+    }
+}

@@ -1,0 +1,132 @@
+//! Convergence curves: best-so-far reward/feasibility per iteration for
+//! CORAL vs the online baselines. The paper asserts "converging to valid
+//! configurations within 10 iterations" (§I) but never plots it; this
+//! harness regenerates the per-iteration series behind that claim.
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::device::Device;
+use crate::models::ModelKind;
+use crate::optimizer::{
+    AlertOnlineOptimizer, Constraints, CoralOptimizer, Optimizer, RandomOptimizer,
+};
+use crate::util::csv::Csv;
+use crate::util::table;
+
+use super::scenarios::{DualScenario, DUAL_SCENARIOS};
+
+/// Best-so-far series of one method on one scenario (averaged rates).
+#[derive(Debug, Clone)]
+pub struct Curve {
+    pub method: &'static str,
+    /// `feasible_rate[i]` = fraction of seeds whose best-so-far at
+    /// iteration i (1-based internally, index 0 = after 1st observation)
+    /// satisfies both constraints.
+    pub feasible_rate: Vec<f64>,
+}
+
+fn run_curve<F>(s: DualScenario, seeds: u64, iters: usize, make: F) -> Curve
+where
+    F: Fn(&Device, Constraints, u64) -> (&'static str, Box<dyn Optimizer>),
+{
+    let cons = Constraints::dual(s.target_fps, s.budget_mw);
+    let mut hits = vec![0u64; iters];
+    let mut name = "";
+    for seed in 0..seeds {
+        let mut dev = Device::new(s.device, s.model, 0xC09E + seed);
+        let (n, mut opt) = make(&dev, cons, seed);
+        name = n;
+        for i in 0..iters {
+            let cfg = opt.propose();
+            let m = dev.run(cfg);
+            opt.observe(cfg, m.throughput_fps, m.power_mw);
+            if opt.best().map(|b| b.feasible).unwrap_or(false) {
+                hits[i] += 1;
+            }
+        }
+    }
+    Curve {
+        method: name,
+        feasible_rate: hits.iter().map(|&h| h as f64 / seeds as f64).collect(),
+    }
+}
+
+/// Curves for one scenario: CORAL, ALERT-Online, random.
+pub fn curves(s: DualScenario, seeds: u64, iters: usize) -> Vec<Curve> {
+    vec![
+        run_curve(s, seeds, iters, |dev, cons, seed| {
+            ("coral", Box::new(CoralOptimizer::new(dev.space().clone(), cons, seed)))
+        }),
+        run_curve(s, seeds, iters, |dev, cons, seed| {
+            (
+                "alert-online",
+                Box::new(AlertOnlineOptimizer::new(dev.space().clone(), cons, seed)),
+            )
+        }),
+        run_curve(s, seeds, iters, |dev, cons, seed| {
+            ("random", Box::new(RandomOptimizer::new(dev.space().clone(), cons, seed)))
+        }),
+    ]
+}
+
+/// Regenerate convergence curves for every dual scenario into
+/// `<out>/convergence.csv`.
+pub fn run(out_dir: &Path, seeds: u64) -> Result<()> {
+    const ITERS: usize = 10;
+    let mut csv = Csv::new(&["device", "model", "method", "iteration", "feasible_rate"]);
+    println!("Convergence — feasible-by-iteration (dual constraints, {seeds} seeds)");
+    for s in DUAL_SCENARIOS.iter().filter(|s| s.model == ModelKind::Yolo) {
+        let mut rows = Vec::new();
+        for c in curves(*s, seeds, ITERS) {
+            for (i, r) in c.feasible_rate.iter().enumerate() {
+                csv.push(vec![
+                    s.device.name().into(),
+                    s.model.name().into(),
+                    c.method.into(),
+                    (i + 1).to_string(),
+                    format!("{r:.2}"),
+                ]);
+            }
+            rows.push(
+                std::iter::once(c.method.to_string())
+                    .chain(c.feasible_rate.iter().map(|r| format!("{:.0}", r * 100.0)))
+                    .collect::<Vec<_>>(),
+            );
+        }
+        let mut header = vec!["method".to_string()];
+        header.extend((1..=ITERS).map(|i| format!("it{i}")));
+        let header_refs: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+        println!("{} / {} (% of seeds feasible by iteration):", s.device, s.model);
+        print!("{}", table::render(&header_refs, &rows));
+    }
+    csv.save(&out_dir.join("convergence.csv"))?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn coral_converges_earlier_than_random() {
+        let s = DUAL_SCENARIOS[0]; // NX / YOLO
+        let cs = curves(s, 10, 10);
+        let coral = cs.iter().find(|c| c.method == "coral").unwrap();
+        let random = cs.iter().find(|c| c.method == "random").unwrap();
+        // Monotone best-so-far.
+        assert!(coral
+            .feasible_rate
+            .windows(2)
+            .all(|w| w[1] >= w[0] - 1e-9));
+        // By the budget's end CORAL dominates.
+        assert!(
+            coral.feasible_rate[9] > random.feasible_rate[9],
+            "coral {:?} vs random {:?}",
+            coral.feasible_rate,
+            random.feasible_rate
+        );
+        assert!(coral.feasible_rate[9] >= 0.9);
+    }
+}

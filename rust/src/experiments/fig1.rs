@@ -1,0 +1,130 @@
+//! Figure 1: power–throughput trade-off scatter of YOLO on both devices
+//! (the paper's motivation: ~2× power spread at iso-throughput on
+//! XAVIER-NX; 40–75 fps at iso-power on ORIN-NANO).
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::device::{failure, Device, DeviceKind};
+use crate::models::ModelKind;
+use crate::util::csv::Csv;
+
+/// Scatter data of one device.
+pub struct Scatter {
+    pub device: DeviceKind,
+    pub points: Vec<(f64, f64)>, // (fps, mW)
+    pub csv: Csv,
+}
+
+/// Measure every valid YOLO configuration on `device` (one window each —
+/// the paper's exhaustive profiling pass).
+pub fn sweep(device: DeviceKind, seed: u64) -> Scatter {
+    let mut dev = Device::new(device, ModelKind::Yolo, seed);
+    let mut csv = Csv::new(&[
+        "device", "cpu_freq_mhz", "cpu_cores", "gpu_freq_mhz", "mem_freq_mhz",
+        "concurrency", "throughput_fps", "power_mw",
+    ]);
+    let mut points = Vec::new();
+    for cfg in failure::valid_configs(device, ModelKind::Yolo) {
+        let m = dev.run(cfg);
+        debug_assert!(m.failed.is_none());
+        points.push((m.throughput_fps, m.power_mw));
+        csv.push(vec![
+            device.name().into(),
+            cfg.cpu_freq_mhz.to_string(),
+            cfg.cpu_cores.to_string(),
+            cfg.gpu_freq_mhz.to_string(),
+            cfg.mem_freq_mhz.to_string(),
+            cfg.concurrency.to_string(),
+            format!("{:.2}", m.throughput_fps),
+            format!("{:.0}", m.power_mw),
+        ]);
+    }
+    Scatter { device, points, csv }
+}
+
+/// The paper's headline spreads, computed from a scatter.
+pub struct Fig1Stats {
+    /// NX box: power spread (max/min) among configs within ±10 % of 30 fps.
+    pub iso_tput_power_ratio: f64,
+    /// Orin box: fps spread (max − min) among configs within ±5 % of 6 W.
+    pub iso_power_fps_span: (f64, f64),
+}
+
+pub fn stats(nx: &Scatter, orin: &Scatter) -> Fig1Stats {
+    let band: Vec<f64> = nx
+        .points
+        .iter()
+        .filter(|(f, _)| (*f - 30.0).abs() <= 3.0)
+        .map(|(_, p)| *p)
+        .collect();
+    let iso_tput_power_ratio = if band.is_empty() {
+        f64::NAN
+    } else {
+        band.iter().cloned().fold(0.0, f64::max)
+            / band.iter().cloned().fold(f64::INFINITY, f64::min)
+    };
+    let fps_at_6w: Vec<f64> = orin
+        .points
+        .iter()
+        .filter(|(_, p)| (*p - 6000.0).abs() <= 300.0)
+        .map(|(f, _)| *f)
+        .collect();
+    let iso_power_fps_span = if fps_at_6w.is_empty() {
+        (f64::NAN, f64::NAN)
+    } else {
+        (
+            fps_at_6w.iter().cloned().fold(f64::INFINITY, f64::min),
+            fps_at_6w.iter().cloned().fold(0.0, f64::max),
+        )
+    };
+    Fig1Stats { iso_tput_power_ratio, iso_power_fps_span }
+}
+
+/// Regenerate Figure 1 into `<out>/fig1_<device>.csv` + printed summary.
+pub fn run(out_dir: &Path) -> Result<()> {
+    let nx = sweep(DeviceKind::XavierNx, 0xF161);
+    let orin = sweep(DeviceKind::OrinNano, 0xF161);
+    nx.csv.save(&out_dir.join("fig1_xavier_nx.csv"))?;
+    orin.csv.save(&out_dir.join("fig1_orin_nano.csv"))?;
+    let s = stats(&nx, &orin);
+    println!("Fig 1 — power-throughput trade-off (YOLO)");
+    println!(
+        "  XAVIER-NX: power spread at ~30 fps = {:.2}x (paper: ~2x, 6-8 W box)",
+        s.iso_tput_power_ratio
+    );
+    println!(
+        "  ORIN-NANO: {:.0}-{:.0} fps at ~6 W (paper: 40-75 fps)",
+        s.iso_power_fps_span.0, s.iso_power_fps_span.1
+    );
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig1_spreads_match_paper_shape() {
+        let nx = sweep(DeviceKind::XavierNx, 1);
+        let orin = sweep(DeviceKind::OrinNano, 1);
+        let s = stats(&nx, &orin);
+        // NX: ≥1.5× power spread at iso-throughput (paper shows ~2×).
+        assert!(s.iso_tput_power_ratio > 1.5, "{}", s.iso_tput_power_ratio);
+        // Orin: ≥25 fps span at iso-power (paper shows 40→75).
+        let (lo, hi) = s.iso_power_fps_span;
+        assert!(hi - lo > 25.0, "span {lo}..{hi}");
+        assert!(hi > 65.0, "top of the band reaches ~75 fps: {hi}");
+    }
+
+    #[test]
+    fn sweep_covers_valid_space() {
+        let nx = sweep(DeviceKind::XavierNx, 2);
+        assert_eq!(
+            nx.points.len(),
+            failure::valid_count(DeviceKind::XavierNx, ModelKind::Yolo)
+        );
+        assert_eq!(nx.csv.rows.len(), nx.points.len());
+    }
+}

@@ -1,0 +1,31 @@
+//! Experiment harness: regenerates every table and figure of the paper's
+//! evaluation (§IV) on the simulated testbed. See DESIGN.md §4 for the
+//! experiment-id ↔ module ↔ bench mapping, and EXPERIMENTS.md for the
+//! recorded paper-vs-measured comparison.
+
+pub mod ablation;
+pub mod convergence;
+pub mod dual;
+pub mod fig1;
+pub mod robustness;
+pub mod runner;
+pub mod scenarios;
+pub mod single;
+pub mod table4;
+
+pub use runner::{run_method, MethodKind, MethodOutcome};
+pub use scenarios::{dual_constraints, DualScenario, DUAL_SCENARIOS};
+
+use std::path::Path;
+
+/// Run the full suite into `out_dir` (CSV files + printed tables).
+pub fn run_all(out_dir: &Path, seeds: u64) -> anyhow::Result<()> {
+    fig1::run(out_dir)?;
+    table4::run(out_dir)?;
+    single::run(out_dir, seeds)?;
+    dual::run_all(out_dir, seeds)?;
+    ablation::run(out_dir, seeds)?;
+    convergence::run(out_dir, seeds)?;
+    robustness::run(out_dir, seeds)?;
+    Ok(())
+}

@@ -1,0 +1,211 @@
+//! Extension experiments beyond the paper's evaluation:
+//!
+//! * **Noise robustness** — the paper's method consumes noisy 1 Hz
+//!   telemetry but never quantifies sensitivity; we sweep the measurement
+//!   noise from oracle-clean to 10× tegrastats-class and track CORAL's
+//!   dual-constraint success rate.
+//! * **Thermal drift** — §II positions CORAL for continuous adaptation
+//!   (SHEEO-style); we run a long session with the thermal-throttle
+//!   extension enabled: the device derates under sustained load and a
+//!   periodically re-triggered CORAL must re-converge.
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::device::thermal::ThermalModel;
+use crate::device::{Device, DeviceKind};
+use crate::models::ModelKind;
+use crate::optimizer::{CoralOptimizer, Optimizer};
+use crate::util::csv::Csv;
+use crate::util::table;
+
+use super::scenarios::dual_constraints;
+
+/// Dual-constraint success rate of CORAL at one noise scale.
+pub fn noise_success_rate(
+    device: DeviceKind,
+    model: ModelKind,
+    noise_scale: f64,
+    seeds: u64,
+) -> f64 {
+    let cons = dual_constraints(device, model);
+    let mut hits = 0;
+    for seed in 0..seeds {
+        let mut dev = Device::new(device, model, 0x2015E + seed).with_noise_scale(noise_scale);
+        let mut opt = CoralOptimizer::new(dev.space().clone(), cons, seed);
+        for _ in 0..10 {
+            let cfg = opt.propose();
+            let m = dev.run(cfg);
+            opt.observe(cfg, m.throughput_fps, m.power_mw);
+        }
+        if opt.best().map(|b| b.feasible).unwrap_or(false) {
+            hits += 1;
+        }
+    }
+    hits as f64 / seeds as f64
+}
+
+/// One epoch of the drift experiment.
+#[derive(Debug, Clone)]
+pub struct DriftEpoch {
+    pub epoch: usize,
+    pub temperature_c: f64,
+    pub feasible: bool,
+    pub throughput_fps: f64,
+    pub power_mw: f64,
+}
+
+/// Long-running session: sustained load heats the device; CORAL re-runs
+/// its 10-iteration search each epoch on the *current* (derated) surface.
+pub fn drift_session(seeds: u64, epochs: usize) -> Vec<Vec<DriftEpoch>> {
+    // Orin/YOLO: the feasible region keeps non-zero headroom even at the
+    // full derate (75 fps · 0.88 > 60 fps target), so "adapt under
+    // throttling" is a meaningful ask — on NX the region vanishes
+    // entirely once hot, which tests the impossible.
+    let device = DeviceKind::OrinNano;
+    let model = ModelKind::Yolo;
+    let cons = dual_constraints(device, model);
+    let throttle = ThermalModel { max_derate: 0.12, ..ThermalModel::default() };
+    let mut sessions = Vec::new();
+    for seed in 0..seeds {
+        let mut dev = Device::new(device, model, 0xD41F7 + seed)
+            .with_thermal(throttle.clone());
+        let mut rows = Vec::new();
+        for epoch in 0..epochs {
+            let mut opt = CoralOptimizer::new(dev.space().clone(), cons, seed * 100 + epoch as u64);
+            let mut last_best = None;
+            for _ in 0..10 {
+                let cfg = opt.propose();
+                let m = dev.run(cfg);
+                opt.observe(cfg, m.throughput_fps, m.power_mw);
+                last_best = opt.best();
+            }
+            let b = last_best.unwrap();
+            // Sustained load between searches: hold the chosen config for
+            // ~5 simulated minutes (heats the chip).
+            for _ in 0..40 {
+                dev.run(b.config);
+            }
+            rows.push(DriftEpoch {
+                epoch,
+                temperature_c: thermal_temp(&dev),
+                feasible: b.feasible,
+                throughput_fps: b.throughput_fps,
+                power_mw: b.power_mw,
+            });
+        }
+        sessions.push(rows);
+    }
+    sessions
+}
+
+fn thermal_temp(dev: &Device) -> f64 {
+    // The thermal model is private to the device; approximate via a probe
+    // of true_point derate? Instead expose through config — simplest:
+    // re-derive from throughput drop is noisy, so we read the derate via
+    // a known config comparison.
+    let cfg = dev.space().midpoint();
+    let (pf, _) = dev.true_point(&cfg);
+    // Derate factor = current / cold throughput for the same config.
+    let cold = crate::device::perf::evaluate(dev.kind(), dev.model(), &cfg).throughput_fps;
+    // Map derate to an indicative temperature on the default curve.
+    let derate = (pf.throughput_fps / cold).clamp(0.0, 1.0);
+    let t = ThermalModel { max_derate: 0.12, ..ThermalModel::default() };
+    if derate >= 1.0 {
+        t.throttle_start_c
+    } else {
+        t.throttle_start_c
+            + (1.0 - derate) / t.max_derate * (t.throttle_full_c - t.throttle_start_c)
+    }
+}
+
+/// Regenerate both extension experiments into `<out>/robustness.csv` +
+/// `<out>/drift.csv`.
+pub fn run(out_dir: &Path, seeds: u64) -> Result<()> {
+    // Noise sweep.
+    let mut csv = Csv::new(&["device", "model", "noise_scale", "success_rate"]);
+    let mut rows = Vec::new();
+    println!("Extension — noise robustness (dual constraints, {seeds} seeds)");
+    for (device, model) in [
+        (DeviceKind::XavierNx, ModelKind::Yolo),
+        (DeviceKind::OrinNano, ModelKind::RetinaNet),
+    ] {
+        for scale in [0.0, 1.0, 3.0, 10.0] {
+            let rate = noise_success_rate(device, model, scale, seeds);
+            csv.push(vec![
+                device.name().into(),
+                model.name().into(),
+                format!("{scale}"),
+                format!("{rate:.2}"),
+            ]);
+            rows.push(vec![
+                device.name().to_string(),
+                model.name().to_string(),
+                format!("{scale}x"),
+                format!("{:.0}%", rate * 100.0),
+            ]);
+        }
+    }
+    print!(
+        "{}",
+        table::render(&["device", "model", "noise", "success"], &rows)
+    );
+    csv.save(&out_dir.join("robustness.csv"))?;
+
+    // Thermal drift.
+    println!("Extension — thermal drift re-convergence (Orin/YOLO)");
+    let sessions = drift_session(seeds.min(5), 4);
+    let mut csv = Csv::new(&["seed", "epoch", "temp_c", "feasible", "fps", "power_mw"]);
+    let mut feas_by_epoch = vec![0u64; 4];
+    for (seed, rows) in sessions.iter().enumerate() {
+        for e in rows {
+            csv.push(vec![
+                seed.to_string(),
+                e.epoch.to_string(),
+                format!("{:.1}", e.temperature_c),
+                (e.feasible as u8).to_string(),
+                format!("{:.1}", e.throughput_fps),
+                format!("{:.0}", e.power_mw),
+            ]);
+            if e.feasible {
+                feas_by_epoch[e.epoch] += 1;
+            }
+        }
+    }
+    let n = sessions.len() as f64;
+    for (epoch, hits) in feas_by_epoch.iter().enumerate() {
+        println!(
+            "  epoch {epoch}: re-converged feasible in {:.0}% of sessions",
+            *hits as f64 / n * 100.0
+        );
+    }
+    csv.save(&out_dir.join("drift.csv"))?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn moderate_noise_tolerated() {
+        let clean = noise_success_rate(DeviceKind::XavierNx, ModelKind::Yolo, 0.0, 8);
+        let noisy = noise_success_rate(DeviceKind::XavierNx, ModelKind::Yolo, 3.0, 8);
+        assert!(clean >= 0.85, "clean {clean}");
+        assert!(noisy >= clean - 0.4, "3x noise collapse: {noisy} vs {clean}");
+    }
+
+    #[test]
+    fn drift_sessions_keep_adapting() {
+        let sessions = drift_session(3, 3);
+        // Every session's later epochs still find feasible configs at
+        // least once (re-convergence, not one-shot luck).
+        for rows in &sessions {
+            assert!(
+                rows.iter().skip(1).any(|e| e.feasible),
+                "no re-convergence: {rows:?}"
+            );
+        }
+    }
+}

@@ -1,0 +1,224 @@
+//! Method runner: drives any optimization method against a simulated
+//! device with the paper's evaluation loop (Fig. 2) and records the
+//! outcome + search cost.
+
+use crate::device::{Device, DeviceKind};
+use crate::models::ModelKind;
+use crate::optimizer::{
+    AlertOnlineOptimizer, AlertOptimizer, Constraints, CoralConfig, CoralOptimizer,
+    OracleOptimizer, Optimizer, PresetOptimizer, RandomOptimizer,
+};
+
+/// Paper §IV-A: the online iteration budget.
+pub const ITER_BUDGET: usize = 10;
+
+/// The §IV-A method lineup.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MethodKind {
+    Coral,
+    Oracle,
+    Alert,
+    AlertOnline,
+    MaxPower,
+    Default,
+    Random,
+}
+
+impl MethodKind {
+    pub const PAPER_LINEUP: [MethodKind; 6] = [
+        MethodKind::Oracle,
+        MethodKind::Coral,
+        MethodKind::Alert,
+        MethodKind::AlertOnline,
+        MethodKind::MaxPower,
+        MethodKind::Default,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            MethodKind::Coral => "coral",
+            MethodKind::Oracle => "oracle",
+            MethodKind::Alert => "alert",
+            MethodKind::AlertOnline => "alert-online",
+            MethodKind::MaxPower => "max-power",
+            MethodKind::Default => "default",
+            MethodKind::Random => "random",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<MethodKind> {
+        Some(match s.to_ascii_lowercase().as_str() {
+            "coral" => MethodKind::Coral,
+            "oracle" => MethodKind::Oracle,
+            "alert" => MethodKind::Alert,
+            "alert-online" | "alertonline" => MethodKind::AlertOnline,
+            "max-power" | "maxpower" | "max" => MethodKind::MaxPower,
+            "default" => MethodKind::Default,
+            "random" => MethodKind::Random,
+            _ => return None,
+        })
+    }
+}
+
+/// Result of one method on one scenario seed.
+#[derive(Debug, Clone)]
+pub struct MethodOutcome {
+    pub method: &'static str,
+    pub device: DeviceKind,
+    pub model: ModelKind,
+    pub seed: u64,
+    pub throughput_fps: f64,
+    pub power_mw: f64,
+    pub feasible: bool,
+    pub online_windows: u64,
+    pub offline_windows: u64,
+    /// Simulated seconds of measurement the *online* phase cost.
+    pub online_cost_s: f64,
+    pub config: String,
+}
+
+/// Build the optimizer for a method. ALERT's offline profile is taken on
+/// a sibling device (`seed + PROFILE_SEED_OFFSET`): a different unit at a
+/// different time, as in deployment.
+fn build(
+    kind: MethodKind,
+    device: DeviceKind,
+    model: ModelKind,
+    cons: Constraints,
+    seed: u64,
+    coral_cfg: CoralConfig,
+) -> (Box<dyn Optimizer>, u64) {
+    const PROFILE_SEED_OFFSET: u64 = 0x5EED_0FF5;
+    let space = device.space();
+    match kind {
+        MethodKind::Coral => (
+            Box::new(CoralOptimizer::with_config(space, cons, coral_cfg, seed)),
+            0,
+        ),
+        MethodKind::Oracle => (Box::new(OracleOptimizer::new(space, cons)), 0),
+        MethodKind::Alert => {
+            let mut prof_dev = Device::new(device, model, seed + PROFILE_SEED_OFFSET);
+            let profile = AlertOptimizer::profile_device(&mut prof_dev);
+            let windows = prof_dev.windows_run();
+            (Box::new(AlertOptimizer::new(profile, cons, windows)), windows)
+        }
+        MethodKind::AlertOnline => {
+            (Box::new(AlertOnlineOptimizer::new(space, cons, seed)), 0)
+        }
+        MethodKind::MaxPower => (Box::new(PresetOptimizer::max_power(device, cons)), 0),
+        MethodKind::Default => (Box::new(PresetOptimizer::default_mode(device, cons)), 0),
+        MethodKind::Random => (Box::new(RandomOptimizer::new(space, cons, seed)), 0),
+    }
+}
+
+/// Run one method once. ORACLE gets a full sweep; everything else gets
+/// the paper's 10-iteration budget.
+pub fn run_method(
+    kind: MethodKind,
+    device: DeviceKind,
+    model: ModelKind,
+    cons: Constraints,
+    seed: u64,
+) -> MethodOutcome {
+    run_method_with(kind, device, model, cons, seed, CoralConfig::default(), ITER_BUDGET)
+}
+
+/// Run one method with explicit CORAL tunables and iteration budget
+/// (ablations).
+pub fn run_method_with(
+    kind: MethodKind,
+    device: DeviceKind,
+    model: ModelKind,
+    cons: Constraints,
+    seed: u64,
+    coral_cfg: CoralConfig,
+    budget: usize,
+) -> MethodOutcome {
+    let mut dev = Device::new(device, model, seed);
+    let (mut opt, offline) = build(kind, device, model, cons, seed, coral_cfg);
+    let iters = match kind {
+        MethodKind::Oracle => device.space().raw_size(),
+        _ => budget,
+    };
+    for _ in 0..iters {
+        let cfg = opt.propose();
+        let m = dev.run(cfg);
+        opt.observe(cfg, m.throughput_fps, m.power_mw);
+    }
+    let best = opt.best().expect("at least one observation");
+    MethodOutcome {
+        method: opt.name(),
+        device,
+        model,
+        seed,
+        throughput_fps: best.throughput_fps,
+        power_mw: best.power_mw,
+        feasible: best.feasible,
+        online_windows: dev.windows_run(),
+        offline_windows: offline,
+        online_cost_s: dev.sim_clock_s(),
+        config: best.config.to_string(),
+    }
+}
+
+/// Mean outcome over seeds (feasible = majority vote; fps/power averaged
+/// over the per-seed chosen configs).
+#[derive(Debug, Clone)]
+pub struct Aggregate {
+    pub method: &'static str,
+    pub mean_fps: f64,
+    pub mean_mw: f64,
+    pub feasible_rate: f64,
+    pub mean_online_windows: f64,
+    pub offline_windows: u64,
+}
+
+/// Aggregate several per-seed outcomes of one method.
+pub fn aggregate(outcomes: &[MethodOutcome]) -> Aggregate {
+    assert!(!outcomes.is_empty());
+    let n = outcomes.len() as f64;
+    Aggregate {
+        method: outcomes[0].method,
+        mean_fps: outcomes.iter().map(|o| o.throughput_fps).sum::<f64>() / n,
+        mean_mw: outcomes.iter().map(|o| o.power_mw).sum::<f64>() / n,
+        feasible_rate: outcomes.iter().filter(|o| o.feasible).count() as f64 / n,
+        mean_online_windows: outcomes.iter().map(|o| o.online_windows as f64).sum::<f64>() / n,
+        offline_windows: outcomes[0].offline_windows,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn method_names_round_trip() {
+        for m in MethodKind::PAPER_LINEUP {
+            assert_eq!(MethodKind::parse(m.name()), Some(m));
+        }
+        assert_eq!(MethodKind::parse("bogus"), None);
+    }
+
+    #[test]
+    fn runner_produces_outcomes_for_all_fast_methods() {
+        let cons = Constraints::dual(30.0, 6500.0);
+        for kind in [MethodKind::Coral, MethodKind::AlertOnline, MethodKind::MaxPower,
+                     MethodKind::Default, MethodKind::Random] {
+            let o = run_method(kind, DeviceKind::XavierNx, ModelKind::Yolo, cons, 1);
+            assert_eq!(o.online_windows, ITER_BUDGET as u64, "{}", o.method);
+            assert!(o.throughput_fps >= 0.0);
+        }
+    }
+
+    #[test]
+    fn aggregate_means() {
+        let cons = Constraints::dual(30.0, 6500.0);
+        let outs: Vec<_> = (0..3)
+            .map(|s| run_method(MethodKind::Default, DeviceKind::XavierNx, ModelKind::Yolo, cons, s))
+            .collect();
+        let agg = aggregate(&outs);
+        assert_eq!(agg.method, "default");
+        assert!(agg.mean_fps > 0.0);
+        assert_eq!(agg.feasible_rate, 0.0, "default preset misses the target");
+    }
+}

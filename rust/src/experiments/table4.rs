@@ -1,0 +1,71 @@
+//! Table 4: evaluated (valid) configuration counts per model and device.
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::device::{failure, DeviceKind};
+use crate::models::ModelKind;
+use crate::util::csv::Csv;
+use crate::util::table;
+
+/// Paper Table 4 values for side-by-side reporting.
+pub fn paper_value(dev: DeviceKind, model: ModelKind) -> usize {
+    match (dev, model) {
+        (DeviceKind::XavierNx, ModelKind::Yolo) => 2067,
+        (DeviceKind::XavierNx, ModelKind::Frcnn) => 1813,
+        (DeviceKind::XavierNx, ModelKind::RetinaNet) => 1491,
+        (DeviceKind::OrinNano, ModelKind::Yolo) => 1522,
+        (DeviceKind::OrinNano, ModelKind::Frcnn) => 1371,
+        (DeviceKind::OrinNano, ModelKind::RetinaNet) => 1223,
+    }
+}
+
+/// Regenerate Table 4 into `<out>/table4.csv` and print it.
+pub fn run(out_dir: &Path) -> Result<()> {
+    let mut csv = Csv::new(&["model", "device", "raw", "valid", "paper", "delta_pct"]);
+    let mut rows = Vec::new();
+    for model in ModelKind::ALL {
+        for dev in DeviceKind::ALL {
+            let raw = dev.space().raw_size();
+            let valid = failure::valid_count(dev, model);
+            let paper = paper_value(dev, model);
+            let delta = (valid as f64 / paper as f64 - 1.0) * 100.0;
+            csv.push(vec![
+                model.name().into(),
+                dev.name().into(),
+                raw.to_string(),
+                valid.to_string(),
+                paper.to_string(),
+                format!("{delta:+.1}"),
+            ]);
+            rows.push(vec![
+                model.name().to_string(),
+                dev.name().to_string(),
+                valid.to_string(),
+                paper.to_string(),
+                format!("{delta:+.1}%"),
+            ]);
+        }
+    }
+    csv.save(&out_dir.join("table4.csv"))?;
+    println!("Table 4 — evaluated configuration space (valid configs)");
+    print!("{}", table::render(&["model", "device", "ours", "paper", "delta"], &rows));
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn run_writes_csv(){
+        let dir = std::env::temp_dir().join("coral_table4_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        run(&dir).unwrap();
+        let text = std::fs::read_to_string(dir.join("table4.csv")).unwrap();
+        let csv = Csv::parse(&text).unwrap();
+        assert_eq!(csv.rows.len(), 6);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,57 @@
+//! # CORAL — Covariance-Guided Resource Adaptive Learning
+//!
+//! Production reproduction of *"Covariance-Guided Resource Adaptive
+//! Learning for Efficient Edge Inference"* (CS.DC 2026): an online
+//! hardware-configuration optimizer for DL inference on edge devices that
+//! co-optimizes **throughput and power** using **distance correlation**
+//! over a sliding window of online observations — no offline profiling.
+//!
+//! The crate is the L3 layer of a three-layer stack (see `DESIGN.md`):
+//!
+//! * [`optimizer`] — the paper's contribution (CORAL, Algorithms 1 + 2)
+//!   plus every baseline it is evaluated against (ORACLE, ALERT,
+//!   ALERT-Online, manufacturer presets).
+//! * [`coordinator`] — the serving system the optimizer tunes: request
+//!   router, dynamic batcher, worker pool honouring the concurrency level.
+//! * [`device`] — a faithful simulator of the two NVIDIA Jetson boards
+//!   (DVFS config space, analytic power/latency models, config failures).
+//! * [`runtime`] — PJRT CPU client executing the AOT-compiled JAX/Pallas
+//!   detectors from `artifacts/` on the hot path (python never runs here).
+//! * [`telemetry`], [`stats`], [`workload`], [`models`], [`util`] —
+//!   substrates built from scratch (tegrastats-like sampling, distance
+//!   covariance, Kalman filter, synthetic traffic video, JSON/CSV/PRNG/
+//!   property-test/bench harnesses).
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use coral::device::{Device, DeviceKind};
+//! use coral::models::ModelKind;
+//! use coral::optimizer::{Constraints, CoralOptimizer, Optimizer};
+//!
+//! let mut dev = Device::new(DeviceKind::XavierNx, ModelKind::Yolo, 42);
+//! let cons = Constraints::dual(30.0, 6500.0); // 30 fps, 6.5 W
+//! let mut opt = CoralOptimizer::new(dev.space().clone(), cons, 42);
+//! for _ in 0..10 {
+//!     let cfg = opt.propose();
+//!     let m = dev.run(cfg);
+//!     opt.observe(cfg, m.throughput_fps, m.power_mw);
+//! }
+//! let best = opt.best().expect("feasible configuration found");
+//! println!("best = {best:?}");
+//! ```
+
+pub mod cli;
+pub mod coordinator;
+pub mod device;
+pub mod experiments;
+pub mod models;
+pub mod optimizer;
+pub mod runtime;
+pub mod stats;
+pub mod telemetry;
+pub mod util;
+pub mod workload;
+
+/// Crate version (mirrors Cargo.toml).
+pub const VERSION: &str = env!("CARGO_PKG_VERSION");

@@ -1,0 +1,8 @@
+//! `coral` binary — the L3 leader entry point.
+//!
+//! See `coral help` (or cli::commands::USAGE) for the command catalog.
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    std::process::exit(coral::cli::main_with(argv));
+}

@@ -1,0 +1,294 @@
+//! Model registry: the three object-detection workloads of Table 3 and
+//! their cost profiles, plus the mapping to AOT artifacts on disk.
+//!
+//! Two scales coexist by design (DESIGN.md §2):
+//! * **Paper scale** — [`CostProfile`] carries Jetson-class work
+//!   parameters (GPU/CPU/memory work per frame at 640×640, per-instance
+//!   memory footprint). The device simulator consumes these, so simulated
+//!   fps/mW land in the paper's ranges.
+//! * **Repo scale** — the AOT artifacts are ~1/1000-width JAX/Pallas
+//!   detectors actually executed on the PJRT CPU runtime by the serving
+//!   path ([`crate::runtime`]).
+
+use std::fmt;
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Json;
+
+/// The three evaluation models (paper Table 3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum ModelKind {
+    /// YOLOv5-N — 1.9 M params, mAP 27.6.
+    Yolo,
+    /// FRCNN-MobileNetV3 — 19.4 M params, mAP 32.8.
+    Frcnn,
+    /// RetinaNet-ResNet50 — 38 M params, mAP 41.5.
+    RetinaNet,
+}
+
+impl ModelKind {
+    pub const ALL: [ModelKind; 3] = [ModelKind::Yolo, ModelKind::Frcnn, ModelKind::RetinaNet];
+
+    /// Artifact / CLI name.
+    pub fn name(self) -> &'static str {
+        match self {
+            ModelKind::Yolo => "yolo",
+            ModelKind::Frcnn => "frcnn",
+            ModelKind::RetinaNet => "retinanet",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<ModelKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "yolo" | "yolov5-n" | "yolov5n" => Some(ModelKind::Yolo),
+            "frcnn" | "frcnn-mobilenetv3" => Some(ModelKind::Frcnn),
+            "retinanet" | "retinanet-resnet50" => Some(ModelKind::RetinaNet),
+            _ => None,
+        }
+    }
+
+    /// Paper Table 3: parameter count (millions).
+    pub fn params_m(self) -> f64 {
+        match self {
+            ModelKind::Yolo => 1.9,
+            ModelKind::Frcnn => 19.4,
+            ModelKind::RetinaNet => 38.0,
+        }
+    }
+
+    /// Paper Table 3: COCO mAP@0.5:0.95.
+    pub fn map(self) -> f64 {
+        match self {
+            ModelKind::Yolo => 27.6,
+            ModelKind::Frcnn => 32.8,
+            ModelKind::RetinaNet => 41.5,
+        }
+    }
+
+    /// Stable small id (hash inputs, CSV columns).
+    pub fn id(self) -> u64 {
+        match self {
+            ModelKind::Yolo => 0,
+            ModelKind::Frcnn => 1,
+            ModelKind::RetinaNet => 2,
+        }
+    }
+
+    /// Jetson-class cost profile consumed by the device simulator.
+    pub fn profile(self) -> CostProfile {
+        match self {
+            // Calibrated against the paper's anchor points (DESIGN.md §6):
+            // NX YOLO tops out ≈ low-40s fps, Orin ≈ 85 fps; FRCNN ≈ 3.6×
+            // YOLO's GPU work; RETINANET ≈ 7.5×.
+            ModelKind::Yolo => CostProfile {
+                gpu_work: 19_000.0,
+                cpu_work: 22_000.0,
+                mem_work: 9_000.0,
+                mem_gb_per_instance: 1.05,
+                mem_gb_base: 1.1,
+            },
+            ModelKind::Frcnn => CostProfile {
+                gpu_work: 68_000.0,
+                cpu_work: 38_000.0,
+                mem_work: 30_000.0,
+                mem_gb_per_instance: 1.97,
+                mem_gb_base: 1.4,
+            },
+            ModelKind::RetinaNet => CostProfile {
+                gpu_work: 140_000.0,
+                cpu_work: 48_000.0,
+                mem_work: 62_000.0,
+                mem_gb_per_instance: 2.0,
+                mem_gb_base: 1.7,
+            },
+        }
+    }
+}
+
+impl fmt::Display for ModelKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Work parameters of one model on Jetson-class hardware.
+///
+/// Units: `*_work` are MHz·ms per frame — dividing by an effective clock
+/// in MHz yields a stage time in ms (so they absorb arch-neutral FLOP and
+/// byte counts; per-device efficiency lives in
+/// [`crate::device::specs::DeviceModelParams`]).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CostProfile {
+    /// GPU kernel work per frame.
+    pub gpu_work: f64,
+    /// CPU pre/post-processing work per frame (per instance thread).
+    pub cpu_work: f64,
+    /// Memory-subsystem work per frame (weights + activation traffic).
+    pub mem_work: f64,
+    /// Resident memory per concurrent inference instance (GB).
+    pub mem_gb_per_instance: f64,
+    /// One-off memory footprint (weights, runtime) (GB).
+    pub mem_gb_base: f64,
+}
+
+/// One AOT artifact entry from `artifacts/manifest.json`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArtifactInfo {
+    pub model: ModelKind,
+    pub batch: usize,
+    pub path: PathBuf,
+    pub input_shape: [usize; 4],
+    pub predictions: usize,
+    pub param_count: u64,
+    pub flops_per_image: u64,
+}
+
+/// Parsed artifact manifest (`make artifacts` output).
+#[derive(Debug, Clone, Default)]
+pub struct Manifest {
+    pub artifacts: Vec<ArtifactInfo>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> anyhow::Result<Manifest> {
+        let text = std::fs::read_to_string(dir.join("manifest.json"))?;
+        Self::parse(&text, dir)
+    }
+
+    /// Parse manifest JSON; artifact paths are resolved against `dir`.
+    pub fn parse(text: &str, dir: &Path) -> anyhow::Result<Manifest> {
+        let json = Json::parse(text).map_err(|e| anyhow::anyhow!("manifest: {e}"))?;
+        let arts = json
+            .get("artifacts")
+            .and_then(|a| a.as_arr())
+            .ok_or_else(|| anyhow::anyhow!("manifest: missing 'artifacts'"))?;
+        let mut out = Vec::new();
+        for (i, a) in arts.iter().enumerate() {
+            let field = |k: &str| {
+                a.get(k).ok_or_else(|| anyhow::anyhow!("artifact {i}: missing '{k}'"))
+            };
+            let model_name = field("model")?.as_str().unwrap_or_default();
+            let model = ModelKind::parse(model_name)
+                .ok_or_else(|| anyhow::anyhow!("artifact {i}: unknown model '{model_name}'"))?;
+            let shape_json = field("input_shape")?
+                .as_arr()
+                .ok_or_else(|| anyhow::anyhow!("artifact {i}: bad input_shape"))?;
+            if shape_json.len() != 4 {
+                anyhow::bail!("artifact {i}: input_shape must have 4 dims");
+            }
+            let mut input_shape = [0usize; 4];
+            for (d, v) in shape_json.iter().enumerate() {
+                input_shape[d] = v
+                    .as_u64()
+                    .ok_or_else(|| anyhow::anyhow!("artifact {i}: bad dim"))?
+                    as usize;
+            }
+            out.push(ArtifactInfo {
+                model,
+                batch: field("batch")?.as_u64().unwrap_or(0) as usize,
+                path: dir.join(field("file")?.as_str().unwrap_or_default()),
+                input_shape,
+                predictions: field("predictions")?.as_u64().unwrap_or(0) as usize,
+                param_count: field("param_count")?.as_u64().unwrap_or(0),
+                flops_per_image: field("flops_per_image")?.as_u64().unwrap_or(0),
+            });
+        }
+        Ok(Manifest { artifacts: out })
+    }
+
+    /// Artifacts of one model, sorted by batch size.
+    pub fn for_model(&self, model: ModelKind) -> Vec<&ArtifactInfo> {
+        let mut v: Vec<&ArtifactInfo> =
+            self.artifacts.iter().filter(|a| a.model == model).collect();
+        v.sort_by_key(|a| a.batch);
+        v
+    }
+
+    /// Supported batch sizes of one model.
+    pub fn batches(&self, model: ModelKind) -> Vec<usize> {
+        self.for_model(model).iter().map(|a| a.batch).collect()
+    }
+}
+
+/// Default artifacts directory: `$CORAL_ARTIFACTS` or `./artifacts`.
+pub fn artifacts_dir() -> PathBuf {
+    std::env::var("CORAL_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names_round_trip() {
+        for m in ModelKind::ALL {
+            assert_eq!(ModelKind::parse(m.name()), Some(m));
+        }
+        assert_eq!(ModelKind::parse("YOLOv5-N"), Some(ModelKind::Yolo));
+        assert_eq!(ModelKind::parse("bogus"), None);
+    }
+
+    #[test]
+    fn table3_ordering() {
+        // Params and accuracy increase together (paper Table 3).
+        let p: Vec<f64> = ModelKind::ALL.iter().map(|m| m.params_m()).collect();
+        let a: Vec<f64> = ModelKind::ALL.iter().map(|m| m.map()).collect();
+        assert!(p.windows(2).all(|w| w[0] < w[1]));
+        assert!(a.windows(2).all(|w| w[0] < w[1]));
+        assert!((p[2] / p[0] - 20.0).abs() < 0.1, "20x spread");
+    }
+
+    #[test]
+    fn profiles_scale_with_model_size() {
+        let y = ModelKind::Yolo.profile();
+        let f = ModelKind::Frcnn.profile();
+        let r = ModelKind::RetinaNet.profile();
+        assert!(y.gpu_work < f.gpu_work && f.gpu_work < r.gpu_work);
+        assert!(y.mem_gb_per_instance < r.mem_gb_per_instance);
+    }
+
+    #[test]
+    fn manifest_parse_happy_path() {
+        let text = r#"{
+          "format": "hlo-text",
+          "artifacts": [
+            {"model": "yolo", "batch": 2, "file": "yolo_b2.hlo.txt",
+             "input_shape": [2, 128, 128, 3], "predictions": 256,
+             "param_count": 18613, "flops_per_image": 20856832,
+             "sha256": "x", "bytes": 10}
+          ]
+        }"#;
+        let m = Manifest::parse(text, Path::new("/art")).unwrap();
+        assert_eq!(m.artifacts.len(), 1);
+        let a = &m.artifacts[0];
+        assert_eq!(a.model, ModelKind::Yolo);
+        assert_eq!(a.batch, 2);
+        assert_eq!(a.path, PathBuf::from("/art/yolo_b2.hlo.txt"));
+        assert_eq!(a.input_shape, [2, 128, 128, 3]);
+        assert_eq!(m.batches(ModelKind::Yolo), vec![2]);
+        assert!(m.for_model(ModelKind::Frcnn).is_empty());
+    }
+
+    #[test]
+    fn manifest_rejects_missing_fields() {
+        assert!(Manifest::parse(r#"{"artifacts": [{"model": "yolo"}]}"#, Path::new("."))
+            .is_err());
+        assert!(Manifest::parse("{}", Path::new(".")).is_err());
+        assert!(Manifest::parse("not json", Path::new(".")).is_err());
+    }
+
+    #[test]
+    fn batches_sorted() {
+        let text = r#"{"artifacts": [
+            {"model":"yolo","batch":4,"file":"a","input_shape":[4,128,128,3],
+             "predictions":256,"param_count":1,"flops_per_image":1},
+            {"model":"yolo","batch":1,"file":"b","input_shape":[1,128,128,3],
+             "predictions":256,"param_count":1,"flops_per_image":1}
+        ]}"#;
+        let m = Manifest::parse(text, Path::new(".")).unwrap();
+        assert_eq!(m.batches(ModelKind::Yolo), vec![1, 4]);
+    }
+}

@@ -1,0 +1,220 @@
+//! ALERT baseline (Wan et al., ATC'20; paper §IV-A).
+//!
+//! Profiling-based: an **offline** exhaustive profile maps every
+//! configuration to expected throughput/power; **online**, a scalar
+//! Kalman filter per metric tracks the ratio between observed and
+//! profiled values (environment drift, unit-to-unit variation) and the
+//! controller picks the profile entry with the best *corrected*
+//! prediction.
+//!
+//! Faithful to the paper's characterization: ALERT is throughput-first —
+//! it selects the configuration maximizing corrected throughput (meeting
+//! the target when possible) and does **not** enforce the power budget,
+//! which is exactly why it overshoots to ~8.5 W in the dual-constraint
+//! scenario (§IV-B).
+
+use super::constraints::Constraints;
+use super::reward::reward;
+use super::{BestConfig, Optimizer};
+use crate::device::HwConfig;
+use crate::stats::kalman::Kalman1d;
+
+/// One offline-profile entry.
+#[derive(Debug, Clone, Copy)]
+pub struct ProfileEntry {
+    pub config: HwConfig,
+    pub throughput_fps: f64,
+    pub power_mw: f64,
+}
+
+/// Profiling-based baseline with Kalman-corrected predictions.
+pub struct AlertOptimizer {
+    profile: Vec<ProfileEntry>,
+    cons: Constraints,
+    /// Ratio observed/profiled for throughput.
+    kt: Kalman1d,
+    /// Ratio observed/profiled for power.
+    kp: Kalman1d,
+    offline_windows: u64,
+    last_idx: Option<usize>,
+    best: Option<BestConfig>,
+}
+
+impl AlertOptimizer {
+    /// `profile`: offline measurements (crashed configs excluded);
+    /// `offline_windows`: measurement windows the profiling consumed.
+    pub fn new(
+        profile: Vec<ProfileEntry>,
+        cons: Constraints,
+        offline_windows: u64,
+    ) -> AlertOptimizer {
+        assert!(!profile.is_empty(), "ALERT needs a non-empty profile");
+        AlertOptimizer {
+            profile,
+            cons,
+            kt: Kalman1d::alert_default(),
+            kp: Kalman1d::alert_default(),
+            offline_windows,
+            last_idx: None,
+            best: None,
+        }
+    }
+
+    /// Profile a device exhaustively (the offline phase). Uses its own
+    /// device instance — in deployment this is a *different* unit and an
+    /// earlier point in time than the serving device, which is why the
+    /// online Kalman correction exists.
+    pub fn profile_device(dev: &mut crate::device::Device) -> Vec<ProfileEntry> {
+        let mut out = Vec::new();
+        for cfg in dev.space().clone().enumerate() {
+            let m = dev.run(cfg);
+            if m.failed.is_none() {
+                out.push(ProfileEntry {
+                    config: m.config,
+                    throughput_fps: m.throughput_fps,
+                    power_mw: m.power_mw,
+                });
+            }
+        }
+        out
+    }
+
+    /// Index of the profile entry ALERT currently predicts as best:
+    /// max corrected throughput (throughput-first selection).
+    fn select(&self) -> usize {
+        let rt = self.kt.estimate();
+        let mut best = 0;
+        let mut best_t = f64::NEG_INFINITY;
+        for (i, e) in self.profile.iter().enumerate() {
+            let t = e.throughput_fps * rt;
+            if t > best_t {
+                best_t = t;
+                best = i;
+            }
+        }
+        best
+    }
+}
+
+impl Optimizer for AlertOptimizer {
+    fn propose(&mut self) -> HwConfig {
+        let i = self.select();
+        self.last_idx = Some(i);
+        self.profile[i].config
+    }
+
+    fn observe(&mut self, config: HwConfig, throughput_fps: f64, power_mw: f64) {
+        if let Some(i) = self.last_idx.take() {
+            let e = self.profile[i];
+            if e.config == config && e.throughput_fps > 0.0 && throughput_fps > 0.0 {
+                self.kt.update(throughput_fps / e.throughput_fps);
+                self.kp.update(power_mw / e.power_mw);
+            }
+        }
+        let out = reward(&self.cons, throughput_fps, power_mw);
+        let cand = BestConfig {
+            config,
+            throughput_fps,
+            power_mw,
+            reward: out.reward,
+            feasible: out.feasible,
+        };
+        // ALERT's own ranking is throughput-first: it keeps the highest-
+        // throughput configuration it has actually run.
+        if self
+            .best
+            .map(|b| cand.throughput_fps > b.throughput_fps)
+            .unwrap_or(true)
+        {
+            self.best = Some(cand);
+        }
+    }
+
+    fn best(&self) -> Option<BestConfig> {
+        self.best
+    }
+
+    fn name(&self) -> &'static str {
+        "alert"
+    }
+
+    fn offline_cost_windows(&self) -> u64 {
+        self.offline_windows
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::{Device, DeviceKind};
+    use crate::models::ModelKind;
+    use crate::optimizer::tests::drive;
+
+    fn build(dev_kind: DeviceKind, seed_profile: u64) -> (AlertOptimizer, Device) {
+        // Profile on one unit, serve on another (different seeds).
+        let mut prof_dev = Device::new(dev_kind, ModelKind::Yolo, seed_profile);
+        let profile = AlertOptimizer::profile_device(&mut prof_dev);
+        let windows = prof_dev.windows_run();
+        let serving = Device::new(dev_kind, ModelKind::Yolo, seed_profile + 77);
+        let opt = AlertOptimizer::new(
+            profile,
+            Constraints::dual(30.0, 6500.0),
+            windows,
+        );
+        (opt, serving)
+    }
+
+    #[test]
+    fn alert_overshoots_power_budget_in_dual_scenario() {
+        // Paper §IV-B: ALERT prioritizes throughput and exceeds the
+        // budget (8.5 W on XAVIER-NX with a 6.5 W limit).
+        let (mut opt, mut dev) = build(DeviceKind::XavierNx, 11);
+        let best = drive(&mut opt, &mut dev, 10).unwrap();
+        assert!(best.throughput_fps > 30.0, "meets throughput");
+        assert!(best.power_mw > 6500.0, "exceeds the power budget: {}", best.power_mw);
+        assert!(!best.feasible);
+    }
+
+    #[test]
+    fn alert_near_oracle_on_single_target() {
+        // Paper Figs 3–4: with its offline profile, ALERT tops the
+        // single-constraint scenario.
+        let mut prof_dev = Device::new(DeviceKind::OrinNano, ModelKind::Yolo, 5);
+        let profile = AlertOptimizer::profile_device(&mut prof_dev);
+        let best_profiled = profile
+            .iter()
+            .map(|e| e.throughput_fps)
+            .fold(0.0f64, f64::max);
+        let mut dev = Device::new(DeviceKind::OrinNano, ModelKind::Yolo, 99);
+        let mut opt =
+            AlertOptimizer::new(profile, Constraints::max_throughput(), prof_dev.windows_run());
+        let best = drive(&mut opt, &mut dev, 10).unwrap();
+        assert!(best.throughput_fps > 0.9 * best_profiled);
+    }
+
+    #[test]
+    fn offline_cost_is_reported() {
+        let (opt, _) = build(DeviceKind::XavierNx, 3);
+        assert_eq!(opt.offline_cost_windows(), 2160);
+    }
+
+    #[test]
+    fn kalman_corrects_toward_observations() {
+        let space = DeviceKind::XavierNx.space();
+        let cfg = space.midpoint();
+        let profile = vec![ProfileEntry { config: cfg, throughput_fps: 30.0, power_mw: 6000.0 }];
+        let mut opt = AlertOptimizer::new(profile, Constraints::none(), 1);
+        for _ in 0..50 {
+            let c = opt.propose();
+            opt.observe(c, 24.0, 6600.0); // env runs 20 % slower, 10 % hotter
+        }
+        assert!((opt.kt.estimate() - 0.8).abs() < 0.05);
+        assert!((opt.kp.estimate() - 1.1).abs() < 0.05);
+    }
+
+    #[test]
+    #[should_panic(expected = "non-empty")]
+    fn empty_profile_rejected() {
+        AlertOptimizer::new(Vec::new(), Constraints::none(), 0);
+    }
+}

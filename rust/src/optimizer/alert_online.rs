@@ -1,0 +1,127 @@
+//! ALERT-Online baseline (§IV-A): ALERT with the offline profile replaced
+//! by random online trials inside the same 10-iteration budget CORAL
+//! gets. Selection stays throughput-first (it is still ALERT); with ~2–6%
+//! of the space feasible in the dual-constraint scenarios, its random
+//! exploration rarely lands a valid configuration (§IV-B).
+
+use super::constraints::Constraints;
+use super::reward::reward;
+use super::{BestConfig, Optimizer};
+use crate::device::{ConfigSpace, HwConfig};
+use crate::util::Rng;
+
+/// Random-trial variant of ALERT.
+pub struct AlertOnlineOptimizer {
+    space: ConfigSpace,
+    cons: Constraints,
+    rng: Rng,
+    tried: Vec<HwConfig>,
+    best: Option<BestConfig>,
+}
+
+impl AlertOnlineOptimizer {
+    pub fn new(space: ConfigSpace, cons: Constraints, seed: u64) -> AlertOnlineOptimizer {
+        AlertOnlineOptimizer {
+            space,
+            cons,
+            rng: Rng::new(seed),
+            tried: Vec::new(),
+            best: None,
+        }
+    }
+}
+
+impl Optimizer for AlertOnlineOptimizer {
+    fn propose(&mut self) -> HwConfig {
+        // Uniform random trials, avoiding exact repeats.
+        for _ in 0..64 {
+            let c = self.space.random(&mut self.rng);
+            if !self.tried.contains(&c) {
+                return c;
+            }
+        }
+        self.space.random(&mut self.rng)
+    }
+
+    fn observe(&mut self, config: HwConfig, throughput_fps: f64, power_mw: f64) {
+        self.tried.push(config);
+        let out = reward(&self.cons, throughput_fps, power_mw);
+        let cand = BestConfig {
+            config,
+            throughput_fps,
+            power_mw,
+            reward: out.reward,
+            feasible: out.feasible,
+        };
+        // Throughput-first selection, like ALERT.
+        if self
+            .best
+            .map(|b| cand.throughput_fps > b.throughput_fps)
+            .unwrap_or(true)
+        {
+            self.best = Some(cand);
+        }
+    }
+
+    fn best(&self) -> Option<BestConfig> {
+        self.best
+    }
+
+    fn name(&self) -> &'static str {
+        "alert-online"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::{Device, DeviceKind};
+    use crate::models::ModelKind;
+    use crate::optimizer::tests::drive;
+
+    #[test]
+    fn mostly_fails_dual_constraints() {
+        // Paper §IV-B: random exploration misses the narrow feasible
+        // region within the 10-iteration budget (NX: ~2 % of the space).
+        let mut feasible = 0;
+        for seed in 0..20 {
+            let mut dev = Device::new(DeviceKind::XavierNx, ModelKind::Yolo, 500 + seed);
+            let mut opt = AlertOnlineOptimizer::new(
+                dev.space().clone(),
+                Constraints::dual(30.0, 6500.0),
+                seed,
+            );
+            if drive(&mut opt, &mut dev, 10).unwrap().feasible {
+                feasible += 1;
+            }
+        }
+        assert!(feasible <= 6, "feasible in {feasible}/20 runs — should mostly fail");
+    }
+
+    #[test]
+    fn no_offline_cost() {
+        let opt = AlertOnlineOptimizer::new(
+            DeviceKind::OrinNano.space(),
+            Constraints::none(),
+            1,
+        );
+        assert_eq!(opt.offline_cost_windows(), 0);
+    }
+
+    #[test]
+    fn avoids_exact_repeats_within_budget() {
+        let mut dev = Device::new(DeviceKind::OrinNano, ModelKind::Yolo, 2);
+        let mut opt = AlertOnlineOptimizer::new(
+            dev.space().clone(),
+            Constraints::max_throughput(),
+            2,
+        );
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..10 {
+            let c = opt.propose();
+            assert!(seen.insert(c), "repeat proposal {c}");
+            let m = dev.run(c);
+            opt.observe(c, m.throughput_fps, m.power_mw);
+        }
+    }
+}

@@ -1,0 +1,157 @@
+//! Optimization constraints (paper Eq. 6): throughput target τ_target
+//! and/or power budget p_budget.
+
+/// What "best" means once constraints are handled.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Objective {
+    /// Prefer higher efficiency η = τ/p among feasible configurations
+    /// (the paper's dual-constraint scenario, Eq. 7).
+    Efficiency,
+    /// Prefer raw throughput (the paper's single-constraint scenario,
+    /// where CORAL is compared on % of ORACLE throughput). The throughput
+    /// target is set unreachably high so the search always pushes up.
+    Throughput,
+}
+
+/// Scenario constraints. `None` disables a constraint — the paper's
+/// single-constraint scenario sets only the throughput target.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Constraints {
+    /// τ_target (fps): τ(s) ≥ target required.
+    pub throughput_target_fps: Option<f64>,
+    /// p_budget (mW): p(s) ≤ budget required.
+    pub power_budget_mw: Option<f64>,
+    /// Power floor p_min (mW): below this, further power reduction is not
+    /// worth chasing (Algorithm 2's `p_min`; defaults to 0 = always try).
+    pub power_floor_mw: f64,
+    /// Ranking objective.
+    pub objective: Objective,
+}
+
+impl Constraints {
+    /// Single-constraint throughput-maximization scenario (paper Figs
+    /// 3–4): no power budget, unreachable target (search always climbs),
+    /// ranking by raw throughput.
+    pub fn max_throughput() -> Constraints {
+        Constraints {
+            throughput_target_fps: Some(f64::INFINITY),
+            power_budget_mw: None,
+            power_floor_mw: 0.0,
+            objective: Objective::Throughput,
+        }
+    }
+
+    /// Dual-constraint scenario (paper §IV-B).
+    pub fn dual(throughput_fps: f64, power_mw: f64) -> Constraints {
+        Constraints {
+            throughput_target_fps: Some(throughput_fps),
+            power_budget_mw: Some(power_mw),
+            power_floor_mw: 0.0,
+            objective: Objective::Efficiency,
+        }
+    }
+
+    /// Single-constraint scenario: maximize throughput subject to a
+    /// (soft) target; no power budget.
+    pub fn throughput_only(target_fps: f64) -> Constraints {
+        Constraints {
+            throughput_target_fps: Some(target_fps),
+            power_budget_mw: None,
+            power_floor_mw: 0.0,
+            objective: Objective::Efficiency,
+        }
+    }
+
+    /// Unconstrained efficiency search.
+    pub fn none() -> Constraints {
+        Constraints {
+            throughput_target_fps: None,
+            power_budget_mw: None,
+            power_floor_mw: 0.0,
+            objective: Objective::Efficiency,
+        }
+    }
+
+    pub fn with_power_floor(mut self, floor_mw: f64) -> Constraints {
+        self.power_floor_mw = floor_mw;
+        self
+    }
+
+    /// Feasibility check (paper Eq. 6). Failed runs (τ = 0) are always
+    /// infeasible when any constraint is active.
+    pub fn feasible(&self, throughput_fps: f64, power_mw: f64) -> bool {
+        if let Some(t) = self.throughput_target_fps {
+            if throughput_fps < t {
+                return false;
+            }
+        }
+        if let Some(p) = self.power_budget_mw {
+            if power_mw > p {
+                return false;
+            }
+        }
+        if self.throughput_target_fps.is_none()
+            && self.power_budget_mw.is_none()
+            && throughput_fps <= 0.0
+        {
+            return false; // a crashed config is never acceptable
+        }
+        true
+    }
+
+    /// τ_target, with the convention that "no target" behaves as 0
+    /// (any throughput satisfies it).
+    pub fn target_or_zero(&self) -> f64 {
+        self.throughput_target_fps.unwrap_or(0.0)
+    }
+
+    /// p_budget, with "no budget" = ∞.
+    pub fn budget_or_inf(&self) -> f64 {
+        self.power_budget_mw.unwrap_or(f64::INFINITY)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dual_feasibility() {
+        let c = Constraints::dual(30.0, 6500.0);
+        assert!(c.feasible(30.0, 6500.0));
+        assert!(!c.feasible(29.9, 6000.0));
+        assert!(!c.feasible(35.0, 6501.0));
+        assert!(!c.feasible(0.0, 3000.0));
+    }
+
+    #[test]
+    fn single_ignores_power() {
+        let c = Constraints::throughput_only(30.0);
+        assert!(c.feasible(31.0, 99_999.0));
+        assert!(!c.feasible(29.0, 1.0));
+    }
+
+    #[test]
+    fn none_rejects_only_crashes() {
+        let c = Constraints::none();
+        assert!(c.feasible(1.0, 1e9));
+        assert!(!c.feasible(0.0, 100.0));
+    }
+
+    #[test]
+    fn max_throughput_scenario() {
+        let c = Constraints::max_throughput();
+        assert_eq!(c.objective, Objective::Throughput);
+        assert!(!c.feasible(1000.0, 100.0), "target unreachable by design");
+        assert_eq!(c.budget_or_inf(), f64::INFINITY);
+    }
+
+    #[test]
+    fn accessors() {
+        let c = Constraints::dual(30.0, 6500.0).with_power_floor(4000.0);
+        assert_eq!(c.target_or_zero(), 30.0);
+        assert_eq!(c.budget_or_inf(), 6500.0);
+        assert_eq!(c.power_floor_mw, 4000.0);
+        assert_eq!(Constraints::none().budget_or_inf(), f64::INFINITY);
+    }
+}

@@ -1,0 +1,589 @@
+//! CORAL — the paper's online optimizer (§III).
+//!
+//! Per iteration:
+//! 1. **Reward evaluation** (Algorithm 1, [`super::reward`]): feasible
+//!    configurations score efficiency τ/p; violators are penalized and
+//!    added to the prohibited list `PS`.
+//! 2. **Correlation analysis** (§III-D): distance correlation of every
+//!    configuration dimension against throughput (α) and power (β) over
+//!    the sliding window of recent observations.
+//! 3. **Configuration search** (Algorithm 2): dCor-weighted steps from
+//!    the best/second-best configurations, direction chosen by whether
+//!    the throughput target is already met, values snapped onto the
+//!    device grid, plus the power-optimization heuristic (lines 14–17).
+//!
+//! Implementation notes for details the paper leaves open:
+//! * **Bootstrap** — the window needs contrast before dCor means
+//!   anything; iterations 0–1 probe the manufacturer default preset and
+//!   the all-max configuration (max concurrency), giving every dimension
+//!   two distinct values.
+//! * **`aside` flag** — Algorithm 2 swaps the (low, high) anchors between
+//!   best and second-best; we toggle it whenever a proposal collides with
+//!   the prohibited/visited set, so consecutive collisions explore the
+//!   other flank (§III-E "adapts its search direction").
+//! * **Collisions** — proposals already in `PS` (or already measured,
+//!   when `avoid_revisits` is on) are nudged to the nearest untried
+//!   neighbour along dimensions in decreasing correlation order; if the
+//!   whole neighbourhood is exhausted, a seeded random unvisited
+//!   configuration is drawn (keeps the 10-iteration budget useful).
+//! * **Heuristic target** — §III-E's text says *CPU frequency* to min,
+//!   Algorithm 2 line 15 says *CPU cores*; [`Heuristic::Both`] (default)
+//!   applies both, and the ablation bench compares all variants.
+
+use std::collections::HashSet;
+
+use super::constraints::Constraints;
+use super::reward::reward;
+use super::{BestConfig, Optimizer};
+use crate::device::{ConfigSpace, Dim, HwConfig};
+use crate::stats::dcov::DcorWorkspace;
+use crate::stats::window::{Observation, SlidingWindow};
+use crate::util::Rng;
+
+/// Power-optimization heuristic variant (Algorithm 2 lines 14–17).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Heuristic {
+    /// Disabled (ablation).
+    Off,
+    /// §III-E text: CPU frequency → min, concurrency → max.
+    FreqMin,
+    /// Algorithm 2 pseudocode: CPU cores → min, concurrency → max.
+    CoresMin,
+    /// Both CPU knobs → min, concurrency → max (default).
+    Both,
+}
+
+/// Where a step starts from (Algorithm 2 is ambiguous; see module docs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Anchor {
+    /// Step from the **current** (last-measured) configuration — §III-E's
+    /// "adapts its search direction based on the current configuration's
+    /// performance". Best/second-best only set the step *scale*. Default:
+    /// converges reliably within the paper's 10-iteration budget.
+    Last,
+    /// Literal Algorithm-2 pseudocode: step from the best/second-best
+    /// values with the `aside` flank swap (ablation variant).
+    BestSecond,
+}
+
+/// Tunables of the CORAL search (paper defaults).
+#[derive(Debug, Clone, Copy)]
+pub struct CoralConfig {
+    /// Sliding-window size W.
+    pub window: usize,
+    /// Power-optimization heuristic variant.
+    pub heuristic: Heuristic,
+    /// Skip configurations that were already measured (not just the
+    /// prohibited ones) — each of the 10 iterations buys information.
+    pub avoid_revisits: bool,
+    /// Use dCor weights (γ = max(α, β)). Off = unweighted steps (γ = 1),
+    /// the ablation showing the value of distance correlation.
+    pub use_dcor: bool,
+    /// Step anchoring interpretation.
+    pub anchor: Anchor,
+}
+
+impl Default for CoralConfig {
+    fn default() -> Self {
+        CoralConfig {
+            window: SlidingWindow::DEFAULT_W,
+            heuristic: Heuristic::Both,
+            avoid_revisits: true,
+            use_dcor: true,
+            anchor: Anchor::Last,
+        }
+    }
+}
+
+/// Scored observation retained for best/second-best tracking.
+#[derive(Debug, Clone, Copy)]
+struct Scored {
+    config: HwConfig,
+    throughput_fps: f64,
+    power_mw: f64,
+    reward: f64,
+    feasible: bool,
+}
+
+/// The CORAL optimizer (paper §III).
+pub struct CoralOptimizer {
+    space: ConfigSpace,
+    cons: Constraints,
+    cfg: CoralConfig,
+    window: SlidingWindow,
+    ws: DcorWorkspace,
+    prohibited: HashSet<HwConfig>,
+    visited: HashSet<HwConfig>,
+    best: Option<Scored>,
+    second: Option<Scored>,
+    last: Option<Scored>,
+    /// Highest-throughput observation so far (drives the power heuristic:
+    /// it proves the target is reachable and from which configuration).
+    best_tput: Option<Scored>,
+    /// α (throughput) and β (power) correlation weights per dimension.
+    alpha: [f64; HwConfig::NDIMS],
+    beta: [f64; HwConfig::NDIMS],
+    aside: bool,
+    iter: u64,
+    rng: Rng,
+    pending: Option<HwConfig>,
+}
+
+impl CoralOptimizer {
+    pub fn new(space: ConfigSpace, cons: Constraints, seed: u64) -> CoralOptimizer {
+        Self::with_config(space, cons, CoralConfig::default(), seed)
+    }
+
+    pub fn with_config(
+        space: ConfigSpace,
+        cons: Constraints,
+        cfg: CoralConfig,
+        seed: u64,
+    ) -> CoralOptimizer {
+        CoralOptimizer {
+            window: SlidingWindow::new(cfg.window.max(2)),
+            ws: DcorWorkspace::new(),
+            prohibited: HashSet::new(),
+            visited: HashSet::new(),
+            best: None,
+            second: None,
+            last: None,
+            best_tput: None,
+            alpha: [0.0; HwConfig::NDIMS],
+            beta: [0.0; HwConfig::NDIMS],
+            aside: false,
+            iter: 0,
+            rng: Rng::new(seed),
+            pending: None,
+            space,
+            cons,
+            cfg,
+        }
+    }
+
+    /// Current correlation weights (α: throughput, β: power) — exposed
+    /// for the experiment reports and tests.
+    pub fn weights(&self) -> ([f64; HwConfig::NDIMS], [f64; HwConfig::NDIMS]) {
+        (self.alpha, self.beta)
+    }
+
+    /// Prohibited-set size (paper's PS).
+    pub fn prohibited_len(&self) -> usize {
+        self.prohibited.len()
+    }
+
+    /// §III-D: recompute α, β over the sliding window.
+    fn update_weights(&mut self) {
+        if self.window.len() < 2 {
+            return;
+        }
+        let tput = self.window.throughputs();
+        let power = self.window.powers();
+        let dims = self.window.setting_dims();
+        let m = self.ws.dcor_matrix(&[&tput, &power], &dims);
+        for d in 0..HwConfig::NDIMS {
+            self.alpha[d] = m[0][d];
+            self.beta[d] = m[1][d];
+        }
+    }
+
+    /// Is this configuration proposable?
+    fn untried(&self, c: &HwConfig) -> bool {
+        !self.prohibited.contains(c)
+            && (!self.cfg.avoid_revisits || !self.visited.contains(c))
+    }
+
+    /// Algorithm 2: generate the next configuration from best/second-best.
+    fn search(&mut self) -> HwConfig {
+        let (x, y) = match (self.best, self.second) {
+            (Some(b), Some(s)) => (b, s),
+            // Bootstrap: default preset, then all-max (max contrast).
+            _ => {
+                return if self.iter == 0 {
+                    self.space.device().preset_default()
+                } else {
+                    let mut c = self.space.device().preset_max_power();
+                    c.concurrency = self.space.max(Dim::Concurrency);
+                    c
+                };
+            }
+        };
+
+        let last = self.last.unwrap_or(x);
+        let go_down = last.throughput_fps > self.cons.target_or_zero()
+            && last.power_mw >= self.cons.power_floor_mw;
+
+        let xv = x.config.as_vec();
+        let yv = y.config.as_vec();
+        let lv = last.config.as_vec();
+        let mut v = [0.0f64; HwConfig::NDIMS];
+        for d in 0..HwConfig::NDIMS {
+            // γ_i = max(α_i, β_i): the dominant correlation (§III-D).
+            let gamma = if self.cfg.use_dcor {
+                self.alpha[d].max(self.beta[d])
+            } else {
+                1.0
+            };
+            // Δ_i = ½ |x_i − y_i| · γ_i  (Eq. 10): the spread between the
+            // two best configurations sets the step scale — wide early
+            // (bootstrap probes), shrinking as the search converges.
+            let delta = 0.5 * (xv[d] - yv[d]).abs() * gamma;
+            v[d] = match self.cfg.anchor {
+                Anchor::Last => {
+                    if go_down {
+                        lv[d] - delta
+                    } else {
+                        lv[d] + delta
+                    }
+                }
+                Anchor::BestSecond => {
+                    let (l, h) = if self.aside { (yv[d], xv[d]) } else { (xv[d], yv[d]) };
+                    if go_down {
+                        l - delta
+                    } else {
+                        h + delta
+                    }
+                }
+            };
+        }
+        let mut z = self.space.snap_config(v); // MINMAX(ROUND(v), r)
+
+        // Power-optimization heuristic (lines 14–17): the target has been
+        // reached somewhere and power is still above the floor → keep
+        // that configuration's GPU-side settings, cut the CPU side, and
+        // lean on concurrency to keep throughput (§III-E). The paper
+        // pins concurrency to max; we keep the proven level of the
+        // highest-throughput observation — on contention-heavy surfaces
+        // (NX) max concurrency degrades throughput, and the subsequent
+        // collision nudges sweep the neighbouring levels anyway
+        // (DESIGN.md §2 notes this interpretation).
+        if let Some(bt) = self.best_tput {
+            if bt.throughput_fps > self.cons.target_or_zero()
+                && bt.power_mw > self.cons.power_floor_mw
+                && self.cfg.heuristic != Heuristic::Off
+            {
+                z = bt.config;
+                z.concurrency = bt.config.concurrency;
+                match self.cfg.heuristic {
+                    Heuristic::Off => unreachable!(),
+                    Heuristic::FreqMin => {
+                        z.cpu_freq_mhz = self.space.min(Dim::CpuFreq);
+                    }
+                    Heuristic::CoresMin => {
+                        z.cpu_cores = self.space.min(Dim::CpuCores);
+                    }
+                    Heuristic::Both => {
+                        z.cpu_freq_mhz = self.space.min(Dim::CpuFreq);
+                        z.cpu_cores = self.space.min(Dim::CpuCores);
+                    }
+                }
+            }
+        }
+
+        if self.untried(&z) {
+            return z;
+        }
+        self.aside = !self.aside; // explore the other flank next time
+
+        // Collision, stage 1: concurrency is the only non-monotone knob
+        // (pipelining vs contention), so sweep its untried levels around
+        // the proposal first — nearest level first.
+        {
+            let vals = self.space.values(Dim::Concurrency).to_vec();
+            let cur = z.concurrency;
+            let mut levels: Vec<u32> = vals.clone();
+            levels.sort_by_key(|&v| (v as i64 - cur as i64).unsigned_abs());
+            for lvl in levels {
+                let cand = z.with(Dim::Concurrency, lvl);
+                if self.untried(&cand) {
+                    return cand;
+                }
+            }
+        }
+
+        // Collision, stage 2: nudge along dimensions in decreasing-γ order.
+        let mut order: Vec<usize> = (0..HwConfig::NDIMS).collect();
+        let alpha = self.alpha;
+        let beta = self.beta;
+        order.sort_by(|&a, &b| {
+            let ga = alpha[a].max(beta[a]);
+            let gb = alpha[b].max(beta[b]);
+            gb.partial_cmp(&ga).unwrap()
+        });
+        for &d in &order {
+            let dim = Dim::ALL[d];
+            let vals = self.space.values(dim);
+            let pos = vals.binary_search(&z.get(dim)).unwrap_or(0);
+            for step in 1..vals.len() {
+                for dir in [1i64, -1] {
+                    let q = pos as i64 + dir * step as i64;
+                    if q < 0 || q as usize >= vals.len() {
+                        continue;
+                    }
+                    let cand = z.with(dim, vals[q as usize]);
+                    if self.untried(&cand) {
+                        return cand;
+                    }
+                }
+            }
+        }
+        // Neighbourhood exhausted: seeded random unvisited draw.
+        for _ in 0..256 {
+            let cand = self.space.random(&mut self.rng);
+            if self.untried(&cand) {
+                return cand;
+            }
+        }
+        z // space exhausted — let the caller re-measure the proposal
+    }
+}
+
+impl Optimizer for CoralOptimizer {
+    fn propose(&mut self) -> HwConfig {
+        self.update_weights();
+        let z = self.search();
+        self.pending = Some(z);
+        z
+    }
+
+    fn observe(&mut self, config: HwConfig, throughput_fps: f64, power_mw: f64) {
+        self.iter += 1;
+        self.pending = None;
+        self.visited.insert(config);
+
+        // Step 1: reward evaluation (Algorithm 1).
+        let out = reward(&self.cons, throughput_fps, power_mw);
+        if !out.feasible {
+            self.prohibited.insert(config); // PS.APPEND(x)
+        }
+        let scored = Scored {
+            config,
+            throughput_fps,
+            power_mw,
+            reward: out.reward,
+            feasible: out.feasible,
+        };
+        self.last = Some(scored);
+        if throughput_fps > 0.0
+            && self
+                .best_tput
+                .map(|b| throughput_fps > b.throughput_fps)
+                .unwrap_or(true)
+        {
+            self.best_tput = Some(scored);
+        }
+
+        // Window feeds the correlation analysis; crashed configs carry no
+        // performance signal and would poison dCor with zeros.
+        if throughput_fps > 0.0 {
+            self.window.push(Observation {
+                config,
+                throughput_fps,
+                power_mw,
+            });
+        }
+
+        // Best / second-best tracking by reward.
+        match self.best {
+            None => self.best = Some(scored),
+            Some(b) if scored.reward > b.reward => {
+                if scored.config != b.config {
+                    self.second = Some(b);
+                }
+                self.best = Some(scored);
+            }
+            Some(b) => {
+                if scored.config != b.config {
+                    match self.second {
+                        None => self.second = Some(scored),
+                        Some(s) if scored.reward > s.reward => self.second = Some(scored),
+                        _ => {}
+                    }
+                }
+            }
+        }
+    }
+
+    fn best(&self) -> Option<BestConfig> {
+        self.best.map(|b| BestConfig {
+            config: b.config,
+            throughput_fps: b.throughput_fps,
+            power_mw: b.power_mw,
+            reward: b.reward,
+            feasible: b.feasible,
+        })
+    }
+
+    fn name(&self) -> &'static str {
+        "coral"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::{Device, DeviceKind};
+    use crate::models::ModelKind;
+    use crate::optimizer::tests::drive;
+    use crate::util::prop;
+
+    const BUDGET: usize = 10; // the paper's iteration budget
+
+    fn dual_cons(dev: DeviceKind) -> Constraints {
+        match dev {
+            DeviceKind::XavierNx => Constraints::dual(30.0, 6500.0),
+            DeviceKind::OrinNano => Constraints::dual(60.0, 5600.0),
+        }
+    }
+
+    #[test]
+    fn finds_dual_feasible_on_both_devices_yolo() {
+        // Paper §IV-B headline: CORAL satisfies both constraints on both
+        // devices within 10 iterations.
+        for dev in DeviceKind::ALL {
+            let mut hits = 0;
+            for seed in 0..10 {
+                let mut device = Device::new(dev, ModelKind::Yolo, 1000 + seed);
+                let mut opt =
+                    CoralOptimizer::new(device.space().clone(), dual_cons(dev), seed);
+                let best = drive(&mut opt, &mut device, BUDGET).unwrap();
+                if best.feasible {
+                    hits += 1;
+                }
+            }
+            assert!(hits >= 8, "{dev}: feasible in {hits}/10 seeded runs");
+        }
+    }
+
+    #[test]
+    fn single_target_reaches_96pct_of_oracle() {
+        // Paper §IV-B: 96–100 % of ORACLE throughput.
+        for dev in DeviceKind::ALL {
+            // ORACLE: true max throughput over the valid space.
+            let probe = Device::new(dev, ModelKind::Yolo, 0);
+            let oracle_fps = crate::device::failure::valid_configs(dev, ModelKind::Yolo)
+                .iter()
+                .map(|c| probe.true_point(c).0.throughput_fps)
+                .fold(0.0f64, f64::max);
+
+            let mut ratios = Vec::new();
+            for seed in 0..10 {
+                let mut device = Device::new(dev, ModelKind::Yolo, 2000 + seed);
+                let mut opt = CoralOptimizer::new(
+                    device.space().clone(),
+                    Constraints::max_throughput(),
+                    seed,
+                );
+                let best = drive(&mut opt, &mut device, BUDGET).unwrap();
+                ratios.push(best.throughput_fps / oracle_fps);
+            }
+            let mean = ratios.iter().sum::<f64>() / ratios.len() as f64;
+            assert!(mean >= 0.93, "{dev}: mean ratio {mean:.3} ({ratios:?})");
+        }
+    }
+
+    #[test]
+    fn prohibited_configs_never_reproposed() {
+        prop::check("PS respected", 20, |g| {
+            let dev = *g.rng.choose(&DeviceKind::ALL);
+            let seed = g.rng.next_u64();
+            let mut device = Device::new(dev, ModelKind::RetinaNet, seed);
+            let mut opt = CoralOptimizer::new(device.space().clone(), dual_cons(dev), seed);
+            let mut seen_prohibited: Vec<HwConfig> = Vec::new();
+            for _ in 0..15 {
+                let cfg = opt.propose();
+                prop::assert_true(
+                    !seen_prohibited.contains(&cfg),
+                    "re-proposed a prohibited config",
+                )?;
+                let m = device.run(cfg);
+                opt.observe(cfg, m.throughput_fps, m.power_mw);
+                if !reward(&dual_cons(dev), m.throughput_fps, m.power_mw).feasible {
+                    seen_prohibited.push(cfg);
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn proposals_always_on_grid() {
+        prop::check("proposals on grid", 20, |g| {
+            let dev = *g.rng.choose(&DeviceKind::ALL);
+            let model = *g.rng.choose(&ModelKind::ALL);
+            let seed = g.rng.next_u64();
+            let mut device = Device::new(dev, model, seed);
+            let space = device.space().clone();
+            let mut opt = CoralOptimizer::new(space.clone(), dual_cons(dev), seed);
+            for _ in 0..12 {
+                let cfg = opt.propose();
+                prop::assert_true(space.contains(&cfg), "on grid")?;
+                let m = device.run(cfg);
+                opt.observe(cfg, m.throughput_fps, m.power_mw);
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn weights_identify_gpu_for_gpu_bound_model() {
+        // On a GPU-bound workload the dominant dCor weight should land on
+        // GPU frequency (or concurrency) rather than memory frequency.
+        let mut device = Device::new(DeviceKind::XavierNx, ModelKind::Yolo, 5);
+        let mut opt = CoralOptimizer::new(
+            device.space().clone(),
+            Constraints::max_throughput(),
+            5,
+        );
+        drive(&mut opt, &mut device, 10);
+        let (alpha, _beta) = opt.weights();
+        let gpu = alpha[Dim::GpuFreq.index()];
+        let max = alpha.iter().cloned().fold(0.0f64, f64::max);
+        // Bootstrap moves are partially confounded (all dims move
+        // together), so demand "highly informative", not strictly top:
+        // a strong absolute weight within 0.1 of the strongest dim.
+        assert!(
+            gpu > 0.5 && gpu >= max - 0.1,
+            "gpu dCor {gpu:.2} should be near-dominant: {alpha:?}"
+        );
+    }
+
+    #[test]
+    fn best_tracking_keeps_distinct_second() {
+        let space = DeviceKind::XavierNx.space();
+        let mut opt = CoralOptimizer::new(space.clone(), Constraints::none(), 1);
+        let a = space.midpoint();
+        let b = a.with(Dim::GpuFreq, 510);
+        opt.observe(a, 30.0, 6000.0);
+        opt.observe(a, 31.0, 6000.0); // same config better score
+        opt.observe(b, 20.0, 5000.0);
+        assert_eq!(opt.best().unwrap().config, a);
+        assert_eq!(opt.second.unwrap().config, b);
+    }
+
+    #[test]
+    fn crashed_configs_enter_ps_and_leave_window_clean() {
+        let space = DeviceKind::XavierNx.space();
+        let mut opt =
+            CoralOptimizer::new(space.clone(), Constraints::dual(30.0, 6500.0), 1);
+        let c = space.midpoint();
+        opt.observe(c, 0.0, 2350.0);
+        assert_eq!(opt.prohibited_len(), 1);
+        assert_eq!(opt.window.len(), 0);
+        assert_eq!(opt.best().unwrap().reward, f64::NEG_INFINITY);
+    }
+
+    #[test]
+    fn ablation_unweighted_steps_still_run() {
+        let mut device = Device::new(DeviceKind::OrinNano, ModelKind::Yolo, 3);
+        let cfg = CoralConfig { use_dcor: false, ..CoralConfig::default() };
+        let mut opt = CoralOptimizer::with_config(
+            device.space().clone(),
+            dual_cons(DeviceKind::OrinNano),
+            cfg,
+            3,
+        );
+        let best = drive(&mut opt, &mut device, BUDGET);
+        assert!(best.is_some());
+    }
+}

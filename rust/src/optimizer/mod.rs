@@ -1,0 +1,104 @@
+//! Configuration optimizers: CORAL (the paper's contribution, §III) and
+//! every baseline of §IV-A — ORACLE, ALERT, ALERT-Online, and the
+//! manufacturer presets — behind one [`Optimizer`] trait so the
+//! experiment harness and the serving coordinator drive them uniformly.
+
+pub mod alert;
+pub mod alert_online;
+pub mod constraints;
+pub mod coral;
+pub mod oracle;
+pub mod presets;
+pub mod random_search;
+pub mod reward;
+
+pub use alert::AlertOptimizer;
+pub use alert_online::AlertOnlineOptimizer;
+pub use constraints::Constraints;
+pub use coral::{CoralConfig, CoralOptimizer};
+pub use oracle::OracleOptimizer;
+pub use presets::PresetOptimizer;
+pub use random_search::RandomOptimizer;
+pub use reward::{reward, RewardOutcome};
+
+use crate::device::HwConfig;
+
+/// A configuration the optimizer settled on, with its measured metrics.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BestConfig {
+    pub config: HwConfig,
+    pub throughput_fps: f64,
+    pub power_mw: f64,
+    /// Reward score (efficiency τ/p for feasible configurations).
+    pub reward: f64,
+    /// Whether the configuration met all active constraints when measured.
+    pub feasible: bool,
+}
+
+/// Common interface of all search strategies.
+///
+/// The driving loop is measurement-agnostic:
+/// ```text
+/// for _ in 0..budget {
+///     let cfg = opt.propose();
+///     let m = device.run(cfg);             // or the live serving stack
+///     opt.observe(cfg, m.throughput_fps, m.power_mw);
+/// }
+/// let chosen = opt.best();
+/// ```
+pub trait Optimizer {
+    /// Next configuration to try.
+    fn propose(&mut self) -> HwConfig;
+
+    /// Feed back the measured metrics of a proposed configuration.
+    /// Failed configurations report `throughput_fps == 0.0`.
+    fn observe(&mut self, config: HwConfig, throughput_fps: f64, power_mw: f64);
+
+    /// Best configuration found so far (feasible preferred).
+    fn best(&self) -> Option<BestConfig>;
+
+    /// Human-readable strategy name (tables, CSV rows).
+    fn name(&self) -> &'static str;
+
+    /// Iterations of real measurement the strategy consumed *before* the
+    /// online phase (offline profiling cost — e.g. ALERT/ORACLE sweeps).
+    /// Used to report search cost next to quality.
+    fn offline_cost_windows(&self) -> u64 {
+        0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::{Device, DeviceKind};
+    use crate::models::ModelKind;
+
+    /// Drive any optimizer for `iters` online iterations on a device.
+    pub(crate) fn drive(
+        opt: &mut dyn Optimizer,
+        dev: &mut Device,
+        iters: usize,
+    ) -> Option<BestConfig> {
+        for _ in 0..iters {
+            let cfg = opt.propose();
+            let m = dev.run(cfg);
+            opt.observe(cfg, m.throughput_fps, m.power_mw);
+        }
+        opt.best()
+    }
+
+    #[test]
+    fn trait_objects_compose() {
+        let mut dev = Device::new(DeviceKind::XavierNx, ModelKind::Yolo, 7);
+        let cons = Constraints::throughput_only(25.0);
+        let mut opts: Vec<Box<dyn Optimizer>> = vec![
+            Box::new(RandomOptimizer::new(dev.space().clone(), cons, 1)),
+            Box::new(PresetOptimizer::max_power(DeviceKind::XavierNx, cons)),
+        ];
+        for opt in opts.iter_mut() {
+            let best = drive(opt.as_mut(), &mut dev, 3);
+            assert!(best.is_some(), "{}", opt.name());
+        }
+    }
+}

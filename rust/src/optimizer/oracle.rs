@@ -1,0 +1,122 @@
+//! ORACLE baseline (§IV-A): exhaustive offline profiling of the entire
+//! configuration space; the upper bound every method is scored against.
+//!
+//! Driven through the same propose/observe loop as everyone else — it
+//! simply proposes every grid point once (thousands of measurement
+//! windows; the experiment reports surface that cost next to CORAL's 10).
+
+use super::constraints::Constraints;
+use super::reward::reward;
+use super::{BestConfig, Optimizer};
+use crate::device::{ConfigSpace, HwConfig};
+
+/// Exhaustive-search upper-bound baseline.
+pub struct OracleOptimizer {
+    space_list: Vec<HwConfig>,
+    cons: Constraints,
+    cursor: usize,
+    best: Option<BestConfig>,
+    measured: u64,
+}
+
+impl OracleOptimizer {
+    pub fn new(space: ConfigSpace, cons: Constraints) -> OracleOptimizer {
+        OracleOptimizer {
+            space_list: space.enumerate(),
+            cons,
+            cursor: 0,
+            best: None,
+            measured: 0,
+        }
+    }
+
+    /// Number of proposals needed for a complete sweep.
+    pub fn sweep_len(&self) -> usize {
+        self.space_list.len()
+    }
+
+    /// True once every configuration has been proposed.
+    pub fn done(&self) -> bool {
+        self.cursor >= self.space_list.len()
+    }
+}
+
+impl Optimizer for OracleOptimizer {
+    fn propose(&mut self) -> HwConfig {
+        // After a full sweep, re-propose the best (steady state).
+        if self.done() {
+            return self.best.map(|b| b.config).unwrap_or(self.space_list[0]);
+        }
+        let c = self.space_list[self.cursor];
+        self.cursor += 1;
+        c
+    }
+
+    fn observe(&mut self, config: HwConfig, throughput_fps: f64, power_mw: f64) {
+        self.measured += 1;
+        let out = reward(&self.cons, throughput_fps, power_mw);
+        let cand = BestConfig {
+            config,
+            throughput_fps,
+            power_mw,
+            reward: out.reward,
+            feasible: out.feasible,
+        };
+        if self.best.map(|b| cand.reward > b.reward).unwrap_or(true) {
+            self.best = Some(cand);
+        }
+    }
+
+    fn best(&self) -> Option<BestConfig> {
+        self.best
+    }
+
+    fn name(&self) -> &'static str {
+        "oracle"
+    }
+
+    fn offline_cost_windows(&self) -> u64 {
+        self.measured
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::{Device, DeviceKind};
+    use crate::models::ModelKind;
+
+    #[test]
+    fn full_sweep_finds_global_best() {
+        let mut dev = Device::new(DeviceKind::XavierNx, ModelKind::Yolo, 42);
+        let cons = Constraints::dual(30.0, 6500.0);
+        let mut o = OracleOptimizer::new(dev.space().clone(), cons);
+        let n = o.sweep_len();
+        assert_eq!(n, 2160);
+        for _ in 0..n {
+            let c = o.propose();
+            let m = dev.run(c);
+            o.observe(c, m.throughput_fps, m.power_mw);
+        }
+        assert!(o.done());
+        let best = o.best().unwrap();
+        assert!(best.feasible, "oracle must find the feasible region");
+        assert!(best.throughput_fps >= 30.0 && best.power_mw <= 6500.0);
+        assert_eq!(o.offline_cost_windows(), n as u64);
+        // Steady state: keeps proposing the winner.
+        assert_eq!(o.propose(), best.config);
+    }
+
+    #[test]
+    fn infeasible_scenario_reports_infeasible_best() {
+        let mut dev = Device::new(DeviceKind::XavierNx, ModelKind::Yolo, 1);
+        let cons = Constraints::dual(500.0, 3000.0); // impossible
+        let mut o = OracleOptimizer::new(dev.space().clone(), cons);
+        for _ in 0..o.sweep_len() {
+            let c = o.propose();
+            let m = dev.run(c);
+            o.observe(c, m.throughput_fps, m.power_mw);
+        }
+        assert!(!o.best().unwrap().feasible);
+    }
+}

@@ -1,0 +1,108 @@
+//! Manufacturer-preset baselines (§IV-A): `max-power` and `default`
+//! nvpmodel modes. A preset is a fixed configuration — no search, no
+//! application-knob tuning (concurrency stays at the framework default).
+
+use super::constraints::Constraints;
+use super::reward::reward;
+use super::{BestConfig, Optimizer};
+use crate::device::{DeviceKind, HwConfig};
+
+/// Fixed-configuration baseline.
+pub struct PresetOptimizer {
+    config: HwConfig,
+    cons: Constraints,
+    label: &'static str,
+    best: Option<BestConfig>,
+}
+
+impl PresetOptimizer {
+    /// The manufacturer's maximum-performance mode.
+    pub fn max_power(dev: DeviceKind, cons: Constraints) -> PresetOptimizer {
+        PresetOptimizer {
+            config: dev.preset_max_power(),
+            cons,
+            label: "max-power",
+            best: None,
+        }
+    }
+
+    /// The manufacturer's default power mode.
+    pub fn default_mode(dev: DeviceKind, cons: Constraints) -> PresetOptimizer {
+        PresetOptimizer {
+            config: dev.preset_default(),
+            cons,
+            label: "default",
+            best: None,
+        }
+    }
+
+    /// Any fixed configuration (custom presets).
+    pub fn fixed(config: HwConfig, cons: Constraints, label: &'static str) -> PresetOptimizer {
+        PresetOptimizer { config, cons, label, best: None }
+    }
+}
+
+impl Optimizer for PresetOptimizer {
+    fn propose(&mut self) -> HwConfig {
+        self.config
+    }
+
+    fn observe(&mut self, config: HwConfig, throughput_fps: f64, power_mw: f64) {
+        let out = reward(&self.cons, throughput_fps, power_mw);
+        // Keep the latest measurement (steady-state view of the preset).
+        self.best = Some(BestConfig {
+            config,
+            throughput_fps,
+            power_mw,
+            reward: out.reward,
+            feasible: out.feasible,
+        });
+    }
+
+    fn best(&self) -> Option<BestConfig> {
+        self.best
+    }
+
+    fn name(&self) -> &'static str {
+        self.label
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::{Device, DeviceKind};
+    use crate::models::ModelKind;
+    use crate::optimizer::tests::drive;
+
+    #[test]
+    fn presets_never_move() {
+        let mut opt =
+            PresetOptimizer::max_power(DeviceKind::XavierNx, Constraints::none());
+        let first = opt.propose();
+        opt.observe(first, 10.0, 9000.0);
+        assert_eq!(opt.propose(), first);
+    }
+
+    #[test]
+    fn dual_scenario_presets_fail_on_nx_yolo() {
+        // Paper Figs 5–6: max-power violates the budget, default misses
+        // the target.
+        let cons = Constraints::dual(30.0, 6500.0);
+        let mut dev = Device::new(DeviceKind::XavierNx, ModelKind::Yolo, 4);
+        let mut mp = PresetOptimizer::max_power(DeviceKind::XavierNx, cons);
+        let b = drive(&mut mp, &mut dev, 3).unwrap();
+        assert!(b.power_mw > 6500.0, "max-power over budget");
+        let mut dm = PresetOptimizer::default_mode(DeviceKind::XavierNx, cons);
+        let b = drive(&mut dm, &mut dev, 3).unwrap();
+        assert!(b.throughput_fps < 30.0, "default under target");
+        assert!(!b.feasible);
+    }
+
+    #[test]
+    fn fixed_preset_label() {
+        let cfg = DeviceKind::OrinNano.preset_default();
+        let opt = PresetOptimizer::fixed(cfg, Constraints::none(), "custom");
+        assert_eq!(opt.name(), "custom");
+    }
+}

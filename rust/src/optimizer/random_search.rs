@@ -1,0 +1,79 @@
+//! Pure random search with Algorithm-1 ranking — an extra ablation
+//! baseline isolating the value of CORAL's guided steps from the value of
+//! its reward function (ALERT-Online ranks throughput-first; this ranks
+//! by the same reward CORAL uses).
+
+use super::constraints::Constraints;
+use super::reward::reward;
+use super::{BestConfig, Optimizer};
+use crate::device::{ConfigSpace, HwConfig};
+use crate::util::Rng;
+
+/// Uniform random search ranked by Algorithm 1 reward.
+pub struct RandomOptimizer {
+    space: ConfigSpace,
+    cons: Constraints,
+    rng: Rng,
+    best: Option<BestConfig>,
+}
+
+impl RandomOptimizer {
+    pub fn new(space: ConfigSpace, cons: Constraints, seed: u64) -> RandomOptimizer {
+        RandomOptimizer { space, cons, rng: Rng::new(seed), best: None }
+    }
+}
+
+impl Optimizer for RandomOptimizer {
+    fn propose(&mut self) -> HwConfig {
+        self.space.random(&mut self.rng)
+    }
+
+    fn observe(&mut self, config: HwConfig, throughput_fps: f64, power_mw: f64) {
+        let out = reward(&self.cons, throughput_fps, power_mw);
+        let cand = BestConfig {
+            config,
+            throughput_fps,
+            power_mw,
+            reward: out.reward,
+            feasible: out.feasible,
+        };
+        if self.best.map(|b| cand.reward > b.reward).unwrap_or(true) {
+            self.best = Some(cand);
+        }
+    }
+
+    fn best(&self) -> Option<BestConfig> {
+        self.best
+    }
+
+    fn name(&self) -> &'static str {
+        "random"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::{Device, DeviceKind};
+    use crate::models::ModelKind;
+    use crate::optimizer::tests::drive;
+
+    #[test]
+    fn keeps_highest_reward() {
+        let mut dev = Device::new(DeviceKind::OrinNano, ModelKind::Yolo, 8);
+        let mut opt =
+            RandomOptimizer::new(dev.space().clone(), Constraints::none(), 8);
+        let best = drive(&mut opt, &mut dev, 20).unwrap();
+        assert!(best.reward > 0.0);
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let s = DeviceKind::XavierNx.space();
+        let mut a = RandomOptimizer::new(s.clone(), Constraints::none(), 3);
+        let mut b = RandomOptimizer::new(s, Constraints::none(), 3);
+        for _ in 0..5 {
+            assert_eq!(a.propose(), b.propose());
+        }
+    }
+}

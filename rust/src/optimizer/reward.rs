@@ -1,0 +1,125 @@
+//! Reward calculation (paper Algorithm 1).
+//!
+//! Feasible configurations score their efficiency r = τ/p (Eq. 7);
+//! infeasible ones score the negative inverted ratio r = −(p/τ) (Eq. 8),
+//! guaranteeing every infeasible configuration ranks below every feasible
+//! one while still ordering infeasible configs by how badly they waste
+//! power.
+
+use super::constraints::{Constraints, Objective};
+
+/// Outcome of evaluating one measurement (Algorithm 1).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RewardOutcome {
+    /// Reward score `r`.
+    pub reward: f64,
+    /// Whether both constraints were satisfied.
+    pub feasible: bool,
+}
+
+/// Algorithm 1: feasibility check + reward score.
+///
+/// Edge cases beyond the paper's pseudocode: a crashed configuration
+/// (τ = 0) gets −∞ so it sorts below every other infeasible config, and a
+/// zero power reading (impossible physically) is clamped to avoid ±∞
+/// efficiency.
+pub fn reward(cons: &Constraints, throughput_fps: f64, power_mw: f64) -> RewardOutcome {
+    let p = power_mw.max(1e-9);
+    if cons.objective == Objective::Throughput {
+        // Single-constraint throughput maximization (Figs 3–4): the
+        // target is unreachable by construction, so ranking is raw
+        // throughput among configurations that run within budget.
+        return if throughput_fps > 0.0 && power_mw <= cons.budget_or_inf() {
+            RewardOutcome { reward: throughput_fps, feasible: true }
+        } else if throughput_fps <= 0.0 {
+            RewardOutcome { reward: f64::NEG_INFINITY, feasible: false }
+        } else {
+            RewardOutcome { reward: -(p / throughput_fps), feasible: false }
+        };
+    }
+    if cons.feasible(throughput_fps, power_mw) {
+        RewardOutcome { reward: throughput_fps / p, feasible: true }
+    } else if throughput_fps <= 0.0 {
+        RewardOutcome { reward: f64::NEG_INFINITY, feasible: false }
+    } else {
+        RewardOutcome { reward: -(p / throughput_fps), feasible: false }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn feasible_reward_is_efficiency() {
+        let c = Constraints::dual(30.0, 6500.0);
+        let r = reward(&c, 33.0, 5500.0);
+        assert!(r.feasible);
+        assert!((r.reward - 33.0 / 5500.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn infeasible_reward_is_negative_inverse() {
+        let c = Constraints::dual(30.0, 6500.0);
+        let r = reward(&c, 20.0, 7000.0);
+        assert!(!r.feasible);
+        assert!((r.reward + 7000.0 / 20.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn crashed_config_is_worst() {
+        let c = Constraints::dual(30.0, 6500.0);
+        let r = reward(&c, 0.0, 2350.0);
+        assert!(!r.feasible);
+        assert_eq!(r.reward, f64::NEG_INFINITY);
+    }
+
+    #[test]
+    fn throughput_objective_ranks_by_fps() {
+        let c = Constraints::max_throughput();
+        let hi = reward(&c, 40.0, 9000.0);
+        let lo = reward(&c, 30.0, 3000.0);
+        assert!(hi.feasible && lo.feasible);
+        assert!(hi.reward > lo.reward, "raw fps ranking");
+        assert_eq!(reward(&c, 0.0, 2000.0).reward, f64::NEG_INFINITY);
+    }
+
+    #[test]
+    fn prop_feasible_always_outranks_infeasible() {
+        // The paper's design goal for Eq. 8.
+        prop::check("feasible > infeasible reward", 300, |g| {
+            let c = Constraints::dual(g.rng.range_f64(1.0, 100.0), g.rng.range_f64(3000.0, 9000.0));
+            let t1 = g.rng.range_f64(0.0, 120.0);
+            let p1 = g.rng.range_f64(2000.0, 10_000.0);
+            let t2 = g.rng.range_f64(0.0, 120.0);
+            let p2 = g.rng.range_f64(2000.0, 10_000.0);
+            let r1 = reward(&c, t1, p1);
+            let r2 = reward(&c, t2, p2);
+            if r1.feasible && !r2.feasible {
+                prop::assert_true(r1.reward > r2.reward, "feasible outranks")?;
+            }
+            if r2.feasible && !r1.feasible {
+                prop::assert_true(r2.reward > r1.reward, "feasible outranks")?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_feasible_ranking_prefers_efficiency() {
+        prop::check("higher efficiency ranks higher", 200, |g| {
+            let c = Constraints::none();
+            let t1 = g.rng.range_f64(1.0, 100.0);
+            let p1 = g.rng.range_f64(2000.0, 10_000.0);
+            let t2 = g.rng.range_f64(1.0, 100.0);
+            let p2 = g.rng.range_f64(2000.0, 10_000.0);
+            let r1 = reward(&c, t1, p1).reward;
+            let r2 = reward(&c, t2, p2).reward;
+            prop::assert_true(
+                (r1 > r2) == (t1 / p1 > t2 / p2),
+                "efficiency ordering",
+            )
+        });
+    }
+}

@@ -1,0 +1,222 @@
+//! PJRT CPU client wrapper: artifact loading, one-time compilation, and
+//! batched execution with pre-allocated input reuse.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::models::{ArtifactInfo, Manifest, ModelKind};
+
+/// Decoded detector output for one image.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Detections {
+    /// `(x1, y1, x2, y2)` corner boxes, model-input pixel space.
+    pub boxes: Vec<[f32; 4]>,
+    /// Confidence per box (objectness × best class).
+    pub scores: Vec<f32>,
+}
+
+impl Detections {
+    /// Boxes above a confidence threshold.
+    pub fn above(&self, threshold: f32) -> Vec<([f32; 4], f32)> {
+        self.boxes
+            .iter()
+            .zip(&self.scores)
+            .filter(|(_, &s)| s >= threshold)
+            .map(|(&b, &s)| (b, s))
+            .collect()
+    }
+}
+
+/// The process-wide PJRT client (compile + execute).
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+}
+
+impl PjrtRuntime {
+    /// Create the CPU PJRT client.
+    pub fn cpu() -> Result<PjrtRuntime> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(PjrtRuntime { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load one HLO-text artifact and compile it.
+    pub fn load(&self, info: &ArtifactInfo) -> Result<CompiledModel> {
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(&info.path)
+            .with_context(|| format!("parsing HLO text {}", info.path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", info.path.display()))?;
+        log::info!(
+            "compiled {} (batch {}) in {:.2}s",
+            info.path.display(),
+            info.batch,
+            t0.elapsed().as_secs_f64()
+        );
+        Ok(CompiledModel {
+            exe: Arc::new(exe),
+            batch: info.batch,
+            input_shape: info.input_shape,
+            predictions: info.predictions,
+        })
+    }
+
+    /// Load every batch variant of `model` listed in the manifest.
+    pub fn load_model(&self, manifest: &Manifest, model: ModelKind) -> Result<ModelRuntime> {
+        let infos = manifest.for_model(model);
+        if infos.is_empty() {
+            bail!("manifest has no artifacts for model {model}");
+        }
+        let mut variants = Vec::new();
+        for info in infos {
+            variants.push(self.load(info)?);
+        }
+        Ok(ModelRuntime { model, variants })
+    }
+}
+
+/// One compiled (model, batch) executable.
+#[derive(Clone)]
+pub struct CompiledModel {
+    exe: Arc<xla::PjRtLoadedExecutable>,
+    /// Compiled batch size.
+    pub batch: usize,
+    /// NHWC input shape.
+    pub input_shape: [usize; 4],
+    /// Predictions per image.
+    pub predictions: usize,
+}
+
+impl CompiledModel {
+    /// Elements of one input image (H·W·C).
+    pub fn image_elems(&self) -> usize {
+        self.input_shape[1] * self.input_shape[2] * self.input_shape[3]
+    }
+
+    /// Run a full batch: `pixels` must hold exactly `batch` images,
+    /// flattened NHWC f32 in [0, 1]. Returns per-image detections.
+    pub fn infer(&self, pixels: &[f32]) -> Result<Vec<Detections>> {
+        let want = self.batch * self.image_elems();
+        if pixels.len() != want {
+            bail!("input has {} floats, executable expects {}", pixels.len(), want);
+        }
+        let dims: Vec<i64> = self.input_shape.iter().map(|&d| d as i64).collect();
+        let input = xla::Literal::vec1(pixels)
+            .reshape(&dims)
+            .context("reshaping input literal")?;
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&[input])
+            .context("executing detector")?[0][0]
+            .to_literal_sync()
+            .context("fetching result")?;
+        // aot.py lowers with return_tuple=True: (boxes[B,P,4], scores[B,P]).
+        let (boxes_lit, scores_lit) =
+            result.to_tuple2().context("unpacking (boxes, scores) tuple")?;
+        let boxes_flat = boxes_lit.to_vec::<f32>()?;
+        let scores_flat = scores_lit.to_vec::<f32>()?;
+        let p = self.predictions;
+        if boxes_flat.len() != self.batch * p * 4 || scores_flat.len() != self.batch * p {
+            bail!(
+                "unexpected output sizes: boxes {} scores {} (batch {} × {} preds)",
+                boxes_flat.len(),
+                scores_flat.len(),
+                self.batch,
+                p
+            );
+        }
+        let mut out = Vec::with_capacity(self.batch);
+        for b in 0..self.batch {
+            let boxes = (0..p)
+                .map(|i| {
+                    let o = (b * p + i) * 4;
+                    [boxes_flat[o], boxes_flat[o + 1], boxes_flat[o + 2], boxes_flat[o + 3]]
+                })
+                .collect();
+            let scores = scores_flat[b * p..(b + 1) * p].to_vec();
+            out.push(Detections { boxes, scores });
+        }
+        Ok(out)
+    }
+}
+
+/// All compiled batch variants of one model; dispatches a request batch
+/// to the smallest executable that fits (padding the tail).
+pub struct ModelRuntime {
+    pub model: ModelKind,
+    variants: Vec<CompiledModel>,
+}
+
+impl ModelRuntime {
+    /// Supported batch sizes (ascending).
+    pub fn batch_sizes(&self) -> Vec<usize> {
+        self.variants.iter().map(|v| v.batch).collect()
+    }
+
+    /// Largest supported batch.
+    pub fn max_batch(&self) -> usize {
+        self.variants.last().map(|v| v.batch).unwrap_or(0)
+    }
+
+    /// Input image side (square).
+    pub fn input_side(&self) -> usize {
+        self.variants[0].input_shape[1]
+    }
+
+    /// Smallest variant with `batch >= n` (None if n exceeds the max).
+    pub fn variant_for(&self, n: usize) -> Option<&CompiledModel> {
+        self.variants.iter().find(|v| v.batch >= n)
+    }
+
+    /// Run `n` images (flattened NHWC, n·H·W·C floats), padding up to the
+    /// chosen executable's batch; returns exactly `n` detections.
+    pub fn infer(&self, pixels: &[f32], n: usize) -> Result<Vec<Detections>> {
+        if n == 0 {
+            return Ok(Vec::new());
+        }
+        let variant = self
+            .variant_for(n)
+            .ok_or_else(|| anyhow::anyhow!("batch {n} exceeds max {}", self.max_batch()))?;
+        let per = variant.image_elems();
+        if pixels.len() != n * per {
+            bail!("expected {} floats for {} images, got {}", n * per, n, pixels.len());
+        }
+        let mut padded;
+        let input = if variant.batch == n {
+            pixels
+        } else {
+            padded = vec![0.0f32; variant.batch * per];
+            padded[..pixels.len()].copy_from_slice(pixels);
+            &padded[..]
+        };
+        let mut dets = variant.infer(input)?;
+        dets.truncate(n);
+        Ok(dets)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // PJRT integration tests live in rust/tests/runtime_integration.rs
+    // (they need `make artifacts`). Pure-logic units here:
+    use super::*;
+
+    #[test]
+    fn detections_threshold_filter() {
+        let d = Detections {
+            boxes: vec![[0.0, 0.0, 1.0, 1.0], [1.0, 1.0, 2.0, 2.0]],
+            scores: vec![0.9, 0.2],
+        };
+        let kept = d.above(0.5);
+        assert_eq!(kept.len(), 1);
+        assert_eq!(kept[0].1, 0.9);
+    }
+}

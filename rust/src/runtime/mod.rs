@@ -1,0 +1,12 @@
+//! PJRT inference runtime — the serving hot path.
+//!
+//! Loads the AOT-compiled HLO-text artifacts produced by
+//! `python/compile/aot.py` (`make artifacts`), compiles them once on the
+//! PJRT CPU client at start-up, and executes them per batch. Python never
+//! runs here; the interchange is HLO text because the image's
+//! xla_extension 0.5.1 rejects jax ≥ 0.5's 64-bit-id serialized protos
+//! (see /opt/xla-example/README.md and DESIGN.md §1).
+
+pub mod client;
+
+pub use client::{CompiledModel, Detections, ModelRuntime, PjrtRuntime};

@@ -1,0 +1,386 @@
+//! Distance covariance and distance correlation (Székely & Rizzo 2009).
+//!
+//! The paper's Eq. 1–4: for paired samples of a metric `m` (throughput or
+//! power) and a hardware setting `s`,
+//!
+//! ```text
+//! a_ij = |m_i − m_j|                       (pairwise distances)
+//! A_ij = a_ij − ā_i· − ā_·j + ā_··         (double centering)
+//! dCov²(m,s) = (1/n²) Σ_ij A_ij B_ij
+//! dCor(m,s)  = dCov(m,s) / √(dCov(m,m)·dCov(s,s))
+//! ```
+//!
+//! dCor ∈ [0, 1]; 0 ⇔ statistical independence (in the population
+//! version), and it detects arbitrary non-linear dependence — the reason
+//! the paper prefers it to Pearson correlation for DVFS spaces.
+//!
+//! Two implementations:
+//! * [`dcor`] / [`dcov2`] — allocation-per-call reference, used by tests.
+//! * [`DcorWorkspace`] — reusable buffers + a fused pass computing
+//!   dCor(τ, s_i) and dCor(p, s_i) for all parameter dimensions at once;
+//!   this is the optimizer's hot path (called every iteration; see
+//!   EXPERIMENTS.md §Perf).
+
+/// Double-centered distance "matrix" stored row-major, plus its own
+/// dCov²(x,x) (needed for normalization).
+#[derive(Debug, Clone)]
+struct Centered {
+    n: usize,
+    m: Vec<f64>,
+    self_dcov2: f64,
+}
+
+fn center(x: &[f64], buf: &mut Vec<f64>, row_means: &mut Vec<f64>) -> Centered {
+    let n = x.len();
+    buf.clear();
+    buf.resize(n * n, 0.0);
+    row_means.clear();
+    row_means.resize(n, 0.0);
+
+    // Pairwise |x_i − x_j| with row sums (symmetric: rows == cols means).
+    let mut grand = 0.0;
+    for i in 0..n {
+        for j in 0..n {
+            let d = (x[i] - x[j]).abs();
+            buf[i * n + j] = d;
+            row_means[i] += d;
+        }
+        grand += row_means[i];
+        row_means[i] /= n as f64;
+    }
+    grand /= (n * n) as f64;
+
+    let mut self_dcov2 = 0.0;
+    for i in 0..n {
+        for j in 0..n {
+            let c = buf[i * n + j] - row_means[i] - row_means[j] + grand;
+            buf[i * n + j] = c;
+            self_dcov2 += c * c;
+        }
+    }
+    Centered { n, m: buf.clone(), self_dcov2: self_dcov2 / (n * n) as f64 }
+}
+
+/// dCov²(x, y). Panics if lengths differ; returns 0 for n < 2.
+pub fn dcov2(x: &[f64], y: &[f64]) -> f64 {
+    assert_eq!(x.len(), y.len(), "dcov2: length mismatch");
+    let n = x.len();
+    if n < 2 {
+        return 0.0;
+    }
+    let mut buf = Vec::new();
+    let mut rm = Vec::new();
+    let cx = center(x, &mut buf, &mut rm);
+    let mut buf2 = Vec::new();
+    let cy = center(y, &mut buf2, &mut rm);
+    let mut s = 0.0;
+    for i in 0..n * n {
+        s += cx.m[i] * cy.m[i];
+    }
+    (s / (n * n) as f64).max(0.0)
+}
+
+/// dCor(x, y) ∈ [0, 1]. Returns 0 when either marginal is constant
+/// (dCov(x,x) = 0) — a constant setting carries no signal.
+pub fn dcor(x: &[f64], y: &[f64]) -> f64 {
+    assert_eq!(x.len(), y.len(), "dcor: length mismatch");
+    let n = x.len();
+    if n < 2 {
+        return 0.0;
+    }
+    let mut buf = Vec::new();
+    let mut rm = Vec::new();
+    let cx = center(x, &mut buf, &mut rm);
+    let mut buf2 = Vec::new();
+    let cy = center(y, &mut buf2, &mut rm);
+    normalized(&cx, &cy)
+}
+
+fn normalized(cx: &Centered, cy: &Centered) -> f64 {
+    debug_assert_eq!(cx.n, cy.n);
+    let denom = cx.self_dcov2 * cy.self_dcov2;
+    if denom <= 0.0 {
+        return 0.0;
+    }
+    let n = cx.n;
+    let mut s = 0.0;
+    for i in 0..n * n {
+        s += cx.m[i] * cy.m[i];
+    }
+    let d2 = (s / (n * n) as f64).max(0.0);
+    (d2 / denom.sqrt()).sqrt().clamp(0.0, 1.0)
+}
+
+/// Reusable workspace computing dCor of two metrics against many setting
+/// dimensions — the optimizer's per-iteration correlation analysis
+/// (§III-D) in one call.
+///
+/// §Perf: unlike the reference path, the workspace (a) centers each
+/// metric once and reuses it across all setting dimensions, (b) keeps
+/// every matrix buffer across calls (zero steady-state allocation), and
+/// (c) exploits the symmetry of distance matrices — distances, centering
+/// and the product sums each touch only the upper triangle and mirror
+/// (≈2× fewer FLOPs). See EXPERIMENTS.md §Perf for before/after.
+#[derive(Debug, Default)]
+pub struct DcorWorkspace {
+    /// One persistent centered matrix per metric.
+    metric_mats: Vec<Vec<f64>>,
+    metric_self: Vec<f64>,
+    /// Persistent centered matrix for the current setting dim.
+    setting_mat: Vec<f64>,
+    row_sums: Vec<f64>,
+}
+
+/// Symmetric in-place double-centering; returns dCov²(x, x).
+fn center_sym(x: &[f64], m: &mut Vec<f64>, row_sums: &mut Vec<f64>) -> f64 {
+    let n = x.len();
+    m.clear();
+    m.resize(n * n, 0.0);
+    row_sums.clear();
+    row_sums.resize(n, 0.0);
+
+    // Upper triangle of |x_i − x_j|, mirrored; diagonal is 0.
+    for i in 0..n {
+        let xi = x[i];
+        for j in (i + 1)..n {
+            let d = (xi - x[j]).abs();
+            m[i * n + j] = d;
+            m[j * n + i] = d;
+            row_sums[i] += d;
+            row_sums[j] += d;
+        }
+    }
+    let grand = row_sums.iter().sum::<f64>() / (n * n) as f64;
+    let inv_n = 1.0 / n as f64;
+
+    // Centering + self product, upper triangle ×2 plus diagonal.
+    let mut self_sum = 0.0;
+    for i in 0..n {
+        let rmi = row_sums[i] * inv_n;
+        let cd = -rmi - rmi + grand; // diagonal: a_ii = 0
+        m[i * n + i] = cd;
+        self_sum += cd * cd;
+        for j in (i + 1)..n {
+            let c = m[i * n + j] - rmi - row_sums[j] * inv_n + grand;
+            m[i * n + j] = c;
+            m[j * n + i] = c;
+            self_sum += 2.0 * c * c;
+        }
+    }
+    self_sum / (n * n) as f64
+}
+
+/// Σ A∘B over symmetric matrices via the upper triangle.
+fn product_sym(a: &[f64], b: &[f64], n: usize) -> f64 {
+    let mut s = 0.0;
+    for i in 0..n {
+        s += a[i * n + i] * b[i * n + i];
+        let mut row = 0.0;
+        for j in (i + 1)..n {
+            row += a[i * n + j] * b[i * n + j];
+        }
+        s += 2.0 * row;
+    }
+    s
+}
+
+impl DcorWorkspace {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Compute `out[k][d] = dCor(metrics[k], settings[d])` for all metric
+    /// series (throughput, power) × setting dimensions. Each series must
+    /// have the same length n; for n < 2 all correlations are 0.
+    pub fn dcor_matrix(
+        &mut self,
+        metrics: &[&[f64]],
+        settings: &[Vec<f64>],
+    ) -> Vec<Vec<f64>> {
+        let n = metrics.first().map(|m| m.len()).unwrap_or(0);
+        for m in metrics {
+            assert_eq!(m.len(), n, "metric length mismatch");
+        }
+        for s in settings {
+            assert_eq!(s.len(), n, "setting length mismatch");
+        }
+        if n < 2 {
+            return vec![vec![0.0; settings.len()]; metrics.len()];
+        }
+
+        // Center each metric once (reused across all setting dims).
+        self.metric_mats.resize_with(metrics.len(), Vec::new);
+        self.metric_self.clear();
+        for (k, m) in metrics.iter().enumerate() {
+            let s = center_sym(m, &mut self.metric_mats[k], &mut self.row_sums);
+            self.metric_self.push(s);
+        }
+
+        let mut out = vec![vec![0.0; settings.len()]; metrics.len()];
+        let n2 = (n * n) as f64;
+        for (d, s) in settings.iter().enumerate() {
+            let s_self = center_sym(s, &mut self.setting_mat, &mut self.row_sums);
+            for k in 0..metrics.len() {
+                let denom = self.metric_self[k] * s_self;
+                if denom <= 0.0 {
+                    continue; // constant series ⇒ dCor = 0
+                }
+                let d2 = (product_sym(&self.metric_mats[k], &self.setting_mat, n)
+                    / n2)
+                    .max(0.0);
+                out[k][d] = (d2 / denom.sqrt()).sqrt().clamp(0.0, 1.0);
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn paper_worked_example() {
+        // §III-D: τ, p, s_cpu from the paper's illustration. The paper
+        // reports dCor ≈ 0.94 (throughput) and ≈ 0.99 (power).
+        let tput = [15.2, 16.1, 15.8, 14.9, 15.5];
+        let power = [9800.0, 10100.0, 10050.0, 9500.0, 9750.0];
+        let cpu = [1200.0, 1400.0, 1400.0, 1000.0, 1200.0];
+        let a = dcor(&tput, &cpu);
+        let b = dcor(&power, &cpu);
+        assert!((a - 0.94).abs() < 0.03, "alpha={a}");
+        assert!((b - 0.99).abs() < 0.03, "beta={b}");
+        assert!(b > a, "power correlation should dominate: {b} vs {a}");
+    }
+
+    #[test]
+    fn perfect_linear_dependence_is_one() {
+        let x = [1.0, 2.0, 3.0, 4.0, 5.0];
+        let y: Vec<f64> = x.iter().map(|v| 3.0 * v - 7.0).collect();
+        assert!((dcor(&x, &y) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn nonlinear_dependence_detected() {
+        // y = x² on symmetric support: Pearson ≈ 0, dCor must be well > 0.
+        let x: Vec<f64> = (-10..=10).map(|i| i as f64).collect();
+        let y: Vec<f64> = x.iter().map(|v| v * v).collect();
+        let pearson = {
+            let mx = 0.0;
+            let my = y.iter().sum::<f64>() / y.len() as f64;
+            let cov: f64 =
+                x.iter().zip(&y).map(|(a, b)| (a - mx) * (b - my)).sum();
+            let vx: f64 = x.iter().map(|a| (a - mx).powi(2)).sum();
+            let vy: f64 = y.iter().map(|b| (b - my).powi(2)).sum();
+            cov / (vx * vy).sqrt()
+        };
+        assert!(pearson.abs() < 1e-9, "pearson={pearson}");
+        assert!(dcor(&x, &y) > 0.4, "dcor={}", dcor(&x, &y));
+    }
+
+    #[test]
+    fn independent_samples_near_zero() {
+        let mut r = Rng::new(99);
+        let n = 200;
+        let x: Vec<f64> = (0..n).map(|_| r.f64()).collect();
+        let y: Vec<f64> = (0..n).map(|_| r.f64()).collect();
+        let d = dcor(&x, &y);
+        // Finite-sample bias keeps this above 0; it must still be small.
+        assert!(d < 0.25, "dcor={d}");
+    }
+
+    #[test]
+    fn constant_series_gives_zero() {
+        let x = [5.0; 6];
+        let y = [1.0, 2.0, 3.0, 4.0, 5.0, 6.0];
+        assert_eq!(dcor(&x, &y), 0.0);
+        assert_eq!(dcor(&y, &x), 0.0);
+    }
+
+    #[test]
+    fn tiny_n_is_zero() {
+        assert_eq!(dcor(&[1.0], &[2.0]), 0.0);
+        assert_eq!(dcor(&[], &[]), 0.0);
+    }
+
+    #[test]
+    fn dcov2_nonnegative_and_symmetric() {
+        prop::check("dcov2 sym + nonneg", 60, |g| {
+            let n = g.rng.range_usize(2, 12);
+            let x = g.vec_f64(n, -10.0, 10.0);
+            let y = g.vec_f64(n, -10.0, 10.0);
+            let xy = dcov2(&x, &y);
+            let yx = dcov2(&y, &x);
+            prop::assert_true(xy >= 0.0, "nonneg")?;
+            prop::assert_close(xy, yx, 1e-9)
+        });
+    }
+
+    #[test]
+    fn dcor_bounds_and_symmetry() {
+        prop::check("dcor in [0,1], symmetric", 60, |g| {
+            let n = g.rng.range_usize(2, 12);
+            let x = g.vec_f64(n, -100.0, 100.0);
+            let y = g.vec_f64(n, -100.0, 100.0);
+            let d = dcor(&x, &y);
+            prop::assert_true((0.0..=1.0).contains(&d), "bounds")?;
+            prop::assert_close(d, dcor(&y, &x), 1e-9)
+        });
+    }
+
+    #[test]
+    fn dcor_invariant_to_affine_transforms() {
+        // dCor(a + bx, c + dy) == dCor(x, y) for b, d > 0.
+        prop::check("dcor affine invariance", 40, |g| {
+            let n = g.rng.range_usize(3, 10);
+            let x = g.vec_f64(n, -5.0, 5.0);
+            let y = g.vec_f64(n, -5.0, 5.0);
+            let b = g.rng.range_f64(0.1, 10.0);
+            let d = g.rng.range_f64(0.1, 10.0);
+            let xs: Vec<f64> = x.iter().map(|v| 3.0 + b * v).collect();
+            let ys: Vec<f64> = y.iter().map(|v| -2.0 + d * v).collect();
+            prop::assert_close(dcor(&xs, &ys), dcor(&x, &y), 1e-7)
+        });
+    }
+
+    #[test]
+    fn self_correlation_is_one() {
+        let x = [3.0, 1.0, 4.0, 1.0, 5.0, 9.0];
+        assert!((dcor(&x, &x) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn workspace_matches_reference() {
+        prop::check("workspace == reference dcor", 40, |g| {
+            let n = g.rng.range_usize(2, 10);
+            let tput = g.vec_f64(n, 0.0, 100.0);
+            let power = g.vec_f64(n, 3000.0, 12000.0);
+            let dims: Vec<Vec<f64>> =
+                (0..5).map(|_| g.vec_f64(n, 0.0, 2000.0)).collect();
+            let mut ws = DcorWorkspace::new();
+            let got = ws.dcor_matrix(&[&tput, &power], &dims);
+            for (d, s) in dims.iter().enumerate() {
+                prop::assert_close(got[0][d], dcor(&tput, s), 1e-9)?;
+                prop::assert_close(got[1][d], dcor(&power, s), 1e-9)?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn workspace_empty_and_tiny() {
+        let mut ws = DcorWorkspace::new();
+        let out = ws.dcor_matrix(&[&[], &[]], &vec![vec![]; 3]);
+        assert_eq!(out, vec![vec![0.0; 3]; 2]);
+        let out = ws.dcor_matrix(&[&[1.0], &[2.0]], &vec![vec![3.0]; 2]);
+        assert_eq!(out, vec![vec![0.0; 2]; 2]);
+    }
+
+    #[test]
+    #[should_panic(expected = "length mismatch")]
+    fn mismatched_lengths_panic() {
+        dcor(&[1.0, 2.0], &[1.0]);
+    }
+}

@@ -1,0 +1,109 @@
+//! Scalar Kalman filter — the estimator inside the ALERT baseline
+//! (Wan et al., ATC'20): tracks the ratio between observed and profiled
+//! performance of the *current environment* so offline profiles can be
+//! corrected online.
+
+/// 1-D Kalman filter with random-walk state model:
+/// `x_k = x_{k-1} + w`, `z_k = x_k + v`, `w ~ N(0,q)`, `v ~ N(0,r)`.
+#[derive(Debug, Clone)]
+pub struct Kalman1d {
+    /// State estimate.
+    x: f64,
+    /// Estimate variance.
+    p: f64,
+    /// Process noise.
+    q: f64,
+    /// Measurement noise.
+    r: f64,
+}
+
+impl Kalman1d {
+    /// Create with initial estimate `x0` / variance `p0`.
+    pub fn new(x0: f64, p0: f64, q: f64, r: f64) -> Self {
+        assert!(p0 >= 0.0 && q >= 0.0 && r > 0.0, "bad kalman parameters");
+        Kalman1d { x: x0, p: p0, q, r }
+    }
+
+    /// ALERT's defaults: wide prior around 1.0 (observed == profiled).
+    pub fn alert_default() -> Self {
+        Kalman1d::new(1.0, 1.0, 1e-3, 1e-2)
+    }
+
+    /// Fold in a measurement, returning the posterior estimate.
+    pub fn update(&mut self, z: f64) -> f64 {
+        // Predict.
+        let p_pred = self.p + self.q;
+        // Update.
+        let k = p_pred / (p_pred + self.r);
+        self.x += k * (z - self.x);
+        self.p = (1.0 - k) * p_pred;
+        self.x
+    }
+
+    /// Current estimate.
+    pub fn estimate(&self) -> f64 {
+        self.x
+    }
+
+    /// Current estimate variance.
+    pub fn variance(&self) -> f64 {
+        self.p
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn converges_to_constant_signal() {
+        let mut kf = Kalman1d::new(0.0, 1.0, 1e-4, 1e-2);
+        for _ in 0..200 {
+            kf.update(5.0);
+        }
+        assert!((kf.estimate() - 5.0).abs() < 0.01, "x={}", kf.estimate());
+    }
+
+    #[test]
+    fn variance_shrinks_with_evidence() {
+        let mut kf = Kalman1d::new(0.0, 1.0, 1e-5, 1e-2);
+        let v0 = kf.variance();
+        for _ in 0..50 {
+            kf.update(1.0);
+        }
+        assert!(kf.variance() < v0 / 10.0);
+    }
+
+    #[test]
+    fn filters_noise_better_than_raw() {
+        let mut r = Rng::new(4);
+        let truth = 2.5;
+        let mut kf = Kalman1d::new(0.0, 1.0, 1e-4, 0.25);
+        let mut last_raw = 0.0;
+        for _ in 0..300 {
+            let z = truth + r.normal() * 0.5;
+            kf.update(z);
+            last_raw = z;
+        }
+        assert!((kf.estimate() - truth).abs() < (last_raw - truth).abs() + 0.5);
+        assert!((kf.estimate() - truth).abs() < 0.2, "x={}", kf.estimate());
+    }
+
+    #[test]
+    fn tracks_slow_drift() {
+        let mut kf = Kalman1d::new(0.0, 1.0, 1e-2, 1e-2);
+        let mut truth = 0.0;
+        for _ in 0..500 {
+            truth += 0.01;
+            kf.update(truth);
+        }
+        assert!((kf.estimate() - truth).abs() < 0.1);
+    }
+
+    #[test]
+    #[should_panic(expected = "bad kalman")]
+    fn rejects_zero_measurement_noise() {
+        Kalman1d::new(0.0, 1.0, 0.0, 0.0);
+    }
+}

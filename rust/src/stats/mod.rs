@@ -1,0 +1,12 @@
+//! Statistical substrates: distance covariance / correlation (the paper's
+//! core instrument, §II-A2 Eq. 1–4), a scalar Kalman filter (ALERT's
+//! estimator), sliding observation windows, and summary helpers.
+
+pub mod dcov;
+pub mod kalman;
+pub mod summary;
+pub mod window;
+
+pub use dcov::{dcor, dcov2, DcorWorkspace};
+pub use kalman::Kalman1d;
+pub use window::SlidingWindow;

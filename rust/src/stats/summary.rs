@@ -1,0 +1,119 @@
+//! Summary statistics over metric series: mean, variance, percentiles —
+//! used by telemetry aggregation and the experiment reports.
+
+/// Running mean/variance (Welford) — single pass, numerically stable.
+#[derive(Debug, Clone, Default)]
+pub struct Running {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Running {
+    pub fn new() -> Self {
+        Running { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            f64::NAN
+        } else {
+            self.mean
+        }
+    }
+
+    /// Population variance.
+    pub fn variance(&self) -> f64 {
+        if self.n == 0 {
+            f64::NAN
+        } else {
+            self.m2 / self.n as f64
+        }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.variance().sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+}
+
+/// Percentile of an unsorted slice (copies + sorts; p in [0,100]).
+pub fn percentile(values: &[f64], p: f64) -> f64 {
+    if values.is_empty() {
+        return f64::NAN;
+    }
+    let mut v: Vec<f64> = values.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    crate::util::bench::percentile(&v, p)
+}
+
+/// Mean of a slice (NaN for empty).
+pub fn mean(values: &[f64]) -> f64 {
+    if values.is_empty() {
+        return f64::NAN;
+    }
+    values.iter().sum::<f64>() / values.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn running_matches_direct() {
+        prop::check("welford == direct", 80, |g| {
+            let n = g.rng.range_usize(1, 50);
+            let xs = g.vec_f64(n, -100.0, 100.0);
+            let mut r = Running::new();
+            for &x in &xs {
+                r.push(x);
+            }
+            let m = mean(&xs);
+            let var = xs.iter().map(|x| (x - m).powi(2)).sum::<f64>() / n as f64;
+            prop::assert_close(r.mean(), m, 1e-9)?;
+            prop::assert_close(r.variance(), var, 1e-6)?;
+            prop::assert_close(r.min(), xs.iter().cloned().fold(f64::INFINITY, f64::min), 0.0)?;
+            prop::assert_close(r.max(), xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max), 0.0)
+        });
+    }
+
+    #[test]
+    fn empty_running_is_nan() {
+        let r = Running::new();
+        assert!(r.mean().is_nan());
+        assert!(r.variance().is_nan());
+        assert_eq!(r.count(), 0);
+    }
+
+    #[test]
+    fn percentile_unsorted_input() {
+        let v = [5.0, 1.0, 3.0];
+        assert_eq!(percentile(&v, 0.0), 1.0);
+        assert_eq!(percentile(&v, 50.0), 3.0);
+        assert_eq!(percentile(&v, 100.0), 5.0);
+        assert!(percentile(&[], 50.0).is_nan());
+    }
+}

@@ -1,0 +1,128 @@
+//! Sliding observation window (§III-D): the W most recent
+//! (configuration, throughput, power) observations, with columnar views
+//! ready for the dCor computation.
+
+use crate::device::HwConfig;
+
+/// One online observation.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Observation {
+    pub config: HwConfig,
+    pub throughput_fps: f64,
+    pub power_mw: f64,
+}
+
+/// Fixed-capacity FIFO of recent observations.
+#[derive(Debug, Clone)]
+pub struct SlidingWindow {
+    cap: usize,
+    items: Vec<Observation>,
+}
+
+impl SlidingWindow {
+    /// Paper's default window size.
+    pub const DEFAULT_W: usize = 10;
+
+    pub fn new(cap: usize) -> Self {
+        assert!(cap >= 2, "window must hold at least 2 observations");
+        SlidingWindow { cap, items: Vec::with_capacity(cap) }
+    }
+
+    /// Push an observation, evicting the oldest when full.
+    pub fn push(&mut self, obs: Observation) {
+        if self.items.len() == self.cap {
+            self.items.remove(0);
+        }
+        self.items.push(obs);
+    }
+
+    pub fn len(&self) -> usize {
+        self.items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &Observation> {
+        self.items.iter()
+    }
+
+    pub fn last(&self) -> Option<&Observation> {
+        self.items.last()
+    }
+
+    /// Columnar view: throughput series.
+    pub fn throughputs(&self) -> Vec<f64> {
+        self.items.iter().map(|o| o.throughput_fps).collect()
+    }
+
+    /// Columnar view: power series.
+    pub fn powers(&self) -> Vec<f64> {
+        self.items.iter().map(|o| o.power_mw).collect()
+    }
+
+    /// Columnar view: one series per configuration dimension, in
+    /// [`HwConfig::DIMS`] order.
+    pub fn setting_dims(&self) -> Vec<Vec<f64>> {
+        let mut dims = vec![Vec::with_capacity(self.items.len()); HwConfig::NDIMS];
+        for o in &self.items {
+            for (d, v) in o.config.as_vec().into_iter().enumerate() {
+                dims[d].push(v);
+            }
+        }
+        dims
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::HwConfig;
+
+    fn obs(cpu_mhz: u32, fps: f64, mw: f64) -> Observation {
+        Observation {
+            config: HwConfig {
+                cpu_freq_mhz: cpu_mhz,
+                cpu_cores: 4,
+                gpu_freq_mhz: 800,
+                mem_freq_mhz: 1600,
+                concurrency: 2,
+            },
+            throughput_fps: fps,
+            power_mw: mw,
+        }
+    }
+
+    #[test]
+    fn evicts_oldest() {
+        let mut w = SlidingWindow::new(3);
+        for i in 0..5 {
+            w.push(obs(1000 + i, i as f64, 100.0 * i as f64));
+        }
+        assert_eq!(w.len(), 3);
+        assert_eq!(w.throughputs(), vec![2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn columnar_views_align() {
+        let mut w = SlidingWindow::new(4);
+        w.push(obs(1200, 15.2, 9800.0));
+        w.push(obs(1400, 16.1, 10100.0));
+        let dims = w.setting_dims();
+        assert_eq!(dims.len(), HwConfig::NDIMS);
+        assert_eq!(dims[0], vec![1200.0, 1400.0]); // cpu freq dim
+        assert_eq!(w.powers(), vec![9800.0, 10100.0]);
+        assert_eq!(w.last().unwrap().throughput_fps, 16.1);
+    }
+
+    #[test]
+    #[should_panic(expected = "at least 2")]
+    fn tiny_capacity_rejected() {
+        SlidingWindow::new(1);
+    }
+}

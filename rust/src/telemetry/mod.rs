@@ -1,0 +1,14 @@
+//! tegrastats/sysstat-style telemetry (paper §IV-A measurement setup).
+//!
+//! A [`Sampler`] polls a metric source at a fixed period into ring
+//! buffers, skipping an initial warm-up (the paper starts measuring 2 s
+//! after inference starts and updates every second). [`MetricsWindow`]
+//! aggregates a window into the mean values the optimizer consumes, and
+//! the serving coordinator reuses the same ring buffers for its
+//! fps/latency gauges.
+
+pub mod ring;
+pub mod sampler;
+
+pub use ring::RingBuffer;
+pub use sampler::{MetricsWindow, Sample, Sampler};

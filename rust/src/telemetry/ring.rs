@@ -1,0 +1,97 @@
+//! Fixed-capacity ring buffer for metric samples.
+
+/// Overwriting ring buffer of f64 samples.
+#[derive(Debug, Clone)]
+pub struct RingBuffer {
+    buf: Vec<f64>,
+    head: usize,
+    len: usize,
+}
+
+impl RingBuffer {
+    pub fn new(cap: usize) -> Self {
+        assert!(cap > 0, "ring capacity must be positive");
+        RingBuffer { buf: vec![0.0; cap], head: 0, len: 0 }
+    }
+
+    pub fn push(&mut self, v: f64) {
+        self.buf[self.head] = v;
+        self.head = (self.head + 1) % self.buf.len();
+        self.len = (self.len + 1).min(self.buf.len());
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// Samples oldest → newest.
+    pub fn to_vec(&self) -> Vec<f64> {
+        let cap = self.buf.len();
+        let start = (self.head + cap - self.len) % cap;
+        (0..self.len).map(|i| self.buf[(start + i) % cap]).collect()
+    }
+
+    /// Most recent sample.
+    pub fn last(&self) -> Option<f64> {
+        if self.len == 0 {
+            return None;
+        }
+        let cap = self.buf.len();
+        Some(self.buf[(self.head + cap - 1) % cap])
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.len == 0 {
+            return f64::NAN;
+        }
+        self.to_vec().iter().sum::<f64>() / self.len as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fills_then_overwrites() {
+        let mut r = RingBuffer::new(3);
+        assert!(r.is_empty());
+        for i in 1..=5 {
+            r.push(i as f64);
+        }
+        assert_eq!(r.len(), 3);
+        assert_eq!(r.to_vec(), vec![3.0, 4.0, 5.0]);
+        assert_eq!(r.last(), Some(5.0));
+        assert!((r.mean() - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn partial_fill_ordering() {
+        let mut r = RingBuffer::new(4);
+        r.push(7.0);
+        r.push(8.0);
+        assert_eq!(r.to_vec(), vec![7.0, 8.0]);
+        assert_eq!(r.len(), 2);
+    }
+
+    #[test]
+    fn empty_stats() {
+        let r = RingBuffer::new(2);
+        assert!(r.mean().is_nan());
+        assert_eq!(r.last(), None);
+    }
+
+    #[test]
+    #[should_panic(expected = "positive")]
+    fn zero_capacity_rejected() {
+        RingBuffer::new(0);
+    }
+}

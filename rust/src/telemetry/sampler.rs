@@ -1,0 +1,156 @@
+//! Metric sampler with the paper's measurement discipline: skip the
+//! first `warmup` samples after a configuration change, then record at a
+//! fixed period (1 Hz in the paper; time is logical here — the device
+//! simulator and the serving loop both tick it).
+
+use super::ring::RingBuffer;
+
+/// One instantaneous sample (tegrastats line equivalent).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Sample {
+    pub throughput_fps: f64,
+    pub power_mw: f64,
+    pub gpu_util: f64,
+    pub cpu_util: f64,
+    pub mem_util: f64,
+}
+
+/// Aggregated view over the retained samples.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MetricsWindow {
+    pub samples: usize,
+    pub throughput_fps: f64,
+    pub power_mw: f64,
+    pub gpu_util: f64,
+    pub cpu_util: f64,
+    pub mem_util: f64,
+}
+
+/// Warm-up-aware sampler over ring buffers.
+#[derive(Debug, Clone)]
+pub struct Sampler {
+    warmup: usize,
+    skipped: usize,
+    tput: RingBuffer,
+    power: RingBuffer,
+    gpu: RingBuffer,
+    cpu: RingBuffer,
+    mem: RingBuffer,
+}
+
+impl Sampler {
+    /// `warmup`: samples discarded after (re)start; `window`: retained
+    /// sample count. The paper uses warmup = 2 (2 s at 1 Hz).
+    pub fn new(warmup: usize, window: usize) -> Sampler {
+        Sampler {
+            warmup,
+            skipped: 0,
+            tput: RingBuffer::new(window),
+            power: RingBuffer::new(window),
+            gpu: RingBuffer::new(window),
+            cpu: RingBuffer::new(window),
+            mem: RingBuffer::new(window),
+        }
+    }
+
+    /// Paper defaults: 2 s warm-up, 5-sample window.
+    pub fn paper_default() -> Sampler {
+        Sampler::new(2, 5)
+    }
+
+    /// Restart warm-up (configuration change).
+    pub fn reset(&mut self) {
+        *self = Sampler::new(self.warmup, self.tput.capacity());
+    }
+
+    /// Record one periodic sample; warm-up samples are discarded.
+    /// Returns true if the sample was retained.
+    pub fn record(&mut self, s: Sample) -> bool {
+        if self.skipped < self.warmup {
+            self.skipped += 1;
+            return false;
+        }
+        self.tput.push(s.throughput_fps);
+        self.power.push(s.power_mw);
+        self.gpu.push(s.gpu_util);
+        self.cpu.push(s.cpu_util);
+        self.mem.push(s.mem_util);
+        true
+    }
+
+    /// Retained-sample count.
+    pub fn len(&self) -> usize {
+        self.tput.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tput.is_empty()
+    }
+
+    /// Aggregate the retained samples (None until at least one retained).
+    pub fn window(&self) -> Option<MetricsWindow> {
+        if self.tput.is_empty() {
+            return None;
+        }
+        Some(MetricsWindow {
+            samples: self.tput.len(),
+            throughput_fps: self.tput.mean(),
+            power_mw: self.power.mean(),
+            gpu_util: self.gpu.mean(),
+            cpu_util: self.cpu.mean(),
+            mem_util: self.mem.mean(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn s(t: f64, p: f64) -> Sample {
+        Sample { throughput_fps: t, power_mw: p, gpu_util: 0.5, cpu_util: 0.25, mem_util: 0.1 }
+    }
+
+    #[test]
+    fn warmup_samples_discarded() {
+        let mut sm = Sampler::paper_default();
+        assert!(!sm.record(s(1.0, 1.0)));
+        assert!(!sm.record(s(2.0, 2.0)));
+        assert!(sm.record(s(30.0, 6000.0)));
+        let w = sm.window().unwrap();
+        assert_eq!(w.samples, 1);
+        assert_eq!(w.throughput_fps, 30.0);
+    }
+
+    #[test]
+    fn window_means() {
+        let mut sm = Sampler::new(0, 3);
+        sm.record(s(10.0, 100.0));
+        sm.record(s(20.0, 200.0));
+        let w = sm.window().unwrap();
+        assert!((w.throughput_fps - 15.0).abs() < 1e-12);
+        assert!((w.power_mw - 150.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn reset_restarts_warmup() {
+        let mut sm = Sampler::new(1, 4);
+        sm.record(s(1.0, 1.0));
+        sm.record(s(2.0, 2.0));
+        assert_eq!(sm.len(), 1);
+        sm.reset();
+        assert!(sm.window().is_none());
+        assert!(!sm.record(s(3.0, 3.0)), "warm-up again after reset");
+    }
+
+    #[test]
+    fn rolling_window_bounded() {
+        let mut sm = Sampler::new(0, 2);
+        for i in 0..10 {
+            sm.record(s(i as f64, 0.0));
+        }
+        let w = sm.window().unwrap();
+        assert_eq!(w.samples, 2);
+        assert!((w.throughput_fps - 8.5).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,184 @@
+//! Micro-benchmark harness (the offline mirror has no `criterion`).
+//!
+//! Provides warm-up, calibrated iteration counts, and robust summary
+//! statistics (mean / p50 / p99 / min). `cargo bench` targets are
+//! `harness = false` binaries built on this module; each prints one row
+//! per measurement in a stable, greppable format:
+//!
+//! ```text
+//! bench <name> ... mean=12.3µs p50=12.1µs p99=14.0µs min=11.8µs iters=100000
+//! ```
+
+use std::time::{Duration, Instant};
+
+/// One benchmark measurement.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub name: String,
+    pub iters: u64,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub p99: Duration,
+    pub min: Duration,
+}
+
+impl Measurement {
+    /// ns per iteration (mean).
+    pub fn ns_per_iter(&self) -> f64 {
+        self.mean.as_nanos() as f64
+    }
+}
+
+fn fmt_dur(d: Duration) -> String {
+    let ns = d.as_nanos() as f64;
+    if ns < 1_000.0 {
+        format!("{ns:.0}ns")
+    } else if ns < 1_000_000.0 {
+        format!("{:.2}µs", ns / 1_000.0)
+    } else if ns < 1_000_000_000.0 {
+        format!("{:.2}ms", ns / 1_000_000.0)
+    } else {
+        format!("{:.3}s", ns / 1_000_000_000.0)
+    }
+}
+
+impl std::fmt::Display for Measurement {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "bench {:<44} mean={} p50={} p99={} min={} iters={}",
+            self.name,
+            fmt_dur(self.mean),
+            fmt_dur(self.p50),
+            fmt_dur(self.p99),
+            fmt_dur(self.min),
+            self.iters
+        )
+    }
+}
+
+/// Benchmark runner with a wall-clock budget per measurement.
+pub struct Bencher {
+    /// Target wall time spent measuring each benchmark.
+    pub budget: Duration,
+    /// Number of timed samples (each sample runs a batch of iterations).
+    pub samples: usize,
+    results: Vec<Measurement>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Self::new(Duration::from_millis(300), 30)
+    }
+}
+
+impl Bencher {
+    pub fn new(budget: Duration, samples: usize) -> Self {
+        Bencher { budget, samples, results: Vec::new() }
+    }
+
+    /// Benchmark `f`, printing and recording the measurement.
+    /// `f` should return something observable to defeat DCE; its return
+    /// value is passed through `std::hint::black_box`.
+    pub fn bench<T, F: FnMut() -> T>(&mut self, name: &str, mut f: F) -> &Measurement {
+        // Warm-up + calibration: find iters/sample so that one sample
+        // costs roughly budget / samples.
+        let mut iters_per_sample = 1u64;
+        loop {
+            let t0 = Instant::now();
+            for _ in 0..iters_per_sample {
+                std::hint::black_box(f());
+            }
+            let dt = t0.elapsed();
+            if dt >= self.budget / (self.samples as u32) || iters_per_sample > (1 << 30) {
+                break;
+            }
+            iters_per_sample = (iters_per_sample * 2).max(1);
+        }
+
+        let mut per_iter: Vec<f64> = Vec::with_capacity(self.samples);
+        let mut total_iters = 0u64;
+        for _ in 0..self.samples {
+            let t0 = Instant::now();
+            for _ in 0..iters_per_sample {
+                std::hint::black_box(f());
+            }
+            let dt = t0.elapsed();
+            per_iter.push(dt.as_secs_f64() / iters_per_sample as f64);
+            total_iters += iters_per_sample;
+        }
+        per_iter.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let dur = |s: f64| Duration::from_secs_f64(s.max(0.0));
+        let mean = per_iter.iter().sum::<f64>() / per_iter.len() as f64;
+        let m = Measurement {
+            name: name.to_string(),
+            iters: total_iters,
+            mean: dur(mean),
+            p50: dur(percentile(&per_iter, 50.0)),
+            p99: dur(percentile(&per_iter, 99.0)),
+            min: dur(per_iter[0]),
+        };
+        println!("{m}");
+        self.results.push(m);
+        self.results.last().unwrap()
+    }
+
+    /// All measurements so far.
+    pub fn results(&self) -> &[Measurement] {
+        &self.results
+    }
+}
+
+/// Percentile over an already-sorted slice (linear interpolation).
+pub fn percentile(sorted: &[f64], p: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    if sorted.len() == 1 {
+        return sorted[0];
+    }
+    let rank = (p / 100.0) * (sorted.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    let frac = rank - lo as f64;
+    sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentile_basics() {
+        let v = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(percentile(&v, 0.0), 1.0);
+        assert_eq!(percentile(&v, 100.0), 4.0);
+        assert!((percentile(&v, 50.0) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_single() {
+        assert_eq!(percentile(&[7.0], 99.0), 7.0);
+    }
+
+    #[test]
+    fn bench_measures_something() {
+        let mut b = Bencher::new(Duration::from_millis(20), 5);
+        let m = b.bench("noop-ish", || 1 + 1).clone();
+        assert!(m.iters > 0);
+        assert!(m.mean.as_nanos() < 1_000_000);
+        assert_eq!(b.results().len(), 1);
+    }
+
+    #[test]
+    fn display_formats() {
+        let m = Measurement {
+            name: "x".into(),
+            iters: 10,
+            mean: Duration::from_micros(12),
+            p50: Duration::from_nanos(900),
+            p99: Duration::from_millis(3),
+            min: Duration::from_secs(2),
+        };
+        let s = format!("{m}");
+        assert!(s.contains("µs") && s.contains("ns") && s.contains("ms") && s.contains("2.000s"));
+    }
+}

@@ -1,0 +1,227 @@
+//! Tiny CSV writer/reader for experiment results (`results/*.csv`).
+//!
+//! Handles quoting (commas, quotes, newlines in fields) — enough for the
+//! figure/table data this repo emits and reads back in tests.
+
+use std::fmt::Write as _;
+use std::fs;
+use std::io;
+use std::path::Path;
+
+/// In-memory CSV table: header + rows.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Csv {
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Csv {
+    pub fn new(header: &[&str]) -> Self {
+        Csv { header: header.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    /// Append a row; panics if the arity differs from the header (a row
+    /// with the wrong arity is always a bug in the experiment harness).
+    pub fn push(&mut self, row: Vec<String>) {
+        assert_eq!(
+            row.len(),
+            self.header.len(),
+            "csv row arity {} != header arity {}",
+            row.len(),
+            self.header.len()
+        );
+        self.rows.push(row);
+    }
+
+    /// Append a row of displayable values.
+    pub fn push_display(&mut self, row: &[&dyn std::fmt::Display]) {
+        self.push(row.iter().map(|v| format!("{v}")).collect());
+    }
+
+    /// Column index by name.
+    pub fn col(&self, name: &str) -> Option<usize> {
+        self.header.iter().position(|h| h == name)
+    }
+
+    /// Serialize to CSV text.
+    pub fn to_text(&self) -> String {
+        let mut out = String::new();
+        write_row(&mut out, &self.header);
+        for row in &self.rows {
+            write_row(&mut out, row);
+        }
+        out
+    }
+
+    /// Write to a file, creating parent directories.
+    pub fn save(&self, path: &Path) -> io::Result<()> {
+        if let Some(dir) = path.parent() {
+            fs::create_dir_all(dir)?;
+        }
+        fs::write(path, self.to_text())
+    }
+
+    /// Parse CSV text (first row = header).
+    pub fn parse(text: &str) -> Result<Csv, String> {
+        let mut rows = parse_rows(text)?;
+        if rows.is_empty() {
+            return Err("empty csv".into());
+        }
+        let header = rows.remove(0);
+        for (i, row) in rows.iter().enumerate() {
+            if row.len() != header.len() {
+                return Err(format!(
+                    "row {} has {} fields, header has {}",
+                    i + 1,
+                    row.len(),
+                    header.len()
+                ));
+            }
+        }
+        Ok(Csv { header, rows })
+    }
+}
+
+fn needs_quote(field: &str) -> bool {
+    field.contains(',') || field.contains('"') || field.contains('\n') || field.contains('\r')
+}
+
+fn write_row(out: &mut String, row: &[String]) {
+    for (i, field) in row.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        if needs_quote(field) {
+            let _ = write!(out, "\"{}\"", field.replace('"', "\"\""));
+        } else {
+            out.push_str(field);
+        }
+    }
+    out.push('\n');
+}
+
+fn parse_rows(text: &str) -> Result<Vec<Vec<String>>, String> {
+    let mut rows = Vec::new();
+    let mut row = Vec::new();
+    let mut field = String::new();
+    let mut chars = text.chars().peekable();
+    let mut in_quotes = false;
+    let mut any = false;
+
+    while let Some(c) = chars.next() {
+        any = true;
+        if in_quotes {
+            match c {
+                '"' => {
+                    if chars.peek() == Some(&'"') {
+                        chars.next();
+                        field.push('"');
+                    } else {
+                        in_quotes = false;
+                    }
+                }
+                c => field.push(c),
+            }
+        } else {
+            match c {
+                '"' if field.is_empty() => in_quotes = true,
+                '"' => return Err("quote inside unquoted field".into()),
+                ',' => row.push(std::mem::take(&mut field)),
+                '\r' => {}
+                '\n' => {
+                    row.push(std::mem::take(&mut field));
+                    rows.push(std::mem::take(&mut row));
+                }
+                c => field.push(c),
+            }
+        }
+    }
+    if in_quotes {
+        return Err("unterminated quoted field".into());
+    }
+    if any && (!field.is_empty() || !row.is_empty()) {
+        row.push(field);
+        rows.push(row);
+    }
+    Ok(rows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn simple_round_trip() {
+        let mut csv = Csv::new(&["a", "b"]);
+        csv.push(vec!["1".into(), "x".into()]);
+        csv.push(vec!["2".into(), "y".into()]);
+        let back = Csv::parse(&csv.to_text()).unwrap();
+        assert_eq!(back, csv);
+    }
+
+    #[test]
+    fn quoting_round_trip() {
+        let mut csv = Csv::new(&["msg", "n"]);
+        csv.push(vec!["hello, \"world\"\nline2".into(), "7".into()]);
+        let back = Csv::parse(&csv.to_text()).unwrap();
+        assert_eq!(back, csv);
+    }
+
+    #[test]
+    #[should_panic(expected = "arity")]
+    fn arity_mismatch_panics() {
+        let mut csv = Csv::new(&["a", "b"]);
+        csv.push(vec!["1".into()]);
+    }
+
+    #[test]
+    fn parse_rejects_ragged_rows() {
+        assert!(Csv::parse("a,b\n1\n").is_err());
+    }
+
+    #[test]
+    fn parse_rejects_empty() {
+        assert!(Csv::parse("").is_err());
+    }
+
+    #[test]
+    fn col_lookup() {
+        let csv = Csv::new(&["alpha", "beta"]);
+        assert_eq!(csv.col("beta"), Some(1));
+        assert_eq!(csv.col("gamma"), None);
+    }
+
+    #[test]
+    fn crlf_tolerated() {
+        let csv = Csv::parse("a,b\r\n1,2\r\n").unwrap();
+        assert_eq!(csv.rows, vec![vec!["1".to_string(), "2".to_string()]]);
+    }
+
+    #[test]
+    fn prop_round_trip() {
+        prop::check("csv round trip", 150, |g| {
+            let cols = g.rng.range_usize(1, 5);
+            let header: Vec<String> =
+                (0..cols).map(|i| format!("c{i}")).collect();
+            let mut csv = Csv { header, rows: Vec::new() };
+            for _ in 0..g.rng.below(6) {
+                csv.push((0..cols).map(|_| g.string(6)).collect());
+            }
+            let back = Csv::parse(&csv.to_text()).map_err(|e| e.to_string())?;
+            prop::assert_eq_dbg(&back, &csv)
+        });
+    }
+
+    #[test]
+    fn save_creates_dirs() {
+        let dir = std::env::temp_dir().join("coral_csv_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let path = dir.join("sub").join("t.csv");
+        let mut csv = Csv::new(&["x"]);
+        csv.push(vec!["1".into()]);
+        csv.save(&path).unwrap();
+        assert!(path.exists());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,92 @@
+//! Logger backing the `log` facade: level filter from `CORAL_LOG`
+//! (error|warn|info|debug|trace, default info), timestamps relative to
+//! process start, writes to stderr so stdout stays machine-parseable.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::time::Instant;
+
+use log::{Level, LevelFilter, Metadata, Record};
+
+static INSTALLED: AtomicBool = AtomicBool::new(false);
+
+struct CoralLogger {
+    start: Instant,
+}
+
+impl log::Log for CoralLogger {
+    fn enabled(&self, metadata: &Metadata) -> bool {
+        metadata.level() <= log::max_level()
+    }
+
+    fn log(&self, record: &Record) {
+        if !self.enabled(record.metadata()) {
+            return;
+        }
+        let t = self.start.elapsed();
+        let level = match record.level() {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN ",
+            Level::Info => "INFO ",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        };
+        eprintln!(
+            "[{:>9.3}s {} {}] {}",
+            t.as_secs_f64(),
+            level,
+            record.target(),
+            record.args()
+        );
+    }
+
+    fn flush(&self) {}
+}
+
+/// Parse a level name (case-insensitive).
+pub fn parse_level(s: &str) -> Option<LevelFilter> {
+    match s.to_ascii_lowercase().as_str() {
+        "off" => Some(LevelFilter::Off),
+        "error" => Some(LevelFilter::Error),
+        "warn" => Some(LevelFilter::Warn),
+        "info" => Some(LevelFilter::Info),
+        "debug" => Some(LevelFilter::Debug),
+        "trace" => Some(LevelFilter::Trace),
+        _ => None,
+    }
+}
+
+/// Install the logger once; honours `CORAL_LOG`. Safe to call repeatedly
+/// (tests, examples): later calls only adjust the max level.
+pub fn init() {
+    let level = std::env::var("CORAL_LOG")
+        .ok()
+        .and_then(|v| parse_level(&v))
+        .unwrap_or(LevelFilter::Info);
+    if INSTALLED
+        .compare_exchange(false, true, Ordering::SeqCst, Ordering::SeqCst)
+        .is_ok()
+    {
+        let logger = Box::leak(Box::new(CoralLogger { start: Instant::now() }));
+        let _ = log::set_logger(logger);
+    }
+    log::set_max_level(level);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_levels() {
+        assert_eq!(parse_level("info"), Some(LevelFilter::Info));
+        assert_eq!(parse_level("TRACE"), Some(LevelFilter::Trace));
+        assert_eq!(parse_level("bogus"), None);
+    }
+
+    #[test]
+    fn init_is_idempotent() {
+        init();
+        init();
+        log::info!("logger alive");
+    }
+}

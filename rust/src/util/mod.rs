@@ -1,0 +1,16 @@
+//! Std-only substrates.
+//!
+//! The offline crate mirror ships neither `rand`, `serde`, `serde_json`,
+//! `csv`, `proptest` nor `criterion`, so the pieces of those crates this
+//! project needs are implemented here from scratch (DESIGN.md §9). Each
+//! submodule is small, fully tested, and used across the whole stack.
+
+pub mod bench;
+pub mod csv;
+pub mod json;
+pub mod logging;
+pub mod prop;
+pub mod rng;
+pub mod table;
+
+pub use rng::Rng;

@@ -1,0 +1,152 @@
+//! Mini property-testing harness (the offline mirror has no `proptest`).
+//!
+//! `check(name, cases, f)` runs `f` against `cases` seeded generators; a
+//! failing case re-runs with its seed printed so it can be replayed with
+//! `check_seed`. Generators are deliberately simple — uniform draws over
+//! caller-provided ranges — which matches how the paper's spaces look
+//! (small discrete grids, bounded floats).
+
+use super::rng::Rng;
+
+/// Generator context handed to each property case.
+pub struct Gen {
+    pub rng: Rng,
+    /// Seed of this case (for replay).
+    pub seed: u64,
+}
+
+impl Gen {
+    /// Random ASCII-ish string of length ≤ max_len (includes escapes-worthy chars).
+    pub fn string(&mut self, max_len: usize) -> String {
+        const ALPHABET: &[char] =
+            &['a', 'b', 'z', 'é', '"', '\\', '\n', '\t', ' ', '0', '9', '{', '['];
+        let n = self.rng.below(max_len + 1);
+        (0..n).map(|_| *self.rng.choose(ALPHABET)).collect()
+    }
+
+    /// Vector of f64 drawn uniformly from [lo, hi).
+    pub fn vec_f64(&mut self, len: usize, lo: f64, hi: f64) -> Vec<f64> {
+        (0..len).map(|_| self.rng.range_f64(lo, hi)).collect()
+    }
+
+    /// Vector of usize in [lo, hi].
+    pub fn vec_usize(&mut self, len: usize, lo: usize, hi: usize) -> Vec<usize> {
+        (0..len).map(|_| self.rng.range_usize(lo, hi)).collect()
+    }
+}
+
+/// Run a property over `cases` random cases. Panics (with the failing
+/// seed) on the first counterexample.
+pub fn check<F>(name: &str, cases: u64, mut f: F)
+where
+    F: FnMut(&mut Gen) -> Result<(), String>,
+{
+    for case in 0..cases {
+        let seed = 0xC0A1_u64
+            .wrapping_mul(0x100)
+            .wrapping_add(case)
+            .wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let mut g = Gen { rng: Rng::new(seed), seed };
+        if let Err(msg) = f(&mut g) {
+            panic!(
+                "property '{name}' failed on case {case} (seed {seed:#x}): {msg}\n\
+                 replay with util::prop::check_seed({seed:#x}, ...)"
+            );
+        }
+    }
+}
+
+/// Replay a single seed (used when debugging a failure).
+pub fn check_seed<F>(seed: u64, mut f: F)
+where
+    F: FnMut(&mut Gen) -> Result<(), String>,
+{
+    let mut g = Gen { rng: Rng::new(seed), seed };
+    if let Err(msg) = f(&mut g) {
+        panic!("property failed on replay seed {seed:#x}: {msg}");
+    }
+}
+
+/// Assertion helpers returning Result so properties compose with `?`.
+pub fn assert_true(cond: bool, msg: &str) -> Result<(), String> {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.to_string())
+    }
+}
+
+pub fn assert_eq_dbg<T: PartialEq + std::fmt::Debug>(a: &T, b: &T) -> Result<(), String> {
+    if a == b {
+        Ok(())
+    } else {
+        Err(format!("{a:?} != {b:?}"))
+    }
+}
+
+/// |a−b| ≤ tol.
+pub fn assert_close(a: f64, b: f64, tol: f64) -> Result<(), String> {
+    if (a - b).abs() <= tol {
+        Ok(())
+    } else {
+        Err(format!("{a} !≈ {b} (tol {tol})"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut n = 0;
+        check("count", 50, |_| {
+            n += 1;
+            Ok(())
+        });
+        assert_eq!(n, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'boom' failed")]
+    fn failing_property_panics_with_seed() {
+        check("boom", 10, |g| {
+            if g.rng.f64() < 2.0 {
+                Err("always".into())
+            } else {
+                Ok(())
+            }
+        });
+    }
+
+    #[test]
+    fn generators_respect_bounds() {
+        check("bounds", 100, |g| {
+            let v = g.vec_f64(10, -3.0, 7.0);
+            assert_true(v.iter().all(|x| (-3.0..7.0).contains(x)), "f64 range")?;
+            let u = g.vec_usize(10, 2, 5);
+            assert_true(u.iter().all(|x| (2..=5).contains(x)), "usize range")
+        });
+    }
+
+    #[test]
+    fn assert_close_works() {
+        assert!(assert_close(1.0, 1.0 + 1e-9, 1e-6).is_ok());
+        assert!(assert_close(1.0, 2.0, 0.5).is_err());
+    }
+
+    #[test]
+    fn seeds_are_deterministic() {
+        let mut first = Vec::new();
+        check("record", 5, |g| {
+            first.push(g.rng.next_u64());
+            Ok(())
+        });
+        let mut second = Vec::new();
+        check("record", 5, |g| {
+            second.push(g.rng.next_u64());
+            Ok(())
+        });
+        assert_eq!(first, second);
+    }
+}

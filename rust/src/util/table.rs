@@ -1,0 +1,103 @@
+//! ASCII table rendering for experiment reports (`coral experiment`,
+//! `coral report`) — right-pads columns, aligns numbers right.
+
+/// Render a table with a header row. Numeric-looking cells are
+/// right-aligned, text cells left-aligned.
+pub fn render(header: &[&str], rows: &[Vec<String>]) -> String {
+    let cols = header.len();
+    for r in rows {
+        assert_eq!(r.len(), cols, "table row arity mismatch");
+    }
+    let mut width = vec![0usize; cols];
+    for (i, h) in header.iter().enumerate() {
+        width[i] = h.chars().count();
+    }
+    for r in rows {
+        for (i, cell) in r.iter().enumerate() {
+            width[i] = width[i].max(cell.chars().count());
+        }
+    }
+
+    let sep: String = {
+        let mut s = String::from("+");
+        for w in &width {
+            s.push_str(&"-".repeat(w + 2));
+            s.push('+');
+        }
+        s.push('\n');
+        s
+    };
+
+    let fmt_row = |cells: &[String]| -> String {
+        let mut s = String::from("|");
+        for (i, cell) in cells.iter().enumerate() {
+            let pad = width[i] - cell.chars().count();
+            if is_numeric(cell) {
+                s.push_str(&format!(" {}{} |", " ".repeat(pad), cell));
+            } else {
+                s.push_str(&format!(" {}{} |", cell, " ".repeat(pad)));
+            }
+        }
+        s.push('\n');
+        s
+    };
+
+    let mut out = sep.clone();
+    out.push_str(&fmt_row(&header.iter().map(|s| s.to_string()).collect::<Vec<_>>()));
+    out.push_str(&sep);
+    for r in rows {
+        out.push_str(&fmt_row(r));
+    }
+    out.push_str(&sep);
+    out
+}
+
+fn is_numeric(s: &str) -> bool {
+    !s.is_empty()
+        && s.chars()
+            .all(|c| c.is_ascii_digit() || matches!(c, '.' | '-' | '+' | 'e' | 'E' | '%' | ','))
+        && s.chars().any(|c| c.is_ascii_digit())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let out = render(
+            &["name", "fps"],
+            &[
+                vec!["coral".into(), "33.1".into()],
+                vec!["oracle-longer".into(), "34".into()],
+            ],
+        );
+        assert!(out.contains("| name          | fps  |"));
+        assert!(out.contains("| coral         | 33.1 |"));
+        assert!(out.contains("| oracle-longer |   34 |"));
+        // 3 separator lines (top, after header, bottom), 3 '+' each.
+        assert_eq!(out.matches('+').count(), 9);
+    }
+
+    #[test]
+    fn numeric_detection() {
+        assert!(is_numeric("42"));
+        assert!(is_numeric("-3.5"));
+        assert!(is_numeric("96%"));
+        assert!(!is_numeric("x86"));
+        assert!(!is_numeric(""));
+        assert!(!is_numeric("--"));
+    }
+
+    #[test]
+    #[should_panic(expected = "arity")]
+    fn ragged_rows_panic() {
+        render(&["a", "b"], &[vec!["1".into()]]);
+    }
+
+    #[test]
+    fn unicode_width_by_chars() {
+        let out = render(&["m"], &[vec!["é".into()]]);
+        assert!(out.contains("| é |"));
+    }
+}

@@ -1,0 +1,11 @@
+//! Workloads: the synthetic traffic-monitoring video (stand-in for the
+//! paper's 1-second annotated clip, DESIGN.md §2) and request generators
+//! for the serving coordinator.
+
+pub mod requests;
+pub mod trace;
+pub mod video;
+
+pub use requests::{ClosedLoopGen, OpenLoopGen, Request};
+pub use trace::{Trace, TraceReplay, TraceStep};
+pub use video::VideoSource;

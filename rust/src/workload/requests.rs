@@ -1,0 +1,167 @@
+//! Request generators for the serving coordinator.
+//!
+//! * [`ClosedLoopGen`] — N in-flight clients, a new request the moment
+//!   one completes (the paper's evaluation loop: frames are always
+//!   available from the decoded clip).
+//! * [`OpenLoopGen`] — Poisson arrivals at a target rate, for
+//!   latency-under-load experiments beyond the paper's setup.
+
+use std::time::Duration;
+
+use crate::util::rng::Rng;
+
+/// One inference request: a frame index into the video loop plus its
+/// submission id.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Request {
+    pub id: u64,
+    pub frame_index: usize,
+}
+
+/// Closed-loop generator: keeps exactly `inflight` requests outstanding.
+#[derive(Debug, Clone)]
+pub struct ClosedLoopGen {
+    next_id: u64,
+    frames: usize,
+    inflight_target: usize,
+    outstanding: usize,
+}
+
+impl ClosedLoopGen {
+    pub fn new(inflight_target: usize, frames: usize) -> Self {
+        assert!(inflight_target > 0 && frames > 0);
+        ClosedLoopGen { next_id: 0, frames, inflight_target, outstanding: 0 }
+    }
+
+    /// Requests to submit now to restore the in-flight target.
+    pub fn refill(&mut self) -> Vec<Request> {
+        let mut out = Vec::new();
+        while self.outstanding < self.inflight_target {
+            out.push(Request {
+                id: self.next_id,
+                frame_index: (self.next_id as usize) % self.frames,
+            });
+            self.next_id += 1;
+            self.outstanding += 1;
+        }
+        out
+    }
+
+    /// Notify one completion.
+    pub fn complete(&mut self) {
+        assert!(self.outstanding > 0, "completion without outstanding request");
+        self.outstanding -= 1;
+    }
+
+    pub fn issued(&self) -> u64 {
+        self.next_id
+    }
+
+    pub fn outstanding(&self) -> usize {
+        self.outstanding
+    }
+}
+
+/// Open-loop Poisson generator over logical time.
+#[derive(Debug, Clone)]
+pub struct OpenLoopGen {
+    next_id: u64,
+    frames: usize,
+    rate_per_s: f64,
+    rng: Rng,
+    next_arrival_s: f64,
+}
+
+impl OpenLoopGen {
+    pub fn new(rate_per_s: f64, frames: usize, seed: u64) -> Self {
+        assert!(rate_per_s > 0.0 && frames > 0);
+        let mut g = OpenLoopGen {
+            next_id: 0,
+            frames,
+            rate_per_s,
+            rng: Rng::new(seed),
+            next_arrival_s: 0.0,
+        };
+        g.next_arrival_s = g.draw_gap();
+        g
+    }
+
+    fn draw_gap(&mut self) -> f64 {
+        // Exponential inter-arrival.
+        -self.rng.f64().max(f64::MIN_POSITIVE).ln() / self.rate_per_s
+    }
+
+    /// All arrivals with timestamp ≤ `now`.
+    pub fn poll(&mut self, now: Duration) -> Vec<Request> {
+        let now_s = now.as_secs_f64();
+        let mut out = Vec::new();
+        while self.next_arrival_s <= now_s {
+            out.push(Request {
+                id: self.next_id,
+                frame_index: (self.next_id as usize) % self.frames,
+            });
+            self.next_id += 1;
+            let gap = self.draw_gap();
+            self.next_arrival_s += gap;
+        }
+        out
+    }
+
+    pub fn issued(&self) -> u64 {
+        self.next_id
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn closed_loop_maintains_inflight() {
+        let mut g = ClosedLoopGen::new(3, 10);
+        let first = g.refill();
+        assert_eq!(first.len(), 3);
+        assert!(g.refill().is_empty());
+        g.complete();
+        g.complete();
+        assert_eq!(g.refill().len(), 2);
+        assert_eq!(g.outstanding(), 3);
+        assert_eq!(g.issued(), 5);
+    }
+
+    #[test]
+    fn closed_loop_frame_indices_wrap() {
+        let mut g = ClosedLoopGen::new(4, 3);
+        let reqs = g.refill();
+        assert_eq!(
+            reqs.iter().map(|r| r.frame_index).collect::<Vec<_>>(),
+            vec![0, 1, 2, 0]
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "without outstanding")]
+    fn closed_loop_extra_completion_panics() {
+        ClosedLoopGen::new(1, 1).complete();
+    }
+
+    #[test]
+    fn open_loop_rate_roughly_matches() {
+        let mut g = OpenLoopGen::new(100.0, 30, 11);
+        let reqs = g.poll(Duration::from_secs(10));
+        let n = reqs.len() as f64;
+        assert!((n - 1000.0).abs() < 150.0, "n={n}");
+        // Monotone ids.
+        assert!(reqs.windows(2).all(|w| w[1].id == w[0].id + 1));
+    }
+
+    #[test]
+    fn open_loop_poll_is_incremental() {
+        let mut g = OpenLoopGen::new(50.0, 30, 5);
+        let a = g.poll(Duration::from_secs(1)).len();
+        let b = g.poll(Duration::from_secs(2)).len();
+        let mut g2 = OpenLoopGen::new(50.0, 30, 5);
+        let all = g2.poll(Duration::from_secs(2)).len();
+        assert_eq!(a + b, all);
+    }
+}

@@ -1,0 +1,251 @@
+//! Optimization-trace recording and replay.
+//!
+//! Every online search can be captured as an ordered list of
+//! (iteration, configuration, throughput, power) rows — useful for
+//! postmortem analysis of a deployment run, for regenerating the paper's
+//! per-iteration convergence curves, and for *replaying* a recorded
+//! environment against a different optimizer (counterfactual debugging).
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{bail, Result};
+
+use crate::device::HwConfig;
+use crate::util::csv::Csv;
+
+/// One recorded step.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TraceStep {
+    pub iter: u64,
+    pub config: HwConfig,
+    pub throughput_fps: f64,
+    pub power_mw: f64,
+    pub failed: bool,
+}
+
+/// A recorded optimization run.
+#[derive(Debug, Clone, Default)]
+pub struct Trace {
+    pub steps: Vec<TraceStep>,
+}
+
+impl Trace {
+    pub fn new() -> Trace {
+        Trace::default()
+    }
+
+    pub fn record(&mut self, config: HwConfig, throughput_fps: f64, power_mw: f64) {
+        self.steps.push(TraceStep {
+            iter: self.steps.len() as u64,
+            config,
+            throughput_fps,
+            power_mw,
+            failed: throughput_fps <= 0.0,
+        });
+    }
+
+    pub fn len(&self) -> usize {
+        self.steps.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.steps.is_empty()
+    }
+
+    /// Best observed step under a feasibility check + efficiency ranking.
+    pub fn best_feasible(
+        &self,
+        feasible: impl Fn(f64, f64) -> bool,
+    ) -> Option<&TraceStep> {
+        self.steps
+            .iter()
+            .filter(|s| !s.failed && feasible(s.throughput_fps, s.power_mw))
+            .max_by(|a, b| {
+                (a.throughput_fps / a.power_mw)
+                    .partial_cmp(&(b.throughput_fps / b.power_mw))
+                    .unwrap()
+            })
+    }
+
+    /// Serialize to CSV.
+    pub fn to_csv(&self) -> Csv {
+        let mut csv = Csv::new(&[
+            "iter", "cpu_freq_mhz", "cpu_cores", "gpu_freq_mhz", "mem_freq_mhz",
+            "concurrency", "throughput_fps", "power_mw", "failed",
+        ]);
+        for s in &self.steps {
+            csv.push(vec![
+                s.iter.to_string(),
+                s.config.cpu_freq_mhz.to_string(),
+                s.config.cpu_cores.to_string(),
+                s.config.gpu_freq_mhz.to_string(),
+                s.config.mem_freq_mhz.to_string(),
+                s.config.concurrency.to_string(),
+                format!("{:.3}", s.throughput_fps),
+                format!("{:.1}", s.power_mw),
+                (s.failed as u8).to_string(),
+            ]);
+        }
+        csv
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        self.to_csv().save(path)?;
+        Ok(())
+    }
+
+    /// Parse from CSV text.
+    pub fn parse(text: &str) -> Result<Trace> {
+        let csv = Csv::parse(text).map_err(|e| anyhow::anyhow!(e))?;
+        let col = |name: &str| {
+            csv.col(name)
+                .ok_or_else(|| anyhow::anyhow!("trace csv missing column '{name}'"))
+        };
+        let (ci, cc, cg, cm, cl) = (
+            col("cpu_freq_mhz")?,
+            col("cpu_cores")?,
+            col("gpu_freq_mhz")?,
+            col("mem_freq_mhz")?,
+            col("concurrency")?,
+        );
+        let (ti, pi, fi, ii) = (
+            col("throughput_fps")?,
+            col("power_mw")?,
+            col("failed")?,
+            col("iter")?,
+        );
+        let mut steps = Vec::new();
+        for (r, row) in csv.rows.iter().enumerate() {
+            let f = |i: usize| -> Result<f64> {
+                row[i].parse().map_err(|_| anyhow::anyhow!("trace row {r}: bad number"))
+            };
+            steps.push(TraceStep {
+                iter: f(ii)? as u64,
+                config: HwConfig {
+                    cpu_freq_mhz: f(ci)? as u32,
+                    cpu_cores: f(cc)? as u32,
+                    gpu_freq_mhz: f(cg)? as u32,
+                    mem_freq_mhz: f(cm)? as u32,
+                    concurrency: f(cl)? as u32,
+                },
+                throughput_fps: f(ti)?,
+                power_mw: f(pi)?,
+                failed: f(fi)? != 0.0,
+            });
+        }
+        Ok(Trace { steps })
+    }
+
+    pub fn load(path: &Path) -> Result<Trace> {
+        Self::parse(&std::fs::read_to_string(path)?)
+    }
+}
+
+/// Replay a recorded environment: answers measurements from the trace
+/// (exact-config lookup) instead of a live device — lets a different
+/// optimizer be evaluated counterfactually on the same observations.
+#[derive(Debug, Clone)]
+pub struct TraceReplay {
+    lookup: HashMap<HwConfig, (f64, f64)>,
+}
+
+impl TraceReplay {
+    pub fn new(trace: &Trace) -> TraceReplay {
+        let mut lookup = HashMap::new();
+        for s in &trace.steps {
+            lookup.insert(s.config, (s.throughput_fps, s.power_mw));
+        }
+        TraceReplay { lookup }
+    }
+
+    /// Number of distinct configurations with recorded measurements.
+    pub fn coverage(&self) -> usize {
+        self.lookup.len()
+    }
+
+    /// Measurement for a configuration; errors when the trace never
+    /// visited it (a replay cannot invent data).
+    pub fn measure(&self, cfg: &HwConfig) -> Result<(f64, f64)> {
+        match self.lookup.get(cfg) {
+            Some(&m) => Ok(m),
+            None => bail!("trace has no measurement for {cfg}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::{Device, DeviceKind};
+    use crate::models::ModelKind;
+    use crate::optimizer::{Constraints, CoralOptimizer, Optimizer};
+
+    fn sample_trace() -> Trace {
+        let mut dev = Device::new(DeviceKind::XavierNx, ModelKind::Yolo, 3);
+        let mut opt =
+            CoralOptimizer::new(dev.space().clone(), Constraints::dual(30.0, 6500.0), 3);
+        let mut trace = Trace::new();
+        for _ in 0..10 {
+            let cfg = opt.propose();
+            let m = dev.run(cfg);
+            trace.record(cfg, m.throughput_fps, m.power_mw);
+            opt.observe(cfg, m.throughput_fps, m.power_mw);
+        }
+        trace
+    }
+
+    #[test]
+    fn csv_round_trip() {
+        let t = sample_trace();
+        let text = t.to_csv().to_text();
+        let back = Trace::parse(&text).unwrap();
+        assert_eq!(back.len(), t.len());
+        for (a, b) in t.steps.iter().zip(&back.steps) {
+            assert_eq!(a.config, b.config);
+            assert!((a.throughput_fps - b.throughput_fps).abs() < 1e-2);
+            assert_eq!(a.failed, b.failed);
+        }
+    }
+
+    #[test]
+    fn best_feasible_picks_max_efficiency() {
+        let t = sample_trace();
+        let best = t.best_feasible(|f, p| f >= 30.0 && p <= 6500.0);
+        assert!(best.is_some());
+        let b = best.unwrap();
+        assert!(b.throughput_fps >= 30.0 && b.power_mw <= 6500.0);
+    }
+
+    #[test]
+    fn replay_answers_recorded_configs_only() {
+        let t = sample_trace();
+        let replay = TraceReplay::new(&t);
+        assert!(replay.coverage() >= 8);
+        let first = t.steps[0];
+        let (f, p) = replay.measure(&first.config).unwrap();
+        // Lookup keeps the *last* measurement of a config; first config
+        // may repeat, so compare against its last occurrence.
+        let last_of_first = t
+            .steps
+            .iter()
+            .rev()
+            .find(|s| s.config == first.config)
+            .unwrap();
+        assert_eq!((f, p), (last_of_first.throughput_fps, last_of_first.power_mw));
+        let unseen = HwConfig {
+            cpu_freq_mhz: 1,
+            cpu_cores: 1,
+            gpu_freq_mhz: 1,
+            mem_freq_mhz: 1,
+            concurrency: 1,
+        };
+        assert!(replay.measure(&unseen).is_err());
+    }
+
+    #[test]
+    fn parse_rejects_malformed() {
+        assert!(Trace::parse("not,a,trace\n1,2,3\n").is_err());
+        assert!(Trace::parse("").is_err());
+    }
+}

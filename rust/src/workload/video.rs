@@ -1,0 +1,161 @@
+//! Synthetic traffic-monitoring video source.
+//!
+//! Stand-in for the paper's 1-second annotated real-world traffic clip:
+//! a deterministic, seeded frame generator producing NHWC f32 frames of a
+//! road scene with moving vehicle-like blobs. The serving path treats it
+//! exactly like decoded camera frames (the paper decodes via OpenCV);
+//! content only needs to be *plausible tensor input*, not photorealistic.
+
+use crate::util::rng::Rng;
+
+/// Default paper-like clip length: 1 s at 30 fps.
+pub const DEFAULT_FRAMES: usize = 30;
+
+/// One moving blob ("vehicle").
+#[derive(Debug, Clone, Copy)]
+struct Vehicle {
+    x: f32,
+    y: f32,
+    vx: f32,
+    w: f32,
+    h: f32,
+    tone: [f32; 3],
+}
+
+/// Deterministic looping video source producing `(side, side, 3)` f32
+/// frames in [0, 1], flattened HWC.
+#[derive(Debug, Clone)]
+pub struct VideoSource {
+    side: usize,
+    frames: usize,
+    vehicles: Vec<Vehicle>,
+    cursor: usize,
+}
+
+impl VideoSource {
+    /// `side`: square frame edge (matches the model input), `frames`:
+    /// loop length, `seed`: scene layout.
+    pub fn new(side: usize, frames: usize, seed: u64) -> VideoSource {
+        assert!(side >= 8, "frame too small");
+        assert!(frames > 0);
+        let mut rng = Rng::new(seed);
+        let n = 3 + rng.below(4); // 3–6 vehicles
+        let vehicles = (0..n)
+            .map(|_| Vehicle {
+                x: rng.range_f64(0.0, side as f64) as f32,
+                y: rng.range_f64(0.45 * side as f64, 0.85 * side as f64) as f32,
+                vx: rng.range_f64(0.5, 3.0) as f32 * if rng.chance(0.5) { 1.0 } else { -1.0 },
+                w: rng.range_f64(0.06 * side as f64, 0.16 * side as f64) as f32,
+                h: rng.range_f64(0.04 * side as f64, 0.09 * side as f64) as f32,
+                tone: [rng.f64() as f32, rng.f64() as f32, rng.f64() as f32],
+            })
+            .collect();
+        VideoSource { side, frames, vehicles, cursor: 0 }
+    }
+
+    pub fn side(&self) -> usize {
+        self.side
+    }
+
+    /// Frames per loop.
+    pub fn len(&self) -> usize {
+        self.frames
+    }
+
+    pub fn is_empty(&self) -> bool {
+        false
+    }
+
+    /// Render frame `t` (wraps around the loop).
+    pub fn frame(&self, t: usize) -> Vec<f32> {
+        let t = t % self.frames;
+        let s = self.side;
+        let mut img = vec![0.0f32; s * s * 3];
+        // Sky / road gradient background.
+        for y in 0..s {
+            let road = y as f32 / s as f32;
+            let (r, g, b) = if road < 0.4 {
+                (0.55, 0.7, 0.9) // sky
+            } else {
+                (0.25 + 0.1 * road, 0.25 + 0.1 * road, 0.28 + 0.1 * road) // asphalt
+            };
+            for x in 0..s {
+                let i = (y * s + x) * 3;
+                img[i] = r;
+                img[i + 1] = g;
+                img[i + 2] = b;
+            }
+        }
+        // Lane markings.
+        let lane_y = (0.62 * s as f32) as usize;
+        for x in (0..s).step_by(8) {
+            for dx in 0..4.min(s - x) {
+                let i = (lane_y * s + x + dx) * 3;
+                img[i] = 0.9;
+                img[i + 1] = 0.9;
+                img[i + 2] = 0.75;
+            }
+        }
+        // Vehicles, advanced to time t.
+        for v in &self.vehicles {
+            let cx = (v.x + v.vx * t as f32).rem_euclid(s as f32);
+            for dy in 0..v.h as usize {
+                let y = (v.y as usize + dy).min(s - 1);
+                for dx in 0..v.w as usize {
+                    let x = (cx as usize + dx) % s;
+                    let i = (y * s + x) * 3;
+                    img[i] = v.tone[0];
+                    img[i + 1] = v.tone[1];
+                    img[i + 2] = v.tone[2];
+                }
+            }
+        }
+        img
+    }
+
+    /// Next frame in the loop (mutable cursor).
+    pub fn next_frame(&mut self) -> Vec<f32> {
+        let f = self.frame(self.cursor);
+        self.cursor = (self.cursor + 1) % self.frames;
+        f
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frame_shape_and_range() {
+        let v = VideoSource::new(64, DEFAULT_FRAMES, 1);
+        let f = v.frame(0);
+        assert_eq!(f.len(), 64 * 64 * 3);
+        assert!(f.iter().all(|&x| (0.0..=1.0).contains(&x)));
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = VideoSource::new(32, 10, 7).frame(3);
+        let b = VideoSource::new(32, 10, 7).frame(3);
+        assert_eq!(a, b);
+        let c = VideoSource::new(32, 10, 8).frame(3);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn motion_changes_frames() {
+        let v = VideoSource::new(64, 10, 2);
+        assert_ne!(v.frame(0), v.frame(5));
+    }
+
+    #[test]
+    fn loops_wrap() {
+        let v = VideoSource::new(32, 10, 3);
+        assert_eq!(v.frame(0), v.frame(10));
+        let mut m = v.clone();
+        for _ in 0..10 {
+            m.next_frame();
+        }
+        assert_eq!(m.next_frame(), v.frame(0));
+    }
+}

@@ -1,0 +1,86 @@
+//! Integration over the experiment harness: the full suite runs, writes
+//! well-formed CSVs, and the regenerated numbers keep the paper's shape.
+
+use std::path::PathBuf;
+
+use coral::device::DeviceKind;
+use coral::experiments::{dual, fig1, single, table4};
+use coral::models::ModelKind;
+use coral::util::csv::Csv;
+
+fn tmp(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("coral_exp_{name}"));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+#[test]
+fn fig1_csvs_written_and_parse() {
+    let dir = tmp("fig1");
+    fig1::run(&dir).unwrap();
+    for name in ["fig1_xavier_nx.csv", "fig1_orin_nano.csv"] {
+        let text = std::fs::read_to_string(dir.join(name)).unwrap();
+        let csv = Csv::parse(&text).unwrap();
+        assert!(csv.rows.len() > 1000, "{name}: {} rows", csv.rows.len());
+        assert!(csv.col("throughput_fps").is_some());
+        assert!(csv.col("power_mw").is_some());
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn table4_within_10pct_of_paper() {
+    let dir = tmp("table4");
+    table4::run(&dir).unwrap();
+    let text = std::fs::read_to_string(dir.join("table4.csv")).unwrap();
+    let csv = Csv::parse(&text).unwrap();
+    let di = csv.col("delta_pct").unwrap();
+    for row in &csv.rows {
+        let delta: f64 = row[di].parse().unwrap();
+        assert!(delta.abs() < 10.0, "row {row:?}");
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn single_constraint_csv_has_method_lineup() {
+    let dir = tmp("single");
+    single::run(&dir, 3).unwrap();
+    let text = std::fs::read_to_string(dir.join("fig3_4_single.csv")).unwrap();
+    let csv = Csv::parse(&text).unwrap();
+    let mi = csv.col("method").unwrap();
+    for m in ["oracle", "coral", "alert", "alert-online", "max-power", "default"] {
+        assert!(csv.rows.iter().any(|r| r[mi] == m), "missing {m}");
+    }
+    // Every device appears.
+    let di = csv.col("device").unwrap();
+    for d in DeviceKind::ALL {
+        assert!(csv.rows.iter().any(|r| r[di] == d.name()));
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn dual_csv_coral_feasible_baselines_not() {
+    let dir = tmp("dual");
+    dual::run_model(&dir, ModelKind::Yolo, 5).unwrap();
+    let text = std::fs::read_to_string(dir.join("fig5_fig6_dual_yolo.csv")).unwrap();
+    let csv = Csv::parse(&text).unwrap();
+    let (mi, fi) = (csv.col("method").unwrap(), csv.col("feasible_rate").unwrap());
+    let rate = |m: &str, dev: &str| -> f64 {
+        let di = csv.col("device").unwrap();
+        csv.rows
+            .iter()
+            .find(|r| r[mi] == m && r[di] == dev)
+            .map(|r| r[fi].parse().unwrap())
+            .unwrap()
+    };
+    for dev in ["xavier-nx", "orin-nano"] {
+        assert_eq!(rate("oracle", dev), 1.0, "{dev}");
+        assert!(rate("coral", dev) >= 0.8, "{dev} coral {}", rate("coral", dev));
+        assert_eq!(rate("max-power", dev), 0.0, "{dev}");
+        assert_eq!(rate("default", dev), 0.0, "{dev}");
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -1,0 +1,131 @@
+//! Cross-module integration: optimizers × device simulator across the
+//! full scenario matrix (no PJRT needed).
+
+use coral::device::{Device, DeviceKind};
+use coral::experiments::runner::{run_method, MethodKind, ITER_BUDGET};
+use coral::experiments::scenarios::DUAL_SCENARIOS;
+use coral::models::ModelKind;
+use coral::optimizer::{Constraints, CoralOptimizer, Optimizer};
+
+#[test]
+fn coral_feasible_on_every_dual_scenario() {
+    // The paper's central claim (§IV-B, §IV-C): CORAL finds valid
+    // configurations on both devices and all three model sizes.
+    for s in DUAL_SCENARIOS {
+        let cons = Constraints::dual(s.target_fps, s.budget_mw);
+        let mut hits = 0;
+        let runs = 10;
+        for seed in 0..runs {
+            let o = run_method(MethodKind::Coral, s.device, s.model, cons, 0x1731 + seed);
+            if o.feasible {
+                hits += 1;
+            }
+        }
+        assert!(
+            hits * 10 >= runs * 7,
+            "{}/{}: CORAL feasible only {hits}/{runs}",
+            s.device,
+            s.model
+        );
+    }
+}
+
+#[test]
+fn coral_beats_every_online_baseline_on_feasibility() {
+    let mut coral_total = 0;
+    let mut online_best = 0;
+    for s in DUAL_SCENARIOS {
+        let cons = Constraints::dual(s.target_fps, s.budget_mw);
+        for seed in 0..6 {
+            if run_method(MethodKind::Coral, s.device, s.model, cons, seed).feasible {
+                coral_total += 1;
+            }
+            let alert_online =
+                run_method(MethodKind::AlertOnline, s.device, s.model, cons, seed).feasible;
+            let random =
+                run_method(MethodKind::Random, s.device, s.model, cons, seed).feasible;
+            if alert_online || random {
+                online_best += 1;
+            }
+        }
+    }
+    assert!(
+        coral_total > online_best,
+        "coral {coral_total} vs best-of-online-baselines {online_best}"
+    );
+}
+
+#[test]
+fn search_cost_orders_of_magnitude_below_profiling() {
+    // §I: "orders of magnitude faster than profiling-based alternatives".
+    let s = DUAL_SCENARIOS[0];
+    let cons = coral::experiments::scenarios::dual_constraints(s.device, s.model);
+    let coral = run_method(MethodKind::Coral, s.device, s.model, cons, 1);
+    let alert = run_method(MethodKind::Alert, s.device, s.model, cons, 1);
+    assert_eq!(coral.offline_windows, 0);
+    assert!(alert.offline_windows as f64 / coral.online_windows as f64 > 100.0);
+}
+
+#[test]
+fn convergence_within_budget_is_stable_across_models() {
+    // ≤10 iterations must be enough (paper §III-B).
+    for model in ModelKind::ALL {
+        let cons =
+            coral::experiments::scenarios::dual_constraints(DeviceKind::OrinNano, model);
+        let mut dev = Device::new(DeviceKind::OrinNano, model, 77);
+        let mut opt = CoralOptimizer::new(dev.space().clone(), cons, 77);
+        for _ in 0..ITER_BUDGET {
+            let cfg = opt.propose();
+            let m = dev.run(cfg);
+            opt.observe(cfg, m.throughput_fps, m.power_mw);
+        }
+        assert!(opt.best().is_some(), "{model}");
+    }
+}
+
+#[test]
+fn single_target_all_models_track_oracle() {
+    // §IV-B reports 96-100 % for YOLO; heavier models must stay close too.
+    for model in ModelKind::ALL {
+        for device in DeviceKind::ALL {
+            let probe = Device::new(device, model, 0);
+            let oracle_fps = coral::device::failure::valid_configs(device, model)
+                .iter()
+                .map(|c| probe.true_point(c).0.throughput_fps)
+                .fold(0.0f64, f64::max);
+            let mut ratios = Vec::new();
+            for seed in 0..6 {
+                let o = run_method(
+                    MethodKind::Coral,
+                    device,
+                    model,
+                    Constraints::max_throughput(),
+                    0xAB + seed,
+                );
+                ratios.push(o.throughput_fps / oracle_fps);
+            }
+            let mean = ratios.iter().sum::<f64>() / ratios.len() as f64;
+            assert!(
+                mean > 0.9,
+                "{device}/{model}: single-target mean ratio {mean:.3}"
+            );
+        }
+    }
+}
+
+#[test]
+fn prohibited_list_shrinks_wasted_iterations() {
+    // Re-proposing infeasible configs would waste the tiny budget; the
+    // PS must keep all 10 proposals distinct in the dual scenario.
+    let s = DUAL_SCENARIOS[4]; // NX / RetinaNet — most failures
+    let cons = Constraints::dual(s.target_fps, s.budget_mw);
+    let mut dev = Device::new(s.device, s.model, 5);
+    let mut opt = CoralOptimizer::new(dev.space().clone(), cons, 5);
+    let mut seen = std::collections::HashSet::new();
+    for _ in 0..ITER_BUDGET {
+        let cfg = opt.propose();
+        assert!(seen.insert(cfg), "proposal repeated: {cfg}");
+        let m = dev.run(cfg);
+        opt.observe(cfg, m.throughput_fps, m.power_mw);
+    }
+}

@@ -1,0 +1,186 @@
+//! Integration: PJRT runtime + serving coordinator over the real AOT
+//! artifacts (`make artifacts` must have run — the Makefile test target
+//! guarantees it).
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use coral::coordinator::{BatcherConfig, Server, ServerConfig};
+use coral::coordinator::worker::{BatchJob, ShareableRuntime, WorkerPool};
+use coral::models::{artifacts_dir, Manifest, ModelKind};
+use coral::runtime::PjrtRuntime;
+use coral::workload::VideoSource;
+
+fn manifest() -> Manifest {
+    let dir = artifacts_dir();
+    Manifest::load(&dir).unwrap_or_else(|e| {
+        panic!("artifacts missing at {} — run `make artifacts` first: {e}", dir.display())
+    })
+}
+
+#[test]
+fn manifest_lists_all_models_and_batches() {
+    let m = manifest();
+    for model in ModelKind::ALL {
+        let batches = m.batches(model);
+        assert!(!batches.is_empty(), "{model} missing");
+        assert!(batches.contains(&1), "{model} needs batch 1");
+    }
+}
+
+#[test]
+fn yolo_infer_shapes_and_determinism() {
+    let m = manifest();
+    let rt = PjrtRuntime::cpu().unwrap();
+    let model = rt.load_model(&m, ModelKind::Yolo).unwrap();
+    let side = model.input_side();
+    let mut video = VideoSource::new(side, 30, 7);
+    let frame = video.next_frame();
+
+    let a = model.infer(&frame, 1).unwrap();
+    let b = model.infer(&frame, 1).unwrap();
+    assert_eq!(a.len(), 1);
+    assert_eq!(a[0].boxes.len(), a[0].scores.len());
+    assert!(!a[0].boxes.is_empty());
+    assert_eq!(a, b, "inference must be deterministic");
+    // Scores are probabilities.
+    assert!(a[0].scores.iter().all(|s| (0.0..=1.0).contains(s)));
+    // Boxes are well-formed (x2 >= x1, y2 >= y1).
+    assert!(a[0].boxes.iter().all(|bx| bx[2] >= bx[0] && bx[3] >= bx[1]));
+}
+
+#[test]
+fn batching_pads_and_truncates_consistently() {
+    let m = manifest();
+    let rt = PjrtRuntime::cpu().unwrap();
+    let model = rt.load_model(&m, ModelKind::Yolo).unwrap();
+    let side = model.input_side();
+    let v = VideoSource::new(side, 30, 3);
+    let f0 = v.frame(0);
+    let f1 = v.frame(1);
+    let f2 = v.frame(2);
+
+    // Batch of 3 → padded to the 4-batch executable; results must match
+    // single-image runs.
+    let mut pixels = Vec::new();
+    pixels.extend_from_slice(&f0);
+    pixels.extend_from_slice(&f1);
+    pixels.extend_from_slice(&f2);
+    let batch = model.infer(&pixels, 3).unwrap();
+    assert_eq!(batch.len(), 3);
+    for (i, f) in [f0, f1, f2].iter().enumerate() {
+        let single = model.infer(f, 1).unwrap();
+        for (a, b) in batch[i].scores.iter().zip(&single[0].scores) {
+            assert!((a - b).abs() < 1e-4, "image {i}: batch vs single mismatch");
+        }
+    }
+}
+
+#[test]
+fn infer_rejects_bad_sizes() {
+    let m = manifest();
+    let rt = PjrtRuntime::cpu().unwrap();
+    let model = rt.load_model(&m, ModelKind::Yolo).unwrap();
+    assert!(model.infer(&[0.0; 7], 1).is_err());
+    assert!(model.infer(&[], 1000).is_err());
+    assert!(model.infer(&[], 0).unwrap().is_empty());
+}
+
+#[test]
+fn worker_pool_runs_concurrent_batches() {
+    let m = manifest();
+    let rt = PjrtRuntime::cpu().unwrap();
+    let model = rt.load_model(&m, ModelKind::Yolo).unwrap();
+    let side = model.input_side();
+    let video = VideoSource::new(side, 30, 5);
+    let pool = WorkerPool::new(Arc::new(ShareableRuntime(model)), 3);
+    assert_eq!(pool.size(), 3);
+
+    for j in 0..6u64 {
+        pool.submit(BatchJob {
+            ids: vec![j],
+            arrived: vec![Duration::ZERO],
+            pixels: video.frame(j as usize),
+        });
+    }
+    let mut got = Vec::new();
+    for _ in 0..6 {
+        let r = pool.recv_timeout(Duration::from_secs(60)).expect("result");
+        assert!(r.error.is_none(), "{:?}", r.error);
+        got.extend(r.ids);
+    }
+    got.sort_unstable();
+    assert_eq!(got, (0..6).collect::<Vec<_>>());
+    assert!(pool.shutdown().is_empty());
+}
+
+#[test]
+fn server_closed_loop_serves_and_reports() {
+    let m = manifest();
+    let rt = PjrtRuntime::cpu().unwrap();
+    let model = rt.load_model(&m, ModelKind::Yolo).unwrap();
+    let side = model.input_side();
+    let mut video = VideoSource::new(side, 30, 11);
+    let mut server = Server::new(
+        model,
+        ServerConfig {
+            concurrency: 2,
+            batcher: BatcherConfig { max_batch: 4, max_wait: Duration::from_millis(5) },
+        },
+    );
+    let report = server.run_closed_loop(&mut video, 40, 8).unwrap();
+    assert_eq!(report.requests, 40);
+    assert_eq!(report.failed, 0);
+    assert!(report.throughput_fps > 1.0, "fps {}", report.throughput_fps);
+    assert!(report.latency_p50_ms > 0.0);
+    assert!(report.latency_p99_ms >= report.latency_p50_ms);
+    assert!(report.mean_batch >= 1.0);
+    assert_eq!(server.shutdown(), 40);
+}
+
+#[test]
+fn server_live_concurrency_change_loses_nothing() {
+    let m = manifest();
+    let rt = PjrtRuntime::cpu().unwrap();
+    let model = rt.load_model(&m, ModelKind::Yolo).unwrap();
+    let side = model.input_side();
+    let mut video = VideoSource::new(side, 30, 13);
+    let mut server = Server::new(model, ServerConfig::default());
+    let r1 = server.run_closed_loop(&mut video, 12, 4).unwrap();
+    assert_eq!(r1.concurrency, 2);
+    server.set_concurrency(4);
+    let r2 = server.run_closed_loop(&mut video, 12, 4).unwrap();
+    assert_eq!(r2.concurrency, 4);
+    assert_eq!(server.shutdown(), 24);
+}
+
+#[test]
+fn worker_error_path_reports_failure_not_crash() {
+    // Failure injection: a malformed job (wrong pixel count) must surface
+    // as a BatchResult error, not kill the worker or the pool.
+    let m = manifest();
+    let rt = PjrtRuntime::cpu().unwrap();
+    let model = rt.load_model(&m, ModelKind::Yolo).unwrap();
+    let side = model.input_side();
+    let video = VideoSource::new(side, 30, 21);
+    let pool = WorkerPool::new(Arc::new(ShareableRuntime(model)), 1);
+
+    pool.submit(BatchJob {
+        ids: vec![0],
+        arrived: vec![Duration::ZERO],
+        pixels: vec![0.0; 7], // wrong size
+    });
+    let r = pool.recv_timeout(Duration::from_secs(30)).expect("result");
+    assert!(r.error.is_some(), "malformed job must error");
+
+    // The same worker keeps serving good jobs afterwards.
+    pool.submit(BatchJob {
+        ids: vec![1],
+        arrived: vec![Duration::ZERO],
+        pixels: video.frame(0),
+    });
+    let r = pool.recv_timeout(Duration::from_secs(60)).expect("result");
+    assert!(r.error.is_none());
+    assert_eq!(r.ids, vec![1]);
+    pool.shutdown();
+}
