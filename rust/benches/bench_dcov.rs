@@ -1,9 +1,22 @@
 //! §Perf micro-bench: the distance-correlation hot path (recomputed every
-//! CORAL iteration over the sliding window). Compares the per-call
-//! reference against the fused workspace, across window sizes.
+//! CORAL iteration over the sliding window).
+//!
+//! Three engines are compared (see EXPERIMENTS.md §Perf):
+//! * `reference` — per-call O(n²) matrix path (`dcor`), allocates n²;
+//! * `workspace` — fused [`DcorWorkspace`] call, auto-dispatching to the
+//!   matrix path below `FAST_PATH_MIN_N` and the fast engine above it;
+//! * `fast` — the exact O(n log n) [`FastDcov`] engine, O(n) scratch.
+//!
+//! The large-n rows demonstrate the asymptotic win at the fleet window
+//! sizes (W = 100 / 1k / 10k, `experiments::scenarios::WINDOW_SCENARIOS`).
+//! The matrix reference is capped at n = 2000: beyond that its n×n
+//! buffers (3 × n² f64) dominate memory — which is the point. The final
+//! lines print the fast engine's actual scratch footprint next to the
+//! n×n element count the matrix path would need.
 use std::time::Duration;
 
-use coral::stats::dcov::{dcor, DcorWorkspace};
+use coral::stats::dcov::{dcor, DcorWorkspace, FAST_PATH_MIN_N};
+use coral::stats::fastdcov::FastDcov;
 use coral::util::bench::Bencher;
 use coral::util::Rng;
 
@@ -14,10 +27,12 @@ fn series(n: usize, seed: u64) -> Vec<f64> {
 
 fn main() {
     let mut b = Bencher::new(Duration::from_millis(400), 20);
+
+    // Paper-scale windows: the fused workspace vs the per-call reference.
     for &w in &[5usize, 10, 20, 50] {
         let tput = series(w, 1);
         let power = series(w, 2);
-        let dims: Vec<Vec<f64>> = (0..5).map(|d| series(w, 3 + d)).collect();
+        let dims: Vec<Vec<f64>> = (0..5).map(|d| series(w, 3 + d as u64)).collect();
 
         b.bench(&format!("dcov/reference_w{w}_5dims_2metrics"), || {
             let mut acc = 0.0;
@@ -30,5 +45,50 @@ fn main() {
         b.bench(&format!("dcov/workspace_w{w}_5dims_2metrics"), || {
             ws.dcor_matrix(&[&tput, &power], &dims)[0][0]
         });
+    }
+
+    // Large-n single-pair rows: O(n²) matrix vs O(n log n) engine. One
+    // budget-bounded Bencher per engine family keeps wall time sane.
+    let mut lb = Bencher::new(Duration::from_millis(250), 8);
+    for &n in &[256usize, 1000, 2000] {
+        let x = series(n, 11);
+        let y = series(n, 12);
+        lb.bench(&format!("dcov/matrix_pair_n{n}"), || dcor(&x, &y));
+        let mut eng = FastDcov::new();
+        lb.bench(&format!("dcov/fast_pair_n{n}"), || eng.dcor_pair(&x, &y));
+    }
+    // Beyond the matrix path's practical range: fast engine only.
+    {
+        let n = 10_000usize;
+        let x = series(n, 13);
+        let y = series(n, 14);
+        let mut eng = FastDcov::new();
+        lb.bench(&format!("dcov/fast_pair_n{n}"), || eng.dcor_pair(&x, &y));
+    }
+
+    // The optimizer-shaped call at fleet window sizes (2 metrics × 5
+    // dims), through the auto-dispatching workspace.
+    for &w in &[100usize, 1000, 10_000] {
+        let tput = series(w, 21);
+        let power = series(w, 22);
+        let dims: Vec<Vec<f64>> = (0..5).map(|d| series(w, 23 + d as u64)).collect();
+        let mut ws = DcorWorkspace::new();
+        lb.bench(&format!("dcov/workspace_fastpath_w{w}"), || {
+            ws.dcor_matrix(&[&tput, &power], &dims)[0][0]
+        });
+    }
+
+    // Memory audit: fast-path scratch vs the n×n the matrix path needs.
+    for &n in &[1000usize, 10_000] {
+        let x = series(n, 31);
+        let y = series(n, 32);
+        let mut eng = FastDcov::new();
+        let d = eng.dcor_pair(&x, &y);
+        println!(
+            "mem  dcov/fast_n{n}: scratch={} f64-elems vs matrix n^2={} (dcor={d:.4}, threshold n>={})",
+            eng.scratch_elems(),
+            n * n,
+            FAST_PATH_MIN_N
+        );
     }
 }

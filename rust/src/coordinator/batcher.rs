@@ -128,6 +128,56 @@ mod tests {
     }
 
     #[test]
+    fn oversize_release_rearms_deadline_on_new_head() {
+        // Deadline-triggered release of an over-full queue must release
+        // only max_batch, and the *new* head's arrival time re-arms the
+        // deadline — the remainder does not ride the old head's timer.
+        let mut b = Batcher::new(cfg(2, 10));
+        b.push(req(0, 0));
+        b.push(req(1, 8));
+        b.push(req(2, 9));
+        let first = b.pop_ready(Duration::from_millis(10)).unwrap();
+        assert_eq!(first.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 1]);
+        // New head arrived at t=9: at t=10 it has waited only 1 ms, and
+        // the queue (1 request) is below max_batch — nothing releases.
+        assert!(b.pop_ready(Duration::from_millis(10)).is_none());
+        assert!(b.pop_ready(Duration::from_millis(18)).is_none());
+        let second = b.pop_ready(Duration::from_millis(19)).unwrap();
+        assert_eq!(second[0].id, 2);
+        assert_eq!(b.queued(), 0);
+    }
+
+    #[test]
+    fn set_max_batch_shrinking_below_queue_len() {
+        // A queue longer than the (newly shrunk) max_batch drains in
+        // max_batch-sized chunks, preserving FIFO order.
+        let mut b = Batcher::new(cfg(8, 1000));
+        for i in 0..6 {
+            b.push(req(i, 0));
+        }
+        assert!(b.pop_ready(Duration::ZERO).is_none(), "not full, not expired");
+        b.set_max_batch(2);
+        let a = b.pop_ready(Duration::ZERO).unwrap();
+        assert_eq!(a.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 1]);
+        assert_eq!(b.queued(), 4);
+        let c = b.pop_ready(Duration::ZERO).unwrap();
+        assert_eq!(c.iter().map(|r| r.id).collect::<Vec<_>>(), vec![2, 3]);
+        // Two left: below the restored size-trigger and not yet expired.
+        b.set_max_batch(5);
+        assert_eq!(b.queued(), 2);
+        assert!(b.pop_ready(Duration::ZERO).is_none());
+        // They still drain on deadline.
+        assert_eq!(b.pop_ready(Duration::from_millis(1000)).unwrap().len(), 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "n >= 1")]
+    fn set_max_batch_zero_rejected() {
+        let mut b = Batcher::new(cfg(4, 10));
+        b.set_max_batch(0);
+    }
+
+    #[test]
     fn fifo_order_preserved() {
         let mut b = Batcher::new(cfg(3, 0));
         for i in 0..3 {

@@ -1,5 +1,6 @@
 //! Evaluation scenarios: the paper's constraint settings per
-//! (device, model) pair.
+//! (device, model) pair, plus the large-window telemetry family that
+//! stresses the O(n log n) dCor path beyond the paper's W=10.
 //!
 //! YOLO budgets/targets are the paper's (§IV-B): NX 6500 mW / 30 fps,
 //! Orin 5600 mW / 60 fps. The paper does not state the FRCNN/RETINANET
@@ -9,7 +10,8 @@
 
 use crate::device::DeviceKind;
 use crate::models::ModelKind;
-use crate::optimizer::Constraints;
+use crate::optimizer::{Constraints, CoralConfig};
+use crate::telemetry::Sampler;
 
 /// One dual-constraint scenario (paper Figs 5–10).
 #[derive(Debug, Clone, Copy)]
@@ -68,6 +70,40 @@ pub const DUAL_SCENARIOS: [DualScenario; 6] = [
     },
 ];
 
+/// Large-window telemetry scenario: how much observation history the
+/// optimizer and the coordinator's sampler retain. The paper runs W=10;
+/// fleet-scale serving wants orders of magnitude more context, which is
+/// feasible only with the O(n log n) dCor engine (EXPERIMENTS.md §Perf).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct WindowScenario {
+    pub name: &'static str,
+    /// Sliding-window / telemetry-history size W.
+    pub window: usize,
+    /// Online iterations a stress run should drive (> W so the window
+    /// actually wraps).
+    pub iters: usize,
+}
+
+/// The window-scaling family: the paper's W=10 plus 100 / 1k / 10k.
+pub const WINDOW_SCENARIOS: [WindowScenario; 4] = [
+    WindowScenario { name: "paper-w10", window: 10, iters: 15 },
+    WindowScenario { name: "fleet-w100", window: 100, iters: 140 },
+    WindowScenario { name: "fleet-w1k", window: 1_000, iters: 1_200 },
+    WindowScenario { name: "fleet-w10k", window: 10_000, iters: 12_000 },
+];
+
+impl WindowScenario {
+    /// CORAL tunables for this window size (paper defaults otherwise).
+    pub fn coral_config(&self) -> CoralConfig {
+        CoralConfig::with_window(self.window)
+    }
+
+    /// Coordinator telemetry sampler retaining W samples.
+    pub fn sampler(&self) -> Sampler {
+        Sampler::with_window(self.window)
+    }
+}
+
 /// Constraints of the dual scenario for (device, model).
 pub fn dual_constraints(device: DeviceKind, model: ModelKind) -> Constraints {
     let s = DUAL_SCENARIOS
@@ -80,7 +116,49 @@ pub fn dual_constraints(device: DeviceKind, model: ModelKind) -> Constraints {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::device::{failure, perf, power};
+    use crate::device::{failure, perf, power, Device};
+    use crate::optimizer::{CoralOptimizer, Optimizer};
+
+    #[test]
+    fn window_family_spans_three_orders_of_magnitude() {
+        assert!(WINDOW_SCENARIOS.windows(2).all(|w| w[0].window < w[1].window));
+        assert!(WINDOW_SCENARIOS.iter().all(|s| s.iters > s.window));
+        assert_eq!(WINDOW_SCENARIOS[0].window, 10, "paper default first");
+        assert_eq!(WINDOW_SCENARIOS.last().unwrap().window, 10_000);
+        for s in WINDOW_SCENARIOS {
+            assert_eq!(s.coral_config().window, s.window);
+            assert_eq!(s.sampler().window_capacity(), s.window);
+        }
+    }
+
+    #[test]
+    fn fleet_w100_scenario_drives_coral_end_to_end() {
+        // The first fleet-scale window: W exceeds the dCor fast-path
+        // threshold, the stress run wraps the window, and the search
+        // keeps functioning end to end.
+        let s = WINDOW_SCENARIOS[1];
+        let device = DeviceKind::OrinNano;
+        let model = ModelKind::Yolo;
+        let mut dev = Device::new(device, model, 27);
+        let mut opt = CoralOptimizer::with_config(
+            dev.space().clone(),
+            dual_constraints(device, model),
+            s.coral_config(),
+            27,
+        );
+        for _ in 0..s.iters {
+            let cfg = opt.propose();
+            let m = dev.run(cfg);
+            opt.observe(cfg, m.throughput_fps, m.power_mw);
+        }
+        assert!(opt.window_len() <= s.window);
+        assert!(
+            opt.window_len() > crate::stats::dcov::FAST_PATH_MIN_N,
+            "window {} should engage the fast path",
+            opt.window_len()
+        );
+        assert!(opt.best().is_some());
+    }
 
     #[test]
     fn every_pair_covered() {

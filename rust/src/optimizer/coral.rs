@@ -95,6 +95,16 @@ impl Default for CoralConfig {
     }
 }
 
+impl CoralConfig {
+    /// Paper defaults with a custom sliding-window size. Windows far
+    /// beyond the paper's W=10 (100 / 1k / 10k) stay cheap because
+    /// [`DcorWorkspace`] switches to the O(n log n) dCor engine above
+    /// [`crate::stats::dcov::FAST_PATH_MIN_N`] observations.
+    pub fn with_window(window: usize) -> CoralConfig {
+        CoralConfig { window, ..CoralConfig::default() }
+    }
+}
+
 /// Scored observation retained for best/second-best tracking.
 #[derive(Debug, Clone, Copy)]
 struct Scored {
@@ -172,7 +182,14 @@ impl CoralOptimizer {
         self.prohibited.len()
     }
 
-    /// §III-D: recompute α, β over the sliding window.
+    /// Observations currently held in the sliding window.
+    pub fn window_len(&self) -> usize {
+        self.window.len()
+    }
+
+    /// §III-D: recompute α, β over the sliding window. The window hands
+    /// out zero-copy columnar views, so this is allocation-free up to the
+    /// workspace's reused buffers regardless of W.
     fn update_weights(&mut self) {
         if self.window.len() < 2 {
             return;
@@ -180,7 +197,7 @@ impl CoralOptimizer {
         let tput = self.window.throughputs();
         let power = self.window.powers();
         let dims = self.window.setting_dims();
-        let m = self.ws.dcor_matrix(&[&tput, &power], &dims);
+        let m = self.ws.dcor_matrix(&[tput, power], &dims);
         for d in 0..HwConfig::NDIMS {
             self.alpha[d] = m[0][d];
             self.beta[d] = m[1][d];
@@ -571,6 +588,38 @@ mod tests {
         assert_eq!(opt.prohibited_len(), 1);
         assert_eq!(opt.window.len(), 0);
         assert_eq!(opt.best().unwrap().reward, f64::NEG_INFINITY);
+    }
+
+    #[test]
+    fn large_window_runs_on_fast_dcor_path() {
+        // W far beyond the paper's 10: the window must cap correctly and
+        // the per-iteration dCor (now on the O(n log n) engine once the
+        // window passes FAST_PATH_MIN_N) must keep producing weights in
+        // [0, 1] while the search still functions.
+        let mut device = Device::new(DeviceKind::XavierNx, ModelKind::Yolo, 9);
+        let cfg = CoralConfig::with_window(100);
+        let mut opt = CoralOptimizer::with_config(
+            device.space().clone(),
+            Constraints::dual(30.0, 6500.0),
+            cfg,
+            9,
+        );
+        for _ in 0..140 {
+            let c = opt.propose();
+            let m = device.run(c);
+            opt.observe(c, m.throughput_fps, m.power_mw);
+        }
+        assert!(
+            opt.window_len() > crate::stats::dcov::FAST_PATH_MIN_N,
+            "window {} should exceed the fast-path threshold",
+            opt.window_len()
+        );
+        assert!(opt.window_len() <= 100, "window must cap at W");
+        let (alpha, beta) = opt.weights();
+        for w in alpha.iter().chain(beta.iter()) {
+            assert!((0.0..=1.0).contains(w), "weight {w}");
+        }
+        assert!(opt.best().is_some());
     }
 
     #[test]

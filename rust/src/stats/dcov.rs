@@ -14,12 +14,24 @@
 //! version), and it detects arbitrary non-linear dependence — the reason
 //! the paper prefers it to Pearson correlation for DVFS spaces.
 //!
-//! Two implementations:
-//! * [`dcor`] / [`dcov2`] — allocation-per-call reference, used by tests.
-//! * [`DcorWorkspace`] — reusable buffers + a fused pass computing
-//!   dCor(τ, s_i) and dCor(p, s_i) for all parameter dimensions at once;
-//!   this is the optimizer's hot path (called every iteration; see
-//!   EXPERIMENTS.md §Perf).
+//! Three implementations:
+//! * [`dcor`] / [`dcov2`] — allocation-per-call matrix reference, used by
+//!   tests and as the ground truth the fast path is verified against.
+//! * [`super::fastdcov`] — exact O(n log n) univariate engine with O(n)
+//!   scratch (no n×n matrix), for large sliding windows.
+//! * [`DcorWorkspace`] — the optimizer's hot path (called every
+//!   iteration; see EXPERIMENTS.md §Perf): reusable buffers + a fused
+//!   pass computing dCor(τ, s_i) and dCor(p, s_i) for all parameter
+//!   dimensions at once, auto-dispatching to the matrix path below
+//!   [`FAST_PATH_MIN_N`] observations and the fast engine above it.
+
+use super::fastdcov::FastDcov;
+
+/// Window size at which [`DcorWorkspace`] switches from the O(n²) matrix
+/// path to the O(n log n) engine. Below this the matrix fits in cache and
+/// its constant factor wins; above it the asymptotics dominate (see
+/// EXPERIMENTS.md §Perf and `benches/bench_dcov.rs`).
+pub const FAST_PATH_MIN_N: usize = 64;
 
 /// Double-centered distance "matrix" stored row-major, plus its own
 /// dCov²(x,x) (needed for normalization).
@@ -30,10 +42,12 @@ struct Centered {
     self_dcov2: f64,
 }
 
-fn center(x: &[f64], buf: &mut Vec<f64>, row_means: &mut Vec<f64>) -> Centered {
+/// Center `x` into a freshly built matrix, handing the buffer to the
+/// returned [`Centered`] (no copy — the reference path used to clone the
+/// full n×n buffer here).
+fn center(x: &[f64], row_means: &mut Vec<f64>) -> Centered {
     let n = x.len();
-    buf.clear();
-    buf.resize(n * n, 0.0);
+    let mut buf = vec![0.0; n * n];
     row_means.clear();
     row_means.resize(n, 0.0);
 
@@ -58,7 +72,7 @@ fn center(x: &[f64], buf: &mut Vec<f64>, row_means: &mut Vec<f64>) -> Centered {
             self_dcov2 += c * c;
         }
     }
-    Centered { n, m: buf.clone(), self_dcov2: self_dcov2 / (n * n) as f64 }
+    Centered { n, m: buf, self_dcov2: self_dcov2 / (n * n) as f64 }
 }
 
 /// dCov²(x, y). Panics if lengths differ; returns 0 for n < 2.
@@ -68,11 +82,9 @@ pub fn dcov2(x: &[f64], y: &[f64]) -> f64 {
     if n < 2 {
         return 0.0;
     }
-    let mut buf = Vec::new();
     let mut rm = Vec::new();
-    let cx = center(x, &mut buf, &mut rm);
-    let mut buf2 = Vec::new();
-    let cy = center(y, &mut buf2, &mut rm);
+    let cx = center(x, &mut rm);
+    let cy = center(y, &mut rm);
     let mut s = 0.0;
     for i in 0..n * n {
         s += cx.m[i] * cy.m[i];
@@ -88,11 +100,9 @@ pub fn dcor(x: &[f64], y: &[f64]) -> f64 {
     if n < 2 {
         return 0.0;
     }
-    let mut buf = Vec::new();
     let mut rm = Vec::new();
-    let cx = center(x, &mut buf, &mut rm);
-    let mut buf2 = Vec::new();
-    let cy = center(y, &mut buf2, &mut rm);
+    let cx = center(x, &mut rm);
+    let cy = center(y, &mut rm);
     normalized(&cx, &cy)
 }
 
@@ -115,20 +125,24 @@ fn normalized(cx: &Centered, cy: &Centered) -> f64 {
 /// dimensions — the optimizer's per-iteration correlation analysis
 /// (§III-D) in one call.
 ///
-/// §Perf: unlike the reference path, the workspace (a) centers each
+/// §Perf: unlike the reference path, the workspace (a) centers/preps each
 /// metric once and reuses it across all setting dimensions, (b) keeps
-/// every matrix buffer across calls (zero steady-state allocation), and
-/// (c) exploits the symmetry of distance matrices — distances, centering
-/// and the product sums each touch only the upper triangle and mirror
-/// (≈2× fewer FLOPs). See EXPERIMENTS.md §Perf for before/after.
+/// every buffer across calls (zero steady-state allocation), (c) exploits
+/// the symmetry of distance matrices on the small-n path (≈2× fewer
+/// FLOPs), and (d) above [`FAST_PATH_MIN_N`] switches to the exact
+/// O(n log n) [`FastDcov`] engine, which never materializes an n×n
+/// matrix. See EXPERIMENTS.md §Perf for the methodology and
+/// `benches/bench_dcov.rs` for before/after.
 #[derive(Debug, Default)]
 pub struct DcorWorkspace {
-    /// One persistent centered matrix per metric.
+    /// One persistent centered matrix per metric (matrix path).
     metric_mats: Vec<Vec<f64>>,
     metric_self: Vec<f64>,
     /// Persistent centered matrix for the current setting dim.
     setting_mat: Vec<f64>,
     row_sums: Vec<f64>,
+    /// O(n log n) engine for large windows.
+    fast: FastDcov,
 }
 
 /// Symmetric in-place double-centering; returns dCov²(x, x).
@@ -192,23 +206,31 @@ impl DcorWorkspace {
     /// Compute `out[k][d] = dCor(metrics[k], settings[d])` for all metric
     /// series (throughput, power) × setting dimensions. Each series must
     /// have the same length n; for n < 2 all correlations are 0.
-    pub fn dcor_matrix(
+    ///
+    /// Settings are accepted as anything slice-like (`Vec<f64>` or
+    /// `&[f64]`), so the sliding window's zero-copy columnar views feed
+    /// in directly.
+    pub fn dcor_matrix<S: AsRef<[f64]>>(
         &mut self,
         metrics: &[&[f64]],
-        settings: &[Vec<f64>],
+        settings: &[S],
     ) -> Vec<Vec<f64>> {
         let n = metrics.first().map(|m| m.len()).unwrap_or(0);
         for m in metrics {
             assert_eq!(m.len(), n, "metric length mismatch");
         }
         for s in settings {
-            assert_eq!(s.len(), n, "setting length mismatch");
+            assert_eq!(s.as_ref().len(), n, "setting length mismatch");
         }
         if n < 2 {
             return vec![vec![0.0; settings.len()]; metrics.len()];
         }
+        if n >= FAST_PATH_MIN_N {
+            // Large windows: O(n log n), O(n) scratch, no n×n matrix.
+            return self.fast.dcor_matrix(metrics, settings);
+        }
 
-        // Center each metric once (reused across all setting dims).
+        // Small windows: center each metric once (reused across dims).
         self.metric_mats.resize_with(metrics.len(), Vec::new);
         self.metric_self.clear();
         for (k, m) in metrics.iter().enumerate() {
@@ -219,7 +241,8 @@ impl DcorWorkspace {
         let mut out = vec![vec![0.0; settings.len()]; metrics.len()];
         let n2 = (n * n) as f64;
         for (d, s) in settings.iter().enumerate() {
-            let s_self = center_sym(s, &mut self.setting_mat, &mut self.row_sums);
+            let s_self =
+                center_sym(s.as_ref(), &mut self.setting_mat, &mut self.row_sums);
             for k in 0..metrics.len() {
                 let denom = self.metric_self[k] * s_self;
                 if denom <= 0.0 {
@@ -367,6 +390,52 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn workspace_dispatch_matches_reference_above_threshold() {
+        // Same workspace call, n ≥ FAST_PATH_MIN_N → fast engine; the
+        // answer must still match the matrix reference to 1e-9.
+        prop::check("workspace fast dispatch == reference", 15, |g| {
+            let n = FAST_PATH_MIN_N + g.rng.range_usize(0, 80);
+            let tput = g.vec_f64(n, 0.0, 100.0);
+            let power = g.vec_f64(n, 3000.0, 12000.0);
+            let mut dims: Vec<Vec<f64>> =
+                (0..4).map(|_| g.vec_f64(n, 0.0, 2000.0)).collect();
+            dims.push(vec![42.0; n]); // constant dim ⇒ exactly 0
+            let mut ws = DcorWorkspace::new();
+            let got = ws.dcor_matrix(&[&tput, &power], &dims);
+            for (d, s) in dims.iter().enumerate() {
+                prop::assert_close(got[0][d], dcor(&tput, s), 1e-9)?;
+                prop::assert_close(got[1][d], dcor(&power, s), 1e-9)?;
+            }
+            prop::assert_close(got[0][4], 0.0, 0.0)
+        });
+    }
+
+    #[test]
+    fn workspace_dispatch_is_continuous_at_threshold() {
+        // Crossing the threshold must not produce a visible jump: both
+        // paths compute the same statistic on the same data.
+        let mut r = Rng::new(41);
+        let base: Vec<f64> = (0..FAST_PATH_MIN_N + 1).map(|_| r.f64()).collect();
+        let dep: Vec<f64> =
+            base.iter().map(|v| (6.0 * v).sin() + 0.1 * v).collect();
+        let mut ws = DcorWorkspace::new();
+        let below = ws.dcor_matrix(
+            &[&base[..FAST_PATH_MIN_N - 1]],
+            &[dep[..FAST_PATH_MIN_N - 1].to_vec()],
+        )[0][0];
+        let above = ws.dcor_matrix(
+            &[&base[..FAST_PATH_MIN_N + 1]],
+            &[dep[..FAST_PATH_MIN_N + 1].to_vec()],
+        )[0][0];
+        assert!((below - above).abs() < 0.2, "below={below} above={above}");
+        assert!(
+            (above - dcor(&base[..FAST_PATH_MIN_N + 1], &dep[..FAST_PATH_MIN_N + 1]))
+                .abs()
+                < 1e-9
+        );
     }
 
     #[test]

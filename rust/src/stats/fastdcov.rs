@@ -1,0 +1,449 @@
+//! Exact O(n log n) univariate distance covariance / correlation
+//! (Huo & Székely, *Fast Computing for Distance Covariance*, 2016).
+//!
+//! The reference path in [`super::dcov`] materializes the n×n
+//! double-centered distance matrices — O(n²) time **and memory**, which
+//! caps the sliding window at toy sizes. For univariate series (all of
+//! CORAL's metrics and setting dimensions are scalars) the same sample
+//! statistic decomposes exactly:
+//!
+//! ```text
+//! n²·dCov²(x,y) = D/n⁰ − 2/n·Σᵢ aᵢ·bᵢ· /1 + a··b··/n² ,  i.e.
+//! dCov²(x,y) = D/n² − (2/n³)·Σᵢ aᵢ·bᵢ·  + a··b··/n⁴
+//! ```
+//!
+//! where `aᵢ· = Σⱼ|xᵢ−xⱼ|` (row sums), `a·· = Σᵢⱼ|xᵢ−xⱼ|`, and
+//! `D = Σᵢⱼ|xᵢ−xⱼ||yᵢ−yⱼ|`. Row sums fall out of one sort + prefix sums
+//! (O(n log n)); `D` is the hard term — after sorting by `x`, the sign of
+//! `(yⱼ−yᵢ)` splits each pair into "concordant" and "discordant" halves,
+//! and a Fenwick tree over `y`-ranks accumulates the four running sums
+//! (count, Σx, Σy, Σxy) needed to evaluate all pairs in O(n log n) with
+//! O(n) scratch — no n×n buffer anywhere.
+//!
+//! [`FastDcov`] keeps every buffer across calls (zero steady-state
+//! allocation) and is what [`super::dcov::DcorWorkspace`] dispatches to
+//! above [`super::dcov::FAST_PATH_MIN_N`]. Equivalence with the matrix
+//! reference (to 1e-9, including ties, constants and affine transforms)
+//! is property-tested below; the asymptotic win is measured by
+//! `benches/bench_dcov.rs` (see EXPERIMENTS.md §Perf).
+
+/// Per-series O(n log n) precomputation, reused across pair scans.
+#[derive(Debug, Clone, Default)]
+struct SeriesPrep {
+    /// Indices sorted ascending by value.
+    order: Vec<u32>,
+    /// 1-based rank of each original index in value order (ties get
+    /// distinct adjacent ranks; tied pairs contribute |Δy| = 0 either
+    /// way, so the tie-break never changes the statistic).
+    rank: Vec<u32>,
+    /// Distance-matrix row sums aᵢ· aligned to original indices.
+    row_sums: Vec<f64>,
+    /// Grand sum a··.
+    sum: f64,
+    /// dCov²(x, x) — the normalization term.
+    self_d: f64,
+    /// All values identical ⇒ every distance is exactly 0.
+    constant: bool,
+}
+
+/// Reusable O(n log n) distance-covariance engine.
+///
+/// Scratch is O(n) per retained series plus one Fenwick tree — call
+/// [`FastDcov::scratch_elems`] to audit (the matrix path needs n² per
+/// centered series).
+#[derive(Debug, Clone, Default)]
+pub struct FastDcov {
+    preps: Vec<SeriesPrep>,
+    /// Fenwick tree over y-ranks: (count, Σx, Σy, Σxy) per node.
+    bit: Vec<[f64; 4]>,
+}
+
+/// Sort + prefix-sum precomputation for one series.
+fn prep_series(x: &[f64], p: &mut SeriesPrep) {
+    let n = x.len();
+    p.order.clear();
+    p.order.extend(0..n as u32);
+    p.order
+        .sort_unstable_by(|&a, &b| x[a as usize].total_cmp(&x[b as usize]));
+    p.rank.clear();
+    p.rank.resize(n, 0);
+    for (pos, &i) in p.order.iter().enumerate() {
+        p.rank[i as usize] = pos as u32 + 1;
+    }
+    p.row_sums.clear();
+    p.row_sums.resize(n, 0.0);
+    p.constant = n == 0 || x[p.order[0] as usize] == x[p.order[n - 1] as usize];
+    if p.constant {
+        // Every |xᵢ−xⱼ| is exactly 0: short-circuit so the fast path
+        // agrees bit-for-bit with the matrix path's "constant ⇒ 0".
+        p.sum = 0.0;
+        p.self_d = 0.0;
+        return;
+    }
+
+    // Row sums via the sorted order: for the k-th smallest value,
+    // Σⱼ|xᵢ−xⱼ| = xᵢ·(#smaller) − Σsmaller + Σlarger − xᵢ·(#larger).
+    let total: f64 = x.iter().sum();
+    let mut prefix = 0.0;
+    for (k, &oi) in p.order.iter().enumerate() {
+        let i = oi as usize;
+        let xi = x[i];
+        let suffix = total - prefix - xi;
+        p.row_sums[i] =
+            xi * k as f64 - prefix + suffix - xi * (n - 1 - k) as f64;
+        prefix += xi;
+    }
+    p.sum = p.row_sums.iter().sum();
+
+    // dCov²(x,x) needs no pair scan: Σᵢⱼ aᵢⱼ² = Σᵢⱼ(xᵢ−xⱼ)² = 2nΣ(x−x̄)²
+    // (the centered form avoids the 2nΣx²−(Σx)² cancellation).
+    let n_f = n as f64;
+    let mean = total / n_f;
+    let ss: f64 = x
+        .iter()
+        .map(|v| {
+            let d = v - mean;
+            d * d
+        })
+        .sum();
+    let dxx = 2.0 * n_f * ss;
+    let rr: f64 = p.row_sums.iter().map(|r| r * r).sum();
+    let n2 = n_f * n_f;
+    p.self_d = (dxx / n2 - 2.0 * rr / (n2 * n_f) + (p.sum * p.sum) / (n2 * n2))
+        .max(0.0);
+}
+
+/// `D = Σᵢⱼ |xᵢ−xⱼ||yᵢ−yⱼ|` in O(n log n).
+///
+/// Walk indices in ascending-`x` order; for each `j`, every previously
+/// inserted `i` has `xᵢ ≤ xⱼ`, so `|xⱼ−xᵢ||yⱼ−yᵢ| = ±(xⱼ−xᵢ)(yⱼ−yᵢ)`
+/// with the sign decided by whether `yᵢ ≤ yⱼ`. A Fenwick tree over
+/// `y`-ranks yields the (count, Σx, Σy, Σxy) of the `yᵢ ≤ yⱼ` subset in
+/// O(log n), and the complement comes from running totals.
+fn dist_product_sum(
+    bit: &mut Vec<[f64; 4]>,
+    x: &[f64],
+    y: &[f64],
+    x_order: &[u32],
+    y_rank: &[u32],
+) -> f64 {
+    let n = x.len();
+    bit.clear();
+    bit.resize(n + 1, [0.0; 4]);
+    let mut total = [0.0f64; 4];
+    let mut acc = 0.0;
+    for &oj in x_order {
+        let j = oj as usize;
+        let xj = x[j];
+        let yj = y[j];
+        let r = y_rank[j] as usize;
+
+        // Prefix query: inserted points with y-rank ≤ r.
+        let mut below = [0.0f64; 4];
+        let mut i = r;
+        while i > 0 {
+            let t = bit[i];
+            below[0] += t[0];
+            below[1] += t[1];
+            below[2] += t[2];
+            below[3] += t[3];
+            i &= i - 1;
+        }
+        let above = [
+            total[0] - below[0],
+            total[1] - below[1],
+            total[2] - below[2],
+            total[3] - below[3],
+        ];
+        // (xⱼ−xᵢ)(yⱼ−yᵢ) expanded over both subsets, discordant negated.
+        acc += xj * yj * (below[0] - above[0]) - xj * (below[2] - above[2])
+            - yj * (below[1] - above[1])
+            + (below[3] - above[3]);
+
+        // Insert j for subsequent queries.
+        let v = [1.0, xj, yj, xj * yj];
+        let mut i = r;
+        while i <= n {
+            let t = &mut bit[i];
+            t[0] += v[0];
+            t[1] += v[1];
+            t[2] += v[2];
+            t[3] += v[3];
+            i += i & i.wrapping_neg();
+        }
+        total[0] += v[0];
+        total[1] += v[1];
+        total[2] += v[2];
+        total[3] += v[3];
+    }
+    // Unordered pairs were each counted once; the double sum wants both
+    // orientations (the diagonal is zero).
+    2.0 * acc
+}
+
+/// dCov² from two preps + the cross pair-distance sum.
+fn cross_dcov2(
+    bit: &mut Vec<[f64; 4]>,
+    x: &[f64],
+    y: &[f64],
+    px: &SeriesPrep,
+    py: &SeriesPrep,
+) -> f64 {
+    let n = x.len();
+    if n < 2 || px.constant || py.constant {
+        return 0.0;
+    }
+    let n_f = n as f64;
+    let n2 = n_f * n_f;
+    let d = dist_product_sum(bit, x, y, &px.order, &py.rank);
+    let rdot: f64 = px
+        .row_sums
+        .iter()
+        .zip(&py.row_sums)
+        .map(|(a, b)| a * b)
+        .sum();
+    (d / n2 - 2.0 * rdot / (n2 * n_f) + px.sum * py.sum / (n2 * n2)).max(0.0)
+}
+
+impl FastDcov {
+    pub fn new() -> FastDcov {
+        FastDcov::default()
+    }
+
+    /// Total scratch elements currently allocated (f64-equivalents) —
+    /// O(n) per series; the audit hook for "no n×n allocation".
+    pub fn scratch_elems(&self) -> usize {
+        self.bit.capacity() * 4
+            + self
+                .preps
+                .iter()
+                .map(|p| p.order.capacity() + p.rank.capacity() + p.row_sums.capacity())
+                .sum::<usize>()
+    }
+
+    fn ensure_slots(&mut self, slots: usize) {
+        if self.preps.len() < slots {
+            self.preps.resize_with(slots, SeriesPrep::default);
+        }
+    }
+
+    /// dCov²(x, y) on the fast path. Panics if lengths differ; 0 for
+    /// n < 2 or a constant marginal.
+    pub fn dcov2_pair(&mut self, x: &[f64], y: &[f64]) -> f64 {
+        assert_eq!(x.len(), y.len(), "dcov2: length mismatch");
+        if x.len() < 2 {
+            return 0.0;
+        }
+        self.ensure_slots(2);
+        let (a, b) = self.preps.split_at_mut(1);
+        prep_series(x, &mut a[0]);
+        prep_series(y, &mut b[0]);
+        cross_dcov2(&mut self.bit, x, y, &a[0], &b[0])
+    }
+
+    /// dCor(x, y) ∈ [0, 1] on the fast path (0 when either marginal is
+    /// constant, like the reference).
+    pub fn dcor_pair(&mut self, x: &[f64], y: &[f64]) -> f64 {
+        assert_eq!(x.len(), y.len(), "dcor: length mismatch");
+        if x.len() < 2 {
+            return 0.0;
+        }
+        self.ensure_slots(2);
+        let (a, b) = self.preps.split_at_mut(1);
+        prep_series(x, &mut a[0]);
+        prep_series(y, &mut b[0]);
+        let denom = a[0].self_d * b[0].self_d;
+        if denom <= 0.0 {
+            return 0.0;
+        }
+        let d2 = cross_dcov2(&mut self.bit, x, y, &a[0], &b[0]);
+        (d2 / denom.sqrt()).sqrt().clamp(0.0, 1.0)
+    }
+
+    /// `out[k][d] = dCor(metrics[k], settings[d])` — the fused
+    /// per-iteration call, mirroring
+    /// [`super::dcov::DcorWorkspace::dcor_matrix`]: each metric is
+    /// prepped once and reused across every setting dimension.
+    pub fn dcor_matrix<S: AsRef<[f64]>>(
+        &mut self,
+        metrics: &[&[f64]],
+        settings: &[S],
+    ) -> Vec<Vec<f64>> {
+        let n = metrics.first().map(|m| m.len()).unwrap_or(0);
+        let nm = metrics.len();
+        let mut out = vec![vec![0.0; settings.len()]; nm];
+        if n < 2 {
+            return out;
+        }
+        self.ensure_slots(nm + 1);
+        for (k, m) in metrics.iter().enumerate() {
+            assert_eq!(m.len(), n, "metric length mismatch");
+            prep_series(m, &mut self.preps[k]);
+        }
+        let (metric_preps, rest) = self.preps.split_at_mut(nm);
+        let sprep = &mut rest[0];
+        for (d, s) in settings.iter().enumerate() {
+            let s = s.as_ref();
+            assert_eq!(s.len(), n, "setting length mismatch");
+            prep_series(s, sprep);
+            if sprep.constant {
+                continue; // dCor = 0 against every metric
+            }
+            for (k, m) in metrics.iter().enumerate() {
+                let mp = &metric_preps[k];
+                let denom = mp.self_d * sprep.self_d;
+                if denom <= 0.0 {
+                    continue;
+                }
+                let d2 = cross_dcov2(&mut self.bit, m, s, mp, sprep);
+                out[k][d] = (d2 / denom.sqrt()).sqrt().clamp(0.0, 1.0);
+            }
+        }
+        out
+    }
+}
+
+/// One-shot fast dCov² (allocates a fresh engine; reuse [`FastDcov`] on
+/// hot paths).
+pub fn dcov2_fast(x: &[f64], y: &[f64]) -> f64 {
+    FastDcov::new().dcov2_pair(x, y)
+}
+
+/// One-shot fast dCor.
+pub fn dcor_fast(x: &[f64], y: &[f64]) -> f64 {
+    FastDcov::new().dcor_pair(x, y)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stats::dcov::{dcor, dcov2};
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    const TOL: f64 = 1e-9;
+
+    #[test]
+    fn matches_reference_on_random_series() {
+        prop::check("fast == matrix dcor/dcov2", 60, |g| {
+            let n = g.rng.range_usize(2, 200);
+            let x = g.vec_f64(n, -50.0, 50.0);
+            let y = g.vec_f64(n, -50.0, 50.0);
+            prop::assert_close(dcor_fast(&x, &y), dcor(&x, &y), TOL)?;
+            prop::assert_close(dcov2_fast(&x, &y), dcov2(&x, &y), TOL)
+        });
+    }
+
+    #[test]
+    fn matches_reference_with_heavy_ties() {
+        // Discrete grids (DVFS settings!) are exactly the tied case.
+        prop::check("fast == matrix under ties", 60, |g| {
+            let n = g.rng.range_usize(2, 120);
+            let x: Vec<f64> =
+                g.vec_usize(n, 0, 3).into_iter().map(|v| v as f64).collect();
+            let y: Vec<f64> =
+                g.vec_usize(n, 0, 2).into_iter().map(|v| 100.0 * v as f64).collect();
+            prop::assert_close(dcor_fast(&x, &y), dcor(&x, &y), TOL)?;
+            prop::assert_close(dcov2_fast(&x, &y), dcov2(&x, &y), TOL)
+        });
+    }
+
+    #[test]
+    fn matches_reference_under_affine_transforms() {
+        prop::check("fast == matrix under affine maps", 40, |g| {
+            let n = g.rng.range_usize(3, 150);
+            let x = g.vec_f64(n, -5.0, 5.0);
+            let y = g.vec_f64(n, -5.0, 5.0);
+            let b = g.rng.range_f64(0.1, 10.0);
+            let d = g.rng.range_f64(0.1, 10.0);
+            let xs: Vec<f64> = x.iter().map(|v| 300.0 + b * v).collect();
+            let ys: Vec<f64> = y.iter().map(|v| -70.0 + d * v).collect();
+            prop::assert_close(dcor_fast(&xs, &ys), dcor(&xs, &ys), TOL)?;
+            // Affine invariance holds on the fast path itself.
+            prop::assert_close(dcor_fast(&xs, &ys), dcor_fast(&x, &y), 1e-7)
+        });
+    }
+
+    #[test]
+    fn constants_give_exact_zero() {
+        let c = [7.5; 40];
+        let y: Vec<f64> = (0..40).map(|i| i as f64).collect();
+        assert_eq!(dcor_fast(&c, &y), 0.0);
+        assert_eq!(dcor_fast(&y, &c), 0.0);
+        assert_eq!(dcov2_fast(&c, &c), 0.0);
+        // Near-constant but not constant must still be finite and sane.
+        let mut nearly = c;
+        nearly[0] += 1e-9;
+        let d = dcor_fast(&nearly, &y);
+        assert!((0.0..=1.0).contains(&d), "d={d}");
+    }
+
+    #[test]
+    fn perfect_linear_dependence_is_one() {
+        let x: Vec<f64> = (0..100).map(|i| i as f64).collect();
+        let y: Vec<f64> = x.iter().map(|v| -2.0 * v + 11.0).collect();
+        assert!((dcor_fast(&x, &y) - 1.0).abs() < 1e-9);
+        assert!((dcor_fast(&x, &x) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn tiny_n_is_zero() {
+        assert_eq!(dcor_fast(&[1.0], &[2.0]), 0.0);
+        assert_eq!(dcor_fast(&[], &[]), 0.0);
+        assert_eq!(dcov2_fast(&[3.0], &[4.0]), 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "length mismatch")]
+    fn mismatched_lengths_panic() {
+        dcor_fast(&[1.0, 2.0], &[1.0]);
+    }
+
+    #[test]
+    fn engine_matrix_matches_pairwise_reference() {
+        prop::check("engine dcor_matrix == reference", 25, |g| {
+            let n = g.rng.range_usize(2, 90);
+            let tput = g.vec_f64(n, 0.0, 100.0);
+            let power = g.vec_f64(n, 3000.0, 12000.0);
+            let dims: Vec<Vec<f64>> =
+                (0..5).map(|_| g.vec_f64(n, 0.0, 2000.0)).collect();
+            let mut eng = FastDcov::new();
+            let got = eng.dcor_matrix(&[&tput, &power], &dims);
+            for (d, s) in dims.iter().enumerate() {
+                prop::assert_close(got[0][d], dcor(&tput, s), TOL)?;
+                prop::assert_close(got[1][d], dcor(&power, s), TOL)?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn scratch_stays_linear_no_nxn_buffer() {
+        let n = 2048;
+        let mut r = Rng::new(3);
+        let x: Vec<f64> = (0..n).map(|_| r.f64()).collect();
+        let y: Vec<f64> = (0..n).map(|_| r.f64()).collect();
+        let mut eng = FastDcov::new();
+        let d = eng.dcor_pair(&x, &y);
+        assert!((0.0..=1.0).contains(&d));
+        let scratch = eng.scratch_elems();
+        assert!(
+            scratch < 64 * n,
+            "scratch {scratch} elems should be O(n), not n² = {}",
+            n * n
+        );
+    }
+
+    #[test]
+    fn engine_reuse_is_stable() {
+        // Repeated calls over different lengths must not corrupt state.
+        let mut eng = FastDcov::new();
+        let x: Vec<f64> = (0..300).map(|i| (i as f64).sin()).collect();
+        let y: Vec<f64> = (0..300).map(|i| (i as f64).cos()).collect();
+        let first = eng.dcor_pair(&x, &y);
+        let _ = eng.dcor_pair(&x[..10], &y[..10]);
+        let _ = eng.dcor_matrix(&[&x[..50]], std::slice::from_ref(&&y[..50]));
+        let again = eng.dcor_pair(&x, &y);
+        assert_eq!(first, again);
+    }
+}

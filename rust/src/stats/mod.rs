@@ -1,12 +1,15 @@
 //! Statistical substrates: distance covariance / correlation (the paper's
-//! core instrument, §II-A2 Eq. 1–4), a scalar Kalman filter (ALERT's
-//! estimator), sliding observation windows, and summary helpers.
+//! core instrument, §II-A2 Eq. 1–4) with both the matrix reference and an
+//! exact O(n log n) engine for large windows, a scalar Kalman filter
+//! (ALERT's estimator), sliding observation windows, and summary helpers.
 
 pub mod dcov;
+pub mod fastdcov;
 pub mod kalman;
 pub mod summary;
 pub mod window;
 
-pub use dcov::{dcor, dcov2, DcorWorkspace};
+pub use dcov::{dcor, dcov2, DcorWorkspace, FAST_PATH_MIN_N};
+pub use fastdcov::{dcor_fast, dcov2_fast, FastDcov};
 pub use kalman::Kalman1d;
 pub use window::SlidingWindow;

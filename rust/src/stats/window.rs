@@ -1,6 +1,17 @@
 //! Sliding observation window (§III-D): the W most recent
 //! (configuration, throughput, power) observations, with columnar views
 //! ready for the dCor computation.
+//!
+//! Storage is a compacting ring: rows are appended to columnar `Vec`s
+//! whose live region is `[start, len)`; eviction just advances `start`,
+//! and when the dead prefix reaches W the buffers are compacted with one
+//! `memmove` — O(1) amortized per push, **zero steady-state allocation**
+//! (capacity is pre-reserved for 2·W rows), and every columnar view is a
+//! contiguous `&[f64]` handed to
+//! [`crate::stats::dcov::DcorWorkspace::dcor_matrix`] without copying.
+//! This replaces the original `Vec::remove(0)` eviction, which shifted
+//! the whole window (O(W)) on every push and re-collected each column
+//! per iteration.
 
 use crate::device::HwConfig;
 
@@ -12,11 +23,16 @@ pub struct Observation {
     pub power_mw: f64,
 }
 
-/// Fixed-capacity FIFO of recent observations.
+/// Fixed-capacity FIFO of recent observations with columnar views.
 #[derive(Debug, Clone)]
 pub struct SlidingWindow {
     cap: usize,
-    items: Vec<Observation>,
+    /// First live row in the columnar buffers.
+    start: usize,
+    obs: Vec<Observation>,
+    tput: Vec<f64>,
+    power: Vec<f64>,
+    dims: [Vec<f64>; HwConfig::NDIMS],
 }
 
 impl SlidingWindow {
@@ -25,23 +41,54 @@ impl SlidingWindow {
 
     pub fn new(cap: usize) -> Self {
         assert!(cap >= 2, "window must hold at least 2 observations");
-        SlidingWindow { cap, items: Vec::with_capacity(cap) }
+        // 2·cap so steady state never reallocates: the live region slides
+        // through [0, 2cap) and compacts back to 0.
+        SlidingWindow {
+            cap,
+            start: 0,
+            obs: Vec::with_capacity(2 * cap),
+            tput: Vec::with_capacity(2 * cap),
+            power: Vec::with_capacity(2 * cap),
+            dims: std::array::from_fn(|_| Vec::with_capacity(2 * cap)),
+        }
     }
 
     /// Push an observation, evicting the oldest when full.
     pub fn push(&mut self, obs: Observation) {
-        if self.items.len() == self.cap {
-            self.items.remove(0);
+        if self.len() == self.cap {
+            self.start += 1;
+            if self.start == self.cap {
+                self.compact();
+            }
         }
-        self.items.push(obs);
+        self.obs.push(obs);
+        self.tput.push(obs.throughput_fps);
+        self.power.push(obs.power_mw);
+        let v = obs.config.as_vec();
+        for (d, col) in self.dims.iter_mut().enumerate() {
+            col.push(v[d]);
+        }
+    }
+
+    /// Drop the dead prefix with one memmove per buffer (runs once every
+    /// `cap` evictions — amortized O(1), never reallocates).
+    fn compact(&mut self) {
+        let s = self.start;
+        self.obs.drain(..s);
+        self.tput.drain(..s);
+        self.power.drain(..s);
+        for col in self.dims.iter_mut() {
+            col.drain(..s);
+        }
+        self.start = 0;
     }
 
     pub fn len(&self) -> usize {
-        self.items.len()
+        self.obs.len() - self.start
     }
 
     pub fn is_empty(&self) -> bool {
-        self.items.is_empty()
+        self.len() == 0
     }
 
     pub fn capacity(&self) -> usize {
@@ -49,33 +96,28 @@ impl SlidingWindow {
     }
 
     pub fn iter(&self) -> impl Iterator<Item = &Observation> {
-        self.items.iter()
+        self.obs[self.start..].iter()
     }
 
     pub fn last(&self) -> Option<&Observation> {
-        self.items.last()
+        self.obs.last()
     }
 
-    /// Columnar view: throughput series.
-    pub fn throughputs(&self) -> Vec<f64> {
-        self.items.iter().map(|o| o.throughput_fps).collect()
+    /// Columnar view: throughput series, oldest → newest (zero-copy).
+    pub fn throughputs(&self) -> &[f64] {
+        &self.tput[self.start..]
     }
 
-    /// Columnar view: power series.
-    pub fn powers(&self) -> Vec<f64> {
-        self.items.iter().map(|o| o.power_mw).collect()
+    /// Columnar view: power series (zero-copy).
+    pub fn powers(&self) -> &[f64] {
+        &self.power[self.start..]
     }
 
-    /// Columnar view: one series per configuration dimension, in
-    /// [`HwConfig::DIMS`] order.
-    pub fn setting_dims(&self) -> Vec<Vec<f64>> {
-        let mut dims = vec![Vec::with_capacity(self.items.len()); HwConfig::NDIMS];
-        for o in &self.items {
-            for (d, v) in o.config.as_vec().into_iter().enumerate() {
-                dims[d].push(v);
-            }
-        }
-        dims
+    /// Columnar views: one series per configuration dimension, in
+    /// [`Dim::ALL`](crate::device::Dim) order (zero-copy, fixed array —
+    /// no per-call allocation).
+    pub fn setting_dims(&self) -> [&[f64]; HwConfig::NDIMS] {
+        std::array::from_fn(|d| &self.dims[d][self.start..])
     }
 }
 
@@ -124,5 +166,74 @@ mod tests {
     #[should_panic(expected = "at least 2")]
     fn tiny_capacity_rejected() {
         SlidingWindow::new(1);
+    }
+
+    #[test]
+    fn ring_matches_naive_fifo_over_long_runs() {
+        // Drive well past several compaction cycles and check every view
+        // against a naive FIFO model at each step.
+        for cap in [2usize, 3, 7, 10] {
+            let mut w = SlidingWindow::new(cap);
+            let mut naive: Vec<(u32, f64, f64)> = Vec::new();
+            for i in 0..10 * cap as u32 + 3 {
+                w.push(obs(1000 + i, i as f64, 0.5 * i as f64));
+                naive.push((1000 + i, i as f64, 0.5 * i as f64));
+                if naive.len() > cap {
+                    naive.remove(0);
+                }
+                assert_eq!(w.len(), naive.len());
+                let want_t: Vec<f64> = naive.iter().map(|r| r.1).collect();
+                let want_p: Vec<f64> = naive.iter().map(|r| r.2).collect();
+                let want_cpu: Vec<f64> = naive.iter().map(|r| r.0 as f64).collect();
+                assert_eq!(w.throughputs(), want_t);
+                assert_eq!(w.powers(), want_p);
+                assert_eq!(w.setting_dims()[0], want_cpu);
+                assert_eq!(w.last().unwrap().throughput_fps, naive.last().unwrap().1);
+                let iter_fps: Vec<f64> =
+                    w.iter().map(|o| o.throughput_fps).collect();
+                assert_eq!(iter_fps, want_t);
+            }
+        }
+    }
+
+    #[test]
+    fn steady_state_never_reallocates() {
+        let mut w = SlidingWindow::new(8);
+        for i in 0..8 {
+            w.push(obs(1000 + i, i as f64, 1.0));
+        }
+        let caps = (
+            w.obs.capacity(),
+            w.tput.capacity(),
+            w.power.capacity(),
+            w.dims[0].capacity(),
+        );
+        for i in 0..2000u32 {
+            w.push(obs(2000 + i, i as f64, 1.0));
+        }
+        assert_eq!(
+            caps,
+            (
+                w.obs.capacity(),
+                w.tput.capacity(),
+                w.power.capacity(),
+                w.dims[0].capacity()
+            ),
+            "eviction must not allocate"
+        );
+        assert_eq!(w.len(), 8);
+    }
+
+    #[test]
+    fn large_window_views_stay_contiguous() {
+        let mut w = SlidingWindow::new(1000);
+        for i in 0..2500u32 {
+            w.push(obs(1000 + (i % 500), i as f64, 2.0 * i as f64));
+        }
+        assert_eq!(w.len(), 1000);
+        let t = w.throughputs();
+        assert_eq!(t.len(), 1000);
+        assert_eq!(t[0], 1500.0);
+        assert_eq!(t[999], 2499.0);
     }
 }

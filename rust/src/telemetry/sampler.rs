@@ -58,6 +58,20 @@ impl Sampler {
         Sampler::new(2, 5)
     }
 
+    /// Paper warm-up discipline with an arbitrarily large retained
+    /// window — the fleet-telemetry configuration (W = 100 / 1k / 10k;
+    /// see `experiments::scenarios::WINDOW_SCENARIOS`). Large histories
+    /// feed the O(n log n) dCor engine via [`Sampler::throughput_series`]
+    /// / [`Sampler::power_series`].
+    pub fn with_window(window: usize) -> Sampler {
+        Sampler::new(2, window)
+    }
+
+    /// Retained-window capacity (samples).
+    pub fn window_capacity(&self) -> usize {
+        self.tput.capacity()
+    }
+
     /// Restart warm-up (configuration change).
     pub fn reset(&mut self) {
         *self = Sampler::new(self.warmup, self.tput.capacity());
@@ -85,6 +99,17 @@ impl Sampler {
 
     pub fn is_empty(&self) -> bool {
         self.tput.is_empty()
+    }
+
+    /// Retained throughput samples, oldest → newest (columnar series for
+    /// the correlation analysis).
+    pub fn throughput_series(&self) -> Vec<f64> {
+        self.tput.to_vec()
+    }
+
+    /// Retained power samples, oldest → newest.
+    pub fn power_series(&self) -> Vec<f64> {
+        self.power.to_vec()
     }
 
     /// Aggregate the retained samples (None until at least one retained).
@@ -141,6 +166,26 @@ mod tests {
         sm.reset();
         assert!(sm.window().is_none());
         assert!(!sm.record(s(3.0, 3.0)), "warm-up again after reset");
+    }
+
+    #[test]
+    fn large_window_series_feed_dcor() {
+        // Fleet-scale history: W=1000 retained samples flow straight into
+        // the dCor workspace (fast path at this n) as columnar series.
+        let mut sm = Sampler::with_window(1000);
+        assert_eq!(sm.window_capacity(), 1000);
+        for i in 0..1500 {
+            sm.record(s(i as f64, 2.0 * i as f64));
+        }
+        assert_eq!(sm.len(), 1000);
+        let t = sm.throughput_series();
+        let p = sm.power_series();
+        // Warm-up skips i = 0, 1; ring keeps the last 1000 retained.
+        assert_eq!(t[0], 500.0);
+        assert_eq!(t[999], 1499.0);
+        let mut ws = crate::stats::dcov::DcorWorkspace::new();
+        let m = ws.dcor_matrix(&[&t], std::slice::from_ref(&p));
+        assert!((m[0][0] - 1.0).abs() < 1e-6, "linear series: dcor={}", m[0][0]);
     }
 
     #[test]

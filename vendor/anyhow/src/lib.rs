@@ -1,0 +1,163 @@
+//! Std-only subset of the `anyhow` crate (offline vendor shim).
+//!
+//! Provides the pieces this repository uses: [`Error`] (a flat
+//! message-with-context error), [`Result`], the [`anyhow!`] / [`bail!`]
+//! macros, and the [`Context`] extension trait for `Result` and
+//! `Option`. Context is flattened eagerly into the message
+//! (`"context: cause"`), which matches how the real crate renders with
+//! the alternate `{:#}` format.
+
+use std::fmt::{self, Display};
+
+/// A flattened dynamic error.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Build an error from any displayable message.
+    pub fn msg<M: Display + Send + Sync + 'static>(message: M) -> Error {
+        Error { msg: message.to_string() }
+    }
+
+    /// Attach outer context (rendered as `"context: self"`).
+    pub fn context<C: Display + Send + Sync + 'static>(self, context: C) -> Error {
+        Error { msg: format!("{context}: {}", self.msg) }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+// NOTE: `Error` deliberately does not implement `std::error::Error`; that
+// is what lets the blanket `From` below coexist with `From<T> for T`
+// (same trick as the real crate).
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error { msg: e.to_string() }
+    }
+}
+
+/// `Result` specialized to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Extension trait adding `.context(..)` / `.with_context(..)`.
+pub trait Context<T> {
+    fn context<C: Display + Send + Sync + 'static>(self, context: C) -> Result<T>;
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E: Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: Display + Send + Sync + 'static>(self, context: C) -> Result<T> {
+        self.map_err(|e| Error { msg: format!("{context}: {e}") })
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| Error { msg: format!("{}: {e}", f()) })
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: Display + Send + Sync + 'static>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error { msg: context.to_string() })
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error { msg: f().to_string() })
+    }
+}
+
+/// Construct an [`Error`] from a format string or any displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:literal, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// Early-return with an [`anyhow!`] error.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing")
+    }
+
+    #[test]
+    fn from_std_error_via_question_mark() {
+        fn inner() -> Result<u32> {
+            let r: std::result::Result<u32, std::io::Error> = Err(io_err());
+            let v = r?;
+            Ok(v + 1)
+        }
+        let e = inner().unwrap_err();
+        assert!(e.to_string().contains("missing"));
+    }
+
+    #[test]
+    fn context_on_result_and_option() {
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r.context("loading x").unwrap_err();
+        assert_eq!(e.to_string(), "loading x: missing");
+        let o: Option<u32> = None;
+        let e = o.with_context(|| format!("need {}", "y")).unwrap_err();
+        assert_eq!(e.to_string(), "need y");
+        assert_eq!(Some(3u32).context("ok").unwrap(), 3);
+    }
+
+    #[test]
+    fn macros_cover_all_forms() {
+        let a = anyhow!("plain");
+        assert_eq!(a.to_string(), "plain");
+        let n = 4;
+        let b = anyhow!("got {n} and {}", 5);
+        assert_eq!(b.to_string(), "got 4 and 5");
+        let c = anyhow!(String::from("owned"));
+        assert_eq!(c.to_string(), "owned");
+        fn f() -> Result<()> {
+            bail!("boom {}", 1)
+        }
+        assert_eq!(f().unwrap_err().to_string(), "boom 1");
+    }
+
+    #[test]
+    fn error_msg_as_fn_pointer() {
+        let r: std::result::Result<u8, String> = Err("bad".into());
+        let e = r.map_err(Error::msg).unwrap_err();
+        assert_eq!(e.to_string(), "bad");
+    }
+}

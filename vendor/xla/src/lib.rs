@@ -1,0 +1,133 @@
+//! Stub of the `xla` (xla_extension / PJRT) binding (offline vendor
+//! shim).
+//!
+//! Mirrors the API surface `coral::runtime` uses so the serving stack
+//! compiles everywhere; every entry point that would need the native
+//! xla_extension library returns [`Error::Unavailable`]. Callers
+//! (integration tests, `bench_runtime`, `coral serve`) treat that error
+//! as "runtime not present" and skip. On images bundling xla_extension,
+//! point `rust/Cargo.toml` at the real crate instead.
+
+use std::fmt;
+use std::path::Path;
+
+/// XLA/PJRT error.
+#[derive(Debug, Clone)]
+pub enum Error {
+    /// The native xla_extension backend is not linked into this build.
+    Unavailable(&'static str),
+    /// Any other failure (I/O, parse, shape mismatch).
+    Message(String),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Unavailable(what) => write!(
+                f,
+                "{what}: xla_extension is not available in this build \
+                 (vendor/xla stub; see vendor/README.md)"
+            ),
+            Error::Message(m) => f.write_str(m),
+        }
+    }
+}
+
+impl std::error::Error for Error {}
+
+/// `Result` specialized to [`Error`].
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable<T>(what: &'static str) -> Result<T> {
+    Err(Error::Unavailable(what))
+}
+
+/// PJRT client handle (stub).
+pub struct PjRtClient;
+
+impl PjRtClient {
+    /// CPU PJRT client. Always errors in the stub.
+    pub fn cpu() -> Result<PjRtClient> {
+        unavailable("PjRtClient::cpu")
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unavailable("PjRtClient::compile")
+    }
+}
+
+/// Parsed HLO module proto (stub).
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file<P: AsRef<Path>>(_path: P) -> Result<HloModuleProto> {
+        unavailable("HloModuleProto::from_text_file")
+    }
+}
+
+/// XLA computation wrapper (stub).
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// Compiled executable handle (stub).
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable("PjRtLoadedExecutable::execute")
+    }
+}
+
+/// Device buffer handle (stub).
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable("PjRtBuffer::to_literal_sync")
+    }
+}
+
+/// Host literal (stub).
+pub struct Literal;
+
+impl Literal {
+    pub fn vec1(_data: &[f32]) -> Literal {
+        Literal
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        unavailable("Literal::reshape")
+    }
+
+    pub fn to_tuple2(&self) -> Result<(Literal, Literal)> {
+        unavailable("Literal::to_tuple2")
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        unavailable("Literal::to_vec")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_reports_unavailable_not_panic() {
+        let e = PjRtClient::cpu().err().expect("stub must error");
+        assert!(e.to_string().contains("not available"));
+        assert!(HloModuleProto::from_text_file("x.hlo.txt").is_err());
+        let lit = Literal::vec1(&[0.0; 4]);
+        assert!(lit.reshape(&[1, 2, 2, 1]).is_err());
+        assert!(lit.to_vec::<f32>().is_err());
+    }
+}
