@@ -1,6 +1,8 @@
 //! Dual-constraint showdown: run the paper's full method lineup on one
-//! scenario and print the Fig 5/6-style comparison. Scenario selectable
-//! via env (no CLI parsing in examples):
+//! scenario and print the Fig 5/6-style comparison. Every method drives
+//! through the canonical `control::ControlLoop` (via
+//! `experiments::runner::run_method`). Scenario selectable via env (no
+//! CLI parsing in examples):
 //!
 //! ```sh
 //! cargo run --release --example dual_constraint                 # NX / YOLO

@@ -3,63 +3,43 @@
 //! statistics (feasibility rate, iterations-to-first-feasible, search
 //! cost), plus a multi-model Router demo when artifacts are present.
 //!
+//! The sweep runs thread-parallel through `control::FleetRunner`; per-job
+//! deterministic seeding makes the numbers byte-identical to a
+//! sequential run, just wall-clock faster.
+//!
 //! ```sh
 //! cargo run --release --example fleet_sweep
 //! ```
 
 use std::time::Duration;
 
+use coral::control::{fleet_sweep, FleetRunner};
 use coral::coordinator::{BatcherConfig, Router, Server, ServerConfig};
-use coral::device::Device;
 use coral::experiments::scenarios::DUAL_SCENARIOS;
 use coral::models::{artifacts_dir, Manifest, ModelKind};
-use coral::optimizer::{Constraints, CoralOptimizer, Optimizer};
 use coral::runtime::PjrtRuntime;
 use coral::util::table;
 use coral::workload::VideoSource;
 
 fn main() -> anyhow::Result<()> {
     const SEEDS: u64 = 20;
-    println!("CORAL fleet sweep — all 6 dual-constraint scenarios × {SEEDS} seeds\n");
+    let runner = FleetRunner::auto();
+    println!(
+        "CORAL fleet sweep — all 6 dual-constraint scenarios × {SEEDS} seeds \
+         ({} workers)\n",
+        runner.workers()
+    );
 
+    let stats = fleet_sweep(&DUAL_SCENARIOS, SEEDS, &runner);
     let mut rows = Vec::new();
-    for s in DUAL_SCENARIOS {
-        let cons = Constraints::dual(s.target_fps, s.budget_mw);
-        let mut feasible = 0u64;
-        let mut first_feasible_iters = Vec::new();
-        let mut cost_s = 0.0;
-        for seed in 0..SEEDS {
-            let mut dev = Device::new(s.device, s.model, 0xF1EE7 + seed);
-            let mut opt = CoralOptimizer::new(dev.space().clone(), cons, seed);
-            let mut first = None;
-            for i in 0..10 {
-                let cfg = opt.propose();
-                let m = dev.run(cfg);
-                opt.observe(cfg, m.throughput_fps, m.power_mw);
-                if first.is_none() && cons.feasible(m.throughput_fps, m.power_mw) {
-                    first = Some(i + 1);
-                }
-            }
-            if opt.best().map(|b| b.feasible).unwrap_or(false) {
-                feasible += 1;
-            }
-            if let Some(f) = first {
-                first_feasible_iters.push(f as f64);
-            }
-            cost_s += dev.sim_clock_s();
-        }
-        let mean_first = if first_feasible_iters.is_empty() {
-            f64::NAN
-        } else {
-            first_feasible_iters.iter().sum::<f64>() / first_feasible_iters.len() as f64
-        };
+    for st in &stats {
         rows.push(vec![
-            s.device.name().to_string(),
-            s.model.name().to_string(),
-            format!("{}/{}", s.target_fps, s.budget_mw),
-            format!("{:.0}%", feasible as f64 / SEEDS as f64 * 100.0),
-            format!("{mean_first:.1}"),
-            format!("{:.0}s", cost_s / SEEDS as f64),
+            st.scenario.device.name().to_string(),
+            st.scenario.model.name().to_string(),
+            format!("{}/{}", st.scenario.target_fps, st.scenario.budget_mw),
+            format!("{:.0}%", st.feasible as f64 / SEEDS as f64 * 100.0),
+            format!("{:.1}", st.mean_first_feasible),
+            format!("{:.0}s", st.mean_cost_s),
         ]);
     }
     print!(

@@ -1,14 +1,17 @@
 //! Quickstart: run CORAL against the simulated Jetson Xavier NX under the
 //! paper's dual constraint (30 fps, 6.5 W) and watch it converge in 10
-//! iterations — no artifacts or PJRT needed.
+//! iterations — no artifacts or PJRT needed. The drive loop is the
+//! canonical `control::ControlLoop`, stepped manually for per-iteration
+//! printing.
 //!
 //! ```sh
 //! cargo run --release --example quickstart
 //! ```
 
+use coral::control::{ControlLoop, Environment, SimEnv};
 use coral::device::{Device, DeviceKind};
 use coral::models::ModelKind;
-use coral::optimizer::{Constraints, CoralOptimizer, Optimizer};
+use coral::optimizer::{Constraints, CoralOptimizer};
 
 fn main() {
     let device = DeviceKind::XavierNx;
@@ -16,22 +19,24 @@ fn main() {
     let cons = Constraints::dual(30.0, 6500.0); // paper §IV-B
     println!("CORAL quickstart — {device} / {model}, target 30 fps, budget 6.5 W\n");
 
-    let mut dev = Device::new(device, model, 42);
-    let mut opt = CoralOptimizer::new(dev.space().clone(), cons, 42);
+    let dev = Device::new(device, model, 42);
+    let opt = CoralOptimizer::new(dev.space().clone(), cons, 42);
+    let mut cl = ControlLoop::with_budget(SimEnv::new(dev), opt, cons, 10);
 
-    for i in 0..10 {
-        let cfg = opt.propose();
-        let m = dev.run(cfg);
-        opt.observe(cfg, m.throughput_fps, m.power_mw);
+    while !cl.done() {
+        let step = cl.step();
         println!(
-            "it{i:>2}: {cfg} -> {:5.1} fps @ {:4.2} W {}",
-            m.throughput_fps,
-            m.power_mw / 1000.0,
-            if cons.feasible(m.throughput_fps, m.power_mw) { "  << feasible" } else { "" }
+            "it{:>2}: {} -> {:5.1} fps @ {:4.2} W {}",
+            step.iter,
+            step.config,
+            step.measured.throughput_fps,
+            step.measured.power_mw / 1000.0,
+            if step.feasible { "  << feasible" } else { "" }
         );
     }
 
-    let best = opt.best().expect("observations recorded");
+    let out = cl.outcome();
+    let best = out.best.expect("observations recorded");
     println!(
         "\nchosen: {}\n        {:.1} fps @ {:.2} W  (feasible: {})",
         best.config,
@@ -39,11 +44,12 @@ fn main() {
         best.power_mw / 1000.0,
         best.feasible
     );
+    let raw = cl.env().space().raw_size();
     println!(
         "search cost: {:.0} simulated seconds — vs {:.1} simulated hours for an\n\
          exhaustive ORACLE sweep of {} configurations.",
-        dev.sim_clock_s(),
-        dev.space().raw_size() as f64 * 7.0 / 3600.0,
-        dev.space().raw_size()
+        out.cost_s,
+        raw as f64 * 7.0 / 3600.0,
+        raw
     );
 }

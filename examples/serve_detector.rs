@@ -1,14 +1,17 @@
 //! End-to-end serving driver (the repo's E2E validation, DESIGN.md §5).
 //!
-//! Proves all three layers compose on a real workload:
+//! Proves all three layers compose on a real workload through the
+//! closed-loop engine:
 //!
-//! 1. loads the AOT-compiled JAX/Pallas YOLO detector (`make artifacts`),
-//! 2. serves the synthetic traffic video through the full coordinator
-//!    (router-less single-model path: batcher → worker pool → PJRT), and
-//! 3. runs CORAL *live*: each iteration applies a hardware configuration
-//!    (concurrency level takes effect on the real worker pool; DVFS on
-//!    the Jetson device model that supplies the power/fps telemetry), and
-//!    reports the real serving metrics next to the simulated telemetry.
+//! 1. `control::LiveEnv` loads the AOT-compiled JAX/Pallas YOLO detector
+//!    (`make artifacts`) behind the full coordinator (batcher → worker
+//!    pool → PJRT),
+//! 2. `control::ControlLoop` runs CORAL *live*: each proposal applies
+//!    its concurrency level to the real worker pool, throughput is
+//!    sampled from served traffic with the paper's warm-up discipline,
+//!    and power comes from the Jetson device model, and
+//! 3. without artifacts the environment degrades gracefully to
+//!    sim-backed measurement, so this example always runs.
 //!
 //! ```sh
 //! make artifacts && cargo run --release --example serve_detector
@@ -18,12 +21,11 @@
 
 use std::time::Duration;
 
-use coral::coordinator::{BatcherConfig, Server, ServerConfig};
-use coral::device::{Device, DeviceKind};
-use coral::models::{artifacts_dir, Manifest, ModelKind};
-use coral::optimizer::{Constraints, CoralOptimizer, Optimizer};
-use coral::runtime::PjrtRuntime;
-use coral::workload::VideoSource;
+use coral::control::{ControlLoop, LiveEnv};
+use coral::coordinator::{BatcherConfig, ServerConfig};
+use coral::device::DeviceKind;
+use coral::models::ModelKind;
+use coral::optimizer::{Constraints, CoralOptimizer};
 
 fn main() -> anyhow::Result<()> {
     coral::util::logging::init();
@@ -31,60 +33,61 @@ fn main() -> anyhow::Result<()> {
     let device = DeviceKind::XavierNx;
     let cons = Constraints::dual(30.0, 6500.0);
 
-    // --- Layer 1+2: AOT artifacts → PJRT executables --------------------
-    let manifest = Manifest::load(&artifacts_dir())
-        .map_err(|e| anyhow::anyhow!("{e} — run `make artifacts` first"))?;
-    let rt = PjrtRuntime::cpu()?;
-    println!("PJRT platform: {}", rt.platform());
-    let model_rt = rt.load_model(&manifest, model)?;
-    let side = model_rt.input_side();
-    println!(
-        "loaded {} batch variants of {model} ({}x{side} input)\n",
-        model_rt.batch_sizes().len(),
-        side
-    );
-
-    // --- Layer 3: serving stack + device telemetry ----------------------
-    let mut server = Server::new(
-        model_rt,
+    // --- Layers 1+2: artifacts → PJRT → serving stack (or sim fallback) --
+    let env = LiveEnv::auto(
+        device,
+        model,
+        7,
         ServerConfig {
             concurrency: 1,
             batcher: BatcherConfig { max_batch: 4, max_wait: Duration::from_millis(5) },
         },
-    );
-    let mut video = VideoSource::new(side, 30, 0xCAFE);
-    let mut jetson = Device::new(device, model, 7);
-    let mut opt = CoralOptimizer::new(jetson.space().clone(), cons, 7);
-
-    println!("CORAL tuning the live server ({device} telemetry, 30 fps / 6.5 W):");
-    const FRAMES_PER_WINDOW: u64 = 60;
-    for i in 0..10 {
-        let cfg = opt.propose();
-        // Apply the configuration: concurrency drives the real worker
-        // pool; DVFS drives the Jetson device model.
-        server.set_concurrency(cfg.concurrency as usize);
-        let m = jetson.run(cfg);
-        let report = server.run_closed_loop(&mut video, FRAMES_PER_WINDOW, 8)?;
-        opt.observe(cfg, m.throughput_fps, m.power_mw);
+    )
+    .frames_per_sample(12);
+    if env.is_live() {
+        println!("live serving stack up (PJRT artifacts compiled)");
+    } else {
         println!(
-            "  it{i:>2}: {cfg}\n        jetson: {:5.1} fps @ {:4.2} W {} | local CPU: {:5.1} fps, p50 {:5.1} ms, p99 {:5.1} ms, batch {:.2}",
+            "no PJRT artifacts — degraded to sim-backed measurement \
+             (run `make artifacts` for the live path)"
+        );
+    }
+
+    // --- Layer 3: CORAL in the closed loop -------------------------------
+    let opt = CoralOptimizer::new(env.device().space().clone(), cons, 7);
+    let mut cl = ControlLoop::with_budget(env, opt, cons, 10);
+    println!("CORAL tuning the serving stack ({device} telemetry, 30 fps / 6.5 W):");
+    while !cl.done() {
+        let step = cl.step();
+        let m = step.measured;
+        // The window observation: throughput is live-sampled when a
+        // server is up (sim-backed otherwise); power is always the
+        // device model's.
+        print!(
+            "  it{:>2}: {}\n        window: {:5.1} fps @ {:4.2} W {}",
+            step.iter,
+            step.config,
             m.throughput_fps,
             m.power_mw / 1000.0,
             if m.failed.is_some() {
                 "FAILED"
-            } else if cons.feasible(m.throughput_fps, m.power_mw) {
+            } else if step.feasible {
                 "ok    "
             } else {
                 "infeas"
             },
-            report.throughput_fps,
-            report.latency_p50_ms,
-            report.latency_p99_ms,
-            report.mean_batch,
         );
+        match cl.env().last_report() {
+            Some(r) => println!(
+                " | live CPU: {:5.1} fps, p50 {:5.1} ms, p99 {:5.1} ms, batch {:.2}",
+                r.throughput_fps, r.latency_p50_ms, r.latency_p99_ms, r.mean_batch
+            ),
+            None => println!(),
+        }
     }
 
-    let best = opt.best().expect("observed");
+    let out = cl.outcome();
+    let best = out.best.expect("observed");
     println!(
         "\nCORAL chose {} -> {:.1} fps @ {:.2} W (feasible: {})",
         best.config,
@@ -92,11 +95,18 @@ fn main() -> anyhow::Result<()> {
         best.power_mw / 1000.0,
         best.feasible
     );
+    println!(
+        "search cost: {:.1} s ({} measurement windows)",
+        out.cost_s, out.iters
+    );
 
-    // Steady-state serving at the chosen configuration.
-    server.set_concurrency(best.config.concurrency as usize);
-    let report = server.run_closed_loop(&mut video, 300, 8)?;
-    println!("steady state (300 frames): {report}");
-    println!("total served: {}", server.shutdown());
+    // Steady-state serving at the chosen configuration (live mode only).
+    let mut env = cl.into_env();
+    if let Some(report) = env.steady_state(best.config, 300) {
+        println!("steady state (300 frames): {report}");
+    }
+    if let Some(total) = env.shutdown() {
+        println!("total served: {total}");
+    }
     Ok(())
 }

@@ -4,11 +4,12 @@
 use std::path::Path;
 use std::time::Duration;
 
+use coral::control::{ControlLoop, SimEnv};
 use coral::coordinator::{Batcher, BatcherConfig, PendingRequest};
 use coral::device::{Device, DeviceKind};
 use coral::experiments::ablation;
 use coral::models::ModelKind;
-use coral::optimizer::{Constraints, CoralOptimizer, Optimizer};
+use coral::optimizer::{Constraints, CoralOptimizer};
 use coral::util::bench::Bencher;
 
 fn main() {
@@ -35,19 +36,14 @@ fn main() {
         dev.run(cfg).throughput_fps
     });
 
-    b.bench("coral/propose_observe_cycle_w10", || {
-        let mut dev = Device::new(DeviceKind::XavierNx, ModelKind::Yolo, 1);
-        let mut opt = CoralOptimizer::new(
-            dev.space().clone(),
-            Constraints::dual(30.0, 6500.0),
-            1,
-        );
-        for _ in 0..10 {
-            let cfg = opt.propose();
-            let m = dev.run(cfg);
-            opt.observe(cfg, m.throughput_fps, m.power_mw);
-        }
-        opt.best().map(|b| b.feasible)
+    b.bench("coral/control_loop_search_w10", || {
+        // The full closed loop (propose → measure → observe × 10) through
+        // the canonical engine, including its tracking overhead.
+        let dev = Device::new(DeviceKind::XavierNx, ModelKind::Yolo, 1);
+        let cons = Constraints::dual(30.0, 6500.0);
+        let opt = CoralOptimizer::new(dev.space().clone(), cons, 1);
+        let mut cl = ControlLoop::with_budget(SimEnv::new(dev), opt, cons, 10);
+        cl.run().best.map(|b| b.feasible)
     });
 
     // Design-choice ablations (writes results/ablation.csv).

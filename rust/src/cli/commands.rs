@@ -6,11 +6,12 @@ use std::time::Duration;
 use anyhow::{bail, Context, Result};
 
 use super::args::Args;
+use crate::control::{ControlLoop, SimEnv};
 use crate::coordinator::{BatcherConfig, Server, ServerConfig};
 use crate::device::{failure, Device, DeviceKind, Dim};
 use crate::experiments::{self, runner, scenarios};
 use crate::models::{artifacts_dir, Manifest, ModelKind};
-use crate::optimizer::{Constraints, CoralOptimizer, Optimizer};
+use crate::optimizer::{Constraints, CoralOptimizer};
 use crate::runtime::PjrtRuntime;
 use crate::util::table;
 use crate::workload::VideoSource;
@@ -98,49 +99,48 @@ fn cmd_optimize(args: &Args) -> Result<()> {
 
     let trace_path = args.opt("trace").map(std::path::PathBuf::from);
     if method == "coral" {
-        // Verbose per-iteration trace with the dCor weights.
-        let mut dev = Device::new(device, model, seed);
-        let mut opt = CoralOptimizer::new(dev.space().clone(), cons, seed);
-        let mut trace = crate::workload::Trace::new();
+        // Verbose per-iteration trace with the dCor weights, driven by
+        // the canonical control loop.
+        let dev = Device::new(device, model, seed);
+        let opt = CoralOptimizer::new(dev.space().clone(), cons, seed);
+        let mut cl = ControlLoop::with_budget(SimEnv::new(dev), opt, cons, iters);
         println!(
             "CORAL on {device}/{model} — target {:?} fps, budget {:?} mW",
             cons.throughput_target_fps, cons.power_budget_mw
         );
-        for i in 0..iters {
-            let cfg = opt.propose();
-            let m = dev.run(cfg);
-            trace.record(cfg, m.throughput_fps, m.power_mw);
-            opt.observe(cfg, m.throughput_fps, m.power_mw);
-            let (a, b) = opt.weights();
+        let out = cl.run_observed(|step, opt| {
+            let m = &step.measured;
             println!(
-                "  it{i:>2}: {cfg} -> {:6.1} fps {:6.0} mW {}",
+                "  it{:>2}: {} -> {:6.1} fps {:6.0} mW {}",
+                step.iter,
+                step.config,
                 m.throughput_fps,
                 m.power_mw,
                 if m.failed.is_some() { "[FAILED]" } else { "" }
             );
+            let (a, b) = opt.weights();
             let names: Vec<String> = Dim::ALL
                 .iter()
                 .enumerate()
                 .map(|(d, dim)| format!("{}={:.2}/{:.2}", dim.name(), a[d], b[d]))
                 .collect();
             println!("        dCor(tput/power): {}", names.join(" "));
-        }
-        let best = opt.best().context("no observations")?;
+        });
+        let best = out.best.context("no observations")?;
         println!(
             "\nbest: {} -> {:.1} fps @ {:.0} mW  feasible={} (PS size {})",
             best.config,
             best.throughput_fps,
             best.power_mw,
             best.feasible,
-            opt.prohibited_len()
+            cl.opt().prohibited_len()
         );
         println!(
             "search cost: {:.0} simulated seconds ({} measurement windows)",
-            dev.sim_clock_s(),
-            dev.windows_run()
+            out.cost_s, out.iters
         );
         if let Some(path) = trace_path {
-            trace.save(&path)?;
+            out.trace.save(&path)?;
             println!("trace written to {}", path.display());
         }
     } else {

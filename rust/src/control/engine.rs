@@ -1,0 +1,574 @@
+//! The canonical closed drive loop.
+//!
+//! Every caller that used to hand-roll `propose()/observe()` —
+//! experiments, CLI, examples — now drives through [`ControlLoop`]:
+//! iteration budget, first-feasible tracking, per-search cost accounting
+//! via [`Environment::cost_s`], a recorded [`Trace`], an event log, and
+//! an optional hold phase whose windowed-throughput drift detector hands
+//! control back for a fresh search round when the surface shifts
+//! (thermal throttling, workload change).
+
+use std::collections::VecDeque;
+
+use crate::device::{HwConfig, Measured};
+use crate::optimizer::{BestConfig, Constraints, Optimizer};
+use crate::workload::Trace;
+
+use super::env::Environment;
+
+/// The paper's online iteration budget (§IV-A).
+pub const DEFAULT_BUDGET: usize = 10;
+
+/// Windowed-throughput drift detection tunables.
+#[derive(Debug, Clone, Copy)]
+pub struct DriftConfig {
+    /// Hold-phase windows averaged before comparing to the reference.
+    pub window: usize,
+    /// Relative shift of the windowed mean that re-triggers search.
+    pub rel_threshold: f64,
+}
+
+impl Default for DriftConfig {
+    fn default() -> Self {
+        DriftConfig { window: 5, rel_threshold: 0.1 }
+    }
+}
+
+/// Detects sustained throughput shifts against a reference level.
+#[derive(Debug, Clone)]
+pub struct DriftDetector {
+    cfg: DriftConfig,
+    reference_fps: f64,
+    recent: VecDeque<f64>,
+}
+
+impl DriftDetector {
+    pub fn new(cfg: DriftConfig, reference_fps: f64) -> DriftDetector {
+        assert!(cfg.window >= 1, "drift window must hold a sample");
+        assert!(cfg.rel_threshold > 0.0, "drift threshold must be positive");
+        DriftDetector { cfg, reference_fps, recent: VecDeque::new() }
+    }
+
+    pub fn reference_fps(&self) -> f64 {
+        self.reference_fps
+    }
+
+    /// Feed one throughput sample. Returns the windowed mean when it has
+    /// drifted more than `rel_threshold` from the reference (a single
+    /// noisy window cannot fire; the mean over `window` samples must
+    /// shift).
+    pub fn push(&mut self, throughput_fps: f64) -> Option<f64> {
+        self.recent.push_back(throughput_fps);
+        if self.recent.len() > self.cfg.window {
+            self.recent.pop_front();
+        }
+        if self.recent.len() < self.cfg.window {
+            return None;
+        }
+        let mean = self.recent.iter().sum::<f64>() / self.recent.len() as f64;
+        let denom = self.reference_fps.abs().max(1e-12);
+        if (mean - self.reference_fps).abs() / denom > self.cfg.rel_threshold {
+            Some(mean)
+        } else {
+            None
+        }
+    }
+}
+
+/// Control-loop tunables.
+#[derive(Debug, Clone, Copy)]
+pub struct ControlLoopConfig {
+    /// Online iterations per search round.
+    pub budget: usize,
+    /// Hold-phase drift detection (None = hold never ends early).
+    pub drift: Option<DriftConfig>,
+}
+
+impl Default for ControlLoopConfig {
+    fn default() -> Self {
+        ControlLoopConfig { budget: DEFAULT_BUDGET, drift: None }
+    }
+}
+
+/// Telemetry event log of a control loop's life.
+#[derive(Debug, Clone, Copy)]
+pub enum LoopEvent {
+    /// A search round began (loop creation or [`ControlLoop::restart`]).
+    SearchStarted { at_window: u64 },
+    /// First measurement of the round satisfying the constraints.
+    FirstFeasible { at_window: u64, config: HwConfig },
+    /// A search round ran its full budget.
+    SearchCompleted { at_window: u64, feasible: bool },
+    /// Hold-phase windowed throughput shifted off the chosen config's
+    /// measured level — the caller should re-search.
+    DriftDetected { at_window: u64, reference_fps: f64, observed_fps: f64 },
+    /// A hold phase ran its full length without drifting.
+    HoldCompleted { at_window: u64, windows: u64 },
+}
+
+/// One executed propose → measure → observe iteration.
+#[derive(Debug, Clone, Copy)]
+pub struct Step {
+    /// Global measurement-window counter (searches + holds).
+    pub window: u64,
+    /// 0-based iteration within the current search round.
+    pub iter: usize,
+    /// Proposed (pre-snap) configuration.
+    pub config: HwConfig,
+    /// The measured window (snapped config, metrics, failure).
+    pub measured: Measured,
+    /// Whether this measurement satisfied the constraints.
+    pub feasible: bool,
+    /// Best-so-far after observing this measurement.
+    pub best: Option<BestConfig>,
+}
+
+/// Result of one search round.
+#[derive(Debug, Clone)]
+pub struct LoopOutcome {
+    /// The optimizer's chosen configuration (feasible preferred).
+    pub best: Option<BestConfig>,
+    /// Iterations actually run.
+    pub iters: usize,
+    /// 1-based iteration of the first feasible *measurement* (None when
+    /// the round never measured a feasible window).
+    pub first_feasible_iter: Option<usize>,
+    /// `feasible_by_iter[i]` — was the best-so-far after iteration i
+    /// feasible? (Convergence curves.)
+    pub feasible_by_iter: Vec<bool>,
+    /// Measurement cost this round's search iterations consumed, in
+    /// [`Environment::cost_s`] units (hold-phase windows excluded —
+    /// serving the chosen config is deployment, not search).
+    pub cost_s: f64,
+    /// Every iteration of the round, replayable via
+    /// [`crate::workload::TraceReplay`].
+    pub trace: Trace,
+}
+
+/// Result of a hold phase.
+#[derive(Debug, Clone, Copy)]
+pub struct HoldOutcome {
+    /// Windows measured (≤ requested when drift ended the hold early).
+    pub windows: u64,
+    /// `(reference_fps, observed_windowed_fps)` when drift fired.
+    pub drift: Option<(f64, f64)>,
+}
+
+/// The closed loop: one optimizer driving one environment.
+///
+/// ```text
+/// let mut cl = ControlLoop::with_budget(env, opt, cons, 10);
+/// let outcome = cl.run();            // or: while !cl.done() { cl.step() }
+/// cl.hold(40);                       // serve the chosen config, watch drift
+/// cl.restart(fresh_opt); cl.run();   // re-search after drift
+/// ```
+pub struct ControlLoop<E: Environment, O: Optimizer> {
+    env: E,
+    opt: O,
+    cons: Constraints,
+    cfg: ControlLoopConfig,
+    window: u64,
+    iter: usize,
+    first_feasible: Option<usize>,
+    feasible_by_iter: Vec<bool>,
+    trace: Trace,
+    events: Vec<LoopEvent>,
+    /// Cost consumed by this round's search steps (holds excluded).
+    search_cost_s: f64,
+}
+
+impl<E: Environment, O: Optimizer> ControlLoop<E, O> {
+    pub fn new(env: E, opt: O, cons: Constraints, cfg: ControlLoopConfig) -> Self {
+        ControlLoop {
+            env,
+            opt,
+            cons,
+            cfg,
+            window: 0,
+            iter: 0,
+            first_feasible: None,
+            feasible_by_iter: Vec::new(),
+            trace: Trace::new(),
+            events: vec![LoopEvent::SearchStarted { at_window: 0 }],
+            search_cost_s: 0.0,
+        }
+    }
+
+    /// Default config with an explicit iteration budget.
+    pub fn with_budget(env: E, opt: O, cons: Constraints, budget: usize) -> Self {
+        ControlLoop::new(env, opt, cons, ControlLoopConfig { budget, drift: None })
+    }
+
+    /// Has the current search round exhausted its budget?
+    pub fn done(&self) -> bool {
+        self.iter >= self.cfg.budget
+    }
+
+    /// Run one propose → measure → observe iteration.
+    pub fn step(&mut self) -> Step {
+        assert!(!self.done(), "budget exhausted; restart() begins a new round");
+        let config = self.opt.propose();
+        let cost_before = self.env.cost_s();
+        let m = self.env.measure(config);
+        self.search_cost_s += self.env.cost_s() - cost_before;
+        self.opt.observe(config, m.throughput_fps, m.power_mw);
+        self.trace.record(config, m.throughput_fps, m.power_mw);
+        self.window += 1;
+        self.iter += 1;
+        let feasible = self.cons.feasible(m.throughput_fps, m.power_mw);
+        if feasible && self.first_feasible.is_none() {
+            self.first_feasible = Some(self.iter);
+            self.events
+                .push(LoopEvent::FirstFeasible { at_window: self.window, config });
+        }
+        let best = self.opt.best();
+        self.feasible_by_iter
+            .push(best.map(|b| b.feasible).unwrap_or(false));
+        if self.done() {
+            // Emitted here — not from run() — so manually-stepped loops
+            // log round completion too, exactly once per round.
+            self.events.push(LoopEvent::SearchCompleted {
+                at_window: self.window,
+                feasible: best.map(|b| b.feasible).unwrap_or(false),
+            });
+        }
+        Step {
+            window: self.window,
+            iter: self.iter - 1,
+            config,
+            measured: m,
+            feasible,
+            best,
+        }
+    }
+
+    /// Drive the remaining budget and return the round's outcome.
+    pub fn run(&mut self) -> LoopOutcome {
+        self.run_observed(|_, _| {})
+    }
+
+    /// Like [`ControlLoop::run`], calling `observe` after every step
+    /// (per-iteration reporting with typed optimizer access).
+    pub fn run_observed(&mut self, mut observe: impl FnMut(&Step, &O)) -> LoopOutcome {
+        while !self.done() {
+            let step = self.step();
+            observe(&step, &self.opt);
+        }
+        self.outcome()
+    }
+
+    /// Snapshot of the current round's outcome.
+    pub fn outcome(&self) -> LoopOutcome {
+        LoopOutcome {
+            best: self.opt.best(),
+            iters: self.iter,
+            first_feasible_iter: self.first_feasible,
+            feasible_by_iter: self.feasible_by_iter.clone(),
+            cost_s: self.search_cost_s,
+            trace: self.trace.clone(),
+        }
+    }
+
+    /// Hold the chosen configuration for up to `windows` measurement
+    /// windows (deployment between searches). With drift detection
+    /// configured, the hold ends early — with a [`LoopEvent::DriftDetected`]
+    /// event — once the windowed throughput shifts off the level the
+    /// configuration was chosen at; the caller then [`ControlLoop::restart`]s.
+    pub fn hold(&mut self, windows: u64) -> HoldOutcome {
+        let best = match self.opt.best() {
+            Some(b) => b,
+            None => return HoldOutcome { windows: 0, drift: None },
+        };
+        let mut detector = self
+            .cfg
+            .drift
+            .map(|d| DriftDetector::new(d, best.throughput_fps));
+        for w in 0..windows {
+            let m = self.env.measure(best.config);
+            self.window += 1;
+            if let Some(det) = detector.as_mut() {
+                if let Some(observed) = det.push(m.throughput_fps) {
+                    self.events.push(LoopEvent::DriftDetected {
+                        at_window: self.window,
+                        reference_fps: best.throughput_fps,
+                        observed_fps: observed,
+                    });
+                    return HoldOutcome {
+                        windows: w + 1,
+                        drift: Some((best.throughput_fps, observed)),
+                    };
+                }
+            }
+        }
+        self.events
+            .push(LoopEvent::HoldCompleted { at_window: self.window, windows });
+        HoldOutcome { windows, drift: None }
+    }
+
+    /// Begin a fresh search round with a new optimizer (drift response,
+    /// periodic re-tune). The environment — including its accumulated
+    /// state: thermal history, clocks, cost — the global window counter,
+    /// and the event log all carry over; per-round trackers reset.
+    pub fn restart(&mut self, opt: O) {
+        self.opt = opt;
+        self.iter = 0;
+        self.first_feasible = None;
+        self.feasible_by_iter.clear();
+        self.trace = Trace::new();
+        self.search_cost_s = 0.0;
+        self.events
+            .push(LoopEvent::SearchStarted { at_window: self.window });
+    }
+
+    /// Total measurement windows across all rounds and holds.
+    pub fn windows(&self) -> u64 {
+        self.window
+    }
+
+    pub fn events(&self) -> &[LoopEvent] {
+        &self.events
+    }
+
+    pub fn cons(&self) -> Constraints {
+        self.cons
+    }
+
+    pub fn env(&self) -> &E {
+        &self.env
+    }
+
+    pub fn env_mut(&mut self) -> &mut E {
+        &mut self.env
+    }
+
+    pub fn opt(&self) -> &O {
+        &self.opt
+    }
+
+    pub fn opt_mut(&mut self) -> &mut O {
+        &mut self.opt
+    }
+
+    pub fn into_env(self) -> E {
+        self.env
+    }
+
+    pub fn into_parts(self) -> (E, O) {
+        (self.env, self.opt)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::control::env::SimEnv;
+    use crate::device::sim::{SAMPLES_PER_WINDOW, WARMUP_S};
+    use crate::device::{ConfigSpace, Device, DeviceKind};
+    use crate::models::ModelKind;
+    use crate::optimizer::{CoralOptimizer, RandomOptimizer};
+
+    /// Scripted environment: constant throughput that steps down after
+    /// `step_after` windows (a workload/thermal shift in miniature).
+    struct StepEnv {
+        space: ConfigSpace,
+        windows: u64,
+        step_after: u64,
+        cost: f64,
+    }
+
+    impl StepEnv {
+        fn new(step_after: u64) -> StepEnv {
+            StepEnv {
+                space: DeviceKind::XavierNx.space(),
+                windows: 0,
+                step_after,
+                cost: 0.0,
+            }
+        }
+    }
+
+    impl Environment for StepEnv {
+        fn measure(&mut self, cfg: HwConfig) -> Measured {
+            self.windows += 1;
+            self.cost += 7.0;
+            let fps = if self.windows > self.step_after { 15.0 } else { 30.0 };
+            Measured {
+                config: cfg,
+                throughput_fps: fps,
+                power_mw: 5000.0,
+                latency_ms: 10.0,
+                gpu_util: 0.5,
+                cpu_util: 0.5,
+                mem_util: 0.5,
+                failed: None,
+            }
+        }
+
+        fn space(&self) -> &ConfigSpace {
+            &self.space
+        }
+
+        fn cost_s(&self) -> f64 {
+            self.cost
+        }
+    }
+
+    fn coral_loop(seed: u64) -> ControlLoop<SimEnv, CoralOptimizer> {
+        let dev = Device::new(DeviceKind::XavierNx, ModelKind::Yolo, seed);
+        let cons = Constraints::dual(30.0, 6500.0);
+        let opt = CoralOptimizer::new(dev.space().clone(), cons, seed);
+        ControlLoop::with_budget(SimEnv::new(dev), opt, cons, 10)
+    }
+
+    fn trajectory(seed: u64) -> Vec<(HwConfig, f64, f64)> {
+        coral_loop(seed)
+            .run()
+            .trace
+            .steps
+            .iter()
+            .map(|s| (s.config, s.throughput_fps, s.power_mw))
+            .collect()
+    }
+
+    #[test]
+    fn same_seed_identical_trajectory_different_seed_diverges() {
+        assert_eq!(trajectory(5), trajectory(5), "determinism across runs");
+        assert_ne!(
+            trajectory(5),
+            trajectory(6),
+            "seeds drive distinct measurement noise"
+        );
+    }
+
+    #[test]
+    fn cost_and_windows_account_every_iteration() {
+        let mut cl = coral_loop(1);
+        let out = cl.run();
+        assert_eq!(out.iters, 10);
+        assert_eq!(out.trace.len(), 10);
+        assert_eq!(out.feasible_by_iter.len(), 10);
+        assert_eq!(cl.windows(), 10);
+        let per_window = WARMUP_S + SAMPLES_PER_WINDOW as f64;
+        assert!((out.cost_s - 10.0 * per_window).abs() < 1e-9);
+        // Best-so-far feasibility is monotone.
+        assert!(out
+            .feasible_by_iter
+            .windows(2)
+            .all(|w| w[1] as u8 >= w[0] as u8));
+    }
+
+    #[test]
+    fn first_feasible_is_one_based_and_logged() {
+        let mut hits = 0;
+        for seed in 0..8 {
+            let mut cl = coral_loop(seed);
+            let out = cl.run();
+            if let Some(first) = out.first_feasible_iter {
+                hits += 1;
+                assert!((1..=10).contains(&first), "1-based within budget");
+                assert!(cl
+                    .events()
+                    .iter()
+                    .any(|e| matches!(e, LoopEvent::FirstFeasible { .. })));
+            }
+            assert!(cl
+                .events()
+                .iter()
+                .any(|e| matches!(e, LoopEvent::SearchCompleted { .. })));
+        }
+        assert!(hits >= 5, "coral reaches the region in most seeds: {hits}/8");
+    }
+
+    #[test]
+    fn drift_retriggers_on_throughput_step_change() {
+        // 3 search windows at 30 fps, then the environment steps down to
+        // 15 fps: the hold's windowed mean shifts and drift must fire.
+        let env = StepEnv::new(3);
+        let cons = Constraints::none();
+        let opt = RandomOptimizer::new(DeviceKind::XavierNx.space(), cons, 1);
+        let cfg = ControlLoopConfig {
+            budget: 3,
+            drift: Some(DriftConfig { window: 4, rel_threshold: 0.2 }),
+        };
+        let mut cl = ControlLoop::new(env, opt, cons, cfg);
+        let out = cl.run();
+        assert_eq!(out.best.unwrap().throughput_fps, 30.0);
+        let hold = cl.hold(20);
+        assert_eq!(hold.windows, 4, "fires as soon as the window fills");
+        let (reference, observed) = hold.drift.expect("step change must be detected");
+        assert_eq!(reference, 30.0);
+        assert_eq!(observed, 15.0);
+        assert!(cl
+            .events()
+            .iter()
+            .any(|e| matches!(e, LoopEvent::DriftDetected { .. })));
+        // A fresh round on the shifted surface re-converges to the new level.
+        cl.restart(RandomOptimizer::new(DeviceKind::XavierNx.space(), cons, 2));
+        let out2 = cl.run();
+        assert_eq!(out2.iters, 3);
+        assert_eq!(out2.best.unwrap().throughput_fps, 15.0);
+    }
+
+    #[test]
+    fn steady_hold_runs_full_length_without_drift() {
+        let env = StepEnv::new(u64::MAX); // never steps
+        let cons = Constraints::none();
+        let opt = RandomOptimizer::new(DeviceKind::XavierNx.space(), cons, 1);
+        let cfg = ControlLoopConfig {
+            budget: 2,
+            drift: Some(DriftConfig::default()),
+        };
+        let mut cl = ControlLoop::new(env, opt, cons, cfg);
+        cl.run();
+        let hold = cl.hold(12);
+        assert_eq!(hold.windows, 12);
+        assert!(hold.drift.is_none());
+        // Hold windows are deployment, not search: round cost unchanged.
+        assert!((cl.outcome().cost_s - 2.0 * 7.0).abs() < 1e-9);
+        assert!(cl
+            .events()
+            .iter()
+            .any(|e| matches!(e, LoopEvent::HoldCompleted { .. })));
+        assert_eq!(cl.windows(), 2 + 12);
+    }
+
+    #[test]
+    fn restart_resets_round_state_but_keeps_environment() {
+        let mut cl = coral_loop(4);
+        let out1 = cl.run();
+        let cost1 = cl.env().cost_s();
+        assert!(cost1 > 0.0);
+        let dev_windows = cl.env().device().windows_run();
+        cl.restart(CoralOptimizer::new(
+            cl.env().space().clone(),
+            cl.cons(),
+            99,
+        ));
+        assert!(!cl.done());
+        assert_eq!(cl.outcome().iters, 0);
+        assert!(cl.outcome().trace.is_empty());
+        let out2 = cl.run();
+        assert_eq!(out2.iters, 10);
+        // Per-round cost restarts; environment clock keeps running.
+        assert!((out1.cost_s - out2.cost_s).abs() < 1e-9);
+        assert_eq!(cl.env().device().windows_run(), dev_windows + 10);
+    }
+
+    #[test]
+    fn drift_detector_ignores_noise_within_threshold() {
+        let mut det = DriftDetector::new(
+            DriftConfig { window: 3, rel_threshold: 0.1 },
+            100.0,
+        );
+        assert!(det.push(103.0).is_none(), "window not full yet");
+        assert!(det.push(97.0).is_none());
+        assert!(det.push(101.0).is_none(), "mean within 10%");
+        assert!(det.push(104.0).is_none());
+        assert_eq!(det.reference_fps(), 100.0);
+        // Sustained sag pushes the windowed mean past the threshold.
+        for fps in [85.0, 85.0] {
+            det.push(fps);
+        }
+        assert!(det.push(85.0).is_some(), "mean 85 vs reference 100");
+    }
+}

@@ -1,0 +1,540 @@
+//! Measurement environments: where an optimizer's proposals get turned
+//! into observed (throughput, power) windows.
+//!
+//! The paper evaluates on physical Jetson boards; this repo historically
+//! only ever measured the simulator, with the drive loop copy-pasted at
+//! every call site. [`Environment`] makes the measurement side a trait,
+//! so the one canonical [`super::ControlLoop`] drives:
+//!
+//! * [`SimEnv`] — the simulated Jetson ([`Device`]); cost is simulated
+//!   seconds.
+//! * [`LiveEnv`] — the real serving stack ([`Server`]): proposals apply
+//!   their concurrency level to the live worker pool, throughput is
+//!   sampled from served traffic through [`Sampler`] with the paper's
+//!   warm-up discipline, power comes from the device model (a dev box
+//!   has no INA3221 power rails), and the whole thing degrades
+//!   gracefully to sim-backed windows when no PJRT artifacts exist.
+//! * [`FleetEnv`] — many simulated boards measured per proposal (one
+//!   thread per member), observing fleet-mean metrics.
+
+use std::time::Instant;
+
+use crate::coordinator::{Server, ServerConfig, ServeReport};
+use crate::device::sim::SAMPLES_PER_WINDOW;
+use crate::device::{ConfigSpace, Device, DeviceKind, HwConfig, Measured};
+use crate::models::{artifacts_dir, Manifest, ModelKind};
+use crate::runtime::PjrtRuntime;
+use crate::telemetry::{Sample, Sampler};
+use crate::workload::VideoSource;
+
+/// A place where hardware configurations can be applied and measured.
+///
+/// One `measure` call is one of the paper's measurement windows: apply
+/// the configuration, warm up, observe aggregated throughput and power.
+pub trait Environment {
+    /// Apply `cfg` and run one measurement window.
+    fn measure(&mut self, cfg: HwConfig) -> Measured;
+
+    /// The configuration space proposals must come from.
+    fn space(&self) -> &ConfigSpace;
+
+    /// Total measurement cost so far, in seconds. Simulated environments
+    /// report simulated seconds; live ones report wall-clock spent
+    /// serving. The control loop reports per-search deltas of this, so
+    /// search cost is accounted uniformly (no more ad-hoc
+    /// `sim_clock_s()` reads at call sites).
+    fn cost_s(&self) -> f64;
+}
+
+/// The simulated Jetson board as an [`Environment`].
+#[derive(Debug, Clone)]
+pub struct SimEnv {
+    dev: Device,
+}
+
+impl SimEnv {
+    pub fn new(dev: Device) -> SimEnv {
+        SimEnv { dev }
+    }
+
+    /// The underlying simulated device (thermal state, window counts).
+    pub fn device(&self) -> &Device {
+        &self.dev
+    }
+
+    pub fn device_mut(&mut self) -> &mut Device {
+        &mut self.dev
+    }
+
+    pub fn into_device(self) -> Device {
+        self.dev
+    }
+}
+
+impl Environment for SimEnv {
+    fn measure(&mut self, cfg: HwConfig) -> Measured {
+        self.dev.run(cfg)
+    }
+
+    fn space(&self) -> &ConfigSpace {
+        self.dev.space()
+    }
+
+    fn cost_s(&self) -> f64 {
+        self.dev.sim_clock_s()
+    }
+}
+
+/// The live serving stack behind [`LiveEnv`].
+struct LiveBackend {
+    server: Server,
+    video: VideoSource,
+}
+
+/// The live serving stack as an [`Environment`].
+///
+/// Each `measure` applies the proposal's concurrency level to the real
+/// worker pool, serves synthetic traffic video in sample-sized chunks,
+/// and records per-chunk throughput into a [`Sampler`] (first two
+/// chunks after a reconfiguration discarded — the paper's 2-sample
+/// warm-up discipline).
+/// Power always comes from the device model's DVFS state: a development
+/// box has no module power rails, so the simulator is the wattmeter.
+///
+/// Without AOT artifacts / a PJRT backend there is no server to drive;
+/// the environment then degrades to fully sim-backed windows so every
+/// caller keeps working (see [`LiveEnv::auto`]).
+pub struct LiveEnv {
+    /// DVFS + power model; also the throughput fallback without PJRT.
+    sim: Device,
+    backend: Option<LiveBackend>,
+    sampler: Sampler,
+    frames_per_sample: u64,
+    inflight: usize,
+    serving_wall_s: f64,
+    last_report: Option<ServeReport>,
+}
+
+impl LiveEnv {
+    /// Degraded mode: every window is answered by the device simulator.
+    pub fn sim_backed(sim: Device) -> LiveEnv {
+        LiveEnv {
+            sim,
+            backend: None,
+            // The paper's measurement discipline: 2 warm-up samples
+            // discarded after every reconfiguration, then the retained
+            // window (Sampler::paper_default's shape).
+            sampler: Sampler::new(2, SAMPLES_PER_WINDOW),
+            frames_per_sample: 12,
+            inflight: 8,
+            serving_wall_s: 0.0,
+            last_report: None,
+        }
+    }
+
+    /// Live mode over an already-built server. `video` must match the
+    /// server's model input side.
+    pub fn with_server(sim: Device, server: Server, video: VideoSource) -> LiveEnv {
+        assert_eq!(
+            video.side(),
+            server.input_side(),
+            "video side must match the served model input"
+        );
+        let mut env = LiveEnv::sim_backed(sim);
+        env.backend = Some(LiveBackend { server, video });
+        env
+    }
+
+    /// Build the live stack when AOT artifacts + a PJRT backend exist,
+    /// degrading to [`LiveEnv::sim_backed`] (with a logged reason)
+    /// otherwise.
+    pub fn auto(kind: DeviceKind, model: ModelKind, seed: u64, cfg: ServerConfig) -> LiveEnv {
+        let sim = Device::new(kind, model, seed);
+        match Self::try_backend(model, seed, cfg) {
+            Ok(backend) => {
+                let mut env = LiveEnv::sim_backed(sim);
+                env.backend = Some(backend);
+                env
+            }
+            Err(e) => {
+                log::warn!("live serving unavailable ({e}); measuring sim-backed");
+                LiveEnv::sim_backed(sim)
+            }
+        }
+    }
+
+    fn try_backend(model: ModelKind, seed: u64, cfg: ServerConfig) -> anyhow::Result<LiveBackend> {
+        let manifest = Manifest::load(&artifacts_dir())?;
+        let rt = PjrtRuntime::cpu()?;
+        let model_rt = rt.load_model(&manifest, model)?;
+        let side = model_rt.input_side();
+        Ok(LiveBackend {
+            server: Server::new(model_rt, cfg),
+            video: VideoSource::new(side, 30, seed),
+        })
+    }
+
+    /// Frames served per telemetry sample (per chunk of the closed loop).
+    pub fn frames_per_sample(mut self, frames: u64) -> LiveEnv {
+        self.frames_per_sample = frames.max(1);
+        self
+    }
+
+    /// Outstanding frames kept in flight while serving.
+    pub fn inflight(mut self, inflight: usize) -> LiveEnv {
+        self.inflight = inflight.max(1);
+        self
+    }
+
+    /// Whether a real serving stack answers measurements.
+    pub fn is_live(&self) -> bool {
+        self.backend.is_some()
+    }
+
+    /// The device model supplying DVFS state and power.
+    pub fn device(&self) -> &Device {
+        &self.sim
+    }
+
+    /// Serving report of the most recent live chunk.
+    pub fn last_report(&self) -> Option<&ServeReport> {
+        self.last_report.as_ref()
+    }
+
+    /// Serve `frames` at `cfg` in steady state on the live stack.
+    /// Returns `None` when sim-backed (or when serving fails).
+    pub fn steady_state(&mut self, cfg: HwConfig, frames: u64) -> Option<ServeReport> {
+        let applied = self.sim.apply(cfg);
+        let b = self.backend.as_mut()?;
+        b.server.set_concurrency(applied.concurrency as usize);
+        b.server.reset_window_metrics();
+        match b.server.run_closed_loop(&mut b.video, frames, self.inflight) {
+            Ok(report) => Some(report),
+            Err(e) => {
+                log::warn!("steady-state serving failed: {e}");
+                None
+            }
+        }
+    }
+
+    /// Shut the serving stack down; total frames served when live.
+    pub fn shutdown(self) -> Option<u64> {
+        self.backend.map(|b| b.server.shutdown())
+    }
+}
+
+impl Environment for LiveEnv {
+    fn measure(&mut self, cfg: HwConfig) -> Measured {
+        // The sim layer first: it applies/snaps the DVFS state, models
+        // power, and catches config failures before they hit the server.
+        let sim_m = self.sim.run(cfg);
+        // A stale serving report must not outlive the window it belongs
+        // to: windows answered without serving (sim-backed, vetoed
+        // config) report no live stats.
+        self.last_report = None;
+        // Vetoed configs never reach the server: the device model
+        // detects the failure instantly, so in live mode they genuinely
+        // cost ~no wall-clock (on physical hardware the crash would
+        // consume a window — the sim clock still records that view).
+        if self.backend.is_none() || sim_m.failed.is_some() {
+            return sim_m;
+        }
+        let backend = self.backend.as_mut().expect("live mode checked above");
+
+        backend.server.set_concurrency(sim_m.config.concurrency as usize);
+        self.sampler.reset(); // reconfiguration restarts warm-up
+        let t0 = Instant::now();
+        let mut lat_ms_sum = 0.0;
+        let mut lat_chunks = 0u32;
+        while self.sampler.len() < SAMPLES_PER_WINDOW {
+            // Percentiles must describe this chunk, not the server's
+            // lifetime — reset the distribution buffers per chunk.
+            backend.server.reset_window_metrics();
+            match backend.server.run_closed_loop(
+                &mut backend.video,
+                self.frames_per_sample,
+                self.inflight,
+            ) {
+                Ok(report) => {
+                    let retained = self.sampler.record(Sample {
+                        throughput_fps: report.throughput_fps,
+                        power_mw: sim_m.power_mw,
+                        gpu_util: sim_m.gpu_util,
+                        cpu_util: sim_m.cpu_util,
+                        mem_util: sim_m.mem_util,
+                    });
+                    if retained {
+                        // Window latency aggregates the retained chunks,
+                        // same discipline as throughput.
+                        lat_ms_sum += report.latency_p50_ms;
+                        lat_chunks += 1;
+                    }
+                    self.last_report = Some(report);
+                }
+                Err(e) => {
+                    log::warn!("live measurement failed ({e}); falling back to sim window");
+                    self.serving_wall_s += t0.elapsed().as_secs_f64();
+                    // The aborted window's partial chunks are not this
+                    // window's stats: the returned measurement is
+                    // sim-backed, so report no live stats for it.
+                    self.last_report = None;
+                    return sim_m;
+                }
+            }
+        }
+        self.serving_wall_s += t0.elapsed().as_secs_f64();
+        let w = self.sampler.window().expect("retained samples exist");
+        Measured {
+            config: sim_m.config,
+            throughput_fps: w.throughput_fps,
+            power_mw: sim_m.power_mw,
+            latency_ms: if lat_chunks > 0 {
+                lat_ms_sum / lat_chunks as f64
+            } else {
+                sim_m.latency_ms
+            },
+            gpu_util: sim_m.gpu_util,
+            cpu_util: sim_m.cpu_util,
+            mem_util: sim_m.mem_util,
+            failed: None,
+        }
+    }
+
+    fn space(&self) -> &ConfigSpace {
+        self.sim.space()
+    }
+
+    fn cost_s(&self) -> f64 {
+        if self.backend.is_some() {
+            self.serving_wall_s
+        } else {
+            self.sim.sim_clock_s()
+        }
+    }
+}
+
+/// A fleet of simulated boards measured together, as an [`Environment`].
+///
+/// One proposal is applied to every member; the observation the
+/// optimizer sees is the fleet mean (a config that crashes any member is
+/// prohibited fleet-wide). Members are measured on one thread each;
+/// results are aggregated in member order, so the parallel measurement
+/// is byte-identical to the sequential one — thread timing can change
+/// wall-clock, never numbers.
+///
+/// The thread-per-member fan-out models real fleet measurement, where a
+/// window costs seconds per board; for the microsecond-scale simulated
+/// `Device::run` the spawn overhead exceeds the work, so sim-only
+/// benchmarking should use [`FleetEnv::sequential`] (a persistent
+/// worker pool is a ROADMAP open item).
+pub struct FleetEnv {
+    members: Vec<Device>,
+    parallel: bool,
+}
+
+impl FleetEnv {
+    /// A fleet from explicit members. All members must share a device
+    /// kind (one configuration space).
+    pub fn new(members: Vec<Device>) -> FleetEnv {
+        assert!(!members.is_empty(), "a fleet needs at least one device");
+        let kind = members[0].kind();
+        assert!(
+            members.iter().all(|d| d.kind() == kind),
+            "fleet members must share one configuration space"
+        );
+        FleetEnv { members, parallel: true }
+    }
+
+    /// `n` same-model replicas with per-member seeds (chip lottery +
+    /// independent noise), seeded `base_seed..base_seed + n`.
+    pub fn replicas(kind: DeviceKind, model: ModelKind, n: usize, base_seed: u64) -> FleetEnv {
+        FleetEnv::new(
+            (0..n)
+                .map(|i| Device::new(kind, model, base_seed + i as u64))
+                .collect(),
+        )
+    }
+
+    /// Measure members sequentially on the caller's thread (identical
+    /// results; used to assert the parallel path byte-for-byte).
+    pub fn sequential(mut self) -> FleetEnv {
+        self.parallel = false;
+        self
+    }
+
+    pub fn len(&self) -> usize {
+        self.members.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.members.is_empty()
+    }
+
+    pub fn members(&self) -> &[Device] {
+        &self.members
+    }
+
+    /// Aggregate per-member windows, in member order.
+    fn combine(results: &[Measured]) -> Measured {
+        let n = results.len() as f64;
+        let mean = |f: fn(&Measured) -> f64| results.iter().map(f).sum::<f64>() / n;
+        if let Some(failed) = results.iter().find(|m| m.failed.is_some()) {
+            // One crashed member prohibits the config fleet-wide; the
+            // surviving boards still draw power.
+            return Measured {
+                config: results[0].config,
+                throughput_fps: 0.0,
+                power_mw: mean(|m| m.power_mw),
+                latency_ms: f64::INFINITY,
+                gpu_util: 0.0,
+                cpu_util: 0.0,
+                mem_util: 0.0,
+                failed: failed.failed,
+            };
+        }
+        Measured {
+            config: results[0].config,
+            throughput_fps: mean(|m| m.throughput_fps),
+            power_mw: mean(|m| m.power_mw),
+            latency_ms: mean(|m| m.latency_ms),
+            gpu_util: mean(|m| m.gpu_util),
+            cpu_util: mean(|m| m.cpu_util),
+            mem_util: mean(|m| m.mem_util),
+            failed: None,
+        }
+    }
+}
+
+impl Environment for FleetEnv {
+    fn measure(&mut self, cfg: HwConfig) -> Measured {
+        let results: Vec<Measured> = if self.parallel && self.members.len() > 1 {
+            // One thread per member; members are moved out and rejoined
+            // in order, so aggregation order never depends on timing.
+            let handles: Vec<_> = self
+                .members
+                .drain(..)
+                .map(|mut dev| {
+                    std::thread::spawn(move || {
+                        let m = dev.run(cfg);
+                        (dev, m)
+                    })
+                })
+                .collect();
+            let mut out = Vec::with_capacity(handles.len());
+            for h in handles {
+                let (dev, m) = h.join().expect("fleet member panicked");
+                self.members.push(dev);
+                out.push(m);
+            }
+            out
+        } else {
+            self.members.iter_mut().map(|d| d.run(cfg)).collect()
+        };
+        FleetEnv::combine(&results)
+    }
+
+    fn space(&self) -> &ConfigSpace {
+        self.members[0].space()
+    }
+
+    /// Fleet members measure concurrently, so wall-clock cost is the
+    /// slowest member, not the sum.
+    fn cost_s(&self) -> f64 {
+        self.members
+            .iter()
+            .map(|d| d.sim_clock_s())
+            .fold(0.0, f64::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::sim::WARMUP_S;
+
+    #[test]
+    fn sim_env_measures_and_accounts_cost() {
+        let mut env = SimEnv::new(Device::new(DeviceKind::XavierNx, ModelKind::Yolo, 1));
+        let cfg = env.space().midpoint();
+        let m = env.measure(cfg);
+        assert!(m.throughput_fps > 0.0);
+        let per_window = WARMUP_S + SAMPLES_PER_WINDOW as f64;
+        assert!((env.cost_s() - per_window).abs() < 1e-9);
+        assert_eq!(env.device().windows_run(), 1);
+    }
+
+    #[test]
+    fn live_env_degrades_to_sim_without_artifacts() {
+        // In the offline container PJRT construction fails, so `auto`
+        // must fall back to sim-backed windows and keep measuring.
+        let mut env = LiveEnv::auto(
+            DeviceKind::XavierNx,
+            ModelKind::Yolo,
+            1,
+            ServerConfig::default(),
+        );
+        let cfg = env.space().midpoint();
+        let m = env.measure(cfg);
+        assert!(m.throughput_fps > 0.0);
+        assert!(m.power_mw > 0.0);
+        assert!(env.cost_s() > 0.0);
+        if !env.is_live() {
+            assert!(env.last_report().is_none());
+        }
+        assert!(env.steady_state(cfg, 10).is_some() == env.is_live());
+    }
+
+    #[test]
+    fn live_env_sim_backed_matches_plain_device() {
+        let mut dev = Device::new(DeviceKind::OrinNano, ModelKind::Yolo, 9);
+        let mut env = LiveEnv::sim_backed(Device::new(DeviceKind::OrinNano, ModelKind::Yolo, 9));
+        let cfg = dev.space().midpoint();
+        assert_eq!(env.measure(cfg), dev.run(cfg));
+        assert_eq!(env.cost_s(), dev.sim_clock_s());
+    }
+
+    #[test]
+    fn fleet_parallel_matches_sequential_byte_for_byte() {
+        let mut par = FleetEnv::replicas(DeviceKind::OrinNano, ModelKind::Yolo, 4, 0x99);
+        let mut seq =
+            FleetEnv::replicas(DeviceKind::OrinNano, ModelKind::Yolo, 4, 0x99).sequential();
+        assert_eq!(par.len(), 4);
+        let space = par.space().clone();
+        let cfgs = [
+            space.midpoint(),
+            DeviceKind::OrinNano.preset_default(),
+            DeviceKind::OrinNano.preset_max_power(),
+        ];
+        for cfg in cfgs {
+            let a = par.measure(cfg);
+            let b = seq.measure(cfg);
+            assert_eq!(a, b, "parallel fleet must be bit-identical");
+        }
+        assert_eq!(par.cost_s(), seq.cost_s());
+        assert!(par.cost_s() > 0.0);
+    }
+
+    #[test]
+    fn fleet_mean_smooths_member_noise() {
+        let mut one = FleetEnv::replicas(DeviceKind::XavierNx, ModelKind::Yolo, 1, 7);
+        let mut many = FleetEnv::replicas(DeviceKind::XavierNx, ModelKind::Yolo, 8, 7);
+        let cfg = one.space().midpoint();
+        let a = one.measure(cfg);
+        let b = many.measure(cfg);
+        // Same surface, different aggregation width: both near truth.
+        let rel = (a.throughput_fps - b.throughput_fps).abs() / a.throughput_fps;
+        assert!(rel < 0.1, "fleet mean wildly off: {rel}");
+    }
+
+    #[test]
+    fn fleet_prohibits_configs_that_crash_any_member() {
+        // RetinaNet at max concurrency exceeds the NX memory budget.
+        let mut fleet = FleetEnv::replicas(DeviceKind::XavierNx, ModelKind::RetinaNet, 3, 5);
+        let mut cfg = fleet.space().midpoint();
+        cfg.concurrency = 3;
+        let m = fleet.measure(cfg);
+        assert!(m.failed.is_some());
+        assert_eq!(m.throughput_fps, 0.0);
+        assert!(m.power_mw > 0.0, "surviving boards still draw power");
+    }
+}

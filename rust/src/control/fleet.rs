@@ -1,0 +1,204 @@
+//! Fleet-parallel control: run many independent control loops on OS
+//! threads without changing a single number.
+//!
+//! Every job owns its RNG seed and results land by job index, so the
+//! parallel schedule affects wall-clock only — `fleet_sweep` over any
+//! worker count is asserted byte-identical to the sequential run.
+
+use std::sync::Arc;
+
+use crate::device::Device;
+use crate::experiments::scenarios::DualScenario;
+use crate::optimizer::{Constraints, CoralOptimizer};
+
+use super::engine::{ControlLoop, DEFAULT_BUDGET};
+use super::env::SimEnv;
+
+/// A deterministic parallel job runner over OS threads.
+pub struct FleetRunner {
+    workers: usize,
+}
+
+impl FleetRunner {
+    pub fn new(workers: usize) -> FleetRunner {
+        assert!(workers >= 1, "need at least one worker");
+        FleetRunner { workers }
+    }
+
+    /// One worker per available CPU (at least 2).
+    pub fn auto() -> FleetRunner {
+        let workers = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(2);
+        FleetRunner::new(workers.max(2))
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Parallel map preserving job order. Results are byte-identical for
+    /// any worker count: each job is self-contained (own seed, own
+    /// device state) and lands in its slot by index, so thread timing
+    /// cannot reorder or perturb anything.
+    ///
+    /// Deliberately `std::thread::spawn` + owned jobs (hence the
+    /// `'static` bounds) rather than scoped threads: it matches the
+    /// ownership-passing thread idiom used across the coordinator and
+    /// keeps the minimum-toolchain floor low for offline builds.
+    pub fn map<J, R, F>(&self, jobs: Vec<J>, f: F) -> Vec<R>
+    where
+        J: Send + 'static,
+        R: Send + 'static,
+        F: Fn(J) -> R + Send + Sync + 'static,
+    {
+        if self.workers == 1 || jobs.len() <= 1 {
+            return jobs.into_iter().map(f).collect();
+        }
+        let n = jobs.len();
+        let f = Arc::new(f);
+        // Strided round-robin partition keeps per-worker load even when
+        // job cost varies systematically along the list. Never spawn
+        // more threads than there are jobs.
+        let workers = self.workers.min(n);
+        let mut buckets: Vec<Vec<(usize, J)>> = (0..workers).map(|_| Vec::new()).collect();
+        for (i, job) in jobs.into_iter().enumerate() {
+            buckets[i % workers].push((i, job));
+        }
+        let mut handles = Vec::with_capacity(buckets.len());
+        for bucket in buckets {
+            let f = Arc::clone(&f);
+            handles.push(std::thread::spawn(move || {
+                bucket
+                    .into_iter()
+                    .map(|(i, job)| (i, f(job)))
+                    .collect::<Vec<(usize, R)>>()
+            }));
+        }
+        let mut slots: Vec<Option<R>> = Vec::with_capacity(n);
+        slots.resize_with(n, || None);
+        for h in handles {
+            for (i, r) in h.join().expect("fleet worker panicked") {
+                slots[i] = Some(r);
+            }
+        }
+        slots
+            .into_iter()
+            .map(|r| r.expect("every job produced a result"))
+            .collect()
+    }
+}
+
+/// Per-scenario aggregate of a fleet sweep.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FleetStats {
+    pub scenario: DualScenario,
+    pub seeds: u64,
+    /// Seeds whose chosen configuration met both constraints.
+    pub feasible: u64,
+    /// Mean 1-based iteration of the first feasible measurement (NaN
+    /// when no seed ever measured one).
+    pub mean_first_feasible: f64,
+    /// Mean per-seed search cost ([`super::Environment::cost_s`]).
+    pub mean_cost_s: f64,
+}
+
+/// Per-seed outcome of one sweep job.
+#[derive(Debug, Clone, Copy)]
+struct SweepResult {
+    feasible: bool,
+    first_feasible_iter: Option<usize>,
+    cost_s: f64,
+}
+
+/// One (scenario, seed) CORAL search — the paper's 10-iteration budget
+/// on a fresh simulated board.
+fn sweep_job(s: DualScenario, seed: u64) -> SweepResult {
+    const DEVICE_SEED_BASE: u64 = 0xF1EE7;
+    let cons = Constraints::dual(s.target_fps, s.budget_mw);
+    let dev = Device::new(s.device, s.model, DEVICE_SEED_BASE + seed);
+    let opt = CoralOptimizer::new(dev.space().clone(), cons, seed);
+    let mut cl = ControlLoop::with_budget(SimEnv::new(dev), opt, cons, DEFAULT_BUDGET);
+    let out = cl.run();
+    SweepResult {
+        feasible: out.best.map(|b| b.feasible).unwrap_or(false),
+        first_feasible_iter: out.first_feasible_iter,
+        cost_s: out.cost_s,
+    }
+}
+
+/// CORAL across `scenarios` × `seeds` on `runner`'s workers. The result
+/// is identical for every worker count (see [`FleetRunner::map`]).
+pub fn fleet_sweep(scenarios: &[DualScenario], seeds: u64, runner: &FleetRunner) -> Vec<FleetStats> {
+    assert!(seeds >= 1, "need at least one seed");
+    let jobs: Vec<(DualScenario, u64)> = scenarios
+        .iter()
+        .flat_map(|&s| (0..seeds).map(move |seed| (s, seed)))
+        .collect();
+    let results = runner.map(jobs, |(s, seed)| sweep_job(s, seed));
+    let per = seeds as usize;
+    scenarios
+        .iter()
+        .enumerate()
+        .map(|(i, &scenario)| {
+            let chunk = &results[i * per..(i + 1) * per];
+            let feasible = chunk.iter().filter(|r| r.feasible).count() as u64;
+            let firsts: Vec<f64> = chunk
+                .iter()
+                .filter_map(|r| r.first_feasible_iter.map(|it| it as f64))
+                .collect();
+            let mean_first_feasible = if firsts.is_empty() {
+                f64::NAN
+            } else {
+                firsts.iter().sum::<f64>() / firsts.len() as f64
+            };
+            let mean_cost_s = chunk.iter().map(|r| r.cost_s).sum::<f64>() / per as f64;
+            FleetStats {
+                scenario,
+                seeds,
+                feasible,
+                mean_first_feasible,
+                mean_cost_s,
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::experiments::scenarios::DUAL_SCENARIOS;
+
+    #[test]
+    fn map_preserves_order_at_any_worker_count() {
+        let jobs: Vec<u64> = (0..23).collect();
+        let seq = FleetRunner::new(1).map(jobs.clone(), |j| j * j + 1);
+        for workers in [2, 3, 8, 40] {
+            let par = FleetRunner::new(workers).map(jobs.clone(), |j| j * j + 1);
+            assert_eq!(seq, par, "{workers} workers");
+        }
+        assert_eq!(seq[22], 22 * 22 + 1);
+        assert!(FleetRunner::auto().workers() >= 2);
+    }
+
+    #[test]
+    fn fleet_sweep_parallel_matches_sequential_byte_for_byte() {
+        let scenarios = &DUAL_SCENARIOS[..2];
+        let seq = fleet_sweep(scenarios, 4, &FleetRunner::new(1));
+        let par = fleet_sweep(scenarios, 4, &FleetRunner::new(3));
+        // NaN-tolerant exact comparison: the formatted stats must agree
+        // to the last bit-visible digit.
+        assert_eq!(format!("{seq:?}"), format!("{par:?}"));
+        assert_eq!(seq.len(), 2);
+        for st in &seq {
+            assert_eq!(st.seeds, 4);
+            assert!(st.mean_cost_s > 0.0);
+        }
+        // The paper's headline scenario: CORAL converges for most seeds.
+        assert!(
+            seq[0].feasible >= 3,
+            "NX/YOLO should mostly converge: {:?}",
+            seq[0]
+        );
+    }
+}

@@ -1,0 +1,30 @@
+//! Closed-loop control: the one canonical drive loop between any
+//! [`Optimizer`](crate::optimizer::Optimizer) and any measurement
+//! [`Environment`].
+//!
+//! The paper's whole point is *online* optimization of a live serving
+//! stack; this module is where "online" actually lives:
+//!
+//! * [`Environment`] abstracts measurement — the simulated board
+//!   ([`SimEnv`]), the real serving stack with sim-backed power
+//!   ([`LiveEnv`]), or a whole fleet of boards per observation
+//!   ([`FleetEnv`]).
+//! * [`ControlLoop`] owns the drive loop every experiment, the CLI, and
+//!   the examples used to hand-roll: budget, first-feasible tracking,
+//!   uniform search-cost accounting, trace recording, an event log, and
+//!   hold phases with windowed-throughput drift detection that
+//!   re-trigger search.
+//! * [`FleetRunner`] / [`fleet_sweep`] run many independent loops
+//!   thread-parallel with deterministic per-job seeding — results are
+//!   byte-identical to the sequential run, only faster.
+
+pub mod engine;
+pub mod env;
+pub mod fleet;
+
+pub use engine::{
+    ControlLoop, ControlLoopConfig, DriftConfig, DriftDetector, HoldOutcome, LoopEvent,
+    LoopOutcome, Step, DEFAULT_BUDGET,
+};
+pub use env::{Environment, FleetEnv, LiveEnv, SimEnv};
+pub use fleet::{fleet_sweep, FleetRunner, FleetStats};

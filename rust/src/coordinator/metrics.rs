@@ -47,6 +47,16 @@ impl ServerMetrics {
         self.last_completion = Some(now);
     }
 
+    /// Clear the distribution buffers (latency/exec/batch) while keeping
+    /// the lifetime counters and completion span. Called at
+    /// measurement-window boundaries so percentile reports describe one
+    /// window, not the server's whole life.
+    pub fn reset_distributions(&mut self) {
+        self.latencies_ms.clear();
+        self.exec_ms.clear();
+        self.batch_sizes.clear();
+    }
+
     pub fn completed(&self) -> u64 {
         self.completed
     }
@@ -102,6 +112,19 @@ mod tests {
         assert!((m.mean_batch_size() - 1.5).abs() < 1e-12);
         assert_eq!(m.latency_ms(100.0), 30.0);
         assert!((m.mean_exec_ms() - 11.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn reset_distributions_keeps_lifetime_counters() {
+        let mut m = ServerMetrics::new();
+        m.record_batch(2, ms(10), &[ms(15), ms(20)], ms(100), false);
+        m.reset_distributions();
+        assert_eq!(m.completed(), 2, "lifetime counter survives");
+        assert!(m.latency_ms(50.0).is_nan(), "distributions cleared");
+        assert!(m.mean_batch_size().is_nan());
+        m.record_batch(1, ms(12), &[ms(30)], ms(200), false);
+        assert_eq!(m.latency_ms(100.0), 30.0, "new window only");
+        assert_eq!(m.completed(), 3);
     }
 
     #[test]

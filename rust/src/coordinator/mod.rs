@@ -20,6 +20,6 @@ pub mod worker;
 
 pub use batcher::{Batcher, BatcherConfig, PendingRequest};
 pub use metrics::ServerMetrics;
-pub use router::Router;
+pub use router::{ModelServer, Router};
 pub use server::{Server, ServerConfig, ServeReport};
 pub use worker::{BatchJob, BatchResult, WorkerPool};

@@ -2,6 +2,10 @@
 //! serving stack. The paper evaluates one model at a time; the router
 //! generalizes the coordinator to multi-model edge boxes (the fleet
 //! example) with per-model queues and a shared admission policy.
+//!
+//! The router is generic over [`ModelServer`] — the real PJRT-backed
+//! [`Server`] in production, anything queue-shaped in tests — so the
+//! admission policy is testable without artifacts.
 
 use std::collections::BTreeMap;
 
@@ -11,21 +15,54 @@ use super::server::Server;
 use crate::models::ModelKind;
 use crate::runtime::Detections;
 
+/// What the router needs from a per-model serving stack.
+pub trait ModelServer {
+    /// Enqueue one frame.
+    fn submit(&mut self, id: u64, pixels: Vec<f32>);
+
+    /// Requests queued or in flight (the admission-control signal).
+    fn backlog(&self) -> usize;
+
+    /// Pump the stack; returns completed `(id, detections)` pairs.
+    fn tick(&mut self) -> Vec<(u64, Detections)>;
+
+    /// Shut down; returns total completed count.
+    fn shutdown(self) -> u64;
+}
+
+impl ModelServer for Server {
+    fn submit(&mut self, id: u64, pixels: Vec<f32>) {
+        Server::submit(self, id, pixels)
+    }
+
+    fn backlog(&self) -> usize {
+        Server::backlog(self)
+    }
+
+    fn tick(&mut self) -> Vec<(u64, Detections)> {
+        Server::tick(self)
+    }
+
+    fn shutdown(self) -> u64 {
+        Server::shutdown(self)
+    }
+}
+
 /// Multi-model front door.
-pub struct Router {
-    servers: BTreeMap<ModelKind, Server>,
+pub struct Router<S: ModelServer = Server> {
+    servers: BTreeMap<ModelKind, S>,
     /// Reject new work once a model's batcher backlog exceeds this.
     pub admission_limit: usize,
     rejected: u64,
 }
 
-impl Router {
-    pub fn new() -> Router {
+impl<S: ModelServer> Router<S> {
+    pub fn new() -> Router<S> {
         Router { servers: BTreeMap::new(), admission_limit: 256, rejected: 0 }
     }
 
     /// Register a model's serving stack.
-    pub fn register(&mut self, model: ModelKind, server: Server) {
+    pub fn register(&mut self, model: ModelKind, server: S) {
         self.servers.insert(model, server);
     }
 
@@ -33,15 +70,16 @@ impl Router {
         self.servers.keys().copied().collect()
     }
 
-    pub fn server(&self, model: ModelKind) -> Option<&Server> {
+    pub fn server(&self, model: ModelKind) -> Option<&S> {
         self.servers.get(&model)
     }
 
-    pub fn server_mut(&mut self, model: ModelKind) -> Option<&mut Server> {
+    pub fn server_mut(&mut self, model: ModelKind) -> Option<&mut S> {
         self.servers.get_mut(&model)
     }
 
-    /// Requests rejected by admission control.
+    /// Requests rejected by admission control, across all models, over
+    /// the router's lifetime.
     pub fn rejected(&self) -> u64 {
         self.rejected
     }
@@ -82,7 +120,7 @@ impl Router {
     }
 }
 
-impl Default for Router {
+impl<S: ModelServer> Default for Router<S> {
     fn default() -> Self {
         Self::new()
     }
@@ -92,11 +130,92 @@ impl Default for Router {
 mod tests {
     use super::*;
 
+    /// Queue-shaped stand-in: tick completes one request per call.
+    #[derive(Default)]
+    struct FakeServer {
+        queued: Vec<u64>,
+        completed: u64,
+    }
+
+    impl ModelServer for FakeServer {
+        fn submit(&mut self, id: u64, _pixels: Vec<f32>) {
+            self.queued.push(id);
+        }
+
+        fn backlog(&self) -> usize {
+            self.queued.len()
+        }
+
+        fn tick(&mut self) -> Vec<(u64, Detections)> {
+            if self.queued.is_empty() {
+                return Vec::new();
+            }
+            let id = self.queued.remove(0);
+            self.completed += 1;
+            vec![(id, Detections { boxes: Vec::new(), scores: Vec::new() })]
+        }
+
+        fn shutdown(self) -> u64 {
+            self.completed
+        }
+    }
+
     #[test]
     fn unknown_model_is_an_error() {
-        let mut r = Router::new();
+        let mut r: Router = Router::new();
         assert!(r.route(ModelKind::Yolo, 0, vec![0.0]).is_err());
         assert!(r.models().is_empty());
         assert_eq!(r.rejected(), 0);
+    }
+
+    #[test]
+    fn default_router_matches_new() {
+        let r: Router<FakeServer> = Router::default();
+        assert_eq!(r.admission_limit, 256);
+        assert_eq!(r.rejected(), 0);
+        assert!(r.models().is_empty());
+    }
+
+    #[test]
+    fn requests_beyond_admission_limit_are_rejected_and_counted() {
+        let mut r: Router<FakeServer> = Router::new();
+        r.admission_limit = 2;
+        r.register(ModelKind::Yolo, FakeServer::default());
+        assert!(r.route(ModelKind::Yolo, 0, Vec::new()).unwrap());
+        assert!(r.route(ModelKind::Yolo, 1, Vec::new()).unwrap());
+        assert!(
+            !r.route(ModelKind::Yolo, 2, Vec::new()).unwrap(),
+            "third request exceeds the backlog limit"
+        );
+        assert!(!r.route(ModelKind::Yolo, 3, Vec::new()).unwrap());
+        assert_eq!(r.rejected(), 2);
+        assert_eq!(r.server(ModelKind::Yolo).unwrap().backlog(), 2);
+        // Draining the queue reopens admission.
+        assert_eq!(r.tick().len(), 1);
+        assert!(r.route(ModelKind::Yolo, 4, Vec::new()).unwrap());
+        assert_eq!(r.rejected(), 2, "admitted request adds no rejection");
+    }
+
+    #[test]
+    fn rejected_count_survives_across_models() {
+        let mut r: Router<FakeServer> = Router::new();
+        r.admission_limit = 1;
+        r.register(ModelKind::Yolo, FakeServer::default());
+        r.register(ModelKind::Frcnn, FakeServer::default());
+        assert!(r.route(ModelKind::Yolo, 0, Vec::new()).unwrap());
+        assert!(!r.route(ModelKind::Yolo, 1, Vec::new()).unwrap());
+        assert_eq!(r.rejected(), 1);
+        // A different model's saturation adds to the same shared counter;
+        // per-model queues stay independent.
+        assert!(r.route(ModelKind::Frcnn, 2, Vec::new()).unwrap());
+        assert!(!r.route(ModelKind::Frcnn, 3, Vec::new()).unwrap());
+        assert_eq!(r.rejected(), 2, "counter survives across models");
+        // Completions flow out tagged per model; shutdown totals match.
+        let done = r.tick();
+        assert_eq!(done.len(), 2);
+        assert!(done.iter().any(|(m, id, _)| *m == ModelKind::Yolo && *id == 0));
+        assert!(done.iter().any(|(m, id, _)| *m == ModelKind::Frcnn && *id == 2));
+        let totals = r.shutdown();
+        assert_eq!(totals.iter().map(|(_, c)| *c).sum::<u64>(), 2);
     }
 }

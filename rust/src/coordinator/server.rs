@@ -96,6 +96,13 @@ impl Server {
         &self.metrics
     }
 
+    /// Start a fresh measurement window: subsequent percentile/batch
+    /// reports describe only traffic served from now on. Lifetime
+    /// counters (completed/failed) are unaffected.
+    pub fn reset_window_metrics(&mut self) {
+        self.metrics.reset_distributions();
+    }
+
     pub fn concurrency(&self) -> usize {
         self.pool.size()
     }
@@ -187,7 +194,8 @@ impl Server {
     }
 
     /// Drive a closed loop: `inflight` outstanding frames from `video`,
-    /// `total` completions. Returns the steady-state report.
+    /// `total` terminated requests (completions + failures). Returns the
+    /// steady-state report.
     pub fn run_closed_loop(
         &mut self,
         video: &mut VideoSource,
@@ -196,10 +204,12 @@ impl Server {
     ) -> Result<ServeReport> {
         assert_eq!(video.side(), self.input_side(), "video must match model input");
         let t0 = self.now();
+        let failed_at_start = self.metrics.failed();
         let mut next_id = 0u64;
         let mut outstanding = 0usize;
         let mut completed = 0u64;
-        while completed < total {
+        let mut failed_seen = 0u64;
+        while completed + failed_seen < total {
             while outstanding < inflight && next_id < total {
                 self.submit(next_id, video.next_frame());
                 next_id += 1;
@@ -208,14 +218,23 @@ impl Server {
             let done = self.tick();
             completed += done.len() as u64;
             outstanding -= done.len();
-            if done.is_empty() {
+            // Failed batches produce no completions; count their
+            // requests as terminated so a worker error can never pin
+            // `outstanding` at `inflight` and hang the loop.
+            let failed_now = self.metrics.failed() - failed_at_start;
+            let newly_failed = failed_now - failed_seen;
+            if newly_failed > 0 {
+                failed_seen = failed_now;
+                outstanding = outstanding.saturating_sub(newly_failed as usize);
+            }
+            if done.is_empty() && newly_failed == 0 {
                 std::thread::sleep(Duration::from_micros(200));
             }
         }
         let wall = (self.now() - t0).as_secs_f64();
         Ok(ServeReport {
             requests: completed,
-            failed: self.metrics.failed(),
+            failed: failed_seen,
             throughput_fps: completed as f64 / wall,
             latency_p50_ms: self.metrics.latency_ms(50.0),
             latency_p95_ms: self.metrics.latency_ms(95.0),

@@ -7,6 +7,7 @@ use std::path::Path;
 
 use anyhow::Result;
 
+use crate::control::{ControlLoop, SimEnv};
 use crate::device::Device;
 use crate::models::ModelKind;
 use crate::optimizer::{
@@ -35,14 +36,15 @@ where
     let mut hits = vec![0u64; iters];
     let mut name = "";
     for seed in 0..seeds {
-        let mut dev = Device::new(s.device, s.model, 0xC09E + seed);
-        let (n, mut opt) = make(&dev, cons, seed);
+        let dev = Device::new(s.device, s.model, 0xC09E + seed);
+        let (n, opt) = make(&dev, cons, seed);
         name = n;
-        for i in 0..iters {
-            let cfg = opt.propose();
-            let m = dev.run(cfg);
-            opt.observe(cfg, m.throughput_fps, m.power_mw);
-            if opt.best().map(|b| b.feasible).unwrap_or(false) {
+        let mut cl = ControlLoop::with_budget(SimEnv::new(dev), opt, cons, iters);
+        let out = cl.run();
+        // Best-so-far feasibility per iteration is exactly the loop's
+        // convergence record.
+        for (i, feasible) in out.feasible_by_iter.iter().enumerate() {
+            if *feasible {
                 hits[i] += 1;
             }
         }

@@ -1,7 +1,9 @@
 //! Method runner: drives any optimization method against a simulated
-//! device with the paper's evaluation loop (Fig. 2) and records the
-//! outcome + search cost.
+//! device with the paper's evaluation loop (Fig. 2) — one
+//! [`ControlLoop`] over a [`SimEnv`] — and records the outcome + search
+//! cost.
 
+use crate::control::{ControlLoop, SimEnv, DEFAULT_BUDGET};
 use crate::device::{Device, DeviceKind};
 use crate::models::ModelKind;
 use crate::optimizer::{
@@ -10,7 +12,7 @@ use crate::optimizer::{
 };
 
 /// Paper §IV-A: the online iteration budget.
-pub const ITER_BUDGET: usize = 10;
+pub const ITER_BUDGET: usize = DEFAULT_BUDGET;
 
 /// The §IV-A method lineup.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -134,29 +136,26 @@ pub fn run_method_with(
     coral_cfg: CoralConfig,
     budget: usize,
 ) -> MethodOutcome {
-    let mut dev = Device::new(device, model, seed);
-    let (mut opt, offline) = build(kind, device, model, cons, seed, coral_cfg);
+    let dev = Device::new(device, model, seed);
+    let (opt, offline) = build(kind, device, model, cons, seed, coral_cfg);
     let iters = match kind {
         MethodKind::Oracle => device.space().raw_size(),
         _ => budget,
     };
-    for _ in 0..iters {
-        let cfg = opt.propose();
-        let m = dev.run(cfg);
-        opt.observe(cfg, m.throughput_fps, m.power_mw);
-    }
-    let best = opt.best().expect("at least one observation");
+    let mut cl = ControlLoop::with_budget(SimEnv::new(dev), opt, cons, iters);
+    let out = cl.run();
+    let best = out.best.expect("at least one observation");
     MethodOutcome {
-        method: opt.name(),
+        method: cl.opt().name(),
         device,
         model,
         seed,
         throughput_fps: best.throughput_fps,
         power_mw: best.power_mw,
         feasible: best.feasible,
-        online_windows: dev.windows_run(),
+        online_windows: out.iters as u64,
         offline_windows: offline,
-        online_cost_s: dev.sim_clock_s(),
+        online_cost_s: out.cost_s,
         config: best.config.to_string(),
     }
 }
@@ -208,6 +207,28 @@ mod tests {
             assert_eq!(o.online_windows, ITER_BUDGET as u64, "{}", o.method);
             assert!(o.throughput_fps >= 0.0);
         }
+    }
+
+    #[test]
+    fn coral_search_cost_stays_far_below_oracle_sweep() {
+        // Search-cost accounting is now uniform (Environment::cost_s):
+        // CORAL's 10 windows must come in well under ORACLE's exhaustive
+        // sweep, and every window must be accounted at the paper's
+        // warm-up + sampling duration.
+        let cons = Constraints::dual(30.0, 6500.0);
+        let coral = run_method(MethodKind::Coral, DeviceKind::XavierNx, ModelKind::Yolo, cons, 3);
+        let oracle =
+            run_method(MethodKind::Oracle, DeviceKind::XavierNx, ModelKind::Yolo, cons, 3);
+        let per_window =
+            crate::device::sim::WARMUP_S + crate::device::sim::SAMPLES_PER_WINDOW as f64;
+        assert!((coral.online_cost_s - coral.online_windows as f64 * per_window).abs() < 1e-9);
+        assert!((oracle.online_cost_s - oracle.online_windows as f64 * per_window).abs() < 1e-9);
+        assert!(
+            coral.online_cost_s * 20.0 < oracle.online_cost_s,
+            "coral {:.0}s vs oracle {:.0}s",
+            coral.online_cost_s,
+            oracle.online_cost_s
+        );
     }
 
     #[test]

@@ -14,7 +14,7 @@ use crate::optimizer::{Constraints, CoralConfig};
 use crate::telemetry::Sampler;
 
 /// One dual-constraint scenario (paper Figs 5–10).
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub struct DualScenario {
     pub device: DeviceKind,
     pub model: ModelKind,
@@ -117,7 +117,7 @@ pub fn dual_constraints(device: DeviceKind, model: ModelKind) -> Constraints {
 mod tests {
     use super::*;
     use crate::device::{failure, perf, power, Device};
-    use crate::optimizer::{CoralOptimizer, Optimizer};
+    use crate::optimizer::CoralOptimizer;
 
     #[test]
     fn window_family_spans_three_orders_of_magnitude() {
@@ -135,29 +135,28 @@ mod tests {
     fn fleet_w100_scenario_drives_coral_end_to_end() {
         // The first fleet-scale window: W exceeds the dCor fast-path
         // threshold, the stress run wraps the window, and the search
-        // keeps functioning end to end.
+        // keeps functioning end to end through the canonical ControlLoop.
         let s = WINDOW_SCENARIOS[1];
         let device = DeviceKind::OrinNano;
         let model = ModelKind::Yolo;
-        let mut dev = Device::new(device, model, 27);
-        let mut opt = CoralOptimizer::with_config(
-            dev.space().clone(),
-            dual_constraints(device, model),
-            s.coral_config(),
-            27,
+        let cons = dual_constraints(device, model);
+        let dev = Device::new(device, model, 27);
+        let opt = CoralOptimizer::with_config(dev.space().clone(), cons, s.coral_config(), 27);
+        let mut cl = crate::control::ControlLoop::with_budget(
+            crate::control::SimEnv::new(dev),
+            opt,
+            cons,
+            s.iters,
         );
-        for _ in 0..s.iters {
-            let cfg = opt.propose();
-            let m = dev.run(cfg);
-            opt.observe(cfg, m.throughput_fps, m.power_mw);
-        }
-        assert!(opt.window_len() <= s.window);
+        let out = cl.run();
+        assert_eq!(out.iters, s.iters);
+        assert!(cl.opt().window_len() <= s.window);
         assert!(
-            opt.window_len() > crate::stats::dcov::FAST_PATH_MIN_N,
+            cl.opt().window_len() > crate::stats::dcov::FAST_PATH_MIN_N,
             "window {} should engage the fast path",
-            opt.window_len()
+            cl.opt().window_len()
         );
-        assert!(opt.best().is_some());
+        assert!(out.best.is_some());
     }
 
     #[test]

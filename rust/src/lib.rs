@@ -11,6 +11,10 @@
 //! * [`optimizer`] — the paper's contribution (CORAL, Algorithms 1 + 2)
 //!   plus every baseline it is evaluated against (ORACLE, ALERT,
 //!   ALERT-Online, manufacturer presets).
+//! * [`control`] — the closed loop wiring optimizers to measurement: the
+//!   [`control::Environment`] trait (sim / live serving / fleet), the
+//!   canonical [`control::ControlLoop`] drive engine with drift
+//!   detection, and the fleet-parallel [`control::FleetRunner`].
 //! * [`coordinator`] — the serving system the optimizer tunes: request
 //!   router, dynamic batcher, worker pool honouring the concurrency level.
 //! * [`device`] — a faithful simulator of the two NVIDIA Jetson boards
@@ -25,23 +29,22 @@
 //! ## Quickstart
 //!
 //! ```no_run
+//! use coral::control::{ControlLoop, SimEnv};
 //! use coral::device::{Device, DeviceKind};
 //! use coral::models::ModelKind;
-//! use coral::optimizer::{Constraints, CoralOptimizer, Optimizer};
+//! use coral::optimizer::{Constraints, CoralOptimizer};
 //!
-//! let mut dev = Device::new(DeviceKind::XavierNx, ModelKind::Yolo, 42);
+//! let dev = Device::new(DeviceKind::XavierNx, ModelKind::Yolo, 42);
 //! let cons = Constraints::dual(30.0, 6500.0); // 30 fps, 6.5 W
-//! let mut opt = CoralOptimizer::new(dev.space().clone(), cons, 42);
-//! for _ in 0..10 {
-//!     let cfg = opt.propose();
-//!     let m = dev.run(cfg);
-//!     opt.observe(cfg, m.throughput_fps, m.power_mw);
-//! }
-//! let best = opt.best().expect("feasible configuration found");
-//! println!("best = {best:?}");
+//! let opt = CoralOptimizer::new(dev.space().clone(), cons, 42);
+//! let mut cl = ControlLoop::with_budget(SimEnv::new(dev), opt, cons, 10);
+//! let outcome = cl.run();
+//! let best = outcome.best.expect("feasible configuration found");
+//! println!("best = {best:?} (search cost {:.0} s)", outcome.cost_s);
 //! ```
 
 pub mod cli;
+pub mod control;
 pub mod coordinator;
 pub mod device;
 pub mod experiments;

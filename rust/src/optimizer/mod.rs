@@ -37,11 +37,14 @@ pub struct BestConfig {
 
 /// Common interface of all search strategies.
 ///
-/// The driving loop is measurement-agnostic:
+/// The driving loop is measurement-agnostic and lives in one place —
+/// [`crate::control::ControlLoop`] — over any
+/// [`crate::control::Environment`] (simulated device, live serving
+/// stack, fleet):
 /// ```text
 /// for _ in 0..budget {
 ///     let cfg = opt.propose();
-///     let m = device.run(cfg);             // or the live serving stack
+///     let m = env.measure(cfg);            // sim, live server, or fleet
 ///     opt.observe(cfg, m.throughput_fps, m.power_mw);
 /// }
 /// let chosen = opt.best();
@@ -65,6 +68,31 @@ pub trait Optimizer {
     /// Used to report search cost next to quality.
     fn offline_cost_windows(&self) -> u64 {
         0
+    }
+}
+
+/// Boxed optimizers (the experiment runner's heterogeneous method
+/// lineup) drive through [`crate::control::ControlLoop`] like any
+/// concrete optimizer.
+impl<T: Optimizer + ?Sized> Optimizer for Box<T> {
+    fn propose(&mut self) -> HwConfig {
+        (**self).propose()
+    }
+
+    fn observe(&mut self, config: HwConfig, throughput_fps: f64, power_mw: f64) {
+        (**self).observe(config, throughput_fps, power_mw)
+    }
+
+    fn best(&self) -> Option<BestConfig> {
+        (**self).best()
+    }
+
+    fn name(&self) -> &'static str {
+        (**self).name()
+    }
+
+    fn offline_cost_windows(&self) -> u64 {
+        (**self).offline_cost_windows()
     }
 }
 

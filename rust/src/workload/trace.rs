@@ -177,22 +177,19 @@ impl TraceReplay {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::control::{ControlLoop, SimEnv};
     use crate::device::{Device, DeviceKind};
     use crate::models::ModelKind;
-    use crate::optimizer::{Constraints, CoralOptimizer, Optimizer};
+    use crate::optimizer::{Constraints, CoralOptimizer};
 
     fn sample_trace() -> Trace {
-        let mut dev = Device::new(DeviceKind::XavierNx, ModelKind::Yolo, 3);
-        let mut opt =
-            CoralOptimizer::new(dev.space().clone(), Constraints::dual(30.0, 6500.0), 3);
-        let mut trace = Trace::new();
-        for _ in 0..10 {
-            let cfg = opt.propose();
-            let m = dev.run(cfg);
-            trace.record(cfg, m.throughput_fps, m.power_mw);
-            opt.observe(cfg, m.throughput_fps, m.power_mw);
-        }
-        trace
+        // Every ControlLoop search records its trace as it drives.
+        let dev = Device::new(DeviceKind::XavierNx, ModelKind::Yolo, 3);
+        let cons = Constraints::dual(30.0, 6500.0);
+        let opt = CoralOptimizer::new(dev.space().clone(), cons, 3);
+        ControlLoop::with_budget(SimEnv::new(dev), opt, cons, 10)
+            .run()
+            .trace
     }
 
     #[test]

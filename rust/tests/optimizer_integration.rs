@@ -1,6 +1,7 @@
 //! Cross-module integration: optimizers × device simulator across the
 //! full scenario matrix (no PJRT needed).
 
+use coral::control::{ControlLoop, SimEnv};
 use coral::device::{Device, DeviceKind};
 use coral::experiments::runner::{run_method, MethodKind, ITER_BUDGET};
 use coral::experiments::scenarios::DUAL_SCENARIOS;
@@ -72,14 +73,10 @@ fn convergence_within_budget_is_stable_across_models() {
     for model in ModelKind::ALL {
         let cons =
             coral::experiments::scenarios::dual_constraints(DeviceKind::OrinNano, model);
-        let mut dev = Device::new(DeviceKind::OrinNano, model, 77);
-        let mut opt = CoralOptimizer::new(dev.space().clone(), cons, 77);
-        for _ in 0..ITER_BUDGET {
-            let cfg = opt.propose();
-            let m = dev.run(cfg);
-            opt.observe(cfg, m.throughput_fps, m.power_mw);
-        }
-        assert!(opt.best().is_some(), "{model}");
+        let dev = Device::new(DeviceKind::OrinNano, model, 77);
+        let opt = CoralOptimizer::new(dev.space().clone(), cons, 77);
+        let mut cl = ControlLoop::with_budget(SimEnv::new(dev), opt, cons, ITER_BUDGET);
+        assert!(cl.run().best.is_some(), "{model}");
     }
 }
 
