@@ -8,8 +8,11 @@
 //!    pool → PJRT),
 //! 2. `control::ControlLoop` runs CORAL *live*: each proposal applies
 //!    its concurrency level to the real worker pool, throughput is
-//!    sampled from served traffic with the paper's warm-up discipline,
-//!    and power comes from the Jetson device model, and
+//!    sampled from served traffic with the paper's warm-up discipline
+//!    through the event-driven serving pump (zero busy-wait: the
+//!    pump's wakeups — printed at the end — are bounded by completions
+//!    and batcher deadline fires, never wall-clock), power comes from
+//!    the Jetson device model, and
 //! 3. without artifacts the environment degrades gracefully to
 //!    sim-backed measurement, so this example always runs.
 //!
@@ -104,9 +107,14 @@ fn main() -> anyhow::Result<()> {
     let mut env = cl.into_env();
     if let Some(report) = env.steady_state(best.config, 300) {
         println!("steady state (300 frames): {report}");
+        println!(
+            "pump: {} wake-ups ({} deadline fires) — event-driven, no sleep-polling",
+            report.pump_iterations, report.deadline_fires
+        );
     }
+    let pump_total = env.pump_iterations();
     if let Some(total) = env.shutdown() {
-        println!("total served: {total}");
+        println!("total served: {total} frames over {pump_total} pump wake-ups");
     }
     Ok(())
 }

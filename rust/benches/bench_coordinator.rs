@@ -1,16 +1,45 @@
 //! §Perf micro-bench: coordinator primitives on the request path —
 //! batcher push/pop, CORAL propose/observe, device-simulator windows —
-//! plus the ablation lineup (DESIGN.md §7).
+//! plus the event-driven pump's idle-overhead audit and the ablation
+//! lineup (DESIGN.md §7).
 use std::path::Path;
+use std::sync::Arc;
 use std::time::Duration;
 
 use coral::control::{ControlLoop, SimEnv};
-use coral::coordinator::{Batcher, BatcherConfig, PendingRequest};
+use coral::coordinator::{
+    Batcher, BatcherConfig, InferenceEngine, PendingRequest, Server, ServerConfig,
+};
 use coral::device::{Device, DeviceKind};
 use coral::experiments::ablation;
 use coral::models::ModelKind;
 use coral::optimizer::{Constraints, CoralOptimizer};
+use coral::runtime::Detections;
 use coral::util::bench::Bencher;
+use coral::workload::VideoSource;
+
+/// The retired polling pump's sleep period: the yardstick the
+/// event-driven pump is audited against below.
+const POLLING_SLEEP_S: f64 = 200e-6;
+
+/// Stub engine standing in for PJRT (absent in offline containers):
+/// each batch costs a fixed wall-clock slice, so the pump's own
+/// overhead — wakeups per completed frame — is what's measured.
+struct StubEngine {
+    side: usize,
+    per_batch: Duration,
+}
+
+impl InferenceEngine for StubEngine {
+    fn infer(&self, _pixels: &[f32], n: usize) -> anyhow::Result<Vec<Detections>> {
+        std::thread::sleep(self.per_batch);
+        Ok(vec![Detections { boxes: Vec::new(), scores: Vec::new() }; n])
+    }
+
+    fn input_side(&self) -> usize {
+        self.side
+    }
+}
 
 fn main() {
     let mut b = Bencher::new(Duration::from_millis(400), 20);
@@ -45,6 +74,46 @@ fn main() {
         let mut cl = ControlLoop::with_budget(SimEnv::new(dev), opt, cons, 10);
         cl.run().best.map(|b| b.feasible)
     });
+
+    // Pump idle overhead: wakeups per completed frame for the
+    // event-driven pump vs what the old 200 µs-sleep polling pump would
+    // have burned over the same wall-clock. Low inflight is the
+    // interesting regime — the pump is mostly waiting, which used to
+    // mean mostly spinning.
+    println!("\npump idle overhead (event-driven vs 200 µs-sleep polling equivalent):");
+    println!(
+        "  {:>8} {:>8} {:>12} {:>14} {:>16}",
+        "inflight", "frames", "wall (s)", "iters/frame", "polling-equiv"
+    );
+    for inflight in [1usize, 2, 4, 8] {
+        let engine = Arc::new(StubEngine { side: 8, per_batch: Duration::from_millis(2) });
+        let mut server = Server::with_engine(
+            engine,
+            ServerConfig {
+                concurrency: 2,
+                batcher: BatcherConfig {
+                    max_batch: 4,
+                    max_wait: Duration::from_millis(2),
+                },
+            },
+        );
+        let mut video = VideoSource::new(8, 30, 1);
+        let frames = 120u64;
+        let report = server.run_closed_loop(&mut video, frames, inflight).expect("serve");
+        assert_eq!(report.requests, frames);
+        let iters_per_frame = report.pump_iterations as f64 / frames as f64;
+        let polling_per_frame = report.wall_s / POLLING_SLEEP_S / frames as f64;
+        println!(
+            "  {:>8} {:>8} {:>12.3} {:>14.2} {:>16.1}",
+            inflight, frames, report.wall_s, iters_per_frame, polling_per_frame
+        );
+        assert!(
+            iters_per_frame <= polling_per_frame,
+            "event-driven pump must not exceed the polling pump's iterations \
+             at inflight={inflight}: {iters_per_frame:.2} vs {polling_per_frame:.1}"
+        );
+        server.shutdown();
+    }
 
     // Design-choice ablations (writes results/ablation.csv).
     ablation::run(Path::new("results"), 10).expect("ablation");

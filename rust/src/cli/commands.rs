@@ -219,6 +219,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
     );
     let report = server.run_closed_loop(&mut video, requests, inflight)?;
     println!("{report}");
+    println!(
+        "pump: {} wake-ups ({} deadline fires) for {} requests — event-driven, \
+         no sleep-polling",
+        report.pump_iterations, report.deadline_fires, report.requests
+    );
     server.shutdown();
     Ok(())
 }

@@ -57,7 +57,12 @@ impl DriftDetector {
     /// drifted more than `rel_threshold` from the reference (a single
     /// noisy window cannot fire; the mean over `window` samples must
     /// shift).
+    ///
+    /// A non-finite sample (a degenerate serving window) is recorded as
+    /// a collapsed window — 0 fps — rather than poisoning the windowed
+    /// mean with NaN/inf forever.
     pub fn push(&mut self, throughput_fps: f64) -> Option<f64> {
+        let throughput_fps = if throughput_fps.is_finite() { throughput_fps } else { 0.0 };
         self.recent.push_back(throughput_fps);
         if self.recent.len() > self.cfg.window {
             self.recent.pop_front();
@@ -552,6 +557,21 @@ mod tests {
         // Per-round cost restarts; environment clock keeps running.
         assert!((out1.cost_s - out2.cost_s).abs() < 1e-9);
         assert_eq!(cl.env().device().windows_run(), dev_windows + 10);
+    }
+
+    #[test]
+    fn drift_detector_survives_non_finite_samples() {
+        // inf/NaN windows (zero-wall serving, dead pool) count as
+        // collapsed (0 fps) windows: the detector fires on the sustained
+        // collapse instead of returning NaN comparisons forever.
+        let mut det = DriftDetector::new(
+            DriftConfig { window: 2, rel_threshold: 0.1 },
+            100.0,
+        );
+        assert!(det.push(f64::INFINITY).is_none(), "window not full yet");
+        let fired = det.push(f64::NAN).expect("collapsed mean must fire");
+        assert!(fired.is_finite());
+        assert_eq!(fired, 0.0);
     }
 
     #[test]

@@ -97,7 +97,12 @@ struct LiveBackend {
 /// worker pool, serves synthetic traffic video in sample-sized chunks,
 /// and records per-chunk throughput into a [`Sampler`] (first two
 /// chunks after a reconfiguration discarded — the paper's 2-sample
-/// warm-up discipline).
+/// warm-up discipline). The serving pump underneath is event-driven
+/// (`Server::run_closed_loop` blocks on worker completions bounded by
+/// the batcher deadline), so a live measurement window costs **zero
+/// busy-wait** — the pump cannot pollute the very throughput/power
+/// signal being correlated. [`LiveEnv::pump_iterations`] exposes the
+/// cumulative wakeup accounting.
 /// Power always comes from the device model's DVFS state: a development
 /// box has no module power rails, so the simulator is the wattmeter.
 ///
@@ -112,6 +117,8 @@ pub struct LiveEnv {
     frames_per_sample: u64,
     inflight: usize,
     serving_wall_s: f64,
+    /// Cumulative serving-pump wakeups across all live windows.
+    pump_iterations: u64,
     last_report: Option<ServeReport>,
 }
 
@@ -128,6 +135,7 @@ impl LiveEnv {
             frames_per_sample: 12,
             inflight: 8,
             serving_wall_s: 0.0,
+            pump_iterations: 0,
             last_report: None,
         }
     }
@@ -201,6 +209,14 @@ impl LiveEnv {
         self.last_report.as_ref()
     }
 
+    /// Cumulative serving-pump wakeups across all live windows. With
+    /// the event-driven pump this is bounded by completions + batcher
+    /// deadline fires — never wall-clock — which is what "a live window
+    /// costs zero busy-wait" means operationally. Always 0 sim-backed.
+    pub fn pump_iterations(&self) -> u64 {
+        self.pump_iterations
+    }
+
     /// Serve `frames` at `cfg` in steady state on the live stack.
     /// Returns `None` when sim-backed (or when serving fails).
     pub fn steady_state(&mut self, cfg: HwConfig, frames: u64) -> Option<ServeReport> {
@@ -209,7 +225,10 @@ impl LiveEnv {
         b.server.set_concurrency(applied.concurrency as usize);
         b.server.reset_window_metrics();
         match b.server.run_closed_loop(&mut b.video, frames, self.inflight) {
-            Ok(report) => Some(report),
+            Ok(report) => {
+                self.pump_iterations += report.pump_iterations;
+                Some(report)
+            }
             Err(e) => {
                 log::warn!("steady-state serving failed: {e}");
                 None
@@ -256,6 +275,7 @@ impl Environment for LiveEnv {
                 self.inflight,
             ) {
                 Ok(report) => {
+                    self.pump_iterations += report.pump_iterations;
                     let retained = self.sampler.record(Sample {
                         throughput_fps: report.throughput_fps,
                         power_mw: sim_m.power_mw,

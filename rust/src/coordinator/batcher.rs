@@ -2,6 +2,11 @@
 //! reaches the target size or the oldest request hits its deadline —
 //! the standard size-or-timeout policy (vLLM-style), kept as pure logic
 //! (logical clock in, batches out) so it is exhaustively testable.
+//!
+//! [`Batcher::next_deadline`] is the same policy read forward in time:
+//! it tells the event-driven pump the earliest instant `pop_ready`
+//! would release, so the pump can block exactly that long instead of
+//! sleep-polling.
 
 use std::time::Duration;
 
@@ -76,6 +81,22 @@ impl Batcher {
         }
         let n = self.queue.len().min(self.cfg.max_batch);
         Some(self.queue.drain(..n).collect())
+    }
+
+    /// When [`Batcher::pop_ready`] would next release a batch, assuming
+    /// no further pushes: `None` on an empty queue, otherwise the
+    /// earliest `t >= now` at which `pop_ready(t)` returns a batch —
+    /// `now` itself when one is already due (full batch, expired head,
+    /// or zero `max_wait`), the head's `arrived + max_wait` deadline
+    /// otherwise. Pure logic: the event-driven serving pump uses it to
+    /// bound its blocking wait instead of sleep-polling, and the
+    /// agreement with `pop_ready` is property-tested below.
+    pub fn next_deadline(&self, now: Duration) -> Option<Duration> {
+        let head = self.queue.first()?;
+        if self.queue.len() >= self.cfg.max_batch || self.cfg.max_wait.is_zero() {
+            return Some(now);
+        }
+        Some((head.arrived + self.cfg.max_wait).max(now))
     }
 
     /// Drain everything immediately (shutdown).
@@ -195,6 +216,84 @@ mod tests {
         assert_eq!(b.drain_all().len(), 2);
         assert_eq!(b.queued(), 0);
         assert!(b.pop_ready(Duration::from_secs(10)).is_none());
+    }
+
+    #[test]
+    fn next_deadline_empty_queue_is_none() {
+        let b = Batcher::new(cfg(4, 10));
+        assert!(b.next_deadline(Duration::ZERO).is_none());
+        assert!(b.next_deadline(Duration::from_secs(100)).is_none());
+    }
+
+    #[test]
+    fn next_deadline_full_batch_is_due_now() {
+        let mut b = Batcher::new(cfg(2, 1000));
+        b.push(req(0, 0));
+        b.push(req(1, 1));
+        let now = Duration::from_millis(1);
+        assert_eq!(b.next_deadline(now), Some(now));
+    }
+
+    #[test]
+    fn next_deadline_partial_batch_is_head_deadline() {
+        let mut b = Batcher::new(cfg(8, 10));
+        b.push(req(0, 3));
+        b.push(req(1, 7));
+        // Head arrived at t=3 with a 10 ms wait: fires at t=13
+        // regardless of later arrivals.
+        assert_eq!(
+            b.next_deadline(Duration::from_millis(5)),
+            Some(Duration::from_millis(13))
+        );
+        // An already-expired head is due now, never in the past.
+        let late = Duration::from_millis(20);
+        assert_eq!(b.next_deadline(late), Some(late));
+    }
+
+    #[test]
+    fn next_deadline_zero_wait_is_always_due() {
+        let mut b = Batcher::new(cfg(8, 0));
+        b.push(req(0, 4));
+        let now = Duration::from_millis(4);
+        assert_eq!(b.next_deadline(now), Some(now));
+    }
+
+    #[test]
+    fn prop_next_deadline_agrees_with_pop_ready() {
+        // The pump's contract: for any reachable queue state and any
+        // probe time t >= now, pop_ready(t) releases a batch exactly
+        // when t has reached next_deadline(now).
+        prop::check("next_deadline/pop_ready agreement", 300, |g| {
+            let policy =
+                cfg(g.rng.range_usize(1, 6), g.rng.range_usize(0, 15) as u64);
+            let mut b = Batcher::new(policy);
+            let mut t = 0u64;
+            for id in 0..g.rng.range_usize(0, 12) as u64 {
+                t += g.rng.range_usize(0, 6) as u64;
+                b.push(req(id, t));
+                // Occasionally pop so partial/post-release states are
+                // covered too.
+                if g.rng.chance(0.3) {
+                    b.pop_ready(Duration::from_millis(t));
+                }
+            }
+            let now = Duration::from_millis(t);
+            let probe = Duration::from_millis(t + g.rng.range_usize(0, 30) as u64);
+            match b.next_deadline(now) {
+                None => {
+                    prop::assert_true(b.queued() == 0, "None only when empty")?;
+                    prop::assert_true(
+                        b.pop_ready(probe).is_none(),
+                        "empty queue never releases",
+                    )
+                }
+                Some(d) => {
+                    prop::assert_true(d >= now, "deadline never in the past")?;
+                    let fires = b.pop_ready(probe).is_some();
+                    prop::assert_eq_dbg(&fires, &(probe >= d))
+                }
+            }
+        });
     }
 
     #[test]

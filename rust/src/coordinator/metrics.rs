@@ -1,15 +1,42 @@
 //! Serving metrics: completed/failed counts, end-to-end latency
 //! distribution, batch-size histogram, throughput gauge.
+//!
+//! Gauges are **per measurement window**: `reset_distributions` starts
+//! a fresh window (distributions *and* the completion span), while the
+//! completed/failed counters span the server's lifetime. Rates are
+//! NaN/inf-free via [`finite_rate`] so degenerate windows can never
+//! leak `inf` into telemetry and from there into dCor.
 
 use std::time::Duration;
 
 use crate::stats::summary;
+
+/// Shortest window over which a rate is computed (seconds). Trivially
+/// fast runs — stub engines, sub-microsecond walls — clamp here so rate
+/// gauges stay finite instead of dividing by (near-)zero.
+pub const MIN_RATE_WINDOW_S: f64 = 1e-6;
+
+/// `count / seconds` with a NaN/inf-free contract: a zero (or
+/// non-finite) count reports 0.0 regardless of the window, and the
+/// window is clamped to [`MIN_RATE_WINDOW_S`]. Used by every
+/// throughput gauge on the serving path; the telemetry window and the
+/// correlation engine downstream assume finite inputs.
+pub fn finite_rate(count: f64, seconds: f64) -> f64 {
+    if count <= 0.0 || !count.is_finite() {
+        return 0.0;
+    }
+    count / seconds.max(MIN_RATE_WINDOW_S)
+}
 
 /// Accumulated serving metrics.
 #[derive(Debug, Clone, Default)]
 pub struct ServerMetrics {
     completed: u64,
     failed: u64,
+    /// Completions inside the current window (tracks the span below, so
+    /// the throughput gauge never mixes lifetime counts with a window
+    /// span).
+    window_completed: u64,
     latencies_ms: Vec<f64>,
     exec_ms: Vec<f64>,
     batch_sizes: Vec<usize>,
@@ -36,6 +63,7 @@ impl ServerMetrics {
             return;
         }
         self.completed += batch_size as u64;
+        self.window_completed += batch_size as u64;
         self.batch_sizes.push(batch_size);
         self.exec_ms.push(exec_time.as_secs_f64() * 1000.0);
         for l in request_latencies {
@@ -47,14 +75,19 @@ impl ServerMetrics {
         self.last_completion = Some(now);
     }
 
-    /// Clear the distribution buffers (latency/exec/batch) while keeping
-    /// the lifetime counters and completion span. Called at
-    /// measurement-window boundaries so percentile reports describe one
-    /// window, not the server's whole life.
+    /// Start a fresh measurement window: clear the distribution buffers
+    /// (latency/exec/batch) *and* the completion span feeding the
+    /// throughput gauge, keeping only the lifetime completed/failed
+    /// counters. Called at window boundaries so percentile and
+    /// throughput reports describe one window, not the server's whole
+    /// life.
     pub fn reset_distributions(&mut self) {
         self.latencies_ms.clear();
         self.exec_ms.clear();
         self.batch_sizes.clear();
+        self.window_completed = 0;
+        self.first_completion = None;
+        self.last_completion = None;
     }
 
     pub fn completed(&self) -> u64 {
@@ -65,11 +98,12 @@ impl ServerMetrics {
         self.failed
     }
 
-    /// Requests per second over the completion span.
+    /// Requests per second over the current window's completion span
+    /// (NaN until the window holds two completions at distinct times).
     pub fn throughput_fps(&self) -> f64 {
         match (self.first_completion, self.last_completion) {
-            (Some(a), Some(b)) if b > a && self.completed > 1 => {
-                (self.completed - 1) as f64 / (b - a).as_secs_f64()
+            (Some(a), Some(b)) if b > a && self.window_completed > 1 => {
+                (self.window_completed - 1) as f64 / (b - a).as_secs_f64()
             }
             _ => f64::NAN,
         }
@@ -128,6 +162,28 @@ mod tests {
     }
 
     #[test]
+    fn reset_distributions_resets_completion_span() {
+        // Regression: the throughput gauge must describe the current
+        // window, not the server's lifetime. Before the fix, the span
+        // (first/last completion) survived `reset_distributions`, so a
+        // post-reset gauge still divided lifetime counts by a lifetime
+        // span, contradicting the documented per-window contract.
+        let mut m = ServerMetrics::new();
+        m.record_batch(1, ms(1), &[ms(1)], ms(0), false);
+        m.record_batch(1, ms(1), &[ms(1)], ms(1000), false);
+        assert!((m.throughput_fps() - 1.0).abs() < 1e-9);
+        m.reset_distributions();
+        assert!(m.throughput_fps().is_nan(), "fresh window has no span yet");
+        assert_eq!(m.completed(), 2, "lifetime counter survives the reset");
+        // The new window's gauge spans only its own completions: two
+        // completions 100 ms apart = 10 fps, regardless of the 5-second
+        // lifetime span.
+        m.record_batch(1, ms(1), &[ms(1)], ms(5000), false);
+        m.record_batch(1, ms(1), &[ms(1)], ms(5100), false);
+        assert!((m.throughput_fps() - 10.0).abs() < 1e-9, "{}", m.throughput_fps());
+    }
+
+    #[test]
     fn throughput_over_span() {
         let mut m = ServerMetrics::new();
         m.record_batch(1, ms(1), &[ms(1)], ms(0), false);
@@ -143,5 +199,22 @@ mod tests {
         assert_eq!(m.failed(), 3);
         assert_eq!(m.completed(), 0);
         assert!(m.throughput_fps().is_nan());
+    }
+
+    #[test]
+    fn zero_wall_rate_is_finite() {
+        // Regression: `completed / 0.0` used to feed `inf` into the
+        // telemetry window (and from there into dCor). The clamp keeps
+        // trivially fast windows finite and a zero count exactly 0.
+        assert_eq!(finite_rate(0.0, 0.0), 0.0);
+        assert_eq!(finite_rate(0.0, 10.0), 0.0);
+        assert!((finite_rate(30.0, 2.0) - 15.0).abs() < 1e-12);
+        let clamped = finite_rate(5.0, 0.0);
+        assert!(clamped.is_finite(), "zero wall must not produce inf");
+        assert!((clamped - 5.0 / MIN_RATE_WINDOW_S).abs() < 1e-6);
+        assert!(finite_rate(5.0, f64::NAN).is_finite());
+        assert_eq!(finite_rate(f64::NAN, 1.0), 0.0);
+        assert_eq!(finite_rate(f64::INFINITY, 1.0), 0.0);
+        assert_eq!(finite_rate(-3.0, 1.0), 0.0);
     }
 }

@@ -3,14 +3,22 @@
 //! The system CORAL tunes: a request router feeding per-model dynamic
 //! batchers, a worker pool whose size is the paper's **concurrency
 //! level** (the application-level knob presets ignore, §II-A1), and
-//! serving metrics. Threads + channels (std) own the event loop; the
-//! PJRT executables run real inference on the hot path.
+//! serving metrics. Threads + condvar-backed queues (std) own the
+//! event loop; the PJRT executables run real inference on the hot path
+//! (behind the [`InferenceEngine`] seam, so the coordinator is fully
+//! testable without artifacts).
 //!
 //! ```text
 //! clients → Router → Batcher (size/deadline) → WorkerPool (c workers)
-//!                                                  └→ PJRT executables
+//!                                                  └→ InferenceEngine (PJRT)
 //!               completions → ServerMetrics (fps, latency percentiles)
 //! ```
+//!
+//! The serving pump is **event-driven**: workers signal every
+//! completion (and their own death) through a condvar the pump blocks
+//! on, bounded by [`Batcher::next_deadline`] — no sleep-polling
+//! anywhere on the serving or measurement path, so an idle pump costs
+//! zero CPU and zero power.
 
 pub mod batcher;
 pub mod metrics;
@@ -19,7 +27,9 @@ pub mod server;
 pub mod worker;
 
 pub use batcher::{Batcher, BatcherConfig, PendingRequest};
-pub use metrics::ServerMetrics;
+pub use metrics::{finite_rate, ServerMetrics, MIN_RATE_WINDOW_S};
 pub use router::{ModelServer, Router};
 pub use server::{Server, ServerConfig, ServeReport};
-pub use worker::{BatchJob, BatchResult, WorkerPool};
+pub use worker::{
+    BatchJob, BatchResult, InferenceEngine, PoolEvent, ShareableRuntime, WorkerPool, NO_WORKER,
+};

@@ -1,5 +1,15 @@
 //! The serving event loop: batcher → worker pool → metrics, with
 //! runtime-adjustable concurrency (the knob CORAL tunes live).
+//!
+//! The pump is **event-driven**: [`Server::run_closed_loop`] blocks on
+//! the pool's completion signal, bounded by the batcher's next release
+//! deadline ([`Batcher::next_deadline`]) — it never sleep-polls. On an
+//! edge board a busy-wait is itself a power consumer, polluting exactly
+//! the throughput/power signal the optimizer correlates, so the
+//! measurement path must cost nothing while idle. Every wake is
+//! accounted in [`ServeReport::pump_iterations`] /
+//! [`ServeReport::deadline_fires`], which is what makes "no busy-wait"
+//! an assertable property rather than a comment.
 
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -7,8 +17,8 @@ use std::time::{Duration, Instant};
 use anyhow::Result;
 
 use super::batcher::{Batcher, BatcherConfig, PendingRequest};
-use super::metrics::ServerMetrics;
-use super::worker::{BatchJob, ShareableRuntime, WorkerPool};
+use super::metrics::{finite_rate, ServerMetrics};
+use super::worker::{BatchJob, InferenceEngine, PoolEvent, ShareableRuntime, WorkerPool};
 use crate::runtime::{Detections, ModelRuntime};
 use crate::workload::VideoSource;
 
@@ -27,11 +37,25 @@ impl Default for ServerConfig {
     }
 }
 
+/// How long [`Server::set_concurrency`] waits for in-flight batches
+/// before giving up on the old pool. The wait is event-driven (a
+/// completion or a pool death ends it early); the timeout only bounds a
+/// silently hung worker.
+const DRAIN_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// Safety net for pump waits no batcher deadline bounds (pool at its
+/// backpressure budget, or the queue is empty): a completion or a worker
+/// death wakes the pump immediately, so this only bounds how long a
+/// silently hung worker can block one loop iteration.
+const PUMP_STALL_WAIT: Duration = Duration::from_secs(5);
+
 /// Steady-state report of a serving run.
 #[derive(Debug, Clone)]
 pub struct ServeReport {
     pub requests: u64,
     pub failed: u64,
+    /// NaN/inf-free: clamped via [`finite_rate`], so a trivially fast
+    /// window feeds telemetry (and from there dCor) finite numbers.
     pub throughput_fps: f64,
     pub latency_p50_ms: f64,
     pub latency_p95_ms: f64,
@@ -40,6 +64,12 @@ pub struct ServeReport {
     pub mean_exec_ms: f64,
     pub concurrency: usize,
     pub wall_s: f64,
+    /// Pump loop iterations (wakeups) this run. Event-driven bound:
+    /// proportional to completions + deadline fires, never wall-clock.
+    pub pump_iterations: u64,
+    /// Pump wakes caused by the batcher's release deadline firing
+    /// (partial batches whose oldest request hit `max_wait`).
+    pub deadline_fires: u64,
 }
 
 impl std::fmt::Display for ServeReport {
@@ -63,26 +93,37 @@ impl std::fmt::Display for ServeReport {
 
 /// Single-model serving stack.
 pub struct Server {
-    runtime: Arc<ShareableRuntime>,
+    engine: Arc<dyn InferenceEngine>,
     pool: WorkerPool,
     batcher: Batcher,
     metrics: ServerMetrics,
     start: Instant,
+    /// Batches handed to the pool and not yet absorbed.
     inflight_batches: usize,
+    /// Exact requests inside those batches (a deadline-released partial
+    /// batch counts its real size, not `max_batch`).
+    inflight_requests: usize,
     total_submitted: u64,
 }
 
 impl Server {
     pub fn new(runtime: ModelRuntime, cfg: ServerConfig) -> Server {
-        let runtime = Arc::new(ShareableRuntime(runtime));
-        let pool = WorkerPool::new(Arc::clone(&runtime), cfg.concurrency);
+        Server::with_engine(Arc::new(ShareableRuntime(runtime)), cfg)
+    }
+
+    /// Build a server over any [`InferenceEngine`] — the PJRT runtime in
+    /// production, a stub in tests and benches, so the coordinator logic
+    /// is fully exercisable without AOT artifacts.
+    pub fn with_engine(engine: Arc<dyn InferenceEngine>, cfg: ServerConfig) -> Server {
+        let pool = WorkerPool::new(Arc::clone(&engine), cfg.concurrency);
         Server {
-            runtime,
+            engine,
             pool,
             batcher: Batcher::new(cfg.batcher),
             metrics: ServerMetrics::new(),
             start: Instant::now(),
             inflight_batches: 0,
+            inflight_requests: 0,
             total_submitted: 0,
         }
     }
@@ -96,9 +137,9 @@ impl Server {
         &self.metrics
     }
 
-    /// Start a fresh measurement window: subsequent percentile/batch
-    /// reports describe only traffic served from now on. Lifetime
-    /// counters (completed/failed) are unaffected.
+    /// Start a fresh measurement window: subsequent percentile, batch,
+    /// and throughput-gauge reports describe only traffic served from
+    /// now on. Lifetime counters (completed/failed) are unaffected.
     pub fn reset_window_metrics(&mut self) {
         self.metrics.reset_distributions();
     }
@@ -107,39 +148,97 @@ impl Server {
         self.pool.size()
     }
 
-    /// Requests queued or in flight (admission-control signal).
+    /// Requests queued or in flight (admission-control signal). Exact:
+    /// an in-flight partial batch contributes its real request count,
+    /// not `max_batch`, so deadline-released partial batches don't
+    /// inflate the backpressure seen by the router.
     pub fn backlog(&self) -> usize {
-        self.batcher.queued() + self.inflight_batches * self.batcher.config().max_batch
+        self.batcher.queued() + self.inflight_requests
+    }
+
+    /// Batches handed to the pool and not yet absorbed (the unit
+    /// `tick()`'s `pool.size() * 2` backpressure budget is charged in).
+    pub fn inflight_batches(&self) -> usize {
+        self.inflight_batches
+    }
+
+    /// Exact request count inside the in-flight batches.
+    pub fn inflight_requests(&self) -> usize {
+        self.inflight_requests
     }
 
     /// Model input side (square pixels).
     pub fn input_side(&self) -> usize {
-        self.runtime.0.input_side()
+        self.engine.input_side()
     }
 
     /// Change the live concurrency level: drains in-flight work, swaps
     /// the worker pool (what `nvpmodel`-style reconfiguration does to the
     /// app layer; the measurement warm-up after this is the optimizer's
     /// problem, as on real hardware).
+    ///
+    /// The drain blocks on the pool's completion signal — it wakes on
+    /// every result and the instant the pool dies — instead of polling
+    /// with a fixed-slice `recv_timeout`. Whatever the old pool's
+    /// `shutdown()` returns (including synthesized failures for jobs no
+    /// worker ever ran) is absorbed, and the in-flight counters are
+    /// reconciled against it, so a drain timeout can never leave
+    /// `inflight_batches` pinned above zero and permanently shrink the
+    /// backpressure budget. A pool whose live workers produced nothing
+    /// for the whole drain window is detached (dropped without joining
+    /// the hung threads) rather than joined, so reconfiguration always
+    /// completes.
     pub fn set_concurrency(&mut self, c: usize) {
-        if c == self.pool.size() {
+        // Same-size reconfiguration is a no-op only while every worker
+        // is still alive: a pool with dead workers is rebuilt even at
+        // unchanged concurrency, so reapplying the current level heals
+        // a (partially) dead server instead of keeping it dead forever.
+        if c == self.pool.size() && self.pool.alive() == self.pool.size() {
             return;
         }
-        // Drain in-flight batches so no request is lost.
+        let deadline = Instant::now() + DRAIN_TIMEOUT;
         while self.inflight_batches > 0 {
-            if let Some(r) = self.pool.recv_timeout(Duration::from_secs(30)) {
+            while let Some(r) = self.pool.try_recv() {
                 self.absorb(r);
-            } else {
+            }
+            if self.inflight_batches == 0 {
                 break;
             }
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match self.pool.wait_event(deadline - now) {
+                PoolEvent::ResultReady => continue,
+                PoolEvent::Dead | PoolEvent::TimedOut => break,
+            }
+        }
+        // Final sweep: a result that landed just as the drain gave up
+        // is still absorbed rather than discarded with the old pool.
+        while let Some(r) = self.pool.try_recv() {
+            self.absorb(r);
         }
         let old = std::mem::replace(
             &mut self.pool,
-            WorkerPool::new(Arc::clone(&self.runtime), c),
+            WorkerPool::new(Arc::clone(&self.engine), c),
         );
-        for r in old.shutdown() {
-            self.absorb(r);
+        if self.inflight_batches > 0 && old.alive() > 0 {
+            // Live workers that produced nothing for DRAIN_TIMEOUT are
+            // hung mid-inference; `shutdown()` would join them and block
+            // forever. Detach instead: the pool's Drop closes the job
+            // queue without joining, and the stuck work is reconciled
+            // as failed below.
+            log::warn!(
+                "drain timed out with {} batch(es) stuck on hung worker(s); detaching old pool",
+                self.inflight_batches
+            );
+            drop(old);
+        } else {
+            for r in old.shutdown() {
+                self.absorb(r);
+            }
         }
+        self.reconcile_lost_inflight();
     }
 
     /// Enqueue one frame.
@@ -150,7 +249,17 @@ impl Server {
     }
 
     fn absorb(&mut self, r: super::worker::BatchResult) -> Vec<(u64, Detections)> {
+        if self.inflight_batches == 0 {
+            // Late synthesized result for a batch already reconciled as
+            // lost (the pool died with the job stranded in its queue):
+            // its failure was counted by `reconcile_lost_inflight` —
+            // drop it instead of double-counting. A real completion
+            // cannot arrive here: reconciliation only happens once no
+            // worker is left to complete anything.
+            return Vec::new();
+        }
         self.inflight_batches -= 1;
+        self.inflight_requests = self.inflight_requests.saturating_sub(r.ids.len());
         let now = self.now();
         let lats: Vec<Duration> =
             r.arrived.iter().map(|&a| now.saturating_sub(a)).collect();
@@ -163,8 +272,42 @@ impl Server {
         r.ids.into_iter().zip(r.detections).collect()
     }
 
+    /// Batches the pool can never return (every worker died mid-flight)
+    /// are counted failed and the in-flight counters zeroed, so the
+    /// backpressure budget — and any closed loop waiting on them —
+    /// recovers instead of wedging.
+    fn reconcile_lost_inflight(&mut self) {
+        if self.inflight_batches == 0 {
+            return;
+        }
+        let lost = self.inflight_requests;
+        log::warn!(
+            "{} in-flight batch(es) / {lost} request(s) lost to dead workers; counted failed",
+            self.inflight_batches
+        );
+        let now = self.now();
+        self.metrics.record_batch(lost, Duration::ZERO, &[], now, true);
+        self.inflight_batches = 0;
+        self.inflight_requests = 0;
+    }
+
+    /// A dead pool executes nothing: release every queued request
+    /// immediately as failed (batching deadlines are moot without
+    /// workers), so closed loops terminate instead of waiting on
+    /// batches that will never form.
+    fn fail_queued_requests(&mut self) {
+        let queued = self.batcher.drain_all();
+        if queued.is_empty() {
+            return;
+        }
+        log::warn!("failing {} queued request(s): worker pool dead", queued.len());
+        let now = self.now();
+        self.metrics.record_batch(queued.len(), Duration::ZERO, &[], now, true);
+    }
+
     /// Pump the loop: release due batches to the pool, collect finished
-    /// ones. Returns completed `(id, detections)` pairs.
+    /// ones. Returns completed `(id, detections)` pairs. Non-blocking —
+    /// the closed loop blocks between ticks on the completion signal.
     pub fn tick(&mut self) -> Vec<(u64, Detections)> {
         let now = self.now();
         // Keep the pool fed, but do not queue unboundedly: at most 2
@@ -180,8 +323,10 @@ impl Server {
                         arrived.push(r.arrived);
                         pixels.extend_from_slice(&r.pixels);
                     }
+                    let requests = ids.len();
                     self.pool.submit(BatchJob { ids, arrived, pixels });
                     self.inflight_batches += 1;
+                    self.inflight_requests += requests;
                 }
                 None => break,
             }
@@ -196,6 +341,12 @@ impl Server {
     /// Drive a closed loop: `inflight` outstanding frames from `video`,
     /// `total` terminated requests (completions + failures). Returns the
     /// steady-state report.
+    ///
+    /// Event-driven: when a tick makes no progress the loop blocks on
+    /// the pool's completion signal, with the timeout bounded by the
+    /// batcher's next release deadline — each wake is a completion, a
+    /// deadline fire, or a pool death. There is no sleep-polling, so an
+    /// idle pump costs zero CPU (and zero power on an edge board).
     pub fn run_closed_loop(
         &mut self,
         video: &mut VideoSource,
@@ -209,7 +360,10 @@ impl Server {
         let mut outstanding = 0usize;
         let mut completed = 0u64;
         let mut failed_seen = 0u64;
+        let mut pump_iterations = 0u64;
+        let mut deadline_fires = 0u64;
         while completed + failed_seen < total {
+            pump_iterations += 1;
             while outstanding < inflight && next_id < total {
                 self.submit(next_id, video.next_frame());
                 next_id += 1;
@@ -228,14 +382,40 @@ impl Server {
                 outstanding = outstanding.saturating_sub(newly_failed as usize);
             }
             if done.is_empty() && newly_failed == 0 {
-                std::thread::sleep(Duration::from_micros(200));
+                // No progress this tick: block until something real
+                // happens. A pending batcher deadline bounds the wait
+                // only while the backpressure budget could actually
+                // dispatch the released batch.
+                let now = self.now();
+                let budget_free = self.inflight_batches < self.pool.size() * 2;
+                let (timeout, deadline_bounded) = match self.batcher.next_deadline(now) {
+                    Some(d) if budget_free => (d.saturating_sub(now), true),
+                    _ => (PUMP_STALL_WAIT, false),
+                };
+                match self.pool.wait_event(timeout) {
+                    PoolEvent::ResultReady => {}
+                    PoolEvent::TimedOut => {
+                        if deadline_bounded {
+                            deadline_fires += 1;
+                        }
+                    }
+                    PoolEvent::Dead => {
+                        // Every worker is gone and no result is pending:
+                        // in-flight and queued work can never complete.
+                        // Count it failed so the loop terminates (new
+                        // submissions flow through `submit` on the dead
+                        // pool, which synthesizes failed results).
+                        self.reconcile_lost_inflight();
+                        self.fail_queued_requests();
+                    }
+                }
             }
         }
         let wall = (self.now() - t0).as_secs_f64();
         Ok(ServeReport {
             requests: completed,
             failed: failed_seen,
-            throughput_fps: completed as f64 / wall,
+            throughput_fps: finite_rate(completed as f64, wall),
             latency_p50_ms: self.metrics.latency_ms(50.0),
             latency_p95_ms: self.metrics.latency_ms(95.0),
             latency_p99_ms: self.metrics.latency_ms(99.0),
@@ -243,6 +423,8 @@ impl Server {
             mean_exec_ms: self.metrics.mean_exec_ms(),
             concurrency: self.pool.size(),
             wall_s: wall,
+            pump_iterations,
+            deadline_fires,
         })
     }
 
@@ -254,4 +436,6 @@ impl Server {
     }
 }
 
-// Integration tests (real PJRT + artifacts) in rust/tests/.
+// PJRT-free pump/accounting regression tests live in
+// rust/tests/coordinator_pump.rs (stub engines); integration tests with
+// real PJRT + artifacts in rust/tests/runtime_integration.rs.

@@ -2,18 +2,41 @@
 //! pulling batch jobs from a shared queue and executing them on the
 //! compiled PJRT executables.
 //!
+//! The pool is **event-driven**: completions land on a condvar-backed
+//! queue and every push wakes the serving pump ([`WorkerPool::wait_event`]),
+//! so the coordinator never sleep-polls for results. Worker liveness is
+//! tracked the same way — a worker that dies (its inference panicked)
+//! decrements the live count and wakes any waiter immediately, so a dead
+//! pool is observed as [`PoolEvent::Dead`] instead of after a timeout,
+//! and the batch it was holding is surfaced as a failed [`BatchResult`]
+//! rather than silently lost.
+//!
 //! Safety: the `xla` crate's handles wrap raw PJRT pointers and are not
 //! marked `Send`/`Sync`, but the PJRT C API guarantees thread-safe,
 //! concurrent `Execute` calls on one loaded executable (each call owns
 //! its own input/output buffers). [`ShareableRuntime`] asserts that
 //! contract once, in one place.
 
-use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, Mutex};
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use crate::runtime::{Detections, ModelRuntime};
+
+/// What the pool needs from an inference backend: the PJRT-compiled
+/// [`ModelRuntime`] in production (via [`ShareableRuntime`]), anything
+/// deterministic in tests and benches — the whole coordinator is
+/// exercisable without AOT artifacts.
+pub trait InferenceEngine: Send + Sync + 'static {
+    /// Run `n` images (flattened NHWC, `n`·H·W·C floats); returns exactly
+    /// `n` detections, or an error that the pool surfaces as a failed
+    /// batch.
+    fn infer(&self, pixels: &[f32], n: usize) -> anyhow::Result<Vec<Detections>>;
+
+    /// Input image side (square pixels).
+    fn input_side(&self) -> usize;
+}
 
 /// Wrapper asserting PJRT's documented thread-safety for execution.
 pub struct ShareableRuntime(pub ModelRuntime);
@@ -22,6 +45,16 @@ pub struct ShareableRuntime(pub ModelRuntime);
 // internally where needed. No interior mutation happens on our side.
 unsafe impl Send for ShareableRuntime {}
 unsafe impl Sync for ShareableRuntime {}
+
+impl InferenceEngine for ShareableRuntime {
+    fn infer(&self, pixels: &[f32], n: usize) -> anyhow::Result<Vec<Detections>> {
+        self.0.infer(pixels, n)
+    }
+
+    fn input_side(&self) -> usize {
+        self.0.input_side()
+    }
+}
 
 /// One batch of work for a worker.
 pub struct BatchJob {
@@ -40,66 +73,189 @@ pub struct BatchResult {
     pub detections: Vec<Detections>,
     /// Worker-side execution time.
     pub exec_time: Duration,
-    /// Which worker ran it.
+    /// Which worker ran it ([`NO_WORKER`] for results the pool
+    /// synthesized: jobs a dead or shut-down pool never executed).
     pub worker: usize,
     /// Error message if the execution failed.
     pub error: Option<String>,
 }
 
+/// Sentinel worker index for synthesized failure results.
+pub const NO_WORKER: usize = usize::MAX;
+
+/// Outcome of a blocking wait on the completion signal.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PoolEvent {
+    /// At least one completed batch is ready for [`WorkerPool::try_recv`].
+    ResultReady,
+    /// The timeout elapsed with no completion (the caller's deadline —
+    /// typically the batcher's next release — has fired).
+    TimedOut,
+    /// Every worker has died and no result is pending: in-flight work
+    /// can never complete.
+    Dead,
+}
+
+#[derive(Default)]
+struct JobQueue {
+    queue: VecDeque<BatchJob>,
+    closed: bool,
+}
+
+struct DoneQueue {
+    results: VecDeque<BatchResult>,
+    /// Workers still running; decremented on every thread exit,
+    /// including panics.
+    alive: usize,
+}
+
+/// Both condvar-backed queues the workers and the pump share.
+struct Shared {
+    jobs: Mutex<JobQueue>,
+    jobs_cv: Condvar,
+    done: Mutex<DoneQueue>,
+    done_cv: Condvar,
+}
+
+/// Poison-tolerant lock: a worker panics *outside* its critical
+/// sections, but the queues must stay usable even if one ever unwinds
+/// while holding a guard.
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+impl Shared {
+    fn push_result(&self, r: BatchResult) {
+        lock(&self.done).results.push_back(r);
+        self.done_cv.notify_all();
+    }
+}
+
+fn synthesized_failure(
+    ids: Vec<u64>,
+    arrived: Vec<Duration>,
+    error: &str,
+) -> BatchResult {
+    BatchResult {
+        ids,
+        arrived,
+        detections: Vec::new(),
+        exec_time: Duration::ZERO,
+        worker: NO_WORKER,
+        error: Some(error.to_string()),
+    }
+}
+
+fn worker_loop(shared: Arc<Shared>, engine: Arc<dyn InferenceEngine>, w: usize) {
+    /// Runs on every exit path — including a panic unwinding out of
+    /// `infer` — so the live-worker count stays exact and anyone blocked
+    /// on the completion signal learns of the death immediately.
+    struct AliveGuard {
+        shared: Arc<Shared>,
+    }
+    impl Drop for AliveGuard {
+        fn drop(&mut self) {
+            lock(&self.shared.done).alive -= 1;
+            self.shared.done_cv.notify_all();
+        }
+    }
+
+    /// Armed while `infer` runs: if the engine panics, the in-hand batch
+    /// is surfaced as a failed result instead of vanishing with the
+    /// thread.
+    struct JobGuard {
+        shared: Arc<Shared>,
+        job: Option<(Vec<u64>, Vec<Duration>)>,
+        worker: usize,
+    }
+    impl Drop for JobGuard {
+        fn drop(&mut self) {
+            if let Some((ids, arrived)) = self.job.take() {
+                let mut r =
+                    synthesized_failure(ids, arrived, "worker panicked during inference");
+                r.worker = self.worker;
+                self.shared.push_result(r);
+            }
+        }
+    }
+
+    let _alive = AliveGuard { shared: Arc::clone(&shared) };
+    loop {
+        // Competitive pull: idle workers block on the job condvar and
+        // race for the next job; a closed, empty queue shuts them down.
+        let job = {
+            let mut q = lock(&shared.jobs);
+            loop {
+                if let Some(job) = q.queue.pop_front() {
+                    break job;
+                }
+                if q.closed {
+                    return;
+                }
+                q = shared
+                    .jobs_cv
+                    .wait(q)
+                    .unwrap_or_else(|p| p.into_inner());
+            }
+        };
+        let BatchJob { ids, arrived, pixels } = job;
+        let n = ids.len();
+        let mut guard = JobGuard {
+            shared: Arc::clone(&shared),
+            job: Some((ids, arrived)),
+            worker: w,
+        };
+        let t0 = Instant::now();
+        let out = engine.infer(&pixels, n);
+        let exec_time = t0.elapsed();
+        let (ids, arrived) = guard.job.take().expect("guard armed above");
+        let result = match out {
+            Ok(detections) => BatchResult {
+                ids,
+                arrived,
+                detections,
+                exec_time,
+                worker: w,
+                error: None,
+            },
+            Err(e) => BatchResult {
+                ids,
+                arrived,
+                detections: Vec::new(),
+                exec_time,
+                worker: w,
+                error: Some(e.to_string()),
+            },
+        };
+        shared.push_result(result);
+    }
+}
+
 /// Fixed-size pool of inference workers over a shared job queue.
 pub struct WorkerPool {
-    job_tx: Option<Sender<BatchJob>>,
-    result_rx: Receiver<BatchResult>,
+    shared: Arc<Shared>,
     handles: Vec<JoinHandle<()>>,
     size: usize,
 }
 
 impl WorkerPool {
-    /// Spawn `concurrency` workers sharing `runtime`.
-    pub fn new(runtime: Arc<ShareableRuntime>, concurrency: usize) -> WorkerPool {
+    /// Spawn `concurrency` workers sharing `engine`.
+    pub fn new(engine: Arc<dyn InferenceEngine>, concurrency: usize) -> WorkerPool {
         assert!(concurrency >= 1, "pool needs at least one worker");
-        let (job_tx, job_rx) = channel::<BatchJob>();
-        let (result_tx, result_rx) = channel::<BatchResult>();
-        let job_rx = Arc::new(Mutex::new(job_rx));
-        let mut handles = Vec::new();
-        for w in 0..concurrency {
-            let job_rx = Arc::clone(&job_rx);
-            let result_tx = result_tx.clone();
-            let runtime = Arc::clone(&runtime);
-            handles.push(std::thread::spawn(move || loop {
-                // Competitive pull: idle workers race for the next job.
-                let job = match job_rx.lock().unwrap().recv() {
-                    Ok(j) => j,
-                    Err(_) => break, // queue closed: shut down
-                };
-                let n = job.ids.len();
-                let t0 = Instant::now();
-                let out = runtime.0.infer(&job.pixels, n);
-                let exec_time = t0.elapsed();
-                let result = match out {
-                    Ok(detections) => BatchResult {
-                        ids: job.ids,
-                        arrived: job.arrived,
-                        detections,
-                        exec_time,
-                        worker: w,
-                        error: None,
-                    },
-                    Err(e) => BatchResult {
-                        ids: job.ids,
-                        arrived: job.arrived,
-                        detections: Vec::new(),
-                        exec_time,
-                        worker: w,
-                        error: Some(e.to_string()),
-                    },
-                };
-                if result_tx.send(result).is_err() {
-                    break;
-                }
-            }));
-        }
-        WorkerPool { job_tx: Some(job_tx), result_rx, handles, size: concurrency }
+        let shared = Arc::new(Shared {
+            jobs: Mutex::new(JobQueue::default()),
+            jobs_cv: Condvar::new(),
+            done: Mutex::new(DoneQueue { results: VecDeque::new(), alive: concurrency }),
+            done_cv: Condvar::new(),
+        });
+        let handles = (0..concurrency)
+            .map(|w| {
+                let shared = Arc::clone(&shared);
+                let engine = Arc::clone(&engine);
+                std::thread::spawn(move || worker_loop(shared, engine, w))
+            })
+            .collect();
+        WorkerPool { shared, handles, size: concurrency }
     }
 
     /// Number of workers (the live concurrency level).
@@ -107,39 +263,110 @@ impl WorkerPool {
         self.size
     }
 
-    /// Submit a batch.
+    /// Workers still running (a panicked worker's thread has exited).
+    pub fn alive(&self) -> usize {
+        lock(&self.shared.done).alive
+    }
+
+    /// Submit a batch. A dead pool (every worker panicked) surfaces the
+    /// job as a failed result on the completion queue — the caller's
+    /// normal absorption path accounts it — instead of panicking.
     pub fn submit(&self, job: BatchJob) {
-        self.job_tx
-            .as_ref()
-            .expect("pool closed")
-            .send(job)
-            .expect("workers gone");
+        if self.alive() == 0 {
+            self.shared.push_result(synthesized_failure(
+                job.ids,
+                job.arrived,
+                "worker pool dead: every worker has exited",
+            ));
+            return;
+        }
+        lock(&self.shared.jobs).queue.push_back(job);
+        self.shared.jobs_cv.notify_one();
     }
 
     /// Non-blocking poll for a finished batch.
     pub fn try_recv(&self) -> Option<BatchResult> {
-        self.result_rx.try_recv().ok()
+        lock(&self.shared.done).results.pop_front()
     }
 
-    /// Blocking wait (with timeout) for a finished batch.
+    /// Blocking wait (with timeout) for a finished batch. Returns `None`
+    /// on timeout, or at once when every worker has died with no result
+    /// pending.
     pub fn recv_timeout(&self, timeout: Duration) -> Option<BatchResult> {
-        self.result_rx.recv_timeout(timeout).ok()
+        match self.wait_event(timeout) {
+            PoolEvent::ResultReady | PoolEvent::TimedOut => self.try_recv(),
+            PoolEvent::Dead => None,
+        }
     }
 
-    /// Close the queue and join the workers, returning any stragglers.
+    /// Block until a completed batch is available (left on the queue for
+    /// [`WorkerPool::try_recv`]), the timeout elapses, or the pool dies.
+    /// This is the pump's wakeup primitive: no sleep-polling, every wake
+    /// is a real event.
+    pub fn wait_event(&self, timeout: Duration) -> PoolEvent {
+        let deadline = Instant::now() + timeout;
+        let mut d = lock(&self.shared.done);
+        loop {
+            if !d.results.is_empty() {
+                return PoolEvent::ResultReady;
+            }
+            if d.alive == 0 {
+                return PoolEvent::Dead;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return PoolEvent::TimedOut;
+            }
+            let (guard, _wait) = self
+                .shared
+                .done_cv
+                .wait_timeout(d, deadline - now)
+                .unwrap_or_else(|p| p.into_inner());
+            d = guard;
+        }
+    }
+
+    /// Close the queue and join the workers. Returns every outstanding
+    /// result — including synthesized failures for jobs no worker ever
+    /// picked up — so callers can reconcile their in-flight accounting
+    /// exactly (nothing is silently lost).
     pub fn shutdown(mut self) -> Vec<BatchResult> {
-        drop(self.job_tx.take());
+        {
+            let mut q = lock(&self.shared.jobs);
+            q.closed = true;
+        }
+        self.shared.jobs_cv.notify_all();
         for h in self.handles.drain(..) {
             let _ = h.join();
         }
-        let mut rest = Vec::new();
-        while let Ok(r) = self.result_rx.try_recv() {
-            rest.push(r);
+        let mut rest: Vec<BatchResult> = lock(&self.shared.done).results.drain(..).collect();
+        let mut q = lock(&self.shared.jobs);
+        while let Some(job) = q.queue.pop_front() {
+            rest.push(synthesized_failure(
+                job.ids,
+                job.arrived,
+                "worker pool shut down before execution",
+            ));
         }
         rest
     }
 }
 
-// Integration tests (real PJRT) live in rust/tests/; unit tests of the
-// channel plumbing use a trivially-failing runtime path instead and are
-// exercised through Server tests.
+impl Drop for WorkerPool {
+    /// The old mpsc design woke workers when the channel `Sender`
+    /// dropped; the condvar design must do the same explicitly. Without
+    /// this, dropping a pool that was never `shutdown()` (a panicking
+    /// test, a detached hung pool) would leak every worker parked on
+    /// the job condvar forever — each pinning the engine `Arc`.
+    /// Threads are *not* joined here (a hung worker must not block the
+    /// dropper); they exit on their own once they observe the closed
+    /// queue. Runs after `shutdown()` too, where it is a no-op.
+    fn drop(&mut self) {
+        lock(&self.shared.jobs).closed = true;
+        self.shared.jobs_cv.notify_all();
+    }
+}
+
+// Pure channel/condvar plumbing is exercised PJRT-free through the stub
+// engines in rust/tests/coordinator_pump.rs; integration tests with real
+// PJRT artifacts live in rust/tests/runtime_integration.rs.

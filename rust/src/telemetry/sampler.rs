@@ -79,16 +79,22 @@ impl Sampler {
 
     /// Record one periodic sample; warm-up samples are discarded.
     /// Returns true if the sample was retained.
+    ///
+    /// Non-finite fields are sanitized to 0.0 before retention: the
+    /// window means and the columnar dCor series downstream assume
+    /// finite inputs, and one degenerate serving window (zero wall,
+    /// dead worker pool) must not poison a whole retained history.
     pub fn record(&mut self, s: Sample) -> bool {
         if self.skipped < self.warmup {
             self.skipped += 1;
             return false;
         }
-        self.tput.push(s.throughput_fps);
-        self.power.push(s.power_mw);
-        self.gpu.push(s.gpu_util);
-        self.cpu.push(s.cpu_util);
-        self.mem.push(s.mem_util);
+        let finite = |v: f64| if v.is_finite() { v } else { 0.0 };
+        self.tput.push(finite(s.throughput_fps));
+        self.power.push(finite(s.power_mw));
+        self.gpu.push(finite(s.gpu_util));
+        self.cpu.push(finite(s.cpu_util));
+        self.mem.push(finite(s.mem_util));
         true
     }
 
@@ -186,6 +192,22 @@ mod tests {
         let mut ws = crate::stats::dcov::DcorWorkspace::new();
         let m = ws.dcor_matrix(&[&t], std::slice::from_ref(&p));
         assert!((m[0][0] - 1.0).abs() < 1e-6, "linear series: dcor={}", m[0][0]);
+    }
+
+    #[test]
+    fn non_finite_samples_sanitized() {
+        // A degenerate serving window (inf fps from a zero-wall report,
+        // NaN from a failed run) must not poison the retained means or
+        // the dCor series with non-finite values.
+        let mut sm = Sampler::new(0, 4);
+        sm.record(s(f64::INFINITY, f64::NAN));
+        sm.record(s(30.0, 6000.0));
+        let w = sm.window().unwrap();
+        assert!(w.throughput_fps.is_finite());
+        assert!(w.power_mw.is_finite());
+        assert!((w.throughput_fps - 15.0).abs() < 1e-12, "inf recorded as 0");
+        assert!(sm.throughput_series().iter().all(|v| v.is_finite()));
+        assert!(sm.power_series().iter().all(|v| v.is_finite()));
     }
 
     #[test]
