@@ -1,0 +1,116 @@
+//! Multi-tenant arbitration bench: arbitrated policies vs independent
+//! per-model controllers, scored on **aggregate power overshoot** of the
+//! shared box envelope (EXPERIMENTS.md §Multi-tenant arbitration).
+//!
+//! For every `MULTI_TENANT_SCENARIOS` entry this drives the same tenant
+//! mix (same boards, same seeds) under each budget-splitting policy and
+//! under the unarbitrated baseline, then reports per-policy aggregate
+//! power, max overshoot across rounds, and final-round feasibility. The
+//! arbitrated policies must never overshoot more than the baseline, and
+//! their sub-budget sums must respect the global envelope on every
+//! round (the safety invariant, re-checked here outside the test
+//! suite).
+
+use coral::control::{BudgetPolicy, TenantArbiter};
+use coral::experiments::scenarios::{TenantScenario, MULTI_TENANT_SCENARIOS};
+use coral::util::table;
+
+const ROUNDS: usize = 3;
+const SEED: u64 = 0x7E4A;
+
+struct Outcome {
+    label: &'static str,
+    mean_aggregate_mw: f64,
+    max_overshoot_mw: f64,
+    feasible_last_round: usize,
+}
+
+fn drive(
+    label: &'static str,
+    s: &TenantScenario,
+    mut arb: TenantArbiter,
+    arbitrated: bool,
+) -> Outcome {
+    let reports = arb.run(ROUNDS).to_vec();
+    if arbitrated {
+        for r in &reports {
+            let sum: f64 = r.tenants.iter().map(|t| t.sub_budget_mw).sum();
+            assert!(
+                sum <= s.global_budget_mw * (1.0 + 1e-9),
+                "{}/{label}: round {} sub-budgets sum {sum:.0} exceed the envelope {}",
+                s.name,
+                r.round,
+                s.global_budget_mw
+            );
+        }
+    }
+    let mean_aggregate_mw =
+        reports.iter().map(|r| r.aggregate_power_mw).sum::<f64>() / reports.len() as f64;
+    let max_overshoot_mw = reports.iter().map(|r| r.overshoot_mw).fold(0.0, f64::max);
+    let feasible_last_round = reports
+        .last()
+        .expect("rounds ran")
+        .tenants
+        .iter()
+        .filter(|t| t.feasible)
+        .count();
+    Outcome { label, mean_aggregate_mw, max_overshoot_mw, feasible_last_round }
+}
+
+fn main() {
+    println!(
+        "bench_tenants — arbitrated vs independent controllers, {ROUNDS} rounds per policy\n"
+    );
+    let mut rows = Vec::new();
+    for s in &MULTI_TENANT_SCENARIOS {
+        let outcomes = [
+            drive(
+                "static",
+                s,
+                s.arbiter(BudgetPolicy::Static(s.static_shares()), SEED),
+                true,
+            ),
+            drive("demand", s, s.arbiter(BudgetPolicy::DemandWeighted, SEED), true),
+            drive("waterfill", s, s.arbiter(BudgetPolicy::WaterFill, SEED), true),
+            drive("independent", s, s.independent(SEED), false),
+        ];
+        let baseline = outcomes
+            .iter()
+            .find(|o| o.label == "independent")
+            .expect("baseline present")
+            .max_overshoot_mw;
+        for o in &outcomes {
+            if o.label != "independent" {
+                assert!(
+                    o.max_overshoot_mw <= baseline + 1e-9,
+                    "{}/{}: arbitrated overshoot {:.0} mW exceeds the unarbitrated \
+                     baseline's {:.0} mW",
+                    s.name,
+                    o.label,
+                    o.max_overshoot_mw,
+                    baseline
+                );
+            }
+            rows.push(vec![
+                s.name.to_string(),
+                o.label.to_string(),
+                format!("{:.2}", s.global_budget_mw / 1000.0),
+                format!("{:.2}", o.mean_aggregate_mw / 1000.0),
+                format!("{:.2}", o.max_overshoot_mw / 1000.0),
+                format!("{}/{}", o.feasible_last_round, s.tenants.len()),
+            ]);
+        }
+    }
+    print!(
+        "{}",
+        table::render(
+            &["scenario", "policy", "envelope W", "mean box W", "max overshoot W", "feasible"],
+            &rows
+        )
+    );
+    println!(
+        "\novershoot = max(0, Σ tenant power − envelope) over held allocations; the \
+         arbitrated policies cap sub-budget sums at the envelope, the independent baseline \
+         hands every controller the full envelope (the PolyThrottle regime)."
+    );
+}

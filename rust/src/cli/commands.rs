@@ -6,7 +6,7 @@ use std::time::Duration;
 use anyhow::{bail, Context, Result};
 
 use super::args::Args;
-use crate::control::{ControlLoop, SimEnv};
+use crate::control::{BudgetPolicy, ControlLoop, Environment, SimEnv};
 use crate::coordinator::{BatcherConfig, Server, ServerConfig};
 use crate::device::{failure, Device, DeviceKind, Dim};
 use crate::experiments::{self, runner, scenarios};
@@ -26,6 +26,8 @@ USAGE:
                   [--trace FILE.csv]
   coral sweep     --device <nx|orin> --model <yolo|frcnn|retinanet> [--out DIR]
   coral serve     [--model M] [--requests N] [--concurrency C] [--batch B] [--inflight K]
+  coral tenants   [--scenario nx-pair|nx-triple|orin-triple] [--policy static|demand|waterfill|independent]
+                  [--rounds N] [--seed N] [--sequential]
   coral report    <specs|models|scenarios>
   coral artifacts-check [--dir DIR]
 
@@ -39,6 +41,7 @@ pub fn dispatch(args: &Args) -> Result<()> {
         Some("optimize") => cmd_optimize(args),
         Some("sweep") => cmd_sweep(args),
         Some("serve") => cmd_serve(args),
+        Some("tenants") => cmd_tenants(args),
         Some("report") => cmd_report(args),
         Some("artifacts-check") => cmd_artifacts_check(args),
         Some("help") | None => {
@@ -228,6 +231,97 @@ fn cmd_serve(args: &Args) -> Result<()> {
     Ok(())
 }
 
+fn cmd_tenants(args: &Args) -> Result<()> {
+    let name = args.opt_or("scenario", "nx-triple");
+    let s = scenarios::TenantScenario::by_name(&name).with_context(|| {
+        let names: Vec<&str> = scenarios::MULTI_TENANT_SCENARIOS.iter().map(|s| s.name).collect();
+        format!("unknown tenant scenario '{name}' (expected one of: {})", names.join(", "))
+    })?;
+    let rounds = args.opt_u64_or("rounds", 3).map_err(anyhow::Error::msg)? as usize;
+    let seed = args.opt_u64_or("seed", 42).map_err(anyhow::Error::msg)?;
+    let policy_name = args.opt_or("policy", "waterfill");
+    let mut arb = match policy_name.as_str() {
+        "static" => s.arbiter(BudgetPolicy::Static(s.static_shares()), seed),
+        "demand" => s.arbiter(BudgetPolicy::DemandWeighted, seed),
+        "waterfill" => s.arbiter(BudgetPolicy::WaterFill, seed),
+        "independent" => s.independent(seed),
+        other => bail!("unknown policy '{other}' (static|demand|waterfill|independent)"),
+    };
+    if args.has_flag("sequential") {
+        arb = arb.sequential();
+    }
+    println!(
+        "{} — {} tenants on one {} box, {:.1} W global envelope, policy {policy_name}, \
+         {rounds} round(s)",
+        s.name,
+        s.tenants.len(),
+        s.device,
+        s.global_budget_mw / 1000.0
+    );
+    let mut rows = Vec::new();
+    for _ in 0..rounds {
+        let report = arb.run_round();
+        for t in &report.tenants {
+            rows.push(vec![
+                report.round.to_string(),
+                t.name.to_string(),
+                t.model.to_string(),
+                format!("{:.2}", t.sub_budget_mw / 1000.0),
+                format!("{:.1}/{:.0}", t.chosen.throughput_fps, tenant_target(s, t.name)),
+                format!("{:.2}", t.chosen.power_mw / 1000.0),
+                if t.fell_back {
+                    "floor".into()
+                } else if t.feasible {
+                    "ok".into()
+                } else {
+                    "infeas".into()
+                },
+                t.restarts.to_string(),
+            ]);
+        }
+        rows.push(vec![
+            report.round.to_string(),
+            "= box".to_string(),
+            String::new(),
+            format!("{:.2}", s.global_budget_mw / 1000.0),
+            String::new(),
+            format!("{:.2}", report.aggregate_power_mw / 1000.0),
+            if report.overshoot_mw > 0.0 {
+                format!("OVER +{:.2} W", report.overshoot_mw / 1000.0)
+            } else {
+                "within".into()
+            },
+            String::new(),
+        ]);
+    }
+    print!(
+        "{}",
+        table::render(
+            &["round", "tenant", "model", "budget W", "fps/target", "power W", "state", "restarts"],
+            &rows
+        )
+    );
+    let max_over = arb
+        .history()
+        .iter()
+        .map(|r| r.overshoot_mw)
+        .fold(0.0, f64::max);
+    println!(
+        "\nmax aggregate overshoot across rounds: {:.2} W (search cost {:.0} s)",
+        max_over / 1000.0,
+        arb.cost_s()
+    );
+    Ok(())
+}
+
+fn tenant_target(s: &scenarios::TenantScenario, name: &str) -> f64 {
+    s.tenants
+        .iter()
+        .find(|t| t.name == name)
+        .map(|t| t.target_fps)
+        .unwrap_or(0.0)
+}
+
 fn cmd_report(args: &Args) -> Result<()> {
     match args.sub() {
         Some("specs") => {
@@ -288,6 +382,25 @@ fn cmd_report(args: &Args) -> Result<()> {
             print!(
                 "{}",
                 table::render(&["figures", "device", "model", "target fps", "budget mW"], &rows)
+            );
+            println!("\nMulti-tenant scenarios (`coral tenants`)");
+            let mut rows = Vec::new();
+            for s in scenarios::MULTI_TENANT_SCENARIOS {
+                let tenants: Vec<String> = s
+                    .tenants
+                    .iter()
+                    .map(|t| format!("{}@{}fps", t.model.name(), t.target_fps))
+                    .collect();
+                rows.push(vec![
+                    s.name.to_string(),
+                    s.device.name().to_string(),
+                    format!("{}", s.global_budget_mw),
+                    tenants.join(" + "),
+                ]);
+            }
+            print!(
+                "{}",
+                table::render(&["scenario", "device", "global mW", "tenants"], &rows)
             );
         }
         _ => bail!("report expects: specs | models | scenarios"),
@@ -384,5 +497,21 @@ mod tests {
     fn optimize_validates_device() {
         let a = args("optimize --device toaster");
         assert!(dispatch(&a).is_err());
+    }
+
+    #[test]
+    fn tenants_smoke_all_policies() {
+        for policy in ["static", "demand", "waterfill", "independent"] {
+            let a = args(&format!(
+                "tenants --scenario nx-pair --policy {policy} --rounds 1 --seed 3 --sequential"
+            ));
+            assert!(dispatch(&a).is_ok(), "policy {policy}");
+        }
+    }
+
+    #[test]
+    fn tenants_validates_scenario_and_policy() {
+        assert!(dispatch(&args("tenants --scenario mars-rover")).is_err());
+        assert!(dispatch(&args("tenants --scenario nx-pair --policy greedy")).is_err());
     }
 }

@@ -87,13 +87,29 @@ pub struct ControlLoopConfig {
     pub budget: usize,
     /// Hold-phase drift detection (None = hold never ends early).
     pub drift: Option<DriftConfig>,
+    /// Search-phase drift detection (None = off, the default). The
+    /// monitor feeds on the optimizer's own sliding window
+    /// ([`Optimizer::window_throughputs`]): once the window first holds
+    /// `window` observations their mean becomes the reference level, and
+    /// every later in-window observation is pushed into a
+    /// [`DriftDetector`]. A mid-search surface shift restarts the round
+    /// in place — [`Optimizer::reset_search`] drops the stale window and
+    /// anchors while CORAL's prohibited list survives. Search proposals
+    /// vary by design, so thresholds here should be materially wider
+    /// than hold-phase ones; optimizers without a window (the presets,
+    /// random search) never arm the monitor.
+    pub search_drift: Option<DriftConfig>,
 }
 
 impl Default for ControlLoopConfig {
     fn default() -> Self {
-        ControlLoopConfig { budget: DEFAULT_BUDGET, drift: None }
+        ControlLoopConfig { budget: DEFAULT_BUDGET, drift: None, search_drift: None }
     }
 }
+
+/// In-round search restarts are capped so a surface that never stops
+/// shifting cannot keep a [`ControlLoop::run`] alive forever.
+pub const MAX_SEARCH_RESTARTS: usize = 8;
 
 /// Telemetry event log of a control loop's life.
 #[derive(Debug, Clone, Copy)]
@@ -107,6 +123,10 @@ pub enum LoopEvent {
     /// Hold-phase windowed throughput shifted off the chosen config's
     /// measured level — the caller should re-search.
     DriftDetected { at_window: u64, reference_fps: f64, observed_fps: f64 },
+    /// Mid-search windowed throughput shifted off the level the round's
+    /// early observations established — the round restarted in place
+    /// with the optimizer's prohibited list intact.
+    SearchDriftDetected { at_window: u64, reference_fps: f64, observed_fps: f64 },
     /// A hold phase ran its full length without drifting.
     HoldCompleted { at_window: u64, windows: u64 },
 }
@@ -124,8 +144,13 @@ pub struct Step {
     pub measured: Measured,
     /// Whether this measurement satisfied the constraints.
     pub feasible: bool,
-    /// Best-so-far after observing this measurement.
+    /// Best-so-far after observing this measurement (pre-restart when
+    /// `search_drift` fired on this step).
     pub best: Option<BestConfig>,
+    /// `(reference_fps, observed_windowed_fps)` when this step's
+    /// observation fired the search-phase drift monitor and restarted
+    /// the round.
+    pub search_drift: Option<(f64, f64)>,
 }
 
 /// Result of one search round.
@@ -143,10 +168,17 @@ pub struct LoopOutcome {
     pub feasible_by_iter: Vec<bool>,
     /// Measurement cost this round's search iterations consumed, in
     /// [`Environment::cost_s`] units (hold-phase windows excluded —
-    /// serving the chosen config is deployment, not search).
+    /// serving the chosen config is deployment, not search). Includes
+    /// iterations spent before an in-round search-drift restart: their
+    /// windows were really measured.
     pub cost_s: f64,
+    /// In-round restarts the search-phase drift monitor triggered
+    /// (0 when `search_drift` is off or the surface held still).
+    pub search_restarts: usize,
     /// Every iteration of the round, replayable via
-    /// [`crate::workload::TraceReplay`].
+    /// [`crate::workload::TraceReplay`]. Spans the whole round including
+    /// iterations before a search-drift restart, so `trace.len()` can
+    /// exceed `iters` when `search_restarts > 0`.
     pub trace: Trace,
 }
 
@@ -180,6 +212,16 @@ pub struct ControlLoop<E: Environment, O: Optimizer> {
     events: Vec<LoopEvent>,
     /// Cost consumed by this round's search steps (holds excluded).
     search_cost_s: f64,
+    /// Armed search-phase drift monitor (None until the optimizer's
+    /// window first fills, and between restarts).
+    search_detector: Option<DriftDetector>,
+    /// Optimizer-window length at the previous arming check — a stalled
+    /// length below the configured drift window means the optimizer's
+    /// window saturated (its capacity is smaller), so the monitor arms
+    /// on what is retained instead of staying silently inert.
+    search_window_len: usize,
+    /// In-round restarts the search-phase monitor triggered.
+    search_restarts: usize,
 }
 
 impl<E: Environment, O: Optimizer> ControlLoop<E, O> {
@@ -196,12 +238,18 @@ impl<E: Environment, O: Optimizer> ControlLoop<E, O> {
             trace: Trace::new(),
             events: vec![LoopEvent::SearchStarted { at_window: 0 }],
             search_cost_s: 0.0,
+            search_detector: None,
+            search_window_len: 0,
+            search_restarts: 0,
         }
     }
 
     /// Default config with an explicit iteration budget.
     pub fn with_budget(env: E, opt: O, cons: Constraints, budget: usize) -> Self {
-        ControlLoop::new(env, opt, cons, ControlLoopConfig { budget, drift: None })
+        ControlLoop::new(env, opt, cons, ControlLoopConfig {
+            budget,
+            ..ControlLoopConfig::default()
+        })
     }
 
     /// Has the current search round exhausted its budget?
@@ -220,6 +268,7 @@ impl<E: Environment, O: Optimizer> ControlLoop<E, O> {
         self.trace.record(config, m.throughput_fps, m.power_mw);
         self.window += 1;
         self.iter += 1;
+        let this_iter = self.iter - 1;
         let feasible = self.cons.feasible(m.throughput_fps, m.power_mw);
         if feasible && self.first_feasible.is_none() {
             self.first_feasible = Some(self.iter);
@@ -229,7 +278,29 @@ impl<E: Environment, O: Optimizer> ControlLoop<E, O> {
         let best = self.opt.best();
         self.feasible_by_iter
             .push(best.map(|b| b.feasible).unwrap_or(false));
-        if self.done() {
+        let search_drift = self.search_drift_check(&m);
+        if let Some((reference, observed)) = search_drift {
+            // The surface shifted under the search: everything measured
+            // so far describes a level that no longer exists. Restart
+            // the round in place — the optimizer keeps what survives a
+            // shift (CORAL's prohibited list) and drops the stale window
+            // and anchors; the fresh round re-references off the new
+            // surface before the monitor can arm again.
+            self.events.push(LoopEvent::SearchDriftDetected {
+                at_window: self.window,
+                reference_fps: reference,
+                observed_fps: observed,
+            });
+            self.opt.reset_search();
+            self.iter = 0;
+            self.first_feasible = None;
+            self.feasible_by_iter.clear();
+            self.search_detector = None;
+            self.search_window_len = 0;
+            self.search_restarts += 1;
+            self.events
+                .push(LoopEvent::SearchStarted { at_window: self.window });
+        } else if self.done() {
             // Emitted here — not from run() — so manually-stepped loops
             // log round completion too, exactly once per round.
             self.events.push(LoopEvent::SearchCompleted {
@@ -239,12 +310,48 @@ impl<E: Environment, O: Optimizer> ControlLoop<E, O> {
         }
         Step {
             window: self.window,
-            iter: self.iter - 1,
+            iter: this_iter,
             config,
             measured: m,
             feasible,
             best,
+            search_drift,
         }
+    }
+
+    /// Feed the search-phase drift monitor with this step's observation.
+    /// Returns `(reference, observed)` when the windowed mean has
+    /// shifted off the round's reference level.
+    fn search_drift_check(&mut self, m: &Measured) -> Option<(f64, f64)> {
+        let dcfg = self.cfg.search_drift?;
+        if self.search_restarts >= MAX_SEARCH_RESTARTS {
+            return None; // runaway-shift backstop: finish on the budget
+        }
+        // Crashed windows carry no surface signal (the optimizer's
+        // window skips them too).
+        if m.throughput_fps <= 0.0 {
+            return None;
+        }
+        if self.search_detector.is_none() {
+            let w = self.opt.window_throughputs();
+            // Every call reaching this point pushed a sample into the
+            // optimizer's window, so a stalled length below the drift
+            // window means the window is evicting — its capacity is
+            // smaller than `dcfg.window` — and waiting longer would
+            // leave the monitor silently inert. Arm on what is retained.
+            let saturated = !w.is_empty() && w.len() == self.search_window_len;
+            self.search_window_len = w.len();
+            if w.len() >= dcfg.window || saturated {
+                // The window's first fill sets the reference level; this
+                // step's observation is part of it, not a pushed sample.
+                let mean = w.iter().sum::<f64>() / w.len() as f64;
+                self.search_detector = Some(DriftDetector::new(dcfg, mean));
+            }
+            return None;
+        }
+        let det = self.search_detector.as_mut().expect("armed above");
+        det.push(m.throughput_fps)
+            .map(|observed| (det.reference_fps(), observed))
     }
 
     /// Drive the remaining budget and return the round's outcome.
@@ -270,6 +377,7 @@ impl<E: Environment, O: Optimizer> ControlLoop<E, O> {
             first_feasible_iter: self.first_feasible,
             feasible_by_iter: self.feasible_by_iter.clone(),
             cost_s: self.search_cost_s,
+            search_restarts: self.search_restarts,
             trace: self.trace.clone(),
         }
     }
@@ -321,8 +429,19 @@ impl<E: Environment, O: Optimizer> ControlLoop<E, O> {
         self.feasible_by_iter.clear();
         self.trace = Trace::new();
         self.search_cost_s = 0.0;
+        self.search_detector = None;
+        self.search_window_len = 0;
+        self.search_restarts = 0;
         self.events
             .push(LoopEvent::SearchStarted { at_window: self.window });
+    }
+
+    /// Replace the feasibility constraints for subsequent rounds. The
+    /// multi-tenant arbiter re-budgets tenants between rounds; swap the
+    /// optimizer too ([`ControlLoop::restart`]) when doing this — the
+    /// running round's best-so-far was ranked under the old constraints.
+    pub fn set_cons(&mut self, cons: Constraints) {
+        self.cons = cons;
     }
 
     /// Total measurement windows across all rounds and holds.
@@ -367,56 +486,11 @@ impl<E: Environment, O: Optimizer> ControlLoop<E, O> {
 mod tests {
     use super::*;
     use crate::control::env::SimEnv;
+    use crate::control::testkit::StepEnv;
     use crate::device::sim::{SAMPLES_PER_WINDOW, WARMUP_S};
-    use crate::device::{ConfigSpace, Device, DeviceKind};
+    use crate::device::{Device, DeviceKind};
     use crate::models::ModelKind;
     use crate::optimizer::{CoralOptimizer, RandomOptimizer};
-
-    /// Scripted environment: constant throughput that steps down after
-    /// `step_after` windows (a workload/thermal shift in miniature).
-    struct StepEnv {
-        space: ConfigSpace,
-        windows: u64,
-        step_after: u64,
-        cost: f64,
-    }
-
-    impl StepEnv {
-        fn new(step_after: u64) -> StepEnv {
-            StepEnv {
-                space: DeviceKind::XavierNx.space(),
-                windows: 0,
-                step_after,
-                cost: 0.0,
-            }
-        }
-    }
-
-    impl Environment for StepEnv {
-        fn measure(&mut self, cfg: HwConfig) -> Measured {
-            self.windows += 1;
-            self.cost += 7.0;
-            let fps = if self.windows > self.step_after { 15.0 } else { 30.0 };
-            Measured {
-                config: cfg,
-                throughput_fps: fps,
-                power_mw: 5000.0,
-                latency_ms: 10.0,
-                gpu_util: 0.5,
-                cpu_util: 0.5,
-                mem_util: 0.5,
-                failed: None,
-            }
-        }
-
-        fn space(&self) -> &ConfigSpace {
-            &self.space
-        }
-
-        fn cost_s(&self) -> f64 {
-            self.cost
-        }
-    }
 
     fn coral_loop(seed: u64) -> ControlLoop<SimEnv, CoralOptimizer> {
         let dev = Device::new(DeviceKind::XavierNx, ModelKind::Yolo, seed);
@@ -494,6 +568,7 @@ mod tests {
         let cfg = ControlLoopConfig {
             budget: 3,
             drift: Some(DriftConfig { window: 4, rel_threshold: 0.2 }),
+            search_drift: None,
         };
         let mut cl = ControlLoop::new(env, opt, cons, cfg);
         let out = cl.run();
@@ -522,6 +597,7 @@ mod tests {
         let cfg = ControlLoopConfig {
             budget: 2,
             drift: Some(DriftConfig::default()),
+            search_drift: None,
         };
         let mut cl = ControlLoop::new(env, opt, cons, cfg);
         cl.run();
@@ -557,6 +633,118 @@ mod tests {
         // Per-round cost restarts; environment clock keeps running.
         assert!((out1.cost_s - out2.cost_s).abs() < 1e-9);
         assert_eq!(cl.env().device().windows_run(), dev_windows + 10);
+    }
+
+    #[test]
+    fn search_drift_restarts_with_prohibited_list_intact() {
+        // An unreachable target (40 fps on a 30-fps surface) makes every
+        // pre-shift window infeasible, so CORAL's PS grows one config per
+        // step. The surface steps to 15 fps mid-search (after env window
+        // 6, inside the 12-iteration budget): the monitor — referenced
+        // off the optimizer's sliding window at 30 fps — must fire,
+        // restart the round in place, and keep every prohibited config
+        // prohibited.
+        let env = StepEnv::new(6);
+        let cons = Constraints::dual(40.0, 6000.0);
+        let opt = CoralOptimizer::new(DeviceKind::XavierNx.space(), cons, 3);
+        let cfg = ControlLoopConfig {
+            budget: 12,
+            drift: None,
+            search_drift: Some(DriftConfig { window: 4, rel_threshold: 0.2 }),
+        };
+        let mut cl = ControlLoop::new(env, opt, cons, cfg);
+        let mut proposals = Vec::new();
+        let mut drift_step = None;
+        while !cl.done() {
+            let step = cl.step();
+            proposals.push(step.config);
+            if let Some((reference, observed)) = step.search_drift {
+                assert!(drift_step.is_none(), "one shift fires exactly once");
+                // Reference = mean of the first 4 window entries (all
+                // 30 fps); observed = mean over [30, 30, 15, 15].
+                assert_eq!(reference, 30.0);
+                assert_eq!(observed, 22.5);
+                drift_step = Some((proposals.len(), cl.opt().prohibited_len()));
+            }
+        }
+        let (steps_before, ps_at_drift) =
+            drift_step.expect("mid-search shift must fire the monitor");
+        // Detector arms at step 4 and fires on the second post-shift
+        // sample: windows 7 and 8 measure 15 fps.
+        assert_eq!(steps_before, 8);
+        assert_eq!(ps_at_drift, 8, "every infeasible step entered the PS");
+
+        let out = cl.outcome();
+        assert_eq!(out.search_restarts, 1);
+        assert_eq!(out.iters, 12, "the restarted round runs a full budget");
+        assert_eq!(out.trace.len(), 8 + 12, "trace spans the whole round");
+        assert_eq!(cl.windows(), 8 + 12);
+        // All 20 windows were infeasible and the PS was never cleared:
+        // distinct proposals throughout prove the restart respected it.
+        assert_eq!(cl.opt().prohibited_len(), 20);
+        let distinct: std::collections::HashSet<_> = proposals.iter().collect();
+        assert_eq!(distinct.len(), proposals.len(), "prohibited config re-proposed");
+        assert!(cl
+            .events()
+            .iter()
+            .any(|e| matches!(e, LoopEvent::SearchDriftDetected { .. })));
+        let starts = cl
+            .events()
+            .iter()
+            .filter(|e| matches!(e, LoopEvent::SearchStarted { .. }))
+            .count();
+        assert_eq!(starts, 2, "round creation + in-place restart");
+    }
+
+    #[test]
+    fn search_drift_arms_even_when_optimizer_window_is_smaller() {
+        // A drift window larger than the optimizer's sliding-window
+        // capacity (here W = 2 < 5) must not leave the monitor silently
+        // inert: the stalled window length means saturation, and the
+        // monitor arms on what the optimizer retains.
+        let env = StepEnv::new(6);
+        let cons = Constraints::dual(40.0, 6000.0);
+        let opt = CoralOptimizer::with_config(
+            DeviceKind::XavierNx.space(),
+            cons,
+            crate::optimizer::CoralConfig::with_window(2),
+            3,
+        );
+        let cfg = ControlLoopConfig {
+            budget: 12,
+            drift: None,
+            search_drift: Some(DriftConfig { window: 5, rel_threshold: 0.2 }),
+        };
+        let mut cl = ControlLoop::new(env, opt, cons, cfg);
+        let out = cl.run();
+        assert_eq!(out.search_restarts, 1, "saturated window still arms the monitor");
+        assert_eq!(out.iters, 12);
+        assert!(cl
+            .events()
+            .iter()
+            .any(|e| matches!(e, LoopEvent::SearchDriftDetected { .. })));
+    }
+
+    #[test]
+    fn search_drift_never_arms_for_windowless_optimizers() {
+        // RandomOptimizer keeps no sliding window, so the monitor must
+        // stay dormant even across a step change.
+        let env = StepEnv::new(3);
+        let cons = Constraints::none();
+        let opt = RandomOptimizer::new(DeviceKind::XavierNx.space(), cons, 1);
+        let cfg = ControlLoopConfig {
+            budget: 10,
+            drift: None,
+            search_drift: Some(DriftConfig { window: 2, rel_threshold: 0.1 }),
+        };
+        let mut cl = ControlLoop::new(env, opt, cons, cfg);
+        let out = cl.run();
+        assert_eq!(out.search_restarts, 0);
+        assert_eq!(out.iters, 10);
+        assert!(!cl
+            .events()
+            .iter()
+            .any(|e| matches!(e, LoopEvent::SearchDriftDetected { .. })));
     }
 
     #[test]

@@ -85,6 +85,23 @@ impl Environment for SimEnv {
     }
 }
 
+/// Boxed environments measure through the same trait like any concrete
+/// environment — the multi-tenant arbiter drives a heterogeneous
+/// sim/live mix as `Box<dyn Environment + Send>`.
+impl<E: Environment + ?Sized> Environment for Box<E> {
+    fn measure(&mut self, cfg: HwConfig) -> Measured {
+        (**self).measure(cfg)
+    }
+
+    fn space(&self) -> &ConfigSpace {
+        (**self).space()
+    }
+
+    fn cost_s(&self) -> f64 {
+        (**self).cost_s()
+    }
+}
+
 /// The live serving stack behind [`LiveEnv`].
 struct LiveBackend {
     server: Server,
@@ -394,8 +411,13 @@ impl FleetEnv {
         &self.members
     }
 
-    /// Aggregate per-member windows, in member order.
-    fn combine(results: &[Measured]) -> Measured {
+    /// Aggregate windows measured together, in member order: the mean of
+    /// every metric, with one crashed member prohibiting the config for
+    /// the whole group. This is both the fleet's per-proposal
+    /// aggregation and the multi-tenant arbiter's per-round observation
+    /// (`control::tenant`).
+    pub fn combine(results: &[Measured]) -> Measured {
+        assert!(!results.is_empty(), "combine needs at least one window");
         let n = results.len() as f64;
         let mean = |f: fn(&Measured) -> f64| results.iter().map(f).sum::<f64>() / n;
         if let Some(failed) = results.iter().find(|m| m.failed.is_some()) {

@@ -17,14 +17,29 @@
 //! * [`FleetRunner`] / [`fleet_sweep`] run many independent loops
 //!   thread-parallel with deterministic per-job seeding — results are
 //!   byte-identical to the sequential run, only faster.
+//! * [`TenantArbiter`] arbitrates several loops sharing one power
+//!   envelope: per-round budget splitting (static / demand-weighted /
+//!   water-filling), one `ControlLoop` per tenant against its
+//!   sub-budget, fleet-combined per-round observations.
+//!
+//! Test builds additionally expose `control::testkit` (scripted
+//! environments shared by unit tests, integration tests, and benches;
+//! gated behind `cfg(any(test, feature = "testkit"))`).
 
 pub mod engine;
 pub mod env;
 pub mod fleet;
+pub mod tenant;
+#[cfg(any(test, feature = "testkit"))]
+pub mod testkit;
 
 pub use engine::{
     ControlLoop, ControlLoopConfig, DriftConfig, DriftDetector, HoldOutcome, LoopEvent,
-    LoopOutcome, Step, DEFAULT_BUDGET,
+    LoopOutcome, Step, DEFAULT_BUDGET, MAX_SEARCH_RESTARTS,
 };
 pub use env::{Environment, FleetEnv, LiveEnv, SimEnv};
 pub use fleet::{fleet_sweep, FleetRunner, FleetStats};
+pub use tenant::{
+    BudgetPolicy, RoundReport, Tenant, TenantArbiter, TenantRound, MAX_DRIFT_RESTARTS,
+    WATERFILL_HEADROOM,
+};

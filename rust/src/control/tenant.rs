@@ -1,0 +1,751 @@
+//! Multi-tenant power-budget arbitration: several CORAL instances on
+//! one box, sharing one power envelope.
+//!
+//! The paper tunes one model per board; the production regime the
+//! ROADMAP targets puts several models on the same box, where
+//! per-model tuning breaks down — each controller honestly meets *its
+//! own* budget while the box blows the shared one (the PolyThrottle
+//! failure mode; Fulcrum draws the same conclusion for concurrent
+//! workloads on one edge accelerator: a shared constraint needs an
+//! explicit arbiter, not independent controllers).
+//!
+//! [`TenantArbiter`] is that arbiter. It wraps N per-tenant
+//! [`Environment`]s (any sim/live mix, boxed) and each round:
+//!
+//! 1. **splits** the global power budget into per-tenant sub-budgets
+//!    under a [`BudgetPolicy`] — static shares, demand-weighted shares,
+//!    or water-filling rebalance of the slack donated by tenants already
+//!    holding a feasible configuration. Every policy guarantees the
+//!    safety invariant **Σ sub-budgets ≤ global budget, every round**
+//!    (property-tested; the deliberate exception is the
+//!    [`TenantArbiter::independent`] baseline, which models the
+//!    unarbitrated regime for comparison);
+//! 2. **searches**: one [`ControlLoop`] per tenant runs a fresh CORAL
+//!    round against its sub-budget, then holds its choice with the
+//!    windowed drift monitor — a drifted hold restarts that tenant's
+//!    loop (bounded, deterministically seeded);
+//! 3. **measures the allocation**: each tenant's held configuration gets
+//!    one fresh window (a tenant whose search found nothing feasible is
+//!    parked on the space-minimum floor configuration instead of an
+//!    infeasible best), and the per-tenant windows are aggregated with
+//!    [`FleetEnv::combine`] — so the arbiter itself presents as an
+//!    [`Environment`] whose `measure` is one arbitration round.
+//!
+//! Tenant rounds run thread-parallel on [`FleetRunner`] with
+//! index-slotted results: every tenant job owns its environment,
+//! optimizer, and seeds, so trajectories are **byte-identical to the
+//! sequential run** for any worker count.
+//!
+//! On the live path the generic `Router<S: ModelServer>` stays the
+//! single admission front door across tenants:
+//! [`TenantArbiter::apply_to_router`] pushes each round's arbitrated
+//! concurrency levels into the registered per-model stacks, and the
+//! router's shared `rejected` counter must survive those
+//! reconfigurations (pinned by regression tests).
+
+use crate::coordinator::{ModelServer, Router};
+use crate::device::{ConfigSpace, Dim, HwConfig, Measured};
+use crate::models::ModelKind;
+use crate::optimizer::{Constraints, CoralOptimizer};
+
+use super::engine::{ControlLoop, ControlLoopConfig, DriftConfig, DEFAULT_BUDGET};
+use super::env::{Environment, FleetEnv};
+use super::fleet::FleetRunner;
+
+/// Headroom a water-filled tenant keeps above its measured draw, so
+/// normal window-to-window variation does not immediately re-starve it.
+pub const WATERFILL_HEADROOM: f64 = 0.05;
+
+/// Hold-phase drift restarts allowed per tenant per round (keeps a
+/// never-settling surface from wedging the round).
+pub const MAX_DRIFT_RESTARTS: u64 = 2;
+
+/// One tenant of the shared box: a model with its own throughput target
+/// and a relative demand weight for the weighted budget splits.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Tenant {
+    pub name: &'static str,
+    /// The model this tenant serves — also the admission key the shared
+    /// `Router` files its stack under (one tenant per model per box).
+    pub model: ModelKind,
+    /// τ_target (fps) of the tenant's dual-constraint scenario.
+    pub target_fps: f64,
+    /// Relative demand weight (demand-weighted and water-filling base
+    /// shares are proportional to it).
+    pub weight: f64,
+}
+
+/// How the global power budget is split into per-tenant sub-budgets.
+#[derive(Debug, Clone, PartialEq)]
+pub enum BudgetPolicy {
+    /// Fixed fractional shares, one per tenant, in tenant order; must be
+    /// non-negative and sum to ≤ 1.
+    Static(Vec<f64>),
+    /// Shares proportional to tenant weights, recomputed every round.
+    DemandWeighted,
+    /// Demand-weighted base shares, then water-filling: every tenant
+    /// that held a feasible configuration last round keeps only its
+    /// measured draw × (1 + [`WATERFILL_HEADROOM`]) (capped at its base
+    /// share) and donates the rest, which is redistributed across the
+    /// still-unsatisfied tenants in proportion to their weights. With
+    /// every tenant satisfied the pooled slack stays unallocated —
+    /// headroom for the box, never an excuse to exceed it.
+    WaterFill,
+}
+
+impl BudgetPolicy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            BudgetPolicy::Static(_) => "static",
+            BudgetPolicy::DemandWeighted => "demand",
+            BudgetPolicy::WaterFill => "waterfill",
+        }
+    }
+}
+
+/// One tenant's slice of a round.
+#[derive(Debug, Clone, Copy)]
+pub struct TenantRound {
+    pub name: &'static str,
+    pub model: ModelKind,
+    /// The power sub-budget this round's search ran against (mW).
+    pub sub_budget_mw: f64,
+    /// Fresh measurement of the configuration the tenant holds after the
+    /// round (its chosen best, or the floor configuration on fallback).
+    pub chosen: Measured,
+    /// Did the held window satisfy the tenant's (target, sub-budget)?
+    pub feasible: bool,
+    /// Hold-phase drift restarts of the tenant's [`ControlLoop`].
+    pub restarts: u64,
+    /// The search found nothing feasible; the arbiter parked the tenant
+    /// on the space-minimum configuration for the round.
+    pub fell_back: bool,
+}
+
+/// One arbitration round across all tenants.
+#[derive(Debug, Clone)]
+pub struct RoundReport {
+    /// 1-based round counter.
+    pub round: u64,
+    pub tenants: Vec<TenantRound>,
+    /// [`FleetEnv::combine`] over the per-tenant held windows: the
+    /// observation the arbiter-as-[`Environment`] reports.
+    pub combined: Measured,
+    /// Σ of the per-tenant held windows' measured power (mW) — the power
+    /// the shared box actually draws at this allocation.
+    pub aggregate_power_mw: f64,
+    /// max(0, aggregate − global budget): the arbitration failure metric
+    /// the `bench_tenants` baseline comparison is scored on.
+    pub overshoot_mw: f64,
+}
+
+/// Per-tenant driving state (self-contained: it is the unit shipped to
+/// a [`FleetRunner`] worker, so rounds parallelize without sharing).
+struct TenantState {
+    spec: Tenant,
+    seed: u64,
+    cl: ControlLoop<Box<dyn Environment + Send>, CoralOptimizer>,
+    /// Last round's held window + feasibility (water-filling input).
+    last: Option<(Measured, bool)>,
+}
+
+/// The budget-splitting arbiter. See the module docs for the round
+/// structure; see [`crate::experiments::scenarios::MULTI_TENANT_SCENARIOS`]
+/// for ready-made tenant mixes and `coral tenants` / the `multi_tenant`
+/// example / `bench_tenants` for the user surface.
+pub struct TenantArbiter {
+    global_budget_mw: f64,
+    policy: BudgetPolicy,
+    /// False only for the [`TenantArbiter::independent`] baseline.
+    arbitrated: bool,
+    tenants: Vec<TenantState>,
+    space: Option<ConfigSpace>,
+    runner: FleetRunner,
+    round: u64,
+    /// Online iterations per tenant search round.
+    budget_iters: usize,
+    /// Hold-phase windows per tenant per round (0 = no hold).
+    hold_windows: u64,
+    drift: DriftConfig,
+    history: Vec<RoundReport>,
+}
+
+impl TenantArbiter {
+    pub fn new(global_budget_mw: f64, policy: BudgetPolicy) -> TenantArbiter {
+        assert!(global_budget_mw > 0.0, "global power budget must be positive");
+        TenantArbiter {
+            global_budget_mw,
+            policy,
+            arbitrated: true,
+            tenants: Vec::new(),
+            space: None,
+            runner: FleetRunner::auto(),
+            round: 0,
+            budget_iters: DEFAULT_BUDGET,
+            hold_windows: 12,
+            drift: DriftConfig::default(),
+            history: Vec::new(),
+        }
+    }
+
+    /// The unarbitrated baseline: every tenant optimizes against the
+    /// **full** global budget, as independent per-model controllers
+    /// would (the PolyThrottle regime). Sub-budgets then sum to
+    /// N × global — this constructor deliberately violates the
+    /// arbitration invariant so `bench_tenants` can score the failure
+    /// mode the arbiter exists to prevent.
+    pub fn independent(global_budget_mw: f64) -> TenantArbiter {
+        let mut arb = TenantArbiter::new(global_budget_mw, BudgetPolicy::DemandWeighted);
+        arb.arbitrated = false;
+        arb
+    }
+
+    /// Online iterations per tenant search round (default: the paper's
+    /// 10-iteration budget).
+    pub fn budget_iters(mut self, iters: usize) -> TenantArbiter {
+        assert!(iters >= 1);
+        self.budget_iters = iters;
+        self
+    }
+
+    /// Hold-phase windows per tenant per round (default 12; 0 disables
+    /// holds and the drift restarts that ride on them).
+    pub fn hold_windows(mut self, windows: u64) -> TenantArbiter {
+        self.hold_windows = windows;
+        self
+    }
+
+    /// Hold-phase drift detection tunables.
+    pub fn drift(mut self, drift: DriftConfig) -> TenantArbiter {
+        self.drift = drift;
+        self
+    }
+
+    /// Run tenant rounds on the caller's thread (identical results; used
+    /// to assert the parallel path byte-for-byte).
+    pub fn sequential(mut self) -> TenantArbiter {
+        self.runner = FleetRunner::new(1);
+        self
+    }
+
+    /// Register a tenant with its measurement environment. All tenants
+    /// must share one configuration space (one box), and at most one
+    /// tenant may serve each model (the live-path `Router` keys
+    /// admission by model kind).
+    pub fn add_tenant(
+        &mut self,
+        spec: Tenant,
+        env: Box<dyn Environment + Send>,
+        seed: u64,
+    ) -> &mut TenantArbiter {
+        assert!(spec.target_fps > 0.0, "tenant needs a throughput target");
+        assert!(spec.weight > 0.0, "tenant needs a positive demand weight");
+        match &self.space {
+            None => self.space = Some(env.space().clone()),
+            Some(s) => assert_eq!(
+                s.device(),
+                env.space().device(),
+                "tenants must share one configuration space"
+            ),
+        }
+        assert!(
+            self.tenants.iter().all(|t| t.spec.model != spec.model),
+            "one tenant per model: the router keys admission by model kind"
+        );
+        // Placeholder constraints; every round re-budgets (and restarts)
+        // the loop before stepping it.
+        let cons = Constraints::dual(spec.target_fps, self.global_budget_mw);
+        let opt = CoralOptimizer::new(env.space().clone(), cons, seed);
+        let cl = ControlLoop::new(env, opt, cons, ControlLoopConfig {
+            budget: self.budget_iters,
+            drift: Some(self.drift),
+            search_drift: None,
+        });
+        self.tenants.push(TenantState { spec, seed, cl, last: None });
+        self
+    }
+
+    pub fn len(&self) -> usize {
+        self.tenants.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tenants.is_empty()
+    }
+
+    pub fn global_budget_mw(&self) -> f64 {
+        self.global_budget_mw
+    }
+
+    pub fn policy(&self) -> &BudgetPolicy {
+        &self.policy
+    }
+
+    /// Rounds run so far.
+    pub fn rounds(&self) -> u64 {
+        self.round
+    }
+
+    /// Every completed round, oldest first.
+    pub fn history(&self) -> &[RoundReport] {
+        &self.history
+    }
+
+    /// Registered tenant specs, in tenant order.
+    pub fn specs(&self) -> Vec<Tenant> {
+        self.tenants.iter().map(|t| t.spec).collect()
+    }
+
+    /// Demand-weighted shares of the global budget.
+    fn demand_shares(&self) -> Vec<f64> {
+        let total: f64 = self.tenants.iter().map(|t| t.spec.weight).sum();
+        self.tenants
+            .iter()
+            .map(|t| self.global_budget_mw * t.spec.weight / total)
+            .collect()
+    }
+
+    /// The next round's per-tenant sub-budgets (mW), in tenant order.
+    ///
+    /// Safety invariant: for every arbitrated policy the returned values
+    /// are non-negative and sum to ≤ the global budget — including after
+    /// water-filling rebalance, and regardless of what the tenants'
+    /// loops (drift restarts included) did last round. A final
+    /// normalization clamps floating-point drift so the invariant holds
+    /// bit-for-bit, not just approximately.
+    pub fn sub_budgets(&self) -> Vec<f64> {
+        let n = self.tenants.len();
+        assert!(n > 0, "arbiter needs at least one tenant");
+        let b = self.global_budget_mw;
+        if !self.arbitrated {
+            // Independent baseline: everyone believes the whole box
+            // budget is theirs.
+            return vec![b; n];
+        }
+        let mut out = match &self.policy {
+            BudgetPolicy::Static(shares) => {
+                assert_eq!(shares.len(), n, "one static share per tenant");
+                let sum: f64 = shares.iter().sum();
+                assert!(
+                    shares.iter().all(|s| *s >= 0.0) && sum <= 1.0 + 1e-9,
+                    "static shares must be non-negative and sum to ≤ 1 (got {sum})"
+                );
+                shares.iter().map(|s| s * b).collect()
+            }
+            BudgetPolicy::DemandWeighted => self.demand_shares(),
+            BudgetPolicy::WaterFill => {
+                let mut out = self.demand_shares();
+                // Satisfied tenants keep measured draw + headroom and
+                // donate the rest of their base share to the pool.
+                let mut pool = 0.0;
+                let mut needy_weight = 0.0;
+                for (i, t) in self.tenants.iter().enumerate() {
+                    match &t.last {
+                        Some((m, true)) => {
+                            let keep = (m.power_mw * (1.0 + WATERFILL_HEADROOM)).min(out[i]);
+                            pool += out[i] - keep;
+                            out[i] = keep;
+                        }
+                        _ => needy_weight += t.spec.weight,
+                    }
+                }
+                // Water-fill the pooled slack over unsatisfied tenants.
+                if pool > 0.0 && needy_weight > 0.0 {
+                    for (i, t) in self.tenants.iter().enumerate() {
+                        if !matches!(t.last, Some((_, true))) {
+                            out[i] += pool * t.spec.weight / needy_weight;
+                        }
+                    }
+                }
+                out
+            }
+        };
+        let sum: f64 = out.iter().sum();
+        if sum > b {
+            for s in out.iter_mut() {
+                *s *= b / sum;
+            }
+        }
+        out
+    }
+
+    /// Run one arbitration round: split the budget, drive every tenant's
+    /// loop against its sub-budget (thread-parallel, index-slotted —
+    /// byte-identical to sequential), measure the held allocation, and
+    /// aggregate. Returns the recorded report.
+    pub fn run_round(&mut self) -> &RoundReport {
+        let subs = self.sub_budgets();
+        self.round += 1;
+        let round = self.round;
+        let hold_windows = self.hold_windows;
+        // Re-budget every tenant: fresh constraints + fresh optimizer.
+        // The prohibited list is budget-relative — a configuration
+        // prohibited under last round's tighter sub-budget may be
+        // exactly what a water-filled bigger one should pick — so each
+        // round searches with a clean, deterministically seeded PS.
+        for (t, &sub) in self.tenants.iter_mut().zip(&subs) {
+            let cons = Constraints::dual(t.spec.target_fps, sub);
+            t.cl.set_cons(cons);
+            let opt = CoralOptimizer::new(
+                t.cl.env().space().clone(),
+                cons,
+                tenant_seed(t.seed, round, 0),
+            );
+            t.cl.restart(opt);
+        }
+        let jobs: Vec<(TenantState, f64)> = self.tenants.drain(..).zip(subs).collect();
+        let results = self.runner.map(jobs, move |(t, sub)| {
+            tenant_round_job(t, sub, round, hold_windows)
+        });
+        let mut rounds = Vec::with_capacity(results.len());
+        for (state, tr) in results {
+            self.tenants.push(state);
+            rounds.push(tr);
+        }
+        let chosen: Vec<Measured> = rounds.iter().map(|r| r.chosen).collect();
+        let combined = FleetEnv::combine(&chosen);
+        let aggregate: f64 = chosen.iter().map(|m| m.power_mw).sum();
+        self.history.push(RoundReport {
+            round,
+            tenants: rounds,
+            combined,
+            aggregate_power_mw: aggregate,
+            overshoot_mw: (aggregate - self.global_budget_mw).max(0.0),
+        });
+        self.history.last().expect("round just recorded")
+    }
+
+    /// Run `rounds` arbitration rounds; returns the full history.
+    pub fn run(&mut self, rounds: usize) -> &[RoundReport] {
+        for _ in 0..rounds {
+            self.run_round();
+        }
+        self.history()
+    }
+
+    /// Push the latest round's arbitrated concurrency levels into the
+    /// shared admission front door. The `Router` stays the single
+    /// admission authority across tenants — its shared `rejected`
+    /// counter must survive these per-tenant reconfigurations (pinned by
+    /// the `tenant_arbiter` regression tests). Tenants without a
+    /// registered stack (sim-only mixes) are skipped.
+    pub fn apply_to_router<S: ModelServer>(&self, router: &mut Router<S>) {
+        if let Some(report) = self.history.last() {
+            for tr in &report.tenants {
+                if let Some(server) = router.server_mut(tr.model) {
+                    server.set_concurrency(tr.chosen.config.concurrency as usize);
+                }
+            }
+        }
+    }
+}
+
+impl Environment for TenantArbiter {
+    /// One measurement window of the arbitrated box = one arbitration
+    /// round. The proposed configuration is **ignored** — tenants run
+    /// their own searches under the shared envelope; what an outside
+    /// observer can measure is the combined allocation each round
+    /// settles on ([`FleetEnv::combine`] over the per-tenant held
+    /// windows).
+    fn measure(&mut self, _cfg: HwConfig) -> Measured {
+        self.run_round().combined
+    }
+
+    fn space(&self) -> &ConfigSpace {
+        self.space
+            .as_ref()
+            .expect("arbiter has at least one tenant")
+    }
+
+    /// Tenants measure concurrently on the shared box, so cost is the
+    /// slowest tenant's clock (the [`FleetEnv`] convention).
+    fn cost_s(&self) -> f64 {
+        self.tenants
+            .iter()
+            .map(|t| t.cl.env().cost_s())
+            .fold(0.0, f64::max)
+    }
+}
+
+/// Deterministic per-(tenant, round, restart) optimizer seed: parallel
+/// scheduling can never perturb which RNG stream a search round uses.
+fn tenant_seed(base: u64, round: u64, restart: u64) -> u64 {
+    base ^ round.wrapping_mul(0x9E37_79B9_7F4A_7C15)
+        ^ restart.wrapping_mul(0xD1B5_4A32_D192_ED03)
+}
+
+/// The arbiter's safety action for a tenant whose search found nothing
+/// feasible under its sub-budget: park on the lowest-power valid corner
+/// (every knob at minimum, one instance) instead of serving an
+/// infeasible best that could blow the shared envelope.
+fn floor_config(space: &ConfigSpace) -> HwConfig {
+    HwConfig {
+        cpu_freq_mhz: space.min(Dim::CpuFreq),
+        cpu_cores: space.min(Dim::CpuCores),
+        gpu_freq_mhz: space.min(Dim::GpuFreq),
+        mem_freq_mhz: space.min(Dim::MemFreq),
+        concurrency: space.min(Dim::Concurrency),
+    }
+}
+
+/// One tenant's round: search → hold (drift restarts bounded by
+/// [`MAX_DRIFT_RESTARTS`], deterministically re-seeded) → one fresh
+/// window of the held configuration. Self-contained by construction so
+/// [`FleetRunner`] scheduling cannot perturb anything.
+fn tenant_round_job(
+    mut t: TenantState,
+    sub_budget_mw: f64,
+    round: u64,
+    hold_windows: u64,
+) -> (TenantState, TenantRound) {
+    let cons = t.cl.cons();
+    let mut out = t.cl.run();
+    let mut restarts = 0u64;
+    if hold_windows > 0 {
+        // Deployment between searches: hold the choice; a drifted hold
+        // hands control back and the loop re-searches on the shifted
+        // surface.
+        let mut hold = t.cl.hold(hold_windows);
+        while hold.drift.is_some() && restarts < MAX_DRIFT_RESTARTS {
+            restarts += 1;
+            let opt = CoralOptimizer::new(
+                t.cl.env().space().clone(),
+                cons,
+                tenant_seed(t.seed, round, restarts),
+            );
+            t.cl.restart(opt);
+            out = t.cl.run();
+            hold = t.cl.hold(hold_windows);
+        }
+    }
+    let fell_back = !out.best.map(|b| b.feasible).unwrap_or(false);
+    let cfg = if fell_back {
+        floor_config(t.cl.env().space())
+    } else {
+        out.best.expect("feasible best exists").config
+    };
+    // The round's reported window: a fresh measurement of the held
+    // allocation (it reflects the surface as the round ends — search
+    // probes are transient and not part of the steady-state allocation
+    // the safety invariant governs).
+    let chosen = t.cl.env_mut().measure(cfg);
+    let feasible = cons.feasible(chosen.throughput_fps, chosen.power_mw);
+    let tr = TenantRound {
+        name: t.spec.name,
+        model: t.spec.model,
+        sub_budget_mw,
+        chosen,
+        feasible,
+        restarts,
+        fell_back,
+    };
+    t.last = Some((chosen, feasible));
+    (t, tr)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::control::testkit::StepEnv;
+    use crate::util::prop;
+
+    const NAMES: [&str; 3] = ["alpha", "beta", "gamma"];
+    const MODELS: [ModelKind; 3] = [ModelKind::Yolo, ModelKind::Frcnn, ModelKind::RetinaNet];
+
+    fn spec(i: usize, target_fps: f64, weight: f64) -> Tenant {
+        Tenant { name: NAMES[i], model: MODELS[i], target_fps, weight }
+    }
+
+    /// Arbiter over scripted surfaces: tenant i serves `fps[i]` at
+    /// `power[i]` mW forever (no drift).
+    fn scripted(
+        global: f64,
+        policy: BudgetPolicy,
+        tenants: &[(f64, f64, f64)], // (target, fps, power)
+    ) -> TenantArbiter {
+        let mut arb = TenantArbiter::new(global, policy).budget_iters(3).hold_windows(6);
+        for (i, &(target, fps, power)) in tenants.iter().enumerate() {
+            let env = StepEnv::constant().with_levels(fps, fps).with_power(power);
+            arb.add_tenant(spec(i, target, 1.0), Box::new(env), 0x5EED + i as u64);
+        }
+        arb
+    }
+
+    #[test]
+    fn demand_shares_proportional_to_weights() {
+        let mut arb = TenantArbiter::new(12_000.0, BudgetPolicy::DemandWeighted);
+        arb.add_tenant(spec(0, 30.0, 2.0), Box::new(StepEnv::constant()), 1);
+        arb.add_tenant(spec(1, 8.0, 1.0), Box::new(StepEnv::constant()), 2);
+        let subs = arb.sub_budgets();
+        assert!((subs[0] - 8_000.0).abs() < 1e-9);
+        assert!((subs[1] - 4_000.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn static_shares_split_the_budget_as_written() {
+        let mut arb = TenantArbiter::new(10_000.0, BudgetPolicy::Static(vec![0.7, 0.2]));
+        arb.add_tenant(spec(0, 30.0, 1.0), Box::new(StepEnv::constant()), 1);
+        arb.add_tenant(spec(1, 8.0, 1.0), Box::new(StepEnv::constant()), 2);
+        let subs = arb.sub_budgets();
+        assert_eq!(subs, vec![7_000.0, 2_000.0], "shares may undershoot 1");
+    }
+
+    #[test]
+    #[should_panic(expected = "sum to ≤ 1")]
+    fn static_shares_beyond_one_rejected() {
+        let mut arb = TenantArbiter::new(10_000.0, BudgetPolicy::Static(vec![0.8, 0.5]));
+        arb.add_tenant(spec(0, 30.0, 1.0), Box::new(StepEnv::constant()), 1);
+        arb.add_tenant(spec(1, 8.0, 1.0), Box::new(StepEnv::constant()), 2);
+        arb.sub_budgets();
+    }
+
+    #[test]
+    fn waterfill_donates_slack_from_satisfied_tenants() {
+        // Tenant 0 is satisfiable (30 fps ≥ 20 target at 3000 mW);
+        // tenant 1 never reaches its target (10 < 20). Round 1 splits
+        // 5000/5000 (no history); after it, tenant 0 keeps
+        // 3000 · 1.05 = 3150 and the 1850 of slack water-fills to
+        // tenant 1.
+        let mut arb = scripted(
+            10_000.0,
+            BudgetPolicy::WaterFill,
+            &[(20.0, 30.0, 3_000.0), (20.0, 10.0, 3_000.0)],
+        );
+        let r1 = arb.run_round().clone();
+        assert!((r1.tenants[0].sub_budget_mw - 5_000.0).abs() < 1e-9);
+        assert!(r1.tenants[0].feasible);
+        assert!(!r1.tenants[1].feasible);
+        assert!(r1.tenants[1].fell_back);
+
+        let subs = arb.sub_budgets();
+        assert!((subs[0] - 3_150.0).abs() < 1e-6, "donor keeps draw + headroom: {subs:?}");
+        assert!((subs[1] - 6_850.0).abs() < 1e-6, "needy tenant water-filled: {subs:?}");
+        assert!((subs.iter().sum::<f64>() - 10_000.0).abs() < 1e-6);
+
+        let r2 = arb.run_round();
+        assert!(r2.tenants[0].feasible, "donor stays satisfied on its kept share");
+        assert_eq!(r2.round, 2);
+    }
+
+    #[test]
+    fn independent_baseline_hands_everyone_the_full_budget() {
+        let mut arb = TenantArbiter::independent(9_000.0).budget_iters(2).hold_windows(0);
+        arb.add_tenant(spec(0, 20.0, 1.0), Box::new(StepEnv::constant().with_power(6_000.0)), 1);
+        arb.add_tenant(spec(1, 20.0, 1.0), Box::new(StepEnv::constant().with_power(6_000.0)), 2);
+        assert_eq!(arb.sub_budgets(), vec![9_000.0, 9_000.0]);
+        let r = arb.run_round();
+        // Both tenants individually meet "their" budget; the box does not.
+        assert!((r.aggregate_power_mw - 12_000.0).abs() < 1e-9);
+        assert!((r.overshoot_mw - 3_000.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn drifted_hold_restarts_the_tenant_loop_bounded_and_counted() {
+        // Search (3 windows) sees 30 fps; the surface steps to 15 fps at
+        // env window 5, so the hold's windowed mean shifts and the
+        // tenant's loop restarts (once — the re-searched 15-fps surface
+        // then holds steady).
+        let mut arb = TenantArbiter::new(8_000.0, BudgetPolicy::DemandWeighted)
+            .budget_iters(3)
+            .hold_windows(6);
+        let env = StepEnv::new(5).with_levels(30.0, 15.0).with_power(3_000.0);
+        arb.add_tenant(spec(0, 20.0, 1.0), Box::new(env), 7);
+        let r = arb.run_round();
+        assert_eq!(r.tenants[0].restarts, 1);
+        assert!(
+            r.tenants[0].fell_back,
+            "the shifted surface no longer reaches the 20 fps target"
+        );
+        assert_eq!(r.tenants[0].chosen.throughput_fps, 15.0);
+        // The invariant is untouched by restarts.
+        assert!(r.tenants[0].sub_budget_mw <= 8_000.0);
+    }
+
+    #[test]
+    fn arbiter_presents_as_an_environment() {
+        let mut arb = scripted(
+            12_000.0,
+            BudgetPolicy::DemandWeighted,
+            &[(20.0, 30.0, 3_000.0), (20.0, 25.0, 4_000.0)],
+        );
+        let probe = arb.space().midpoint();
+        let m = arb.measure(probe);
+        assert_eq!(arb.rounds(), 1, "one measure = one arbitration round");
+        let r = &arb.history()[0];
+        assert_eq!(
+            m.power_mw,
+            (r.tenants[0].chosen.power_mw + r.tenants[1].chosen.power_mw) / 2.0,
+            "combined window is the fleet mean"
+        );
+        assert!(arb.cost_s() > 0.0);
+        assert_eq!(arb.space().device(), crate::device::DeviceKind::XavierNx);
+    }
+
+    #[test]
+    fn parallel_rounds_match_sequential_byte_for_byte() {
+        let tenants = [(20.0, 30.0, 3_000.0), (10.0, 12.0, 2_500.0), (5.0, 4.0, 1_500.0)];
+        let mut par = scripted(9_000.0, BudgetPolicy::WaterFill, &tenants);
+        let mut seq = scripted(9_000.0, BudgetPolicy::WaterFill, &tenants).sequential();
+        par.run(3);
+        seq.run(3);
+        assert_eq!(
+            format!("{:?}", par.history()),
+            format!("{:?}", seq.history()),
+            "thread scheduling must never change a trajectory"
+        );
+    }
+
+    #[test]
+    fn sub_budgets_never_exceed_global_for_any_policy() {
+        // The arbiter's safety invariant, adversarially: random tenant
+        // mixes, weights, targets, scripted drifting surfaces (so some
+        // rounds restart on drift), all three policies, three rounds
+        // each — Σ sub-budgets ≤ global on every round.
+        prop::check("tenant sub-budget safety", 120, |g| {
+            let n = g.rng.range_usize(1, 3);
+            let global = g.rng.range_f64(3_000.0, 20_000.0);
+            let policy = match g.rng.below(3) {
+                0 => {
+                    let raw = g.vec_f64(n, 0.05, 1.0);
+                    let sum: f64 = raw.iter().sum();
+                    BudgetPolicy::Static(raw.iter().map(|r| r / sum).collect())
+                }
+                1 => BudgetPolicy::DemandWeighted,
+                _ => BudgetPolicy::WaterFill,
+            };
+            let mut arb = TenantArbiter::new(global, policy)
+                .budget_iters(3)
+                .hold_windows(6);
+            for i in 0..n {
+                let t = spec(
+                    i,
+                    g.rng.range_f64(5.0, 40.0),
+                    g.rng.range_f64(0.5, 8.0),
+                );
+                let fps = g.rng.range_f64(8.0, 35.0);
+                let env = StepEnv::new(g.rng.range_usize(2, 9) as u64)
+                    .with_levels(fps, fps * 0.5)
+                    .with_power(g.rng.range_f64(1_000.0, 9_000.0));
+                arb.add_tenant(t, Box::new(env), g.rng.next_u64());
+            }
+            for _ in 0..3 {
+                let pre: f64 = arb.sub_budgets().iter().sum();
+                prop::assert_true(
+                    pre <= global * (1.0 + 1e-9),
+                    "pre-round sub-budget sum exceeds the global budget",
+                )?;
+                let report = arb.run_round();
+                let sum: f64 = report.tenants.iter().map(|t| t.sub_budget_mw).sum();
+                prop::assert_true(
+                    sum <= global * (1.0 + 1e-9),
+                    "round sub-budget sum exceeds the global budget",
+                )?;
+                prop::assert_true(
+                    report.tenants.iter().all(|t| t.sub_budget_mw >= 0.0),
+                    "negative sub-budget",
+                )?;
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,185 @@
+//! Scripted test environments, shared everywhere a test needs a
+//! deterministic measurement surface.
+//!
+//! Before this module existed every test file hand-rolled its own
+//! `StepEnv`; the copies drifted apart and new tests kept forking them.
+//! The scripted pieces now live here once, compiled only for test
+//! builds: the module is gated on `#[cfg(any(test, feature = "testkit"))]`
+//! and the crate dev-depends on itself with the `testkit` feature, so
+//! unit tests, integration tests (`rust/tests/common/mod.rs` re-exports
+//! this module), and benches all see the same definitions while release
+//! builds ship none of it.
+//!
+//! * [`StepEnv`] — constant metrics that step to a second level after a
+//!   scripted number of windows: the minimal drifting surface (a
+//!   workload/thermal shift in miniature).
+//! * [`QueueServer`] — a queue-shaped [`ModelServer`]: the admission
+//!   policy's test double (no PJRT, no threads), recording applied
+//!   concurrency levels so reconfiguration paths are observable.
+
+use crate::coordinator::ModelServer;
+use crate::device::{ConfigSpace, DeviceKind, HwConfig, Measured};
+use crate::runtime::Detections;
+
+use super::env::Environment;
+
+/// Scripted environment: constant throughput/power that steps to a
+/// second level after `step_after` windows, regardless of the applied
+/// configuration. Defaults reproduce the historical inline test env:
+/// 30 → 15 fps at a constant 5000 mW, 7 s of cost per window, on the
+/// Xavier NX configuration space.
+#[derive(Debug, Clone)]
+pub struct StepEnv {
+    space: ConfigSpace,
+    windows: u64,
+    step_after: u64,
+    cost_per_window_s: f64,
+    fps_before: f64,
+    fps_after: f64,
+    power_mw: f64,
+}
+
+impl StepEnv {
+    /// Steps from 30 fps down to 15 fps after `step_after` windows.
+    pub fn new(step_after: u64) -> StepEnv {
+        StepEnv {
+            space: DeviceKind::XavierNx.space(),
+            windows: 0,
+            step_after,
+            cost_per_window_s: 7.0,
+            fps_before: 30.0,
+            fps_after: 15.0,
+            power_mw: 5000.0,
+        }
+    }
+
+    /// A surface that never shifts (constant `fps_before` forever).
+    pub fn constant() -> StepEnv {
+        StepEnv::new(u64::MAX)
+    }
+
+    /// Override the two throughput levels.
+    pub fn with_levels(mut self, fps_before: f64, fps_after: f64) -> StepEnv {
+        self.fps_before = fps_before;
+        self.fps_after = fps_after;
+        self
+    }
+
+    /// Override the constant measured power.
+    pub fn with_power(mut self, power_mw: f64) -> StepEnv {
+        self.power_mw = power_mw;
+        self
+    }
+
+    /// Windows measured so far.
+    pub fn windows(&self) -> u64 {
+        self.windows
+    }
+}
+
+impl Environment for StepEnv {
+    fn measure(&mut self, cfg: HwConfig) -> Measured {
+        self.windows += 1;
+        let fps = if self.windows > self.step_after {
+            self.fps_after
+        } else {
+            self.fps_before
+        };
+        Measured {
+            config: cfg,
+            throughput_fps: fps,
+            power_mw: self.power_mw,
+            latency_ms: 10.0,
+            gpu_util: 0.5,
+            cpu_util: 0.5,
+            mem_util: 0.5,
+            failed: None,
+        }
+    }
+
+    fn space(&self) -> &ConfigSpace {
+        &self.space
+    }
+
+    fn cost_s(&self) -> f64 {
+        self.windows as f64 * self.cost_per_window_s
+    }
+}
+
+/// Queue-shaped [`ModelServer`] stand-in: `tick` completes one request
+/// per call, `set_concurrency` is recorded rather than resizing any
+/// worker pool — so admission and reconfiguration behavior is testable
+/// without artifacts.
+#[derive(Debug, Default)]
+pub struct QueueServer {
+    queued: Vec<u64>,
+    completed: u64,
+    /// Last concurrency level applied via [`ModelServer::set_concurrency`].
+    pub concurrency: usize,
+    /// Number of reconfigurations applied (the arbiter's audit trail).
+    pub reconfigs: u64,
+}
+
+impl ModelServer for QueueServer {
+    fn submit(&mut self, id: u64, _pixels: Vec<f32>) {
+        self.queued.push(id);
+    }
+
+    fn backlog(&self) -> usize {
+        self.queued.len()
+    }
+
+    fn tick(&mut self) -> Vec<(u64, Detections)> {
+        if self.queued.is_empty() {
+            return Vec::new();
+        }
+        let id = self.queued.remove(0);
+        self.completed += 1;
+        vec![(id, Detections { boxes: Vec::new(), scores: Vec::new() })]
+    }
+
+    fn set_concurrency(&mut self, c: usize) {
+        self.concurrency = c;
+        self.reconfigs += 1;
+    }
+
+    fn shutdown(self) -> u64 {
+        self.completed
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn step_env_shifts_on_schedule_and_accounts_cost() {
+        let mut env = StepEnv::new(2).with_levels(40.0, 20.0).with_power(4000.0);
+        let cfg = env.space().midpoint();
+        assert_eq!(env.measure(cfg).throughput_fps, 40.0);
+        assert_eq!(env.measure(cfg).throughput_fps, 40.0);
+        let m = env.measure(cfg);
+        assert_eq!(m.throughput_fps, 20.0, "third window is past the step");
+        assert_eq!(m.power_mw, 4000.0);
+        assert_eq!(env.windows(), 3);
+        assert!((env.cost_s() - 3.0 * 7.0).abs() < 1e-12);
+        let mut flat = StepEnv::constant();
+        for _ in 0..50 {
+            assert_eq!(flat.measure(cfg).throughput_fps, 30.0);
+        }
+    }
+
+    #[test]
+    fn queue_server_records_reconfigurations() {
+        let mut s = QueueServer::default();
+        s.submit(1, Vec::new());
+        s.submit(2, Vec::new());
+        assert_eq!(s.backlog(), 2);
+        s.set_concurrency(3);
+        assert_eq!((s.concurrency, s.reconfigs), (3, 1));
+        assert_eq!(s.tick().len(), 1, "one completion per tick");
+        assert_eq!(s.backlog(), 1);
+        assert_eq!(s.tick()[0].0, 2);
+        assert_eq!(s.shutdown(), 2);
+    }
+}

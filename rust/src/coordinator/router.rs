@@ -26,6 +26,13 @@ pub trait ModelServer {
     /// Pump the stack; returns completed `(id, detections)` pairs.
     fn tick(&mut self) -> Vec<(u64, Detections)>;
 
+    /// Apply a new concurrency level (a tenant reconfiguration — the
+    /// multi-tenant arbiter pushes each round's arbitrated level through
+    /// the shared router). Default: no-op for stacks without a worker
+    /// pool. Reconfiguring one model's stack must never disturb the
+    /// router's shared admission state (`Router::rejected`).
+    fn set_concurrency(&mut self, _concurrency: usize) {}
+
     /// Shut down; returns total completed count.
     fn shutdown(self) -> u64;
 }
@@ -41,6 +48,10 @@ impl ModelServer for Server {
 
     fn tick(&mut self) -> Vec<(u64, Detections)> {
         Server::tick(self)
+    }
+
+    fn set_concurrency(&mut self, concurrency: usize) {
+        Server::set_concurrency(self, concurrency)
     }
 
     fn shutdown(self) -> u64 {
@@ -129,36 +140,7 @@ impl<S: ModelServer> Default for Router<S> {
 #[cfg(test)]
 mod tests {
     use super::*;
-
-    /// Queue-shaped stand-in: tick completes one request per call.
-    #[derive(Default)]
-    struct FakeServer {
-        queued: Vec<u64>,
-        completed: u64,
-    }
-
-    impl ModelServer for FakeServer {
-        fn submit(&mut self, id: u64, _pixels: Vec<f32>) {
-            self.queued.push(id);
-        }
-
-        fn backlog(&self) -> usize {
-            self.queued.len()
-        }
-
-        fn tick(&mut self) -> Vec<(u64, Detections)> {
-            if self.queued.is_empty() {
-                return Vec::new();
-            }
-            let id = self.queued.remove(0);
-            self.completed += 1;
-            vec![(id, Detections { boxes: Vec::new(), scores: Vec::new() })]
-        }
-
-        fn shutdown(self) -> u64 {
-            self.completed
-        }
-    }
+    use crate::control::testkit::QueueServer;
 
     #[test]
     fn unknown_model_is_an_error() {
@@ -170,7 +152,7 @@ mod tests {
 
     #[test]
     fn default_router_matches_new() {
-        let r: Router<FakeServer> = Router::default();
+        let r: Router<QueueServer> = Router::default();
         assert_eq!(r.admission_limit, 256);
         assert_eq!(r.rejected(), 0);
         assert!(r.models().is_empty());
@@ -178,9 +160,9 @@ mod tests {
 
     #[test]
     fn requests_beyond_admission_limit_are_rejected_and_counted() {
-        let mut r: Router<FakeServer> = Router::new();
+        let mut r: Router<QueueServer> = Router::new();
         r.admission_limit = 2;
-        r.register(ModelKind::Yolo, FakeServer::default());
+        r.register(ModelKind::Yolo, QueueServer::default());
         assert!(r.route(ModelKind::Yolo, 0, Vec::new()).unwrap());
         assert!(r.route(ModelKind::Yolo, 1, Vec::new()).unwrap());
         assert!(
@@ -198,10 +180,10 @@ mod tests {
 
     #[test]
     fn rejected_count_survives_across_models() {
-        let mut r: Router<FakeServer> = Router::new();
+        let mut r: Router<QueueServer> = Router::new();
         r.admission_limit = 1;
-        r.register(ModelKind::Yolo, FakeServer::default());
-        r.register(ModelKind::Frcnn, FakeServer::default());
+        r.register(ModelKind::Yolo, QueueServer::default());
+        r.register(ModelKind::Frcnn, QueueServer::default());
         assert!(r.route(ModelKind::Yolo, 0, Vec::new()).unwrap());
         assert!(!r.route(ModelKind::Yolo, 1, Vec::new()).unwrap());
         assert_eq!(r.rejected(), 1);

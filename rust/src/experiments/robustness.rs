@@ -76,6 +76,7 @@ pub fn drift_session(seeds: u64, epochs: usize) -> Vec<Vec<DriftEpoch>> {
         // monitor guards against *larger* shifts — workload changes, a
         // hotter enclosure — ending the hold early when they happen.
         drift: Some(DriftConfig { window: 5, rel_threshold: 0.08 }),
+        search_drift: None,
     };
     let mut sessions = Vec::new();
     for seed in 0..seeds {

@@ -215,14 +215,19 @@ impl CoralOptimizer {
         let (x, y) = match (self.best, self.second) {
             (Some(b), Some(s)) => (b, s),
             // Bootstrap: default preset, then all-max (max contrast).
+            // After `reset_search` the prohibited list survives the
+            // cleared anchors, so the probes go through the same
+            // untried-or-nudge gate as every other proposal — a
+            // restarted round must never re-propose a prohibited preset.
             _ => {
-                return if self.iter == 0 {
+                let z = if self.iter == 0 {
                     self.space.device().preset_default()
                 } else {
                     let mut c = self.space.device().preset_max_power();
                     c.concurrency = self.space.max(Dim::Concurrency);
                     c
                 };
+                return self.next_untried(z);
             }
         };
 
@@ -297,6 +302,13 @@ impl CoralOptimizer {
             }
         }
 
+        self.next_untried(z)
+    }
+
+    /// The untried-or-nudge gate every proposal passes through: return
+    /// `z` when it is proposable, otherwise sweep the neighbourhood for
+    /// the nearest untried configuration.
+    fn next_untried(&mut self, z: HwConfig) -> HwConfig {
         if self.untried(&z) {
             return z;
         }
@@ -433,6 +445,30 @@ impl Optimizer for CoralOptimizer {
 
     fn name(&self) -> &'static str {
         "coral"
+    }
+
+    fn window_throughputs(&self) -> &[f64] {
+        self.window.throughputs()
+    }
+
+    /// Mid-search surface shift: every observation in the window, the
+    /// best/second-best anchors, and the dCor weights describe a surface
+    /// that no longer exists — drop them. The prohibited list survives
+    /// (crashes and budget violations are properties of the
+    /// configuration, not of the drifted throughput level), and so does
+    /// the RNG stream (the restarted round keeps the run deterministic).
+    fn reset_search(&mut self) {
+        self.window = SlidingWindow::new(self.cfg.window.max(2));
+        self.visited.clear();
+        self.best = None;
+        self.second = None;
+        self.last = None;
+        self.best_tput = None;
+        self.alpha = [0.0; HwConfig::NDIMS];
+        self.beta = [0.0; HwConfig::NDIMS];
+        self.aside = false;
+        self.iter = 0;
+        self.pending = None;
     }
 }
 
@@ -620,6 +656,45 @@ mod tests {
             assert!((0.0..=1.0).contains(w), "weight {w}");
         }
         assert!(opt.best().is_some());
+    }
+
+    #[test]
+    fn reset_search_keeps_prohibited_list_drops_surface_state() {
+        let space = DeviceKind::XavierNx.space();
+        let cons = Constraints::dual(30.0, 6500.0);
+        let mut opt = CoralOptimizer::new(space.clone(), cons, 7);
+        let a = space.midpoint();
+        let b = a.with(Dim::GpuFreq, 510);
+        opt.observe(a, 10.0, 9000.0); // infeasible both ways -> PS
+        opt.observe(b, 35.0, 6000.0); // feasible
+        assert_eq!(opt.prohibited_len(), 1);
+        assert_eq!(opt.window_len(), 2);
+        assert!(opt.best().is_some());
+
+        opt.reset_search();
+        assert_eq!(opt.prohibited_len(), 1, "PS survives the shift");
+        assert_eq!(opt.window_len(), 0, "stale observations dropped");
+        assert!(opt.best().is_none(), "best anchors dropped");
+        assert!(opt.window_throughputs().is_empty());
+        let (alpha, beta) = opt.weights();
+        assert!(alpha.iter().chain(beta.iter()).all(|w| *w == 0.0));
+        // The prohibited config stays unproposable on the new surface.
+        for _ in 0..12 {
+            let cfg = opt.propose();
+            assert_ne!(cfg, a, "prohibited config re-proposed after reset");
+            opt.observe(cfg, 20.0, 5000.0);
+        }
+    }
+
+    #[test]
+    fn window_throughputs_exposes_sliding_window_series() {
+        let space = DeviceKind::XavierNx.space();
+        let mut opt = CoralOptimizer::new(space.clone(), Constraints::none(), 1);
+        let c = space.midpoint();
+        opt.observe(c, 30.0, 6000.0);
+        opt.observe(c, 0.0, 2000.0); // crashed window: not recorded
+        opt.observe(c, 28.0, 5900.0);
+        assert_eq!(opt.window_throughputs(), &[30.0, 28.0]);
     }
 
     #[test]

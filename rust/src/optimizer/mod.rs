@@ -69,6 +69,24 @@ pub trait Optimizer {
     fn offline_cost_windows(&self) -> u64 {
         0
     }
+
+    /// Throughput series the strategy retains in its sliding observation
+    /// window, oldest → newest. The control loop's search-phase drift
+    /// monitor feeds on this (see `control::ControlLoopConfig::search_drift`);
+    /// strategies without a window return `&[]`, which disables the
+    /// monitor for them.
+    fn window_throughputs(&self) -> &[f64] {
+        &[]
+    }
+
+    /// Begin a fresh search round in response to a detected mid-search
+    /// surface shift, keeping the knowledge that survives a shift
+    /// (CORAL keeps its prohibited list: a configuration that crashed or
+    /// blew the budget is not rehabilitated by a throughput drift).
+    /// Stale per-surface state — sliding window, best/second-best —
+    /// must be dropped. Default: no-op (stateless strategies restart
+    /// implicitly).
+    fn reset_search(&mut self) {}
 }
 
 /// Boxed optimizers (the experiment runner's heterogeneous method
@@ -93,6 +111,14 @@ impl<T: Optimizer + ?Sized> Optimizer for Box<T> {
 
     fn offline_cost_windows(&self) -> u64 {
         (**self).offline_cost_windows()
+    }
+
+    fn window_throughputs(&self) -> &[f64] {
+        (**self).window_throughputs()
+    }
+
+    fn reset_search(&mut self) {
+        (**self).reset_search()
     }
 }
 

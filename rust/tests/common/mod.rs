@@ -1,0 +1,34 @@
+//! Shared scripted-environment harness for integration tests.
+//!
+//! Re-exports `coral::control::testkit` — the crate's scripted
+//! environments and queue-shaped servers, compiled for test targets via
+//! the self dev-dependency's `testkit` feature — so integration tests
+//! drive the very same definitions the unit tests do: no scripted
+//! environment is defined twice anywhere in the repo.
+
+#![allow(dead_code)] // each test binary uses only the slice it needs
+
+pub use coral::control::testkit::{QueueServer, StepEnv};
+
+use coral::control::{BudgetPolicy, Tenant, TenantArbiter};
+use coral::models::ModelKind;
+
+/// Two scripted tenants (YOLO + FRCNN keys, constant 30-fps surfaces at
+/// `power_mw` each) on a shared `global_budget_mw` envelope — the
+/// minimal arbiter most integration tests want.
+pub fn scripted_pair(global_budget_mw: f64, power_mw: f64) -> TenantArbiter {
+    let mut arb = TenantArbiter::new(global_budget_mw, BudgetPolicy::DemandWeighted)
+        .budget_iters(3)
+        .hold_windows(0);
+    arb.add_tenant(
+        Tenant { name: "cam", model: ModelKind::Yolo, target_fps: 20.0, weight: 1.0 },
+        Box::new(StepEnv::constant().with_power(power_mw)),
+        1,
+    );
+    arb.add_tenant(
+        Tenant { name: "lidar", model: ModelKind::Frcnn, target_fps: 20.0, weight: 1.0 },
+        Box::new(StepEnv::constant().with_power(power_mw)),
+        2,
+    );
+    arb
+}

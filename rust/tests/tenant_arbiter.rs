@@ -1,0 +1,153 @@
+//! Multi-tenant arbitration integration: the dual-constraint acceptance
+//! run (3 tenants on one simulated board), parallel==sequential
+//! determinism, and the shared-admission regression under the arbiter.
+//!
+//! Scripted environments come from `common` (re-exporting
+//! `coral::control::testkit`) — the same definitions the unit tests use.
+
+mod common;
+
+use common::scripted_pair;
+
+use coral::control::{BudgetPolicy, Environment};
+use coral::coordinator::Router;
+use coral::experiments::scenarios::TenantScenario;
+use coral::models::ModelKind;
+
+/// Acceptance: 3 tenants on one simulated NX, each reaching its
+/// throughput target, while the box's aggregate measured power never
+/// exceeds the 21 W global envelope on any round.
+#[test]
+fn three_tenants_meet_targets_within_global_budget() {
+    let s = TenantScenario::by_name("nx-triple").expect("scenario exists");
+    // Demand-weighted: every round re-searches under the same generous
+    // demand split, so each round is an independent shot at
+    // simultaneous feasibility (water-filling's donor-tightening is
+    // exercised by the unit and property tests instead).
+    let mut arb = s.arbiter(BudgetPolicy::DemandWeighted, 0xC0FFEE);
+    let reports = arb.run(6).to_vec();
+    assert_eq!(reports.len(), 6);
+
+    for r in &reports {
+        assert!(
+            r.aggregate_power_mw <= s.global_budget_mw,
+            "round {}: box drew {:.0} mW of the {:.0} mW envelope",
+            r.round,
+            r.aggregate_power_mw,
+            s.global_budget_mw
+        );
+        assert_eq!(r.overshoot_mw, 0.0);
+        let sum: f64 = r.tenants.iter().map(|t| t.sub_budget_mw).sum();
+        assert!(
+            sum <= s.global_budget_mw * (1.0 + 1e-9),
+            "round {}: sub-budgets sum {sum:.0} exceed the envelope",
+            r.round
+        );
+    }
+
+    // Every tenant reaches its target (a feasible held window really
+    // means target met under its sub-budget)...
+    for (i, t) in s.tenants.iter().enumerate() {
+        let hit = reports.iter().any(|r| {
+            let tr = &r.tenants[i];
+            assert_eq!(tr.name, t.name, "tenant order is stable");
+            tr.feasible && tr.chosen.throughput_fps >= t.target_fps
+        });
+        assert!(hit, "{} never reached {} fps under its sub-budget", t.name, t.target_fps);
+    }
+    // ...and some round satisfies all three at once (water-filling keeps
+    // shifting slack toward whoever still misses).
+    assert!(
+        reports.iter().any(|r| r.tenants.iter().all(|t| t.feasible)),
+        "no round had every tenant simultaneously on target: {reports:?}"
+    );
+}
+
+/// Same-seed runs are identical trajectories, parallel and sequential —
+/// the FleetRunner scheduling must never leak into the numbers.
+#[test]
+fn same_seed_parallel_and_sequential_trajectories_identical() {
+    let s = TenantScenario::by_name("nx-triple").expect("scenario exists");
+    let mut par = s.arbiter(BudgetPolicy::WaterFill, 7);
+    let mut seq = s.arbiter(BudgetPolicy::WaterFill, 7).sequential();
+    par.run(3);
+    seq.run(3);
+    assert_eq!(
+        format!("{:?}", par.history()),
+        format!("{:?}", seq.history()),
+        "parallel tenant rounds must be byte-identical to sequential"
+    );
+
+    // Re-running the parallel path reproduces itself; a different seed
+    // diverges (the determinism is seeded, not degenerate).
+    let mut again = s.arbiter(BudgetPolicy::WaterFill, 7);
+    again.run(3);
+    assert_eq!(format!("{:?}", par.history()), format!("{:?}", again.history()));
+    let mut other = s.arbiter(BudgetPolicy::WaterFill, 8);
+    other.run(3);
+    assert_ne!(format!("{:?}", par.history()), format!("{:?}", other.history()));
+}
+
+/// The arbiter presents as an `Environment`: one `measure` is one
+/// arbitration round reporting the fleet-combined held window.
+#[test]
+fn arbiter_environment_rounds_accumulate_cost() {
+    let mut arb = scripted_pair(9_000.0, 3_000.0);
+    let probe = arb.space().midpoint();
+    let m1 = arb.measure(probe);
+    let c1 = arb.cost_s();
+    let m2 = arb.measure(probe);
+    assert_eq!(arb.rounds(), 2);
+    assert!(m1.power_mw > 0.0 && m2.power_mw > 0.0);
+    assert!(arb.cost_s() > c1, "each round consumes measurement windows");
+}
+
+/// Regression (shared admission under the arbiter): `Router::rejected`
+/// is one shared counter across tenants — one tenant's burst rejections
+/// must neither reset nor double-count when another tenant's round
+/// reconfigures concurrency through the same router.
+#[test]
+fn router_rejected_counter_survives_tenant_reconfigurations() {
+    let mut arb = scripted_pair(9_000.0, 3_000.0);
+
+    let mut router: Router<common::QueueServer> = Router::new();
+    router.admission_limit = 2;
+    router.register(ModelKind::Yolo, common::QueueServer::default());
+    router.register(ModelKind::Frcnn, common::QueueServer::default());
+
+    // Tenant A's burst: 2 admitted, 3 shed by admission control.
+    for id in 0..5 {
+        let _ = router.route(ModelKind::Yolo, id, Vec::new()).unwrap();
+    }
+    assert_eq!(router.rejected(), 3);
+
+    // A round reconfigures both tenants' stacks through the shared
+    // front door; the counter must survive untouched.
+    arb.run_round();
+    arb.apply_to_router(&mut router);
+    let b = router.server(ModelKind::Frcnn).expect("registered");
+    assert_eq!(b.reconfigs, 1, "round pushed tenant B's arbitrated level");
+    assert!(b.concurrency >= 1);
+    assert_eq!(
+        router.rejected(),
+        3,
+        "reconfiguration must not reset the shared admission counter"
+    );
+
+    // Tenant B's own burst accumulates into the same counter.
+    for id in 0..4 {
+        let _ = router.route(ModelKind::Frcnn, 100 + id, Vec::new()).unwrap();
+    }
+    assert_eq!(router.rejected(), 5);
+
+    // Another round + reconfig: still 5 — not reset, not double-counted.
+    arb.run_round();
+    arb.apply_to_router(&mut router);
+    assert_eq!(router.rejected(), 5);
+    assert_eq!(router.server(ModelKind::Frcnn).unwrap().reconfigs, 2);
+
+    // Draining reopens admission without retroactive counting.
+    while !router.tick().is_empty() {}
+    assert!(router.route(ModelKind::Yolo, 50, Vec::new()).unwrap());
+    assert_eq!(router.rejected(), 5);
+}
