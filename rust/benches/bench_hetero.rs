@@ -1,0 +1,125 @@
+//! Heterogeneous-fleet bench: one **shared** CORAL on the normalized
+//! rank-fraction grid vs **independent** per-device CORALs, under a
+//! common power envelope (EXPERIMENTS.md §Heterogeneous fleets).
+//!
+//! For every `HETERO_SCENARIOS` entry, each seed runs both regimes:
+//!
+//! * shared — one `ControlLoop` over the mixed `FleetEnv` (all boards
+//!   measured per window), scored on the fleet-mean constraints;
+//! * independent — one `ControlLoop` per board with that board's paper
+//!   constraints scaled by the scenario's relaxation
+//!   (`HeteroScenario::member_constraints`), so both regimes face the
+//!   same aggregate target and the same `N × budget_mw` envelope; a
+//!   round counts feasible only when **every** board converged.
+//!
+//! The headline: the shared search reaches at least the baseline's
+//! feasible-round count while consuming a fraction of its measurement
+//! cost (one 10-window search for the whole fleet instead of one per
+//! device class) — asserted below, like `bench_tenants` asserts its
+//! overshoot ordering.
+
+use coral::control::{ControlLoop, Environment, SimEnv};
+use coral::device::Device;
+use coral::experiments::scenarios::{HeteroScenario, HETERO_SCENARIOS};
+use coral::optimizer::CoralOptimizer;
+use coral::util::table;
+
+const SEEDS: u64 = 10;
+const BUDGET: usize = 10;
+const DEVICE_SEED_BASE: u64 = 0xF1EE7;
+
+struct Outcome {
+    feasible: bool,
+    cost_s: f64,
+}
+
+/// Board seeds for round `seed`, member `i`: spaced so rounds draw
+/// disjoint boards, and shared by BOTH regimes so the comparison is
+/// board-matched (the same chip lottery on each side — only the
+/// controller topology differs).
+fn board_seed(seed: u64, i: usize) -> u64 {
+    DEVICE_SEED_BASE + seed * 31 + i as u64
+}
+
+fn shared_round(s: &HeteroScenario, seed: u64) -> Outcome {
+    // `fleet()` seeds member i as base + i; pass the round base so the
+    // members are exactly the boards `independent_round` drives.
+    let fleet = s.fleet(board_seed(seed, 0)).sequential();
+    let cons = s.constraints();
+    let opt = CoralOptimizer::new(fleet.space().clone(), cons, seed);
+    let mut cl = ControlLoop::with_budget(fleet, opt, cons, BUDGET);
+    let out = cl.run();
+    Outcome {
+        feasible: out.best.map(|b| b.feasible).unwrap_or(false),
+        cost_s: out.cost_s,
+    }
+}
+
+fn independent_round(s: &HeteroScenario, seed: u64) -> Outcome {
+    let mut feasible = true;
+    let mut cost_s = 0.0;
+    for (i, &kind) in s.devices.iter().enumerate() {
+        let cons = s.member_constraints(i);
+        let dev = Device::new(kind, s.model, board_seed(seed, i));
+        let opt = CoralOptimizer::new(dev.space().clone(), cons, seed * 31 + i as u64);
+        let mut cl = ControlLoop::with_budget(SimEnv::new(dev), opt, cons, BUDGET);
+        let out = cl.run();
+        feasible &= out.best.map(|b| b.feasible).unwrap_or(false);
+        // Independent searches cannot share windows: total measurement
+        // is the sum over boards, not the slowest board.
+        cost_s += out.cost_s;
+    }
+    Outcome { feasible, cost_s }
+}
+
+fn main() {
+    println!(
+        "bench_hetero — shared normalized CORAL vs independent per-device CORALs, \
+         {SEEDS} seeds × {BUDGET} iterations\n"
+    );
+    let mut rows = Vec::new();
+    for s in &HETERO_SCENARIOS {
+        let shared: Vec<Outcome> = (0..SEEDS).map(|x| shared_round(s, x)).collect();
+        let ind: Vec<Outcome> = (0..SEEDS).map(|x| independent_round(s, x)).collect();
+        let shared_ok = shared.iter().filter(|o| o.feasible).count();
+        let ind_ok = ind.iter().filter(|o| o.feasible).count();
+        let mean = |v: &[Outcome]| v.iter().map(|o| o.cost_s).sum::<f64>() / v.len() as f64;
+        assert!(
+            shared_ok >= ind_ok,
+            "{}: shared CORAL ({shared_ok}/{SEEDS} feasible rounds) fell below the \
+             independent baseline ({ind_ok}/{SEEDS})",
+            s.name
+        );
+        let boards: Vec<&str> = s.devices.iter().map(|d| d.name()).collect();
+        rows.push(vec![
+            s.name.to_string(),
+            boards.join("+"),
+            format!("{}/{}", s.target_fps, s.budget_mw),
+            format!("{shared_ok}/{SEEDS}"),
+            format!("{ind_ok}/{SEEDS}"),
+            format!("{:.0}", mean(&shared)),
+            format!("{:.0}", mean(&ind)),
+        ]);
+    }
+    print!(
+        "{}",
+        table::render(
+            &[
+                "scenario",
+                "fleet",
+                "mean fps/mW",
+                "shared feasible",
+                "indep feasible",
+                "shared cost s",
+                "indep cost s",
+            ],
+            &rows
+        )
+    );
+    println!(
+        "\nfeasible = the round's chosen configuration met the fleet-mean constraints \
+         (shared) / every board met its scaled paper constraints (independent). The \
+         shared search measures all boards inside each window, so its cost column is \
+         one search; the independent column sums one search per board."
+    );
+}

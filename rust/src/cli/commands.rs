@@ -28,6 +28,7 @@ USAGE:
   coral serve     [--model M] [--requests N] [--concurrency C] [--batch B] [--inflight K]
   coral tenants   [--scenario nx-pair|nx-triple|orin-triple] [--policy static|demand|waterfill|independent]
                   [--rounds N] [--seed N] [--sequential]
+  coral hetero    [--scenario hetero-<model>-<pair|triple>] [--iters N] [--seed N] [--sequential]
   coral report    <specs|models|scenarios>
   coral artifacts-check [--dir DIR]
 
@@ -42,6 +43,7 @@ pub fn dispatch(args: &Args) -> Result<()> {
         Some("sweep") => cmd_sweep(args),
         Some("serve") => cmd_serve(args),
         Some("tenants") => cmd_tenants(args),
+        Some("hetero") => cmd_hetero(args),
         Some("report") => cmd_report(args),
         Some("artifacts-check") => cmd_artifacts_check(args),
         Some("help") | None => {
@@ -314,6 +316,78 @@ fn cmd_tenants(args: &Args) -> Result<()> {
     Ok(())
 }
 
+fn cmd_hetero(args: &Args) -> Result<()> {
+    let name = args.opt_or("scenario", "hetero-yolo-pair");
+    let s = scenarios::HeteroScenario::by_name(&name).with_context(|| {
+        let names: Vec<&str> = scenarios::HETERO_SCENARIOS.iter().map(|s| s.name).collect();
+        format!("unknown hetero scenario '{name}' (expected one of: {})", names.join(", "))
+    })?;
+    let seed = args.opt_u64_or("seed", 42).map_err(anyhow::Error::msg)?;
+    let iters = args.opt_u64_or("iters", 10).map_err(anyhow::Error::msg)? as usize;
+    let mut fleet = s.fleet(seed);
+    if args.has_flag("sequential") {
+        fleet = fleet.sequential();
+    }
+    let cons = s.constraints();
+    let space = fleet.space().clone();
+    let boards: Vec<&str> = s.devices.iter().map(|d| d.name()).collect();
+    println!(
+        "{} — one CORAL tuning a mixed fleet [{}] serving {} through the normalized \
+         rank-fraction grid\nfleet-mean target {} fps, fleet-mean budget {} mW \
+         (common envelope {:.1} W)",
+        s.name,
+        boards.join(" + "),
+        s.model,
+        s.target_fps,
+        s.budget_mw,
+        s.devices.len() as f64 * s.budget_mw / 1000.0
+    );
+    let opt = CoralOptimizer::new(space.clone(), cons, seed);
+    let mut cl = ControlLoop::with_budget(fleet, opt, cons, iters);
+    let out = cl.run_observed(|step, _| {
+        let m = &step.measured;
+        println!(
+            "  it{:>2}: {} -> fleet mean {:6.1} fps {:6.0} mW {}",
+            step.iter,
+            space.describe(&step.config),
+            m.throughput_fps,
+            m.power_mw,
+            if m.failed.is_some() { "[FAILED on some member]" } else { "" }
+        );
+    });
+    let best = out.best.context("no observations")?;
+    let fleet = cl.into_env();
+    println!(
+        "\nchosen: {} -> fleet mean {:.1} fps @ {:.0} mW  feasible={}",
+        space.describe(&best.config),
+        best.throughput_fps,
+        best.power_mw,
+        best.feasible
+    );
+    let ns = fleet.norm().expect("hetero fleets are normalized");
+    let mut rows = Vec::new();
+    for (i, native) in fleet.decoded(best.config).iter().enumerate() {
+        rows.push(vec![
+            format!("{i}"),
+            s.devices[i].name().to_string(),
+            ns.members()[i].describe(native),
+        ]);
+    }
+    print!(
+        "{}",
+        table::render(&["member", "device", "decoded native configuration"], &rows)
+    );
+    println!(
+        "\nsearch cost: {:.0} simulated seconds for the whole fleet ({} fleet windows; \
+         every window measures all {} boards in parallel — one search instead of {})",
+        out.cost_s,
+        out.iters,
+        s.devices.len(),
+        s.devices.len()
+    );
+    Ok(())
+}
+
 fn tenant_target(s: &scenarios::TenantScenario, name: &str) -> f64 {
     s.tenants
         .iter()
@@ -401,6 +475,25 @@ fn cmd_report(args: &Args) -> Result<()> {
             print!(
                 "{}",
                 table::render(&["scenario", "device", "global mW", "tenants"], &rows)
+            );
+            println!("\nHeterogeneous-fleet scenarios (`coral hetero`)");
+            let mut rows = Vec::new();
+            for s in scenarios::HETERO_SCENARIOS {
+                let boards: Vec<&str> = s.devices.iter().map(|d| d.name()).collect();
+                rows.push(vec![
+                    s.name.to_string(),
+                    boards.join(" + "),
+                    s.model.name().to_string(),
+                    format!("{}", s.target_fps),
+                    format!("{}", s.budget_mw),
+                ]);
+            }
+            print!(
+                "{}",
+                table::render(
+                    &["scenario", "fleet", "model", "mean target fps", "mean budget mW"],
+                    &rows
+                )
             );
         }
         _ => bail!("report expects: specs | models | scenarios"),
@@ -513,5 +606,16 @@ mod tests {
     fn tenants_validates_scenario_and_policy() {
         assert!(dispatch(&args("tenants --scenario mars-rover")).is_err());
         assert!(dispatch(&args("tenants --scenario nx-pair --policy greedy")).is_err());
+    }
+
+    #[test]
+    fn hetero_smoke() {
+        let a = args("hetero --scenario hetero-yolo-pair --iters 3 --seed 7 --sequential");
+        assert!(dispatch(&a).is_ok());
+    }
+
+    #[test]
+    fn hetero_validates_scenario() {
+        assert!(dispatch(&args("hetero --scenario mono-fleet")).is_err());
     }
 }

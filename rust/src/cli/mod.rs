@@ -6,7 +6,9 @@
 //!                 [--method NAME] [--iters N] [--seed N]
 //! coral sweep     --device D --model M [--out DIR]
 //! coral serve     [--model M] [--requests N] [--concurrency C] [--batch B]
-//! coral report    <specs|models>
+//! coral tenants   [--scenario S] [--policy P] [--rounds N]
+//! coral hetero    [--scenario S] [--iters N] [--seed N]
+//! coral report    <specs|models|scenarios>
 //! coral artifacts-check [--dir DIR]
 //! ```
 

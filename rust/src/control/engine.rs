@@ -7,6 +7,13 @@
 //! an optional hold phase whose windowed-throughput drift detector hands
 //! control back for a fresh search round when the surface shifts
 //! (thermal throttling, workload change).
+//!
+//! The loop is deliberately ignorant of what it is driving: the same
+//! engine runs a single simulated board, the live serving stack, a
+//! (possibly mixed-device) fleet, or a whole multi-tenant arbitration
+//! round — see ARCHITECTURE.md for the composition diagram and
+//! EXPERIMENTS.md (§Closed-loop serving, §Multi-tenant arbitration,
+//! §Heterogeneous fleets) for the experiments each shape backs.
 
 use std::collections::VecDeque;
 

@@ -14,14 +14,17 @@
 //!   warm-up discipline, power comes from the device model (a dev box
 //!   has no INA3221 power rails), and the whole thing degrades
 //!   gracefully to sim-backed windows when no PJRT artifacts exist.
-//! * [`FleetEnv`] — many simulated boards measured per proposal (one
-//!   thread per member), observing fleet-mean metrics.
+//! * [`FleetEnv`] — many boards measured per proposal (one thread per
+//!   member), observing fleet-mean metrics. Members with different
+//!   configuration spaces (mixed NX/Orin) make the fleet heterogeneous:
+//!   it searches the normalized [`NormSpace`] grid and decodes each
+//!   proposal per member (EXPERIMENTS.md §Heterogeneous fleets).
 
 use std::time::Instant;
 
 use crate::coordinator::{Server, ServerConfig, ServeReport};
 use crate::device::sim::SAMPLES_PER_WINDOW;
-use crate::device::{ConfigSpace, Device, DeviceKind, HwConfig, Measured};
+use crate::device::{ConfigSpace, Device, DeviceKind, HwConfig, Measured, NormSpace};
 use crate::models::{artifacts_dir, Manifest, ModelKind};
 use crate::runtime::PjrtRuntime;
 use crate::telemetry::{Sample, Sampler};
@@ -350,7 +353,7 @@ impl Environment for LiveEnv {
     }
 }
 
-/// A fleet of simulated boards measured together, as an [`Environment`].
+/// A fleet of boards measured together, as an [`Environment`].
 ///
 /// One proposal is applied to every member; the observation the
 /// optimizer sees is the fleet mean (a config that crashes any member is
@@ -359,35 +362,77 @@ impl Environment for LiveEnv {
 /// is byte-identical to the sequential one — thread timing can change
 /// wall-clock, never numbers.
 ///
+/// **Heterogeneous fleets.** Members may carry *different*
+/// [`ConfigSpace`]s (mixed NX/Orin boards, or scripted test members).
+/// The fleet then exposes the shared [`NormSpace`] grid — per-dimension
+/// rank fractions, the encoding that lets one distance-correlation
+/// surface span heterogeneous hardware — and decodes every proposal per
+/// member onto that member's native grid before measuring
+/// ([`NormSpace::decode_for`]). Decoding is pure and aggregation is
+/// unchanged, so parallel == sequential byte-identity is preserved.
+///
 /// The thread-per-member fan-out models real fleet measurement, where a
 /// window costs seconds per board; for the microsecond-scale simulated
 /// `Device::run` the spawn overhead exceeds the work, so sim-only
 /// benchmarking should use [`FleetEnv::sequential`] (a persistent
 /// worker pool is a ROADMAP open item).
 pub struct FleetEnv {
-    members: Vec<Device>,
+    members: Vec<Box<dyn Environment + Send>>,
+    /// The space proposals come from: the members' shared native grid
+    /// for a homogeneous fleet, the normalized grid for a mixed one.
+    space: ConfigSpace,
+    /// Mixed-space decoding (None = homogeneous fleet; proposals pass
+    /// through to members untouched).
+    norm: Option<NormSpace>,
     parallel: bool,
 }
 
 impl FleetEnv {
-    /// A fleet from explicit members. All members must share a device
-    /// kind (one configuration space).
-    pub fn new(members: Vec<Device>) -> FleetEnv {
-        assert!(!members.is_empty(), "a fleet needs at least one device");
-        let kind = members[0].kind();
-        assert!(
-            members.iter().all(|d| d.kind() == kind),
-            "fleet members must share one configuration space"
-        );
-        FleetEnv { members, parallel: true }
+    /// A fleet from explicit member environments. Members sharing one
+    /// configuration space get it verbatim; members with different
+    /// spaces make the fleet heterogeneous — it then searches the
+    /// normalized [`NormSpace`] grid and decodes per member.
+    pub fn new(members: Vec<Box<dyn Environment + Send>>) -> FleetEnv {
+        assert!(!members.is_empty(), "a fleet needs at least one member");
+        let homogeneous = members.iter().all(|m| *m.space() == *members[0].space());
+        let (space, norm) = if homogeneous {
+            (members[0].space().clone(), None)
+        } else {
+            let ns = NormSpace::new(members.iter().map(|m| m.space().clone()).collect());
+            (ns.grid().clone(), Some(ns))
+        };
+        FleetEnv { members, space, norm, parallel: true }
+    }
+
+    /// A fleet of simulated boards.
+    pub fn of_boards(boards: Vec<Device>) -> FleetEnv {
+        FleetEnv::new(
+            boards
+                .into_iter()
+                .map(|d| Box::new(SimEnv::new(d)) as Box<dyn Environment + Send>)
+                .collect(),
+        )
     }
 
     /// `n` same-model replicas with per-member seeds (chip lottery +
     /// independent noise), seeded `base_seed..base_seed + n`.
     pub fn replicas(kind: DeviceKind, model: ModelKind, n: usize, base_seed: u64) -> FleetEnv {
-        FleetEnv::new(
+        FleetEnv::of_boards(
             (0..n)
                 .map(|i| Device::new(kind, model, base_seed + i as u64))
+                .collect(),
+        )
+    }
+
+    /// A mixed-device fleet serving one model: member `i` runs
+    /// `kinds[i]`, seeded `base_seed + i`. With more than one distinct
+    /// kind the fleet is heterogeneous (normalized search grid).
+    pub fn mixed(kinds: &[DeviceKind], model: ModelKind, base_seed: u64) -> FleetEnv {
+        FleetEnv::of_boards(
+            kinds
+                .iter()
+                .enumerate()
+                .map(|(i, &k)| Device::new(k, model, base_seed + i as u64))
                 .collect(),
         )
     }
@@ -407,8 +452,32 @@ impl FleetEnv {
         self.members.is_empty()
     }
 
-    pub fn members(&self) -> &[Device] {
+    /// Member environments, in fleet order.
+    pub fn members(&self) -> &[Box<dyn Environment + Send>] {
         &self.members
+    }
+
+    /// Whether proposals go through the normalized encoding (mixed
+    /// member spaces).
+    pub fn is_normalized(&self) -> bool {
+        self.norm.is_some()
+    }
+
+    /// The normalized encoding of a mixed fleet (None when homogeneous).
+    pub fn norm(&self) -> Option<&NormSpace> {
+        self.norm.as_ref()
+    }
+
+    /// The native configuration each member would run for proposal
+    /// `cfg`, in member order (the identity for homogeneous fleets).
+    /// Every returned configuration is on that member's native grid.
+    pub fn decoded(&self, cfg: HwConfig) -> Vec<HwConfig> {
+        match &self.norm {
+            Some(ns) => (0..self.members.len())
+                .map(|i| ns.decode_for(i, &cfg))
+                .collect(),
+            None => vec![cfg; self.members.len()],
+        }
     }
 
     /// Aggregate windows measured together, in member order: the mean of
@@ -449,43 +518,56 @@ impl FleetEnv {
 
 impl Environment for FleetEnv {
     fn measure(&mut self, cfg: HwConfig) -> Measured {
+        // Pure per-member decode (identity for homogeneous fleets)
+        // happens before any thread is spawned, so the parallel schedule
+        // cannot influence which native config a member measures.
+        let natives = self.decoded(cfg);
         let results: Vec<Measured> = if self.parallel && self.members.len() > 1 {
             // One thread per member; members are moved out and rejoined
             // in order, so aggregation order never depends on timing.
             let handles: Vec<_> = self
                 .members
                 .drain(..)
-                .map(|mut dev| {
+                .zip(natives)
+                .map(|(mut env, native)| {
                     std::thread::spawn(move || {
-                        let m = dev.run(cfg);
-                        (dev, m)
+                        let m = env.measure(native);
+                        (env, m)
                     })
                 })
                 .collect();
             let mut out = Vec::with_capacity(handles.len());
             for h in handles {
-                let (dev, m) = h.join().expect("fleet member panicked");
-                self.members.push(dev);
+                let (env, m) = h.join().expect("fleet member panicked");
+                self.members.push(env);
                 out.push(m);
             }
             out
         } else {
-            self.members.iter_mut().map(|d| d.run(cfg)).collect()
+            self.members
+                .iter_mut()
+                .zip(&natives)
+                .map(|(env, native)| env.measure(*native))
+                .collect()
         };
-        FleetEnv::combine(&results)
+        let mut m = FleetEnv::combine(&results);
+        if self.norm.is_some() {
+            // Per-member windows carry per-member *native* configs; the
+            // observation the optimizer sees must echo its normalized
+            // proposal (snapped onto the grid, like any environment).
+            m.config = self.space.snap_config(cfg.as_vec());
+        }
+        m
     }
 
     fn space(&self) -> &ConfigSpace {
-        self.members[0].space()
+        &self.space
     }
 
     /// Fleet members measure concurrently, so wall-clock cost is the
     /// slowest member, not the sum.
     fn cost_s(&self) -> f64 {
-        self.members
-            .iter()
-            .map(|d| d.sim_clock_s())
-            .fold(0.0, f64::max)
+        self.members.iter().map(|m| m.cost_s()).fold(0.0, f64::max)
     }
 }
 
@@ -578,5 +660,67 @@ mod tests {
         assert!(m.failed.is_some());
         assert_eq!(m.throughput_fps, 0.0);
         assert!(m.power_mw > 0.0, "surviving boards still draw power");
+    }
+
+    #[test]
+    fn homogeneous_fleet_keeps_the_native_space_and_identity_decode() {
+        let fleet = FleetEnv::replicas(DeviceKind::XavierNx, ModelKind::Yolo, 2, 1);
+        assert!(!fleet.is_normalized());
+        assert!(fleet.norm().is_none());
+        assert!(!fleet.space().is_normalized());
+        assert_eq!(fleet.space().device(), DeviceKind::XavierNx);
+        let cfg = fleet.space().midpoint();
+        assert_eq!(fleet.decoded(cfg), vec![cfg, cfg]);
+        assert_eq!(fleet.members().len(), 2);
+    }
+
+    #[test]
+    fn mixed_fleet_searches_the_normalized_grid_and_decodes_per_member() {
+        let mut fleet = FleetEnv::mixed(
+            &[DeviceKind::XavierNx, DeviceKind::OrinNano],
+            ModelKind::Yolo,
+            0x7E7,
+        );
+        assert!(fleet.is_normalized());
+        let space = fleet.space().clone();
+        assert!(space.is_normalized());
+        let cfg = space.midpoint();
+        let natives = fleet.decoded(cfg);
+        assert_eq!(natives.len(), 2);
+        let ns = fleet.norm().expect("mixed fleet has an encoding").clone();
+        for (i, native) in natives.iter().enumerate() {
+            assert!(ns.members()[i].contains(native), "member {i} off its native grid");
+        }
+        assert_ne!(natives[0], natives[1], "same fraction, different native units");
+        let m = fleet.measure(cfg);
+        assert_eq!(m.config, cfg, "observation echoes the normalized proposal");
+        assert!(m.throughput_fps > 0.0);
+        assert!(m.power_mw > 0.0);
+        assert!(fleet.cost_s() > 0.0);
+    }
+
+    #[test]
+    fn mixed_fleet_parallel_matches_sequential_byte_for_byte() {
+        let mk = |sequential: bool| {
+            let f = FleetEnv::mixed(
+                &[DeviceKind::XavierNx, DeviceKind::OrinNano, DeviceKind::OrinNano],
+                ModelKind::Yolo,
+                5,
+            );
+            if sequential {
+                f.sequential()
+            } else {
+                f
+            }
+        };
+        let mut par = mk(false);
+        let mut seq = mk(true);
+        let space = par.space().clone();
+        let mut rng = crate::util::Rng::new(9);
+        for _ in 0..6 {
+            let cfg = space.random(&mut rng);
+            assert_eq!(par.measure(cfg), seq.measure(cfg), "{cfg:?}");
+        }
+        assert_eq!(par.cost_s(), seq.cost_s());
     }
 }

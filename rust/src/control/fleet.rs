@@ -4,6 +4,9 @@
 //! Every job owns its RNG seed and results land by job index, so the
 //! parallel schedule affects wall-clock only — `fleet_sweep` over any
 //! worker count is asserted byte-identical to the sequential run.
+//! (This is the *many independent searches* axis; one search observing
+//! many boards per window is [`super::FleetEnv`]. EXPERIMENTS.md
+//! §Closed-loop serving covers both.)
 
 use std::sync::Arc;
 

@@ -2,13 +2,22 @@
 //! [`Optimizer`](crate::optimizer::Optimizer) and any measurement
 //! [`Environment`].
 //!
+//! The loop, in one line (ARCHITECTURE.md draws it in full):
+//!
+//! ```text
+//! Environment ⇄ ControlLoop ⇄ Optimizer, composed by TenantArbiter,
+//! fronted on the live path by coordinator::Router
+//! ```
+//!
 //! The paper's whole point is *online* optimization of a live serving
 //! stack; this module is where "online" actually lives:
 //!
 //! * [`Environment`] abstracts measurement — the simulated board
 //!   ([`SimEnv`]), the real serving stack with sim-backed power
 //!   ([`LiveEnv`]), or a whole fleet of boards per observation
-//!   ([`FleetEnv`]).
+//!   ([`FleetEnv`] — including mixed NX/Orin fleets searched through
+//!   the normalized [`crate::device::NormSpace`] grid; EXPERIMENTS.md
+//!   §Heterogeneous fleets).
 //! * [`ControlLoop`] owns the drive loop every experiment, the CLI, and
 //!   the examples used to hand-roll: budget, first-feasible tracking,
 //!   uniform search-cost accounting, trace recording, an event log, and

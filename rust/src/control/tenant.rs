@@ -36,6 +36,10 @@
 //! optimizer, and seeds, so trajectories are **byte-identical to the
 //! sequential run** for any worker count.
 //!
+//! EXPERIMENTS.md §Multi-tenant arbitration documents the policies,
+//! invariants, and how to run the scenario family; ARCHITECTURE.md
+//! places the arbiter in the closed-loop diagram.
+//!
 //! On the live path the generic `Router<S: ModelServer>` stays the
 //! single admission front door across tenants:
 //! [`TenantArbiter::apply_to_router`] pushes each round's arbitrated

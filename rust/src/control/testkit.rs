@@ -12,7 +12,10 @@
 //!
 //! * [`StepEnv`] — constant metrics that step to a second level after a
 //!   scripted number of windows: the minimal drifting surface (a
-//!   workload/thermal shift in miniature).
+//!   workload/thermal shift in miniature). With
+//!   [`StepEnv::with_space`], scripted members of different native
+//!   grids compose into heterogeneous [`super::FleetEnv`]s
+//!   (`rust/tests/hetero_fleet.rs`).
 //! * [`QueueServer`] — a queue-shaped [`ModelServer`]: the admission
 //!   policy's test double (no PJRT, no threads), recording applied
 //!   concurrency levels so reconfiguration paths are observable.
@@ -56,6 +59,14 @@ impl StepEnv {
     /// A surface that never shifts (constant `fps_before` forever).
     pub fn constant() -> StepEnv {
         StepEnv::new(u64::MAX)
+    }
+
+    /// Override the configuration space — heterogeneous-fleet tests
+    /// build scripted members with different native grids (e.g. one NX
+    /// and one Orin member under a single normalized `FleetEnv`).
+    pub fn with_space(mut self, space: ConfigSpace) -> StepEnv {
+        self.space = space;
+        self
     }
 
     /// Override the two throughput levels.
@@ -167,6 +178,13 @@ mod tests {
         for _ in 0..50 {
             assert_eq!(flat.measure(cfg).throughput_fps, 30.0);
         }
+    }
+
+    #[test]
+    fn with_space_overrides_the_native_grid() {
+        let env = StepEnv::constant().with_space(DeviceKind::OrinNano.space());
+        assert_eq!(env.space().device(), DeviceKind::OrinNano);
+        assert_eq!(env.space(), &DeviceKind::OrinNano.space());
     }
 
     #[test]

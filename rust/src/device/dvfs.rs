@@ -1,10 +1,22 @@
-//! DVFS + concurrency configuration space (paper Eq. 5).
+//! DVFS + concurrency configuration space (paper Eq. 5), plus the
+//! normalized encoding that lets one optimizer span different devices.
 //!
 //! A configuration is the 5-tuple `s = (s_cpu, c_cpu, s_gpu, s_mem, c)`.
 //! The space is a discrete grid per device (paper Table 2 ranges with
 //! ~100 MHz steps, §IV-A); this module provides enumeration, clamping/
 //! rounding onto the grid (Algorithm 2's `MINMAX(ROUND(v), r)`), indexing
 //! and neighbourhood moves.
+//!
+//! **Heterogeneous fleets** (ARCHITECTURE.md, EXPERIMENTS.md
+//! §Heterogeneous fleets): the paper tunes one device class at a time,
+//! and raw-frequency features transfer poorly between classes (an Orin
+//! GPU "step" is a different number of MHz than an NX one). [`NormSpace`]
+//! normalizes every dimension to its **rank fraction** — position along
+//! the device's sorted values, scaled to `[0, 1]` — so a single search
+//! surface spans mixed NX/Orin fleets: one [`NormConfig`] decodes onto
+//! each member's native grid ([`ConfigSpace::decode`]), always landing
+//! exactly on-grid, with the same deterministic tie-break as
+//! [`ConfigSpace::snap`].
 
 use super::specs::DeviceKind;
 
@@ -132,11 +144,16 @@ impl std::fmt::Display for HwConfig {
     }
 }
 
-/// The discrete configuration grid of one device.
+/// The discrete configuration grid of one device — or, when
+/// [`ConfigSpace::is_normalized`] holds, the rank-fraction grid of a
+/// [`NormSpace`] (values in permille of each dimension's range).
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct ConfigSpace {
     device: DeviceKind,
     dims: [Vec<u32>; HwConfig::NDIMS],
+    /// True for a [`NormSpace`] search grid (values are rank fractions
+    /// in permille, not native MHz / cores / instances).
+    normalized: bool,
 }
 
 impl ConfigSpace {
@@ -153,11 +170,22 @@ impl ConfigSpace {
             assert!(!d.is_empty(), "dimension {i} empty");
             assert!(d.windows(2).all(|w| w[0] < w[1]), "dimension {i} not sorted/unique");
         }
-        ConfigSpace { device, dims }
+        ConfigSpace { device, dims, normalized: false }
     }
 
+    /// Device this grid belongs to. A normalized grid spans several
+    /// devices; its tag is member 0's kind — a representative for
+    /// display, never a semantic device (check
+    /// [`ConfigSpace::is_normalized`] before interpreting it).
     pub fn device(&self) -> DeviceKind {
         self.device
+    }
+
+    /// True for a [`NormSpace`] search grid, whose values are
+    /// per-dimension rank fractions in permille rather than native
+    /// hardware units.
+    pub fn is_normalized(&self) -> bool {
+        self.normalized
     }
 
     /// Allowed values along one dimension (sorted ascending).
@@ -187,6 +215,13 @@ impl ConfigSpace {
 
     /// Snap a continuous value onto the grid: nearest allowed value
     /// (Algorithm 2's `MINMAX(ROUND(v), r)` — clamp + round in one).
+    ///
+    /// **Tie-break rule**: a value exactly halfway between two grid
+    /// points snaps to the **lower** one (the scan keeps the first of
+    /// two equidistant candidates, and values are sorted ascending).
+    /// [`ConfigSpace::decode`] applies the same rule in rank space, so
+    /// every member of a heterogeneous fleet resolves a tied proposal
+    /// identically on every run and every thread schedule.
     pub fn snap(&self, dim: Dim, v: f64) -> u32 {
         let vals = self.values(dim);
         let mut best = vals[0];
@@ -279,6 +314,230 @@ impl ConfigSpace {
             mem_freq_mhz: pick(Dim::MemFreq, rng),
             concurrency: pick(Dim::Concurrency, rng),
         }
+    }
+
+    /// Encode a configuration as per-dimension rank fractions. Off-grid
+    /// values are snapped first ([`ConfigSpace::snap`]), so `encode` is
+    /// total; a single-value dimension encodes to 0.
+    pub fn encode(&self, cfg: &HwConfig) -> NormConfig {
+        let mut out = [0.0f64; HwConfig::NDIMS];
+        for (i, &d) in Dim::ALL.iter().enumerate() {
+            let vals = self.values(d);
+            let v = self.snap(d, cfg.get(d) as f64);
+            let rank = vals.binary_search(&v).expect("snapped value is on the grid");
+            out[i] = rank as f64 / (vals.len() - 1).max(1) as f64;
+        }
+        NormConfig(out)
+    }
+
+    /// Decode rank fractions onto this grid: each fraction maps to the
+    /// nearest rank along the dimension's sorted values, so the result
+    /// is always exactly on-grid. A fraction landing halfway between
+    /// two ranks takes the **lower** one — the same deterministic
+    /// tie-break [`ConfigSpace::snap`] applies to values.
+    pub fn decode(&self, nc: &NormConfig) -> HwConfig {
+        let nc = nc.clamped();
+        let mut out = [0.0f64; HwConfig::NDIMS];
+        for (i, &d) in Dim::ALL.iter().enumerate() {
+            let vals = self.values(d);
+            let t = nc.get(d) * (vals.len() - 1) as f64;
+            let lo = t.floor();
+            let rank = if t - lo > 0.5 { lo as usize + 1 } else { lo as usize };
+            out[i] = vals[rank] as f64;
+        }
+        HwConfig::from_vec(out)
+    }
+
+    /// The space's "manufacturer default" anchor — CORAL's first
+    /// bootstrap probe. Native grids use the device's default nvpmodel
+    /// preset; a normalized grid has no manufacturer, so the neutral
+    /// [`ConfigSpace::midpoint`] stands in, with concurrency at the
+    /// framework default (the dimension minimum, as presets never touch
+    /// application knobs — paper §II-A1).
+    pub fn preset_default(&self) -> HwConfig {
+        if self.normalized {
+            let mut c = self.midpoint();
+            c.concurrency = self.min(Dim::Concurrency);
+            c
+        } else {
+            self.device.preset_default()
+        }
+    }
+
+    /// The space's "max performance" anchor — CORAL's second bootstrap
+    /// probe. Native grids use the device's max nvpmodel preset; on a
+    /// normalized grid every hardware knob sits at rank 1.0 (each
+    /// member's own maximum after decoding) with concurrency at the
+    /// framework default.
+    pub fn preset_max_power(&self) -> HwConfig {
+        if self.normalized {
+            HwConfig {
+                cpu_freq_mhz: self.max(Dim::CpuFreq),
+                cpu_cores: self.max(Dim::CpuCores),
+                gpu_freq_mhz: self.max(Dim::GpuFreq),
+                mem_freq_mhz: self.max(Dim::MemFreq),
+                concurrency: self.min(Dim::Concurrency),
+            }
+        } else {
+            self.device.preset_max_power()
+        }
+    }
+
+    /// Render `cfg` with its space context. Heterogeneous-fleet reports
+    /// must distinguish an NX configuration from an Orin one with
+    /// identical raw values — bare [`HwConfig`]'s `Display` cannot —
+    /// and normalized grid points are rank fractions, which would be
+    /// nonsense printed as MHz.
+    pub fn describe(&self, cfg: &HwConfig) -> String {
+        if self.normalized {
+            let pct = |v: u32| 100.0 * v as f64 / NormSpace::RESOLUTION as f64;
+            format!(
+                "norm cpu={:.0}%x{:.0}% gpu={:.0}% mem={:.0}% conc={:.0}%",
+                pct(cfg.cpu_freq_mhz),
+                pct(cfg.cpu_cores),
+                pct(cfg.gpu_freq_mhz),
+                pct(cfg.mem_freq_mhz),
+                pct(cfg.concurrency),
+            )
+        } else {
+            format!("{} {cfg}", self.device.name())
+        }
+    }
+}
+
+/// A configuration expressed as per-dimension **rank fractions**: each
+/// value is the configuration's position along a grid dimension's sorted
+/// values, scaled to `[0, 1]` (0 = the dimension's minimum, 1 = its
+/// maximum). Raw-frequency features transfer poorly across device
+/// generations (PolyThrottle's per-device grids); rank fractions are the
+/// encoding that lets one distance-correlation surface span
+/// heterogeneous hardware (Fulcrum's GMD scheduler normalizes the same
+/// way).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct NormConfig(pub [f64; HwConfig::NDIMS]);
+
+impl NormConfig {
+    /// Fraction along one dimension.
+    pub fn get(&self, dim: Dim) -> f64 {
+        self.0[dim.index()]
+    }
+
+    /// Clamp every fraction into `[0, 1]`; non-finite values collapse
+    /// to 0 (the conservative end of every dimension).
+    pub fn clamped(mut self) -> NormConfig {
+        for v in self.0.iter_mut() {
+            *v = if v.is_finite() { v.clamp(0.0, 1.0) } else { 0.0 };
+        }
+        self
+    }
+}
+
+/// The shared search space of a heterogeneous fleet: the member grids
+/// (different devices), plus one **normalized grid** any optimizer can
+/// search without knowing a member's native units.
+///
+/// The normalized grid's values are the union of every member's rank
+/// fractions, stored in permille ([`NormSpace::RESOLUTION`]), so every
+/// member grid point stays exactly representable and the grid is itself
+/// a [`ConfigSpace`] — the existing [`crate::optimizer::Optimizer`]
+/// implementations search it unchanged. Decoding a normalized proposal
+/// for member `i` ([`NormSpace::decode_for`]) always lands on member
+/// `i`'s native grid.
+#[derive(Debug, Clone, PartialEq)]
+pub struct NormSpace {
+    members: Vec<ConfigSpace>,
+    grid: ConfigSpace,
+}
+
+impl NormSpace {
+    /// Fixed-point resolution of the normalized grid: a fraction `f` is
+    /// stored as `round(f · RESOLUTION)`. 1000 keeps every realistic
+    /// rank fraction distinct (dimensions have ≤ tens of values) while
+    /// staying exact under the `u32` grid representation.
+    pub const RESOLUTION: u32 = 1000;
+
+    pub fn new(members: Vec<ConfigSpace>) -> NormSpace {
+        assert!(!members.is_empty(), "a normalized space needs at least one member");
+        let dim_vals = |d: Dim| -> Vec<u32> {
+            let mut vals: Vec<u32> = members
+                .iter()
+                .flat_map(|m| {
+                    let n = m.values(d).len();
+                    (0..n).map(move |rank| {
+                        (Self::RESOLUTION as f64 * rank as f64 / (n - 1).max(1) as f64)
+                            .round() as u32
+                    })
+                })
+                .collect();
+            vals.sort_unstable();
+            vals.dedup();
+            vals
+        };
+        let grid = ConfigSpace {
+            device: members[0].device(),
+            dims: [
+                dim_vals(Dim::CpuFreq),
+                dim_vals(Dim::CpuCores),
+                dim_vals(Dim::GpuFreq),
+                dim_vals(Dim::MemFreq),
+                dim_vals(Dim::Concurrency),
+            ],
+            normalized: true,
+        };
+        NormSpace { members, grid }
+    }
+
+    /// Member grids, in fleet order.
+    pub fn members(&self) -> &[ConfigSpace] {
+        &self.members
+    }
+
+    pub fn len(&self) -> usize {
+        self.members.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.members.is_empty()
+    }
+
+    /// The normalized search grid ([`ConfigSpace::is_normalized`]
+    /// holds). Its `device()` tag is member 0's kind — a representative
+    /// for display, not a semantic device.
+    pub fn grid(&self) -> &ConfigSpace {
+        &self.grid
+    }
+
+    /// Fractions of a normalized grid point (permille → `[0, 1]`).
+    pub fn fractions(cfg: &HwConfig) -> NormConfig {
+        let f = |v: u32| v as f64 / Self::RESOLUTION as f64;
+        NormConfig([
+            f(cfg.cpu_freq_mhz),
+            f(cfg.cpu_cores),
+            f(cfg.gpu_freq_mhz),
+            f(cfg.mem_freq_mhz),
+            f(cfg.concurrency),
+        ])
+        .clamped()
+    }
+
+    /// Decode a normalized proposal onto member `i`'s native grid.
+    pub fn decode_for(&self, member: usize, cfg: &HwConfig) -> HwConfig {
+        self.members[member].decode(&Self::fractions(cfg))
+    }
+
+    /// Encode member `i`'s configuration onto the normalized grid
+    /// (exact for on-grid member configurations: every member rank
+    /// fraction is a grid value by construction).
+    pub fn encode_from(&self, member: usize, cfg: &HwConfig) -> HwConfig {
+        let nc = self.members[member].encode(cfg);
+        let v = |d: Dim| nc.get(d) * Self::RESOLUTION as f64;
+        self.grid.snap_config([
+            v(Dim::CpuFreq),
+            v(Dim::CpuCores),
+            v(Dim::GpuFreq),
+            v(Dim::MemFreq),
+            v(Dim::Concurrency),
+        ])
     }
 }
 
@@ -385,5 +644,142 @@ mod tests {
     fn as_vec_from_vec_round_trip() {
         let c = nx().midpoint();
         assert_eq!(HwConfig::from_vec(c.as_vec()), c);
+    }
+
+    fn orin() -> ConfigSpace {
+        DeviceKind::OrinNano.space()
+    }
+
+    fn nx_orin() -> NormSpace {
+        NormSpace::new(vec![nx(), orin()])
+    }
+
+    #[test]
+    fn encode_decode_round_trips_exactly_on_grid() {
+        prop::check("norm round-trip", 200, |g| {
+            let s = if g.rng.chance(0.5) { nx() } else { orin() };
+            let mut rng = g.rng.fork(7);
+            let cfg = s.random(&mut rng);
+            let nc = s.encode(&cfg);
+            prop::assert_true(
+                nc.0.iter().all(|f| (0.0..=1.0).contains(f)),
+                "fractions in the unit interval",
+            )?;
+            prop::assert_eq_dbg(&s.decode(&nc), &cfg)
+        });
+    }
+
+    #[test]
+    fn decode_always_lands_on_grid_for_arbitrary_fractions() {
+        prop::check("decode on grid", 200, |g| {
+            let s = if g.rng.chance(0.5) { nx() } else { orin() };
+            let raw = [
+                g.rng.range_f64(-0.5, 1.5),
+                g.rng.range_f64(-0.5, 1.5),
+                g.rng.range_f64(-0.5, 1.5),
+                g.rng.range_f64(-0.5, 1.5),
+                g.rng.range_f64(-0.5, 1.5),
+            ];
+            let cfg = s.decode(&NormConfig(raw));
+            prop::assert_true(s.contains(&cfg), "decoded config on the native grid")?;
+            // Decoding is idempotent through encode: the fraction of an
+            // on-grid config decodes back to itself.
+            prop::assert_eq_dbg(&s.decode(&s.encode(&cfg)), &cfg)
+        });
+    }
+
+    #[test]
+    fn decode_tie_breaks_to_the_lower_rank() {
+        // NX memory grid [1500, 1690, 1866]: fraction 0.25 puts the
+        // rank target at exactly 0.5 — halfway between ranks 0 and 1 —
+        // and must take the lower one, matching snap's value rule.
+        let s = nx();
+        let mut nc = s.encode(&s.midpoint());
+        nc.0[Dim::MemFreq.index()] = 0.25;
+        assert_eq!(s.decode(&nc).mem_freq_mhz, 1500);
+        nc.0[Dim::MemFreq.index()] = 0.75; // rank target 1.5: ties down to 1
+        assert_eq!(s.decode(&nc).mem_freq_mhz, 1690);
+        // Non-finite fractions collapse to the dimension minimum.
+        nc.0[Dim::MemFreq.index()] = f64::NAN;
+        assert_eq!(s.decode(&nc).mem_freq_mhz, 1500);
+        nc.0[Dim::MemFreq.index()] = f64::INFINITY;
+        assert_eq!(s.decode(&nc).mem_freq_mhz, 1500);
+    }
+
+    #[test]
+    fn norm_grid_spans_all_member_ranks() {
+        let ns = nx_orin();
+        let g = ns.grid();
+        assert!(g.is_normalized());
+        assert!(!nx().is_normalized());
+        for &d in &Dim::ALL {
+            assert_eq!(g.min(d), 0, "{d:?}");
+            assert_eq!(g.max(d), NormSpace::RESOLUTION, "{d:?}");
+        }
+        // Equal-length dims coincide (8 CPU clocks on both boards);
+        // unequal ones union (6 NX + 4 Orin GPU clocks → 8 distinct
+        // permille ranks; 3 + 5 concurrency levels → 5).
+        assert_eq!(g.values(Dim::CpuFreq).len(), 8);
+        assert_eq!(g.values(Dim::GpuFreq).len(), 8);
+        assert_eq!(g.values(Dim::Concurrency).len(), 5);
+        assert_eq!(g.values(Dim::MemFreq), &[0, 500, 1000]);
+        assert_eq!(ns.len(), 2);
+        assert!(!ns.is_empty());
+    }
+
+    #[test]
+    fn decode_for_any_grid_point_is_on_every_member_grid() {
+        prop::check("norm decode_for", 120, |g| {
+            let ns = nx_orin();
+            let mut rng = g.rng.fork(3);
+            let p = ns.grid().random(&mut rng);
+            for i in 0..ns.len() {
+                let native = ns.decode_for(i, &p);
+                prop::assert_true(ns.members()[i].contains(&native), "on member grid")?;
+                // Round-trip through the member: re-encoding the native
+                // config lands on a grid point that decodes identically.
+                let back = ns.encode_from(i, &native);
+                prop::assert_true(ns.grid().contains(&back), "encode_from on grid")?;
+                prop::assert_eq_dbg(&ns.decode_for(i, &back), &native)?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn member_grid_points_are_exactly_representable() {
+        let ns = nx_orin();
+        for (i, m) in ns.members().iter().enumerate() {
+            for cfg in m.enumerate().iter().step_by(53) {
+                let p = ns.encode_from(i, cfg);
+                assert!(ns.grid().contains(&p));
+                assert_eq!(ns.decode_for(i, &p), *cfg, "member {i}: {cfg}");
+            }
+        }
+    }
+
+    #[test]
+    fn normalized_presets_and_describe() {
+        let ns = nx_orin();
+        let g = ns.grid();
+        let d = g.preset_default();
+        assert!(g.contains(&d));
+        assert_eq!(d.concurrency, 0, "framework default: minimum rank");
+        let m = g.preset_max_power();
+        assert!(g.contains(&m));
+        assert_eq!(m.gpu_freq_mhz, NormSpace::RESOLUTION);
+        assert_eq!(m.concurrency, 0);
+        let txt = g.describe(&m);
+        assert!(txt.starts_with("norm "), "{txt}");
+        assert!(txt.contains("gpu=100%"), "{txt}");
+        // Native spaces keep the device presets and a device-tagged
+        // description — an NX config and an Orin config with identical
+        // raw values render distinguishably.
+        let s = nx();
+        assert_eq!(s.preset_default(), DeviceKind::XavierNx.preset_default());
+        assert_eq!(s.preset_max_power(), DeviceKind::XavierNx.preset_max_power());
+        let cfg = s.midpoint();
+        assert!(s.describe(&cfg).starts_with("xavier-nx "), "{}", s.describe(&cfg));
+        assert_ne!(s.describe(&cfg), orin().describe(&cfg));
     }
 }

@@ -16,6 +16,6 @@ pub mod sim;
 pub mod specs;
 pub mod thermal;
 
-pub use dvfs::{ConfigSpace, Dim, HwConfig};
+pub use dvfs::{ConfigSpace, Dim, HwConfig, NormConfig, NormSpace};
 pub use sim::{Device, Measured};
 pub use specs::DeviceKind;

@@ -14,7 +14,9 @@ pub mod single;
 pub mod table4;
 
 pub use runner::{run_method, MethodKind, MethodOutcome};
-pub use scenarios::{dual_constraints, DualScenario, DUAL_SCENARIOS};
+pub use scenarios::{
+    dual_constraints, DualScenario, HeteroScenario, DUAL_SCENARIOS, HETERO_SCENARIOS,
+};
 
 use std::path::Path;
 

@@ -6,15 +6,22 @@
 //! co-optimizes **throughput and power** using **distance correlation**
 //! over a sliding window of online observations — no offline profiling.
 //!
+//! Front-door documentation: `README.md` (what and why),
+//! `ARCHITECTURE.md` (how the pieces compose), `EXPERIMENTS.md`
+//! (methodology and expected outcomes).
+//!
 //! The crate is the L3 layer of a three-layer stack (see `DESIGN.md`):
 //!
 //! * [`optimizer`] — the paper's contribution (CORAL, Algorithms 1 + 2)
 //!   plus every baseline it is evaluated against (ORACLE, ALERT,
 //!   ALERT-Online, manufacturer presets).
 //! * [`control`] — the closed loop wiring optimizers to measurement: the
-//!   [`control::Environment`] trait (sim / live serving / fleet), the
-//!   canonical [`control::ControlLoop`] drive engine with drift
-//!   detection, and the fleet-parallel [`control::FleetRunner`].
+//!   [`control::Environment`] trait (sim / live serving / fleet — mixed
+//!   NX/Orin fleets included, via the normalized
+//!   [`device::NormSpace`] encoding), the canonical
+//!   [`control::ControlLoop`] drive engine with drift detection, the
+//!   fleet-parallel [`control::FleetRunner`], and the multi-tenant
+//!   [`control::TenantArbiter`].
 //! * [`coordinator`] — the serving system the optimizer tunes: request
 //!   router, dynamic batcher, worker pool honouring the concurrency level.
 //! * [`device`] — a faithful simulator of the two NVIDIA Jetson boards

@@ -29,6 +29,13 @@
 //! * **Heuristic target** — §III-E's text says *CPU frequency* to min,
 //!   Algorithm 2 line 15 says *CPU cores*; [`Heuristic::Both`] (default)
 //!   applies both, and the ablation bench compares all variants.
+//! * **Heterogeneous fleets** — the search is expressed entirely in
+//!   grid operations on its [`ConfigSpace`] (snap, neighbours, presets),
+//!   so handing it a normalized fleet grid
+//!   ([`crate::device::NormSpace`]) makes the same algorithm tune mixed
+//!   NX/Orin fleets: steps and dCor weights live in rank-fraction space,
+//!   the fleet environment decodes per member (EXPERIMENTS.md
+//!   §Heterogeneous fleets).
 
 use std::collections::HashSet;
 
@@ -220,10 +227,15 @@ impl CoralOptimizer {
             // untried-or-nudge gate as every other proposal — a
             // restarted round must never re-propose a prohibited preset.
             _ => {
+                // The probes come from the *space*, not the device:
+                // native grids use the manufacturer presets, normalized
+                // fleet grids (`device::NormSpace`) their rank-fraction
+                // analogues — so CORAL tunes mixed-device fleets through
+                // the same bootstrap discipline.
                 let z = if self.iter == 0 {
-                    self.space.device().preset_default()
+                    self.space.preset_default()
                 } else {
-                    let mut c = self.space.device().preset_max_power();
+                    let mut c = self.space.preset_max_power();
                     c.concurrency = self.space.max(Dim::Concurrency);
                     c
                 };
@@ -695,6 +707,38 @@ mod tests {
         opt.observe(c, 0.0, 2000.0); // crashed window: not recorded
         opt.observe(c, 28.0, 5900.0);
         assert_eq!(opt.window_throughputs(), &[30.0, 28.0]);
+    }
+
+    #[test]
+    fn normalized_grid_proposals_stay_on_the_virtual_grid() {
+        // CORAL over a mixed NX/Orin normalized space: bootstrap probes,
+        // guided steps, collision nudges, and random fallbacks must all
+        // stay on the rank-fraction grid (the fleet environment decodes
+        // them per member — on-grid proposals are what make every
+        // decoded config land on a native grid).
+        use crate::device::NormSpace;
+        let ns = NormSpace::new(vec![
+            DeviceKind::XavierNx.space(),
+            DeviceKind::OrinNano.space(),
+        ]);
+        let g = ns.grid().clone();
+        let cons = Constraints::dual(40.0, 6400.0);
+        let mut opt = CoralOptimizer::new(g.clone(), cons, 11);
+        for i in 0..12 {
+            let cfg = opt.propose();
+            assert!(g.contains(&cfg), "iteration {i}: {cfg:?} off the virtual grid");
+            // A smooth synthetic response keeps the search moving.
+            let fps = 30.0 + cfg.gpu_freq_mhz as f64 / 50.0;
+            let mw = 4000.0 + 2.0 * cfg.gpu_freq_mhz as f64 + cfg.concurrency as f64;
+            opt.observe(cfg, fps, mw);
+        }
+        assert!(opt.best().is_some());
+        // Probe 0 is the normalized default (mid knobs, min concurrency),
+        // probe 1 the all-max — the same contrast discipline as native.
+        let (alpha, beta) = opt.weights();
+        for w in alpha.iter().chain(beta.iter()) {
+            assert!((0.0..=1.0).contains(w), "weight {w}");
+        }
     }
 
     #[test]

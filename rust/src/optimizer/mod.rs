@@ -2,6 +2,14 @@
 //! every baseline of §IV-A — ORACLE, ALERT, ALERT-Online, and the
 //! manufacturer presets — behind one [`Optimizer`] trait so the
 //! experiment harness and the serving coordinator drive them uniformly.
+//!
+//! Every strategy is expressed in grid operations on its
+//! [`crate::device::ConfigSpace`], never in device-specific units — so
+//! the same implementations search a normalized fleet grid
+//! ([`crate::device::NormSpace`], rank fractions spanning mixed NX/Orin
+//! members) without any trait change: proposals come out in normalized
+//! space and the fleet environment decodes them per member
+//! ([`crate::control::FleetEnv`]; EXPERIMENTS.md §Heterogeneous fleets).
 
 pub mod alert;
 pub mod alert_online;

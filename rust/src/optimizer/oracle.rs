@@ -4,6 +4,10 @@
 //! Driven through the same propose/observe loop as everyone else — it
 //! simply proposes every grid point once (thousands of measurement
 //! windows; the experiment reports surface that cost next to CORAL's 10).
+//!
+//! Space-agnostic like the rest of the lineup: handed a normalized fleet
+//! grid ([`crate::device::NormSpace`]) it sweeps the union rank-fraction
+//! grid, giving the exhaustive upper bound for heterogeneous fleets too.
 
 use super::constraints::Constraints;
 use super::reward::reward;

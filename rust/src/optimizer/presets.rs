@@ -1,11 +1,17 @@
 //! Manufacturer-preset baselines (§IV-A): `max-power` and `default`
 //! nvpmodel modes. A preset is a fixed configuration — no search, no
 //! application-knob tuning (concurrency stays at the framework default).
+//!
+//! Presets generalize to any [`ConfigSpace`] — including the normalized
+//! fleet grids of [`crate::device::NormSpace`] — through
+//! [`PresetOptimizer::max_power_of`] / [`PresetOptimizer::default_of`]:
+//! the space supplies its own preset anchors, so a "max-power preset" on
+//! a mixed NX/Orin fleet means every member at its own maximum.
 
 use super::constraints::Constraints;
 use super::reward::reward;
 use super::{BestConfig, Optimizer};
-use crate::device::{DeviceKind, HwConfig};
+use crate::device::{ConfigSpace, DeviceKind, HwConfig};
 
 /// Fixed-configuration baseline.
 pub struct PresetOptimizer {
@@ -39,6 +45,20 @@ impl PresetOptimizer {
     /// Any fixed configuration (custom presets).
     pub fn fixed(config: HwConfig, cons: Constraints, label: &'static str) -> PresetOptimizer {
         PresetOptimizer { config, cons, label, best: None }
+    }
+
+    /// The maximum-performance preset of an arbitrary space — identical
+    /// to [`PresetOptimizer::max_power`] on a native device grid; on a
+    /// normalized fleet grid every hardware knob sits at rank 1.0 with
+    /// concurrency at the framework default.
+    pub fn max_power_of(space: &ConfigSpace, cons: Constraints) -> PresetOptimizer {
+        PresetOptimizer::fixed(space.preset_max_power(), cons, "max-power")
+    }
+
+    /// The default-mode preset of an arbitrary space (see
+    /// [`PresetOptimizer::max_power_of`]).
+    pub fn default_of(space: &ConfigSpace, cons: Constraints) -> PresetOptimizer {
+        PresetOptimizer::fixed(space.preset_default(), cons, "default")
     }
 }
 
@@ -104,5 +124,39 @@ mod tests {
         let cfg = DeviceKind::OrinNano.preset_default();
         let opt = PresetOptimizer::fixed(cfg, Constraints::none(), "custom");
         assert_eq!(opt.name(), "custom");
+    }
+
+    #[test]
+    fn space_presets_match_device_presets_on_native_grids() {
+        let cons = Constraints::none();
+        for d in DeviceKind::ALL {
+            let s = d.space();
+            assert_eq!(
+                PresetOptimizer::max_power_of(&s, cons).propose(),
+                PresetOptimizer::max_power(d, cons).propose(),
+                "{d}"
+            );
+            assert_eq!(
+                PresetOptimizer::default_of(&s, cons).propose(),
+                PresetOptimizer::default_mode(d, cons).propose(),
+                "{d}"
+            );
+        }
+    }
+
+    #[test]
+    fn space_presets_on_normalized_grids_are_on_grid() {
+        let ns = crate::device::NormSpace::new(vec![
+            DeviceKind::XavierNx.space(),
+            DeviceKind::OrinNano.space(),
+        ]);
+        let g = ns.grid();
+        let cons = Constraints::none();
+        let mp = PresetOptimizer::max_power_of(g, cons).propose();
+        assert!(g.contains(&mp));
+        assert_eq!(mp.concurrency, 0, "framework default: minimum rank");
+        let dm = PresetOptimizer::default_of(g, cons).propose();
+        assert!(g.contains(&dm));
+        assert_ne!(mp, dm);
     }
 }

@@ -2,6 +2,11 @@
 //! baseline isolating the value of CORAL's guided steps from the value of
 //! its reward function (ALERT-Online ranks throughput-first; this ranks
 //! by the same reward CORAL uses).
+//!
+//! Draws uniformly from whatever [`ConfigSpace`] it is given — a native
+//! device grid or a normalized fleet grid
+//! ([`crate::device::NormSpace`]) — so it doubles as the unguided
+//! baseline for heterogeneous fleets.
 
 use super::constraints::Constraints;
 use super::reward::reward;

@@ -1,0 +1,138 @@
+//! Heterogeneous-fleet acceptance tests: one CORAL [`ControlLoop`]
+//! drives a [`FleetEnv`] whose members carry *different* native
+//! configuration spaces (Xavier NX + Orin Nano), through the normalized
+//! rank-fraction grid (`device::NormSpace`).
+//!
+//! Scripted (testkit) members make the surfaces exact, so the assertions
+//! pin the structural contract rather than simulator statistics:
+//! every decoded per-member configuration lands on that member's native
+//! grid, and same-seed parallel vs sequential trajectories are
+//! byte-identical. `bench_hetero` scores the shared-vs-independent
+//! comparison on the simulated boards (EXPERIMENTS.md §Heterogeneous
+//! fleets).
+
+mod common;
+
+use common::StepEnv;
+use coral::control::{ControlLoop, Environment, FleetEnv, LoopOutcome};
+use coral::device::DeviceKind;
+use coral::experiments::scenarios::HETERO_SCENARIOS;
+use coral::optimizer::{Constraints, CoralOptimizer};
+
+/// A scripted mixed-space fleet: the NX member serves a constant 30 fps
+/// at 5 W, the Orin member a constant 60 fps at 3 W — fleet mean 45 fps
+/// at 4 W, regardless of configuration.
+fn scripted_mixed_fleet(sequential: bool) -> FleetEnv {
+    let nx = StepEnv::constant()
+        .with_space(DeviceKind::XavierNx.space())
+        .with_levels(30.0, 30.0)
+        .with_power(5_000.0);
+    let orin = StepEnv::constant()
+        .with_space(DeviceKind::OrinNano.space())
+        .with_levels(60.0, 60.0)
+        .with_power(3_000.0);
+    let members: Vec<Box<dyn Environment + Send>> = vec![Box::new(nx), Box::new(orin)];
+    let fleet = FleetEnv::new(members);
+    if sequential {
+        fleet.sequential()
+    } else {
+        fleet
+    }
+}
+
+fn run_scripted(sequential: bool, seed: u64) -> (LoopOutcome, ControlLoop<FleetEnv, CoralOptimizer>) {
+    let fleet = scripted_mixed_fleet(sequential);
+    let cons = Constraints::dual(40.0, 4_500.0);
+    let opt = CoralOptimizer::new(fleet.space().clone(), cons, seed);
+    let mut cl = ControlLoop::with_budget(fleet, opt, cons, 10);
+    let out = cl.run();
+    (out, cl)
+}
+
+#[test]
+fn coral_drives_a_mixed_space_fleet_with_on_grid_decoding() {
+    let (out, cl) = run_scripted(false, 42);
+    assert_eq!(out.iters, 10);
+    let best = out.best.expect("scripted members always measure");
+    assert!(best.feasible, "fleet mean 45 fps @ 4 W meets 40 fps / 4.5 W");
+    assert_eq!(best.throughput_fps, 45.0, "mean of 30 and 60 fps members");
+    assert_eq!(best.power_mw, 4_000.0, "mean of 5 W and 3 W members");
+    assert_eq!(out.first_feasible_iter, Some(1), "every window is feasible");
+
+    let fleet = cl.into_env();
+    assert!(fleet.is_normalized());
+    let grid = fleet.space().clone();
+    assert!(grid.is_normalized());
+    let ns = fleet.norm().expect("mixed fleet has an encoding");
+    for step in &out.trace.steps {
+        assert!(
+            grid.contains(&step.config),
+            "proposal off the normalized grid: {:?}",
+            step.config
+        );
+        let natives = fleet.decoded(step.config);
+        assert_eq!(natives.len(), 2);
+        for (i, native) in natives.iter().enumerate() {
+            assert!(
+                ns.members()[i].contains(native),
+                "iteration {}: member {i} decoded off its native grid ({native})",
+                step.iter
+            );
+        }
+        // NX and Orin CPU grids are disjoint value sets: the same
+        // fraction always decodes to genuinely different native units.
+        assert_ne!(natives[0], natives[1]);
+    }
+}
+
+#[test]
+fn same_seed_parallel_and_sequential_trajectories_are_byte_identical() {
+    let (par, _) = run_scripted(false, 7);
+    let (seq, _) = run_scripted(true, 7);
+    assert_eq!(
+        format!("{:?}", par.trace),
+        format!("{:?}", seq.trace),
+        "thread scheduling must never change a trajectory"
+    );
+    assert_eq!(par.iters, seq.iters);
+    assert_eq!(par.cost_s, seq.cost_s);
+}
+
+#[test]
+fn sim_backed_hetero_scenario_drives_end_to_end_on_grid() {
+    // The real mixed simulated boards (hetero-yolo-pair): structural
+    // guarantees only — every proposal on the normalized grid, every
+    // decode on the member grids, determinism across runs.
+    let s = HETERO_SCENARIOS[0];
+    let run = |sequential: bool| {
+        let fleet = if sequential { s.fleet(11).sequential() } else { s.fleet(11) };
+        let cons = s.constraints();
+        let opt = CoralOptimizer::new(fleet.space().clone(), cons, 11);
+        let mut cl = ControlLoop::with_budget(fleet, opt, cons, 10);
+        let out = cl.run();
+        (out, cl.into_env())
+    };
+    let (out, fleet) = run(false);
+    assert_eq!(out.iters, 10);
+    assert!(out.best.is_some());
+    let ns = fleet.norm().expect("hetero scenario fleet is normalized");
+    for step in &out.trace.steps {
+        for (i, native) in fleet.decoded(step.config).iter().enumerate() {
+            assert!(ns.members()[i].contains(native), "member {i}");
+        }
+    }
+    let (out_seq, _) = run(true);
+    assert_eq!(
+        format!("{:?}", out.trace),
+        format!("{:?}", out_seq.trace),
+        "sim-backed mixed fleet: parallel == sequential"
+    );
+
+    // Non-vacuity: different board seeds drive different measurement
+    // noise, so the trajectories genuinely diverge.
+    let other_fleet = s.fleet(12);
+    let opt = CoralOptimizer::new(other_fleet.space().clone(), s.constraints(), 11);
+    let mut cl = ControlLoop::with_budget(other_fleet, opt, s.constraints(), 10);
+    let other = cl.run();
+    assert_ne!(format!("{:?}", out.trace), format!("{:?}", other.trace));
+}

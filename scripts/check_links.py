@@ -1,0 +1,81 @@
+#!/usr/bin/env python3
+"""Fail on dangling relative links in the repo's markdown documentation.
+
+Checks every ``[text](target)`` link in the root-level markdown files
+(README / ARCHITECTURE / EXPERIMENTS / ROADMAP / ...):
+
+* relative file targets must exist (directories count, for links like
+  ``examples/``);
+* ``#anchor`` fragments — standalone or on a markdown target — must
+  match a heading in the target file, using GitHub's slug rules
+  (lowercase, punctuation stripped, spaces to dashes);
+* absolute URLs (http/https) are skipped: the check must work offline.
+
+Usage: python3 scripts/check_links.py  (from anywhere; repo-root aware)
+"""
+
+import re
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
+CODE_FENCE_RE = re.compile(r"```.*?```", re.DOTALL)
+
+
+def slugify(heading: str) -> str:
+    """GitHub-style anchor slug for a markdown heading."""
+    heading = re.sub(r"[`*_~]", "", heading.strip()).lower()
+    heading = re.sub(r"[^\w\- ]", "", heading, flags=re.UNICODE)
+    return heading.replace(" ", "-")
+
+
+def anchors_of(md_path: Path) -> set:
+    text = CODE_FENCE_RE.sub("", md_path.read_text(encoding="utf-8"))
+    return {slugify(h) for h in HEADING_RE.findall(text)}
+
+
+def check_file(md_path: Path) -> list:
+    errors = []
+    text = CODE_FENCE_RE.sub("", md_path.read_text(encoding="utf-8"))
+    for target in LINK_RE.findall(text):
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        path_part, _, fragment = target.partition("#")
+        if path_part:
+            dest = (md_path.parent / path_part).resolve()
+            if not dest.exists():
+                errors.append(f"{md_path.relative_to(REPO)}: dangling link '{target}'")
+                continue
+        else:
+            dest = md_path
+        if fragment:
+            if dest.is_dir() or dest.suffix.lower() != ".md":
+                continue  # anchors into non-markdown targets: out of scope
+            if slugify(fragment) not in anchors_of(dest):
+                errors.append(
+                    f"{md_path.relative_to(REPO)}: missing anchor '#{fragment}' "
+                    f"in {dest.relative_to(REPO)}"
+                )
+    return errors
+
+
+def main() -> int:
+    md_files = sorted(REPO.glob("*.md")) + sorted(REPO.glob("vendor/*.md"))
+    if not md_files:
+        print("check_links: no markdown files found", file=sys.stderr)
+        return 1
+    errors = []
+    for md in md_files:
+        errors.extend(check_file(md))
+    if errors:
+        print("\n".join(errors), file=sys.stderr)
+        print(f"check_links: {len(errors)} dangling link(s)", file=sys.stderr)
+        return 1
+    print(f"check_links: {len(md_files)} files OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
