@@ -13,7 +13,7 @@
 
 use std::time::Duration;
 
-use coral::control::{fleet_sweep, FleetRunner};
+use coral::control::{fleet_sweep, fleet_sweep_cached, CacheStore, FleetRunner};
 use coral::coordinator::{BatcherConfig, Router, Server, ServerConfig};
 use coral::experiments::scenarios::DUAL_SCENARIOS;
 use coral::models::{artifacts_dir, Manifest, ModelKind};
@@ -48,6 +48,40 @@ fn main() -> anyhow::Result<()> {
             &["device", "model", "target/budget", "feasible", "iters to hit", "search cost"],
             &rows
         )
+    );
+
+    // --- Measurement cache: repeat passes replay from the store --------
+    // The same sweep through `CachedEnv` over one shared store: the
+    // first pass pays for every unseen window (misses), the second pass
+    // replays the whole sweep as hits at zero measurement cost — same
+    // outcomes, no boards touched. EXPERIMENTS.md §Measurement cache.
+    const CACHED_SEEDS: u64 = 8;
+    let cached_scenarios = &DUAL_SCENARIOS[..3];
+    let store = CacheStore::new();
+    let p1 = fleet_sweep_cached(cached_scenarios, CACHED_SEEDS, &runner, &store);
+    let after_p1 = store.stats();
+    let p2 = fleet_sweep_cached(cached_scenarios, CACHED_SEEDS, &runner, &store);
+    let after_p2 = store.stats();
+    println!(
+        "\ncached repeat sweep ({} scenarios × {CACHED_SEEDS} seeds, shared store):",
+        cached_scenarios.len()
+    );
+    println!(
+        "  pass 1: {} real windows (misses), mean cost {:.0}s/scenario",
+        after_p1.misses,
+        p1.iter().map(|s| s.mean_cost_s).sum::<f64>() / p1.len() as f64
+    );
+    println!(
+        "  pass 2: {} new windows, {} hits, mean cost {:.0}s/scenario — \
+         {:.0} simulated seconds of measurement saved",
+        after_p2.misses - after_p1.misses,
+        after_p2.hits - after_p1.hits,
+        p2.iter().map(|s| s.mean_cost_s).sum::<f64>() / p2.len() as f64,
+        after_p2.cost_saved_s
+    );
+    assert!(
+        p2.iter().all(|s| s.mean_cost_s == 0.0),
+        "every pass-2 window must hit the store"
     );
 
     // --- Router demo: one box serving all three models -----------------

@@ -1,0 +1,185 @@
+//! Measurement-cache bench: a repeat-heavy sweep through [`CachedEnv`]
+//! vs the same sweep uncached (EXPERIMENTS.md §Measurement cache).
+//!
+//! Part 1 re-runs the same (device, model, seed) CORAL search several
+//! times on **noise-free** boards — the repeat-heavy regime a fleet
+//! replaying its standard scenario set lives in. Noise-free surfaces
+//! make the cached and uncached trajectories bit-comparable, so the
+//! bench can assert the cache's contract, not just time it: identical
+//! final outcomes, strictly fewer real measurement windows, strictly
+//! lower total `cost_s`.
+//!
+//! Part 2 repeats the noisy [`fleet_sweep_cached`] over one shared
+//! store: pass 2 replays every window as a hit at zero measurement
+//! cost with per-scenario stats identical to pass 1.
+//!
+//! `CORAL_BENCH_PASSES` / `CORAL_BENCH_SEEDS` shrink the sweep for
+//! CI's reduced-mode smoke step.
+
+use coral::control::{
+    fleet_sweep_cached, CacheStore, CachedEnv, ControlLoop, Environment, FleetRunner,
+    LoopOutcome, SimEnv, DEFAULT_BUDGET,
+};
+use coral::device::Device;
+use coral::experiments::scenarios::{DualScenario, DUAL_SCENARIOS};
+use coral::optimizer::{Constraints, CoralOptimizer};
+use coral::util::table;
+
+const DEVICE_SEED: u64 = 0xCAC4E;
+const OPT_SEED: u64 = 11;
+
+fn env_or(name: &str, default: usize) -> usize {
+    std::env::var(name)
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .filter(|&n| n >= 1)
+        .unwrap_or(default)
+}
+
+/// One CORAL search over `env` — the paper's iteration budget, fixed
+/// optimizer seed, so every pass proposes the same trajectory.
+fn run_once<E: Environment>(env: E, s: &DualScenario) -> LoopOutcome {
+    let cons = Constraints::dual(s.target_fps, s.budget_mw);
+    let opt = CoralOptimizer::new(env.space().clone(), cons, OPT_SEED);
+    ControlLoop::with_budget(env, opt, cons, DEFAULT_BUDGET).run()
+}
+
+/// The scenario's board with measurement noise off: reads depend only
+/// on the applied configuration, so cached and uncached runs are
+/// bit-comparable.
+fn quiet_board(s: &DualScenario) -> Device {
+    Device::new(s.device, s.model, DEVICE_SEED).with_noise_scale(0.0)
+}
+
+/// Outcome digest for byte-identity assertions across passes/modes.
+fn digest(out: &LoopOutcome) -> String {
+    format!(
+        "{:?}|{:?}|{:?}",
+        out.best, out.first_feasible_iter, out.feasible_by_iter
+    )
+}
+
+fn main() {
+    let passes = env_or("CORAL_BENCH_PASSES", 5);
+    let seeds = env_or("CORAL_BENCH_SEEDS", 4) as u64;
+    println!(
+        "bench_cache — repeat-heavy sweeps, cached vs uncached ({passes} passes, \
+         {} scenarios)\n",
+        DUAL_SCENARIOS.len()
+    );
+
+    // --- Part 1: same search repeated on noise-free boards -------------
+    let mut rows = Vec::new();
+    let mut total_uncached_windows = 0u64;
+    let mut total_real_windows = 0u64;
+    for s in &DUAL_SCENARIOS {
+        // Uncached reference: every pass re-measures every window on a
+        // fresh board.
+        let mut uncached_cost = 0.0;
+        let mut uncached_windows = 0u64;
+        let mut reference = None;
+        for _ in 0..passes {
+            let board = quiet_board(s);
+            let out = run_once(SimEnv::new(board), s);
+            uncached_cost += out.cost_s;
+            uncached_windows += out.iters as u64;
+            let d = digest(&out);
+            match &reference {
+                None => reference = Some(d),
+                Some(r) => assert_eq!(
+                    r, &d,
+                    "{}/{}: noise-free passes must repeat exactly",
+                    s.device, s.model
+                ),
+            }
+        }
+        let reference = reference.expect("at least one pass");
+
+        // Cached: fresh board each pass, one shared store. Pass 1 pays
+        // for unseen configurations; later passes replay from the store.
+        let store = CacheStore::new();
+        let mut cached_cost = 0.0;
+        for pass in 0..passes {
+            let board = quiet_board(s);
+            let env = CachedEnv::with_store(SimEnv::new(board), store.clone());
+            let out = run_once(env, s);
+            cached_cost += out.cost_s;
+            assert_eq!(
+                digest(&out),
+                reference,
+                "{}/{}: cached pass {pass} diverged from the uncached run",
+                s.device,
+                s.model
+            );
+            if pass > 0 {
+                assert_eq!(out.cost_s, 0.0, "repeat passes replay entirely from the store");
+            }
+        }
+        let st = store.stats();
+        let real = st.misses + st.refreshes;
+        assert!(
+            real < uncached_windows,
+            "{}/{}: cached sweep must run strictly fewer real windows \
+             ({real} vs {uncached_windows})",
+            s.device,
+            s.model
+        );
+        assert!(
+            cached_cost < uncached_cost,
+            "{}/{}: cached cost {cached_cost:.0}s not below uncached {uncached_cost:.0}s",
+            s.device,
+            s.model
+        );
+        total_uncached_windows += uncached_windows;
+        total_real_windows += real;
+        rows.push(vec![
+            s.device.name().to_string(),
+            s.model.name().to_string(),
+            uncached_windows.to_string(),
+            real.to_string(),
+            st.hits.to_string(),
+            format!("{:.0}%", st.hit_rate() * 100.0),
+            st.windows_saved().to_string(),
+            format!("{uncached_cost:.0}s"),
+            format!("{cached_cost:.0}s"),
+            format!("{:.0}s", st.cost_saved_s),
+        ]);
+    }
+    print!(
+        "{}",
+        table::render(
+            &[
+                "device", "model", "uncached w", "real w", "hits", "hit rate", "saved w",
+                "uncached cost", "cached cost", "saved",
+            ],
+            &rows
+        )
+    );
+    println!(
+        "\nidentical outcomes on every pass; {total_real_windows} real windows instead of \
+         {total_uncached_windows} ({:.1}x fewer)",
+        total_uncached_windows as f64 / total_real_windows as f64
+    );
+
+    // --- Part 2: noisy fleet sweep replayed from a shared store --------
+    let runner = FleetRunner::auto();
+    let store = CacheStore::new();
+    let scenarios = &DUAL_SCENARIOS[..2];
+    let p1 = fleet_sweep_cached(scenarios, seeds, &runner, &store);
+    let misses_p1 = store.stats().misses;
+    let p2 = fleet_sweep_cached(scenarios, seeds, &runner, &store);
+    assert_eq!(store.stats().misses, misses_p1, "pass 2 runs zero real windows");
+    for (a, b) in p1.iter().zip(&p2) {
+        assert_eq!(a.feasible, b.feasible, "replayed outcomes identical");
+        assert_eq!(b.mean_cost_s, 0.0, "pass-2 windows all hit the store");
+    }
+    let st = store.stats();
+    println!(
+        "\nfleet_sweep_cached ({} scenarios x {seeds} seeds, 2 passes): {} real windows, \
+         {} hits, pass-2 cost 0s — {:.0} simulated seconds of measurement saved",
+        scenarios.len(),
+        st.misses,
+        st.hits,
+        st.cost_saved_s
+    );
+}

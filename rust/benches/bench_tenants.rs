@@ -15,8 +15,18 @@ use coral::control::{BudgetPolicy, TenantArbiter};
 use coral::experiments::scenarios::{TenantScenario, MULTI_TENANT_SCENARIOS};
 use coral::util::table;
 
-const ROUNDS: usize = 3;
+const DEFAULT_ROUNDS: usize = 3;
 const SEED: u64 = 0x7E4A;
+
+/// Rounds per policy; `CORAL_BENCH_ROUNDS` overrides (CI's reduced-mode
+/// smoke step runs 1).
+fn rounds() -> usize {
+    std::env::var("CORAL_BENCH_ROUNDS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .filter(|&n| n >= 1)
+        .unwrap_or(DEFAULT_ROUNDS)
+}
 
 struct Outcome {
     label: &'static str,
@@ -31,7 +41,7 @@ fn drive(
     mut arb: TenantArbiter,
     arbitrated: bool,
 ) -> Outcome {
-    let reports = arb.run(ROUNDS).to_vec();
+    let reports = arb.run(rounds()).to_vec();
     if arbitrated {
         for r in &reports {
             let sum: f64 = r.tenants.iter().map(|t| t.sub_budget_mw).sum();
@@ -59,7 +69,8 @@ fn drive(
 
 fn main() {
     println!(
-        "bench_tenants — arbitrated vs independent controllers, {ROUNDS} rounds per policy\n"
+        "bench_tenants — arbitrated vs independent controllers, {} rounds per policy\n",
+        rounds()
     );
     let mut rows = Vec::new();
     for s in &MULTI_TENANT_SCENARIOS {

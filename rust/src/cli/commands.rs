@@ -23,11 +23,11 @@ USAGE:
   coral experiment <fig1|table4|single|dual|ablation|convergence|robustness|all> [--out DIR] [--seeds N]
   coral optimize  --device <nx|orin> --model <yolo|frcnn|retinanet>
                   [--target FPS] [--budget MW] [--method NAME] [--iters N] [--seed N]
-                  [--trace FILE.csv]
+                  [--trace FILE.csv] [--cached]
   coral sweep     --device <nx|orin> --model <yolo|frcnn|retinanet> [--out DIR]
   coral serve     [--model M] [--requests N] [--concurrency C] [--batch B] [--inflight K]
   coral tenants   [--scenario nx-pair|nx-triple|orin-triple] [--policy static|demand|waterfill|independent]
-                  [--rounds N] [--seed N] [--sequential]
+                  [--rounds N] [--seed N] [--sequential] [--cached]
   coral hetero    [--scenario hetero-<model>-<pair|triple>] [--iters N] [--seed N] [--sequential]
   coral report    <specs|models|scenarios>
   coral artifacts-check [--dir DIR]
@@ -105,10 +105,17 @@ fn cmd_optimize(args: &Args) -> Result<()> {
     let trace_path = args.opt("trace").map(std::path::PathBuf::from);
     if method == "coral" {
         // Verbose per-iteration trace with the dCor weights, driven by
-        // the canonical control loop.
+        // the canonical control loop. `--cached` interposes the
+        // measurement cache, so re-proposed configurations replay from
+        // the store instead of re-running windows.
         let dev = Device::new(device, model, seed);
         let opt = CoralOptimizer::new(dev.space().clone(), cons, seed);
-        let mut cl = ControlLoop::with_budget(SimEnv::new(dev), opt, cons, iters);
+        let env: Box<dyn Environment + Send> = if args.has_flag("cached") {
+            Box::new(crate::control::CachedEnv::new(SimEnv::new(dev)))
+        } else {
+            Box::new(SimEnv::new(dev))
+        };
+        let mut cl = ControlLoop::with_budget(env, opt, cons, iters);
         println!(
             "CORAL on {device}/{model} — target {:?} fps, budget {:?} mW",
             cons.throughput_target_fps, cons.power_budget_mw
@@ -144,6 +151,18 @@ fn cmd_optimize(args: &Args) -> Result<()> {
             "search cost: {:.0} simulated seconds ({} measurement windows)",
             out.cost_s, out.iters
         );
+        if let Some(st) = out.cache {
+            println!(
+                "cache: {} hits / {} misses ({:.0}% hit rate), {} windows saved, \
+                 {:.0} s of measurement avoided (epoch {})",
+                st.hits,
+                st.misses,
+                st.hit_rate() * 100.0,
+                st.windows_saved(),
+                st.cost_saved_s,
+                st.epoch
+            );
+        }
         if let Some(path) = trace_path {
             out.trace.save(&path)?;
             println!("trace written to {}", path.display());
@@ -242,12 +261,19 @@ fn cmd_tenants(args: &Args) -> Result<()> {
     let rounds = args.opt_u64_or("rounds", 3).map_err(anyhow::Error::msg)? as usize;
     let seed = args.opt_u64_or("seed", 42).map_err(anyhow::Error::msg)?;
     let policy_name = args.opt_or("policy", "waterfill");
-    let mut arb = match policy_name.as_str() {
-        "static" => s.arbiter(BudgetPolicy::Static(s.static_shares()), seed),
-        "demand" => s.arbiter(BudgetPolicy::DemandWeighted, seed),
-        "waterfill" => s.arbiter(BudgetPolicy::WaterFill, seed),
-        "independent" => s.independent(seed),
+    let cached = args.has_flag("cached");
+    let policy = match policy_name.as_str() {
+        "static" => Some(BudgetPolicy::Static(s.static_shares())),
+        "demand" => Some(BudgetPolicy::DemandWeighted),
+        "waterfill" => Some(BudgetPolicy::WaterFill),
+        "independent" => None,
         other => bail!("unknown policy '{other}' (static|demand|waterfill|independent)"),
+    };
+    let mut arb = match (policy, cached) {
+        (Some(p), true) => s.arbiter_cached(p, seed),
+        (Some(p), false) => s.arbiter(p, seed),
+        (None, false) => s.independent(seed),
+        (None, true) => bail!("--cached requires an arbitrated policy (static|demand|waterfill)"),
     };
     if args.has_flag("sequential") {
         arb = arb.sequential();
@@ -303,6 +329,33 @@ fn cmd_tenants(args: &Args) -> Result<()> {
             &rows
         )
     );
+    if cached {
+        // Per-tenant measurement-cache accounting over the whole run
+        // (environment-lifetime counters). `epoch` counts the tenant's
+        // own drift invalidations — neighbours never bump it.
+        let mut crows = Vec::new();
+        for (spec, st) in arb.specs().iter().zip(arb.tenant_cache_stats()) {
+            let st = st.expect("cached arbiter wraps every tenant");
+            crows.push(vec![
+                spec.name.to_string(),
+                st.hits.to_string(),
+                st.misses.to_string(),
+                st.refreshes.to_string(),
+                format!("{:.0}%", st.hit_rate() * 100.0),
+                st.windows_saved().to_string(),
+                format!("{:.0}", st.cost_saved_s),
+                st.epoch.to_string(),
+            ]);
+        }
+        println!("\nmeasurement cache (per tenant, whole run):");
+        print!(
+            "{}",
+            table::render(
+                &["tenant", "hits", "misses", "refresh", "hit rate", "saved w", "saved s", "epoch"],
+                &crows
+            )
+        );
+    }
     let max_over = arb
         .history()
         .iter()
@@ -606,6 +659,24 @@ mod tests {
     fn tenants_validates_scenario_and_policy() {
         assert!(dispatch(&args("tenants --scenario mars-rover")).is_err());
         assert!(dispatch(&args("tenants --scenario nx-pair --policy greedy")).is_err());
+    }
+
+    #[test]
+    fn tenants_cached_smoke_and_validation() {
+        let a = args(
+            "tenants --scenario nx-pair --policy waterfill --rounds 2 --seed 3 --sequential --cached",
+        );
+        assert!(dispatch(&a).is_ok());
+        // The unarbitrated baseline carries no cache layer.
+        assert!(dispatch(&args("tenants --scenario nx-pair --policy independent --cached")).is_err());
+    }
+
+    #[test]
+    fn optimize_cached_smoke() {
+        let a = args(
+            "optimize --device nx --model yolo --target 30 --budget 6500 --iters 3 --seed 1 --cached",
+        );
+        assert!(dispatch(&a).is_ok());
     }
 
     #[test]

@@ -1,0 +1,536 @@
+//! Content-addressed measurement cache as an [`Environment`] layer.
+//!
+//! CORAL's whole cost model is measurement windows, yet every layer of
+//! the repo used to re-pay full price for configurations it had already
+//! measured: tenant rounds re-measure held allocations, drift restarts
+//! re-probe the bootstrap presets, `fleet_sweep` re-runs overlapping
+//! trajectories. [`CachedEnv`] is the decorator that makes repeated
+//! proposals free online — the systems-level expression of the paper's
+//! "near-optimal *without exhaustive profiling*" claim (what separates
+//! CORAL from offline-profiling baselines like PolyThrottle).
+//!
+//! **Keying.** An entry is addressed by
+//! ([`Environment::fingerprint`], epoch, applied [`HwConfig`]): the
+//! fingerprint is a stable hash of the measurement surface's identity —
+//! device/space grids (normalized [`crate::device::NormSpace`] grids
+//! included), workload descriptor, window parameters, noise-seed
+//! lineage — and the configuration is snapped onto the space's grid
+//! first, so every proposal that would *apply* identically shares one
+//! entry. The value is the full [`Measured`] window plus the
+//! measurement cost it took: a hit returns byte-identical results and
+//! charges **zero** [`Environment::cost_s`], so same-seed determinism
+//! is preserved exactly and search-cost accounting stays honest.
+//!
+//! **Invalidation is epoch-based.** Every
+//! [`super::DriftDetector`] firing — hold-phase or search-phase — calls
+//! [`Environment::bump_epoch`], which advances this wrapper's epoch and
+//! prunes its stale entries: nothing cached before a detected surface
+//! shift can ever be returned after it. Epochs are **per wrapper**, so
+//! under [`super::TenantArbiter`] a drift-restarted tenant invalidates
+//! only its own entries and never its neighbours'.
+//!
+//! **What stays uncached.** Hold phases watch the surface for drift, so
+//! [`super::ControlLoop::hold`] measures through
+//! [`Environment::measure_fresh`]: the wrapper bypasses lookup, runs a
+//! real window, and *refreshes* the stored entry — the cache can never
+//! blind the very detector that invalidates it. Stateful aggregate
+//! environments whose `measure` is not a pure function of the applied
+//! configuration (the [`super::TenantArbiter`], whose measure advances
+//! an arbitration round) must not be wrapped; wrap their *member*
+//! environments instead.
+//!
+//! See EXPERIMENTS.md §Measurement cache for key derivation,
+//! invalidation rules, and how to read the hit/cost-saved statistics,
+//! and `bench_cache` for the cached-vs-uncached comparison.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use crate::device::{ConfigSpace, Dim, HwConfig, Measured};
+
+use super::env::Environment;
+
+/// Hit/miss/cost accounting of a cache layer, as reported through
+/// [`Environment::cache_stats`] and logged by
+/// [`super::LoopEvent::Cache`].
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct CacheStats {
+    /// Lookups answered from the store (each one a measurement window
+    /// never run).
+    pub hits: u64,
+    /// Lookups that fell through to a real measurement.
+    pub misses: u64,
+    /// Fresh measurements that overwrote an entry
+    /// ([`Environment::measure_fresh`] — hold-phase windows).
+    pub refreshes: u64,
+    /// Measurement cost the hits avoided, in [`Environment::cost_s`]
+    /// units (the sum of each hit entry's recorded miss cost).
+    pub cost_saved_s: f64,
+    /// Current invalidation epoch of the reporting wrapper (0 until the
+    /// first drift-induced bump).
+    pub epoch: u64,
+}
+
+impl CacheStats {
+    /// Measurement windows the cache saved — one per hit.
+    pub fn windows_saved(&self) -> u64 {
+        self.hits
+    }
+
+    /// Lookups through the cached `measure` path (hits + misses;
+    /// refreshes bypass lookup by design).
+    pub fn lookups(&self) -> u64 {
+        self.hits + self.misses
+    }
+
+    /// hits / lookups (0 when nothing was looked up).
+    pub fn hit_rate(&self) -> f64 {
+        let lookups = self.lookups();
+        if lookups == 0 {
+            0.0
+        } else {
+            self.hits as f64 / lookups as f64
+        }
+    }
+
+    /// Combine two stats (fleet members each wrapping their own cache);
+    /// counters add, the epoch reports the most-invalidated member.
+    pub fn merged(&self, other: &CacheStats) -> CacheStats {
+        CacheStats {
+            hits: self.hits + other.hits,
+            misses: self.misses + other.misses,
+            refreshes: self.refreshes + other.refreshes,
+            cost_saved_s: self.cost_saved_s + other.cost_saved_s,
+            epoch: self.epoch.max(other.epoch),
+        }
+    }
+}
+
+/// Address of one cached window: surface fingerprint × invalidation
+/// epoch × the configuration as it would be **applied** (snapped onto
+/// the space grid, so off-grid aliases of one applied config share an
+/// entry).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+struct CacheKey {
+    fp: u64,
+    epoch: u64,
+    cfg: HwConfig,
+}
+
+/// One stored window: the full measurement plus what it cost, so a hit
+/// can report exactly the cost it avoided.
+#[derive(Debug, Clone, Copy)]
+struct CacheEntry {
+    measured: Measured,
+    cost_s: f64,
+}
+
+#[derive(Default)]
+struct StoreInner {
+    map: HashMap<CacheKey, CacheEntry>,
+    hits: u64,
+    misses: u64,
+    refreshes: u64,
+    cost_saved_s: f64,
+}
+
+/// Shared, thread-safe backing store of one or more [`CachedEnv`]s.
+///
+/// Cloning shares the underlying map and counters — pass clones of one
+/// store to many wrappers (a cached `fleet_sweep`, fleet members) and
+/// repeated work across them is paid once. Entries are fully keyed by
+/// (fingerprint, epoch, config), so wrappers over *different* surfaces
+/// never read each other's windows — provided their environments'
+/// [`Environment::fingerprint`]s faithfully identify those surfaces
+/// (the default fingerprint hashes the configuration space alone; an
+/// environment whose surface depends on more must override it before
+/// its wrappers may share a store).
+#[derive(Clone, Default)]
+pub struct CacheStore(Arc<Mutex<StoreInner>>);
+
+impl CacheStore {
+    pub fn new() -> CacheStore {
+        CacheStore::default()
+    }
+
+    /// Entries currently stored (all fingerprints, live epochs only —
+    /// bumps prune).
+    pub fn len(&self) -> usize {
+        self.0.lock().expect("cache store poisoned").map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Store-wide counters (epoch 0 — the store spans wrappers, each
+    /// with its own epoch; [`CachedEnv::stats`] fills in the wrapper's).
+    pub fn stats(&self) -> CacheStats {
+        let inner = self.0.lock().expect("cache store poisoned");
+        CacheStats {
+            hits: inner.hits,
+            misses: inner.misses,
+            refreshes: inner.refreshes,
+            cost_saved_s: inner.cost_saved_s,
+            epoch: 0,
+        }
+    }
+
+    /// Hit path: return the stored window and account the avoided cost.
+    fn lookup(&self, key: &CacheKey) -> Option<Measured> {
+        let mut inner = self.0.lock().expect("cache store poisoned");
+        match inner.map.get(key).copied() {
+            Some(e) => {
+                inner.hits += 1;
+                inner.cost_saved_s += e.cost_s;
+                Some(e.measured)
+            }
+            None => None,
+        }
+    }
+
+    /// Miss path: store the freshly measured window.
+    fn insert(&self, key: CacheKey, measured: Measured, cost_s: f64) {
+        let mut inner = self.0.lock().expect("cache store poisoned");
+        inner.misses += 1;
+        inner.map.insert(key, CacheEntry { measured, cost_s });
+    }
+
+    /// Refresh path: overwrite (or create) the entry with a window that
+    /// was deliberately measured fresh.
+    fn refresh(&self, key: CacheKey, measured: Measured, cost_s: f64) {
+        let mut inner = self.0.lock().expect("cache store poisoned");
+        inner.refreshes += 1;
+        inner.map.insert(key, CacheEntry { measured, cost_s });
+    }
+
+    /// Drop every entry of `fp` older than `epoch`. Other fingerprints
+    /// — other tenants, other boards sharing this store — are untouched.
+    fn prune(&self, fp: u64, epoch: u64) {
+        let mut inner = self.0.lock().expect("cache store poisoned");
+        inner.map.retain(|k, _| k.fp != fp || k.epoch >= epoch);
+    }
+}
+
+/// 64-bit FNV-1a over little-endian words — a *stable* hash (the std
+/// `Hasher` is randomized per process, which would make fingerprints,
+/// and therefore cross-run cache behavior, nondeterministic).
+pub fn stable_hash(words: &[u64]) -> u64 {
+    const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+    const PRIME: u64 = 0x0000_0100_0000_01b3;
+    let mut h = OFFSET;
+    for w in words {
+        for b in w.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(PRIME);
+        }
+    }
+    h
+}
+
+/// Stable fingerprint of a configuration space: device tag, normalized
+/// flag, and every grid value of every dimension — so two spaces that
+/// could decode one proposal differently (different native grids,
+/// different [`crate::device::NormSpace`] unions) never share cache
+/// entries. This is the *space identity* part of an environment
+/// fingerprint; [`Environment::fingerprint`] implementations fold in
+/// their workload/seed/window identity on top.
+pub fn space_fingerprint(space: &ConfigSpace) -> u64 {
+    let mut words = vec![space.device().id(), space.is_normalized() as u64];
+    for &d in &Dim::ALL {
+        let vals = space.values(d);
+        words.push(vals.len() as u64);
+        words.extend(vals.iter().map(|&v| v as u64));
+    }
+    stable_hash(&words)
+}
+
+/// The content-addressed, epoch-invalidated measurement cache: wrap any
+/// [`Environment`] and repeated proposals are answered from the store,
+/// byte-identical and at zero cost. See the module docs for semantics.
+///
+/// ```text
+/// ControlLoop ── measure ──▶ CachedEnv ── miss ──▶ inner Environment
+///                               │ hit                    │
+///                               ◀── stored Measured ◀────┘
+/// ```
+pub struct CachedEnv<E: Environment> {
+    inner: E,
+    store: CacheStore,
+    fp: u64,
+    epoch: u64,
+}
+
+impl<E: Environment> CachedEnv<E> {
+    /// Wrap `inner` over a private store.
+    pub fn new(inner: E) -> CachedEnv<E> {
+        CachedEnv::with_store(inner, CacheStore::new())
+    }
+
+    /// Wrap `inner` over a shared store (cached sweeps, fleets). The
+    /// fingerprint is taken once, here: mutating the inner environment
+    /// afterwards in ways that change its surface (noise scale, space)
+    /// is the caller's responsibility to avoid — or to follow with
+    /// [`Environment::bump_epoch`].
+    pub fn with_store(inner: E, store: CacheStore) -> CachedEnv<E> {
+        let fp = inner.fingerprint();
+        CachedEnv { inner, store, fp, epoch: 0 }
+    }
+
+    /// Like [`CachedEnv::with_store`], additionally folding `salt` into
+    /// the fingerprint. Callers sharing one store across many jobs use
+    /// this when two jobs' environments could legitimately collide —
+    /// e.g. the same (device, seed, workload) driven under different
+    /// constraints, where concurrent first-misses would otherwise race
+    /// on stateful noise ([`super::fleet::fleet_sweep_cached`] salts per
+    /// scenario). Same salt across repeated passes keeps the replay
+    /// property.
+    pub fn with_store_salted(inner: E, store: CacheStore, salt: u64) -> CachedEnv<E> {
+        let fp = stable_hash(&[inner.fingerprint(), salt]);
+        CachedEnv { inner, store, fp, epoch: 0 }
+    }
+
+    pub fn inner(&self) -> &E {
+        &self.inner
+    }
+
+    pub fn into_inner(self) -> E {
+        self.inner
+    }
+
+    /// Current invalidation epoch (0 until the first drift bump).
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// The surface fingerprint entries are keyed under.
+    pub fn fp(&self) -> u64 {
+        self.fp
+    }
+
+    /// The backing store (shared or private).
+    pub fn store(&self) -> &CacheStore {
+        &self.store
+    }
+
+    /// This wrapper's view of the statistics: the (possibly shared)
+    /// store counters, stamped with this wrapper's epoch.
+    pub fn stats(&self) -> CacheStats {
+        CacheStats { epoch: self.epoch, ..self.store.stats() }
+    }
+
+    fn key_for(&self, cfg: HwConfig) -> CacheKey {
+        // Key on the configuration as the environment would apply it:
+        // off-grid proposals snap (exactly like `Device::apply`), so
+        // every alias of one applied config shares one entry.
+        let applied = self.inner.space().snap_config(cfg.as_vec());
+        CacheKey { fp: self.fp, epoch: self.epoch, cfg: applied }
+    }
+}
+
+impl<E: Environment> Environment for CachedEnv<E> {
+    fn measure(&mut self, cfg: HwConfig) -> Measured {
+        let key = self.key_for(cfg);
+        if let Some(m) = self.store.lookup(&key) {
+            return m; // inner cost_s untouched: the hit charges zero.
+        }
+        let cost_before = self.inner.cost_s();
+        let m = self.inner.measure(cfg);
+        self.store.insert(key, m, self.inner.cost_s() - cost_before);
+        m
+    }
+
+    /// Bypass lookup, run a real window, and overwrite the entry —
+    /// hold-phase drift detection must observe the live surface, never
+    /// the store.
+    fn measure_fresh(&mut self, cfg: HwConfig) -> Measured {
+        let key = self.key_for(cfg);
+        let cost_before = self.inner.cost_s();
+        let m = self.inner.measure_fresh(cfg);
+        self.store.refresh(key, m, self.inner.cost_s() - cost_before);
+        m
+    }
+
+    fn space(&self) -> &ConfigSpace {
+        self.inner.space()
+    }
+
+    /// The inner environment's cost: hits never advance it, so the
+    /// control loop's per-step cost deltas charge 0 for a hit with no
+    /// special-casing anywhere.
+    fn cost_s(&self) -> f64 {
+        self.inner.cost_s()
+    }
+
+    /// Transparent decorator: same surface identity as the inner
+    /// environment (wrapping twice keys identically).
+    fn fingerprint(&self) -> u64 {
+        self.fp
+    }
+
+    /// Drift-induced invalidation: advance the epoch and prune this
+    /// surface's stale entries — no pre-epoch window can ever be
+    /// returned again. Forwards to the inner environment (nested
+    /// caches, fleet members).
+    fn bump_epoch(&mut self) {
+        self.epoch += 1;
+        self.store.prune(self.fp, self.epoch);
+        self.inner.bump_epoch();
+    }
+
+    fn cache_stats(&self) -> Option<CacheStats> {
+        Some(self.stats())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::control::testkit::StepEnv;
+    use crate::control::SimEnv;
+    use crate::device::{Device, DeviceKind, NormSpace};
+    use crate::models::ModelKind;
+
+    fn nx_env() -> SimEnv {
+        SimEnv::new(Device::new(DeviceKind::XavierNx, ModelKind::Yolo, 7))
+    }
+
+    #[test]
+    fn stable_hash_is_stable_and_word_sensitive() {
+        let a = stable_hash(&[1, 2, 3]);
+        assert_eq!(a, stable_hash(&[1, 2, 3]), "same words, same hash");
+        assert_ne!(a, stable_hash(&[1, 2, 4]));
+        assert_ne!(a, stable_hash(&[1, 2]));
+        assert_ne!(stable_hash(&[0]), stable_hash(&[]), "zero word is not absence");
+    }
+
+    #[test]
+    fn space_fingerprints_distinguish_devices_and_encodings() {
+        let nx = DeviceKind::XavierNx.space();
+        let orin = DeviceKind::OrinNano.space();
+        let norm = NormSpace::new(vec![nx.clone(), orin.clone()]).grid().clone();
+        let fps = [space_fingerprint(&nx), space_fingerprint(&orin), space_fingerprint(&norm)];
+        assert_eq!(fps[0], space_fingerprint(&DeviceKind::XavierNx.space()));
+        assert_ne!(fps[0], fps[1]);
+        assert_ne!(fps[0], fps[2]);
+        assert_ne!(fps[1], fps[2]);
+    }
+
+    #[test]
+    fn environment_fingerprints_distinguish_surfaces_sharing_a_space() {
+        // Same NX space, different scripts/seeds — the fingerprint must
+        // split them or a shared store would serve one surface's
+        // windows for the other.
+        let a = StepEnv::constant();
+        let b = StepEnv::constant().with_levels(40.0, 40.0);
+        let c = StepEnv::new(3);
+        assert_eq!(a.fingerprint(), StepEnv::constant().fingerprint());
+        assert_ne!(a.fingerprint(), b.fingerprint());
+        assert_ne!(a.fingerprint(), c.fingerprint());
+        let d1 = SimEnv::new(Device::new(DeviceKind::XavierNx, ModelKind::Yolo, 1));
+        let d2 = SimEnv::new(Device::new(DeviceKind::XavierNx, ModelKind::Yolo, 2));
+        let d3 = SimEnv::new(Device::new(DeviceKind::XavierNx, ModelKind::Frcnn, 1));
+        assert_ne!(d1.fingerprint(), d2.fingerprint(), "noise seed lineage");
+        assert_ne!(d1.fingerprint(), d3.fingerprint(), "workload descriptor");
+        assert_ne!(a.fingerprint(), d1.fingerprint());
+    }
+
+    #[test]
+    fn hit_returns_byte_identical_window_at_zero_cost() {
+        let mut cached = CachedEnv::new(nx_env());
+        let cfg = cached.space().midpoint();
+        let first = cached.measure(cfg);
+        let cost_after_miss = cached.cost_s();
+        let second = cached.measure(cfg);
+        assert_eq!(first, second, "hit must be byte-identical");
+        assert_eq!(cached.cost_s(), cost_after_miss, "hit charges zero cost");
+        assert_eq!(cached.inner().device().windows_run(), 1, "one real window");
+        let stats = cached.stats();
+        assert_eq!((stats.hits, stats.misses, stats.refreshes), (1, 1, 0));
+        assert_eq!(stats.windows_saved(), 1);
+        assert!((stats.hit_rate() - 0.5).abs() < 1e-12);
+        assert!(stats.cost_saved_s > 0.0);
+        assert!((stats.cost_saved_s - cost_after_miss).abs() < 1e-9);
+    }
+
+    #[test]
+    fn off_grid_aliases_share_the_applied_entry() {
+        let mut cached = CachedEnv::new(nx_env());
+        let on_grid = cached.space().midpoint();
+        let mut alias = on_grid;
+        alias.cpu_freq_mhz += 1; // snaps back onto the same grid point
+        let a = cached.measure(on_grid);
+        let b = cached.measure(alias);
+        assert_eq!(a, b);
+        assert_eq!(cached.stats().hits, 1, "alias hit the applied entry");
+    }
+
+    #[test]
+    fn measure_fresh_bypasses_and_refreshes() {
+        // A shifting surface: the cache would happily serve the stale
+        // 30-fps window forever; measure_fresh must see 15 fps and
+        // leave the refreshed value behind for subsequent hits.
+        let mut cached = CachedEnv::new(StepEnv::new(1));
+        let cfg = cached.space().midpoint();
+        assert_eq!(cached.measure(cfg).throughput_fps, 30.0);
+        let fresh = cached.measure_fresh(cfg);
+        assert_eq!(fresh.throughput_fps, 15.0, "fresh window sees the shift");
+        assert_eq!(cached.measure(cfg).throughput_fps, 15.0, "entry refreshed");
+        let stats = cached.stats();
+        assert_eq!((stats.hits, stats.misses, stats.refreshes), (1, 1, 1));
+    }
+
+    #[test]
+    fn bump_epoch_prunes_this_surface_only() {
+        let store = CacheStore::new();
+        let mut a = CachedEnv::with_store(StepEnv::constant(), store.clone());
+        let mut b =
+            CachedEnv::with_store(StepEnv::constant().with_levels(40.0, 40.0), store.clone());
+        let cfg = a.space().midpoint();
+        a.measure(cfg);
+        b.measure(cfg);
+        assert_eq!(store.len(), 2);
+        a.bump_epoch();
+        assert_eq!(a.epoch(), 1);
+        assert_eq!(b.epoch(), 0, "neighbour epoch untouched");
+        assert_eq!(store.len(), 1, "only a's entry pruned");
+        assert_eq!(b.measure(cfg).throughput_fps, 40.0);
+        assert_eq!(store.stats().hits, 1, "b still hits after a's bump");
+        // a re-measures under the new epoch: a miss, never the old entry.
+        a.measure(cfg);
+        assert_eq!(store.stats().misses, 3);
+    }
+
+    #[test]
+    fn boxed_cached_env_forwards_through_the_trait_object() {
+        let mut env: Box<dyn Environment + Send> = Box::new(CachedEnv::new(StepEnv::constant()));
+        let cfg = env.space().midpoint();
+        let a = env.measure(cfg);
+        let b = env.measure(cfg);
+        assert_eq!(a, b);
+        let stats = env.cache_stats().expect("cache layer visible through the box");
+        assert_eq!((stats.hits, stats.misses), (1, 1));
+        env.bump_epoch();
+        assert_eq!(env.cache_stats().expect("still cached").epoch, 1);
+        assert!(StepEnv::constant().cache_stats().is_none(), "uncached env reports none");
+    }
+
+    #[test]
+    fn shared_store_pays_repeated_work_once_across_wrappers() {
+        // Two same-surface wrappers over one store (a repeat-heavy
+        // sweep in miniature): the second pays nothing.
+        let store = CacheStore::new();
+        let mk = || SimEnv::new(Device::new(DeviceKind::OrinNano, ModelKind::Frcnn, 3));
+        let mut first = CachedEnv::with_store(mk(), store.clone());
+        let cfgs: Vec<HwConfig> = {
+            let mut rng = crate::util::Rng::new(11);
+            (0..6).map(|_| first.space().random(&mut rng)).collect()
+        };
+        let pass1: Vec<Measured> = cfgs.iter().map(|&c| first.measure(c)).collect();
+        let mut second = CachedEnv::with_store(mk(), store.clone());
+        let pass2: Vec<Measured> = cfgs.iter().map(|&c| second.measure(c)).collect();
+        assert_eq!(pass1, pass2, "second wrapper replays the first byte-for-byte");
+        assert_eq!(second.inner().device().windows_run(), 0, "no real window on pass 2");
+        assert!(store.stats().hits >= 6);
+    }
+}

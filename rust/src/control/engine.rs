@@ -21,6 +21,7 @@ use crate::device::{HwConfig, Measured};
 use crate::optimizer::{BestConfig, Constraints, Optimizer};
 use crate::workload::Trace;
 
+use super::cache::CacheStats;
 use super::env::Environment;
 
 /// The paper's online iteration budget (§IV-A).
@@ -136,6 +137,12 @@ pub enum LoopEvent {
     SearchDriftDetected { at_window: u64, reference_fps: f64, observed_fps: f64 },
     /// A hold phase ran its full length without drifting.
     HoldCompleted { at_window: u64, windows: u64 },
+    /// Cache accounting snapshot of a [`super::CachedEnv`]-wrapped
+    /// environment — logged at round/hold boundaries and after every
+    /// drift-induced epoch bump. Never emitted for uncached
+    /// environments ([`Environment::cache_stats`] is None), so their
+    /// event logs are unchanged by the cache layer's existence.
+    Cache { at_window: u64, stats: CacheStats },
 }
 
 /// One executed propose → measure → observe iteration.
@@ -187,6 +194,12 @@ pub struct LoopOutcome {
     /// iterations before a search-drift restart, so `trace.len()` can
     /// exceed `iters` when `search_restarts > 0`.
     pub trace: Trace,
+    /// Cache accounting when the environment carries a
+    /// [`super::CachedEnv`] layer (None for plain environments). Note
+    /// the counters are environment-lifetime — under a shared
+    /// [`super::CacheStore`] they span every wrapper on that store —
+    /// not per-round.
+    pub cache: Option<CacheStats>,
 }
 
 /// Result of a hold phase.
@@ -298,6 +311,8 @@ impl<E: Environment, O: Optimizer> ControlLoop<E, O> {
                 reference_fps: reference,
                 observed_fps: observed,
             });
+            // The entries cached off the old surface are stale with it.
+            self.env.bump_epoch();
             self.opt.reset_search();
             self.iter = 0;
             self.first_feasible = None;
@@ -307,6 +322,7 @@ impl<E: Environment, O: Optimizer> ControlLoop<E, O> {
             self.search_restarts += 1;
             self.events
                 .push(LoopEvent::SearchStarted { at_window: self.window });
+            self.log_cache_stats();
         } else if self.done() {
             // Emitted here — not from run() — so manually-stepped loops
             // log round completion too, exactly once per round.
@@ -314,6 +330,7 @@ impl<E: Environment, O: Optimizer> ControlLoop<E, O> {
                 at_window: self.window,
                 feasible: best.map(|b| b.feasible).unwrap_or(false),
             });
+            self.log_cache_stats();
         }
         Step {
             window: self.window,
@@ -386,6 +403,16 @@ impl<E: Environment, O: Optimizer> ControlLoop<E, O> {
             cost_s: self.search_cost_s,
             search_restarts: self.search_restarts,
             trace: self.trace.clone(),
+            cache: self.env.cache_stats(),
+        }
+    }
+
+    /// Log a [`LoopEvent::Cache`] snapshot — only when a cache layer is
+    /// actually present, so uncached loops' event logs are unchanged.
+    fn log_cache_stats(&mut self) {
+        if let Some(stats) = self.env.cache_stats() {
+            self.events
+                .push(LoopEvent::Cache { at_window: self.window, stats });
         }
     }
 
@@ -394,6 +421,13 @@ impl<E: Environment, O: Optimizer> ControlLoop<E, O> {
     /// configured, the hold ends early — with a [`LoopEvent::DriftDetected`]
     /// event — once the windowed throughput shifts off the level the
     /// configuration was chosen at; the caller then [`ControlLoop::restart`]s.
+    ///
+    /// Hold windows measure through [`Environment::measure_fresh`]: the
+    /// hold's entire purpose is watching the live surface for drift, so
+    /// a [`super::CachedEnv`] layer must never answer them from its
+    /// store (it refreshes the stored entry instead). A detected drift
+    /// additionally bumps the environment's cache epoch — everything
+    /// cached off the old surface is stale with it.
     pub fn hold(&mut self, windows: u64) -> HoldOutcome {
         let best = match self.opt.best() {
             Some(b) => b,
@@ -404,7 +438,7 @@ impl<E: Environment, O: Optimizer> ControlLoop<E, O> {
             .drift
             .map(|d| DriftDetector::new(d, best.throughput_fps));
         for w in 0..windows {
-            let m = self.env.measure(best.config);
+            let m = self.env.measure_fresh(best.config);
             self.window += 1;
             if let Some(det) = detector.as_mut() {
                 if let Some(observed) = det.push(m.throughput_fps) {
@@ -413,6 +447,8 @@ impl<E: Environment, O: Optimizer> ControlLoop<E, O> {
                         reference_fps: best.throughput_fps,
                         observed_fps: observed,
                     });
+                    self.env.bump_epoch();
+                    self.log_cache_stats();
                     return HoldOutcome {
                         windows: w + 1,
                         drift: Some((best.throughput_fps, observed)),
@@ -422,6 +458,7 @@ impl<E: Environment, O: Optimizer> ControlLoop<E, O> {
         }
         self.events
             .push(LoopEvent::HoldCompleted { at_window: self.window, windows });
+        self.log_cache_stats();
         HoldOutcome { windows, drift: None }
     }
 
@@ -752,6 +789,78 @@ mod tests {
             .events()
             .iter()
             .any(|e| matches!(e, LoopEvent::SearchDriftDetected { .. })));
+    }
+
+    #[test]
+    fn cached_loop_replays_a_restarted_round_from_the_store() {
+        let dev =
+            Device::new(DeviceKind::XavierNx, ModelKind::Yolo, 5).with_noise_scale(0.0);
+        let cons = Constraints::dual(30.0, 6500.0);
+        let opt = CoralOptimizer::new(dev.space().clone(), cons, 5);
+        let env = crate::control::CachedEnv::new(SimEnv::new(dev));
+        let mut cl = ControlLoop::with_budget(env, opt, cons, 10);
+        let out1 = cl.run();
+        assert!(out1.cache.is_some(), "cached env reports through the outcome");
+        assert!(out1.cost_s > 0.0);
+        assert!(cl.events().iter().any(|e| matches!(e, LoopEvent::Cache { .. })));
+        // A same-seed optimizer replays the identical proposal sequence
+        // (hits return byte-identical observations), so the whole second
+        // round is answered from the store at zero cost.
+        cl.restart(CoralOptimizer::new(cl.env().space().clone(), cons, 5));
+        let out2 = cl.run();
+        assert_eq!(out2.cost_s, 0.0, "replayed round fully answered from the store");
+        assert_eq!(out1.best.unwrap().config, out2.best.unwrap().config);
+        assert!(out2.cache.unwrap().hits >= 10);
+    }
+
+    #[test]
+    fn hold_drift_bumps_the_cache_epoch_and_measures_fresh() {
+        let env = crate::control::CachedEnv::new(StepEnv::new(3));
+        let cons = Constraints::none();
+        let opt = RandomOptimizer::new(DeviceKind::XavierNx.space(), cons, 1);
+        let cfg = ControlLoopConfig {
+            budget: 3,
+            drift: Some(DriftConfig { window: 4, rel_threshold: 0.2 }),
+            search_drift: None,
+        };
+        let mut cl = ControlLoop::new(env, opt, cons, cfg);
+        cl.run();
+        let hold = cl.hold(20);
+        assert!(hold.drift.is_some(), "the cache must never blind the detector");
+        assert_eq!(hold.windows, 4);
+        assert_eq!(cl.env().epoch(), 1, "detected drift bumped the epoch");
+        let last_cache = cl
+            .events()
+            .iter()
+            .rev()
+            .find_map(|e| match e {
+                LoopEvent::Cache { stats, .. } => Some(*stats),
+                _ => None,
+            })
+            .expect("drift logged a cache snapshot");
+        assert_eq!(last_cache.epoch, 1);
+        assert_eq!(last_cache.refreshes, 4, "every hold window measured fresh");
+    }
+
+    #[test]
+    fn search_drift_bumps_the_cache_epoch() {
+        // The cached twin of search_drift_restarts_with_prohibited_list_
+        // intact: every proposal there is distinct, so the cache changes
+        // nothing about the trajectory — but the in-place restart must
+        // bump the epoch.
+        let env = crate::control::CachedEnv::new(StepEnv::new(6));
+        let cons = Constraints::dual(40.0, 6000.0);
+        let opt = CoralOptimizer::new(DeviceKind::XavierNx.space(), cons, 3);
+        let cfg = ControlLoopConfig {
+            budget: 12,
+            drift: None,
+            search_drift: Some(DriftConfig { window: 4, rel_threshold: 0.2 }),
+        };
+        let mut cl = ControlLoop::new(env, opt, cons, cfg);
+        let out = cl.run();
+        assert_eq!(out.search_restarts, 1);
+        assert_eq!(cl.env().epoch(), 1, "mid-search drift bumped the epoch");
+        assert_eq!(out.cache.unwrap().epoch, 1);
     }
 
     #[test]

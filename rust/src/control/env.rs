@@ -19,6 +19,14 @@
 //!   configuration spaces (mixed NX/Orin) make the fleet heterogeneous:
 //!   it searches the normalized [`NormSpace`] grid and decodes each
 //!   proposal per member (EXPERIMENTS.md §Heterogeneous fleets).
+//!
+//! Any of these can additionally be wrapped in [`super::CachedEnv`] —
+//! the content-addressed measurement cache ([`super::cache`]) — which
+//! answers repeated proposals from its store at zero cost. The trait's
+//! cache hooks ([`Environment::measure_fresh`],
+//! [`Environment::fingerprint`], [`Environment::bump_epoch`],
+//! [`Environment::cache_stats`]) all have pass-through defaults, so
+//! plain environments are unaffected.
 
 use std::time::Instant;
 
@@ -47,6 +55,48 @@ pub trait Environment {
     /// search cost is accounted uniformly (no more ad-hoc
     /// `sim_clock_s()` reads at call sites).
     fn cost_s(&self) -> f64;
+
+    /// Measure without consulting any cache layer. For plain
+    /// environments this *is* [`Environment::measure`]; a
+    /// [`super::CachedEnv`] overrides it to bypass lookup, run a real
+    /// window and refresh the stored entry. [`super::ControlLoop::hold`]
+    /// measures through this, so hold-phase drift detection always
+    /// observes the live surface.
+    fn measure_fresh(&mut self, cfg: HwConfig) -> Measured {
+        self.measure(cfg)
+    }
+
+    /// Stable identity of this measurement surface, used to key cache
+    /// entries ([`super::cache`]). Two environments whose `measure`
+    /// could answer the same configuration differently must report
+    /// different fingerprints before their [`super::CachedEnv`]
+    /// wrappers may share a [`super::CacheStore`].
+    ///
+    /// The default hashes the configuration space alone (device tag,
+    /// normalized flag, every grid value) — correct only for
+    /// environments fully determined by their space. [`SimEnv`],
+    /// [`LiveEnv`], [`FleetEnv`] and the testkit's scripted
+    /// environments all override it to fold in workload, seed lineage,
+    /// window parameters and script state; custom environments sharing
+    /// a store should do the same.
+    fn fingerprint(&self) -> u64 {
+        super::cache::space_fingerprint(self.space())
+    }
+
+    /// Advance the cache-invalidation epoch after a detected surface
+    /// shift ([`super::DriftDetector`] firings). No-op for uncached
+    /// environments; [`super::CachedEnv`] prunes its stale entries,
+    /// aggregates ([`FleetEnv`], [`super::TenantArbiter`]) forward to
+    /// their members.
+    fn bump_epoch(&mut self) {}
+
+    /// Cache accounting of this environment, when a cache layer is
+    /// present anywhere in its composition (None otherwise — which is
+    /// how the control loop knows not to log cache events for plain
+    /// environments).
+    fn cache_stats(&self) -> Option<super::CacheStats> {
+        None
+    }
 }
 
 /// The simulated Jetson board as an [`Environment`].
@@ -86,6 +136,30 @@ impl Environment for SimEnv {
     fn cost_s(&self) -> f64 {
         self.dev.sim_clock_s()
     }
+
+    /// Space identity + workload + noise-seed lineage + window
+    /// parameters — everything that shapes what a window can return.
+    /// Thermal devices additionally fold in the flag so their
+    /// history-dependent surface never shares entries with a
+    /// thermal-free twin.
+    fn fingerprint(&self) -> u64 {
+        device_fingerprint(&self.dev)
+    }
+}
+
+/// Cache identity of one simulated device (shared by [`SimEnv`] and
+/// [`LiveEnv`], whose power/DVFS side is this device).
+fn device_fingerprint(dev: &Device) -> u64 {
+    super::cache::stable_hash(&[
+        super::cache::space_fingerprint(dev.space()),
+        dev.kind().id(),
+        dev.model().id(),
+        dev.seed(),
+        dev.noise_scale().to_bits(),
+        dev.has_thermal() as u64,
+        crate::device::sim::WARMUP_S.to_bits(),
+        SAMPLES_PER_WINDOW as u64,
+    ])
 }
 
 /// Boxed environments measure through the same trait like any concrete
@@ -102,6 +176,22 @@ impl<E: Environment + ?Sized> Environment for Box<E> {
 
     fn cost_s(&self) -> f64 {
         (**self).cost_s()
+    }
+
+    fn measure_fresh(&mut self, cfg: HwConfig) -> Measured {
+        (**self).measure_fresh(cfg)
+    }
+
+    fn fingerprint(&self) -> u64 {
+        (**self).fingerprint()
+    }
+
+    fn bump_epoch(&mut self) {
+        (**self).bump_epoch()
+    }
+
+    fn cache_stats(&self) -> Option<super::CacheStats> {
+        (**self).cache_stats()
     }
 }
 
@@ -351,6 +441,18 @@ impl Environment for LiveEnv {
             self.sim.sim_clock_s()
         }
     }
+
+    /// The sim device's identity plus the live serving knobs — and the
+    /// live/degraded flag itself, since the two modes answer windows
+    /// from different surfaces.
+    fn fingerprint(&self) -> u64 {
+        super::cache::stable_hash(&[
+            device_fingerprint(&self.sim),
+            self.is_live() as u64,
+            self.frames_per_sample,
+            self.inflight as u64,
+        ])
+    }
 }
 
 /// A fleet of boards measured together, as an [`Environment`].
@@ -516,8 +618,12 @@ impl FleetEnv {
     }
 }
 
-impl Environment for FleetEnv {
-    fn measure(&mut self, cfg: HwConfig) -> Measured {
+impl FleetEnv {
+    /// The one measurement path: `fresh` selects whether members
+    /// measure through their cache layers (`measure`) or past them
+    /// (`measure_fresh`) — both hold-phase and search-phase windows
+    /// share every other line of this.
+    fn measure_members(&mut self, cfg: HwConfig, fresh: bool) -> Measured {
         // Pure per-member decode (identity for homogeneous fleets)
         // happens before any thread is spawned, so the parallel schedule
         // cannot influence which native config a member measures.
@@ -531,7 +637,11 @@ impl Environment for FleetEnv {
                 .zip(natives)
                 .map(|(mut env, native)| {
                     std::thread::spawn(move || {
-                        let m = env.measure(native);
+                        let m = if fresh {
+                            env.measure_fresh(native)
+                        } else {
+                            env.measure(native)
+                        };
                         (env, m)
                     })
                 })
@@ -547,7 +657,13 @@ impl Environment for FleetEnv {
             self.members
                 .iter_mut()
                 .zip(&natives)
-                .map(|(env, native)| env.measure(*native))
+                .map(|(env, native)| {
+                    if fresh {
+                        env.measure_fresh(*native)
+                    } else {
+                        env.measure(*native)
+                    }
+                })
                 .collect()
         };
         let mut m = FleetEnv::combine(&results);
@@ -559,6 +675,16 @@ impl Environment for FleetEnv {
         }
         m
     }
+}
+
+impl Environment for FleetEnv {
+    fn measure(&mut self, cfg: HwConfig) -> Measured {
+        self.measure_members(cfg, false)
+    }
+
+    fn measure_fresh(&mut self, cfg: HwConfig) -> Measured {
+        self.measure_members(cfg, true)
+    }
 
     fn space(&self) -> &ConfigSpace {
         &self.space
@@ -568,6 +694,32 @@ impl Environment for FleetEnv {
     /// slowest member, not the sum.
     fn cost_s(&self) -> f64 {
         self.members.iter().map(|m| m.cost_s()).fold(0.0, f64::max)
+    }
+
+    /// The ordered member fingerprints plus the encoding flag: two
+    /// fleets share entries only when every member (device, seed,
+    /// workload) and the proposal encoding match.
+    fn fingerprint(&self) -> u64 {
+        let mut words = vec![self.members.len() as u64, self.norm.is_some() as u64];
+        words.extend(self.members.iter().map(|m| m.fingerprint()));
+        super::cache::stable_hash(&words)
+    }
+
+    /// Forwarded to every member: fleet-level drift invalidates each
+    /// member's cache layer (if any).
+    fn bump_epoch(&mut self) {
+        for m in &mut self.members {
+            m.bump_epoch();
+        }
+    }
+
+    /// Merged member stats — Some as soon as any member carries a cache
+    /// layer.
+    fn cache_stats(&self) -> Option<super::CacheStats> {
+        self.members
+            .iter()
+            .filter_map(|m| m.cache_stats())
+            .reduce(|a, b| a.merged(&b))
     }
 }
 
@@ -697,6 +849,39 @@ mod tests {
         assert!(m.throughput_fps > 0.0);
         assert!(m.power_mw > 0.0);
         assert!(fleet.cost_s() > 0.0);
+    }
+
+    #[test]
+    fn fleet_of_cached_members_hits_and_invalidates_through_the_fleet() {
+        let mk = || {
+            FleetEnv::new(
+                (0..3u64)
+                    .map(|i| {
+                        let dev = Device::new(DeviceKind::OrinNano, ModelKind::Yolo, 40 + i);
+                        Box::new(super::super::CachedEnv::new(SimEnv::new(dev)))
+                            as Box<dyn Environment + Send>
+                    })
+                    .collect(),
+            )
+        };
+        let mut fleet = mk();
+        assert_eq!(fleet.fingerprint(), mk().fingerprint(), "fleet fingerprint stable");
+        let cfg = fleet.space().midpoint();
+        let a = fleet.measure(cfg);
+        let cost_after_miss = fleet.cost_s();
+        let b = fleet.measure(cfg);
+        assert_eq!(a, b, "fleet hit is byte-identical");
+        assert_eq!(fleet.cost_s(), cost_after_miss, "fleet hit charges zero");
+        let stats = fleet.cache_stats().expect("cached members visible");
+        assert_eq!((stats.hits, stats.misses), (3, 3));
+        fleet.bump_epoch();
+        assert_eq!(fleet.cache_stats().expect("still cached").epoch, 1);
+        fleet.measure(cfg);
+        assert_eq!(fleet.cache_stats().unwrap().misses, 6, "post-bump windows re-measure");
+        assert!(fleet
+            .members()
+            .iter()
+            .all(|m| m.cache_stats().map_or(false, |s| s.epoch == 1)));
     }
 
     #[test]

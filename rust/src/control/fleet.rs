@@ -7,6 +7,11 @@
 //! (This is the *many independent searches* axis; one search observing
 //! many boards per window is [`super::FleetEnv`]. EXPERIMENTS.md
 //! §Closed-loop serving covers both.)
+//!
+//! [`fleet_sweep_cached`] is the same sweep through the measurement
+//! cache: every job's board is wrapped in a [`CachedEnv`] over one
+//! shared [`CacheStore`], so re-running the sweep replays every window
+//! from the store (EXPERIMENTS.md §Measurement cache, `bench_cache`).
 
 use std::sync::Arc;
 
@@ -14,8 +19,9 @@ use crate::device::Device;
 use crate::experiments::scenarios::DualScenario;
 use crate::optimizer::{Constraints, CoralOptimizer};
 
+use super::cache::{CacheStore, CachedEnv};
 use super::engine::{ControlLoop, DEFAULT_BUDGET};
-use super::env::SimEnv;
+use super::env::{Environment, SimEnv};
 
 /// A deterministic parallel job runner over OS threads.
 pub struct FleetRunner {
@@ -114,14 +120,19 @@ struct SweepResult {
     cost_s: f64,
 }
 
-/// One (scenario, seed) CORAL search — the paper's 10-iteration budget
-/// on a fresh simulated board.
-fn sweep_job(s: DualScenario, seed: u64) -> SweepResult {
+/// The fresh simulated board of one (scenario, seed) sweep job.
+fn sweep_device(s: DualScenario, seed: u64) -> Device {
     const DEVICE_SEED_BASE: u64 = 0xF1EE7;
+    Device::new(s.device, s.model, DEVICE_SEED_BASE + seed)
+}
+
+/// One (scenario, seed) CORAL search — the paper's 10-iteration budget —
+/// driving `env` (a plain [`SimEnv`], or the same board behind a
+/// [`CachedEnv`] for the cached sweep).
+fn sweep_job_in<E: Environment>(env: E, s: DualScenario, seed: u64) -> SweepResult {
     let cons = Constraints::dual(s.target_fps, s.budget_mw);
-    let dev = Device::new(s.device, s.model, DEVICE_SEED_BASE + seed);
-    let opt = CoralOptimizer::new(dev.space().clone(), cons, seed);
-    let mut cl = ControlLoop::with_budget(SimEnv::new(dev), opt, cons, DEFAULT_BUDGET);
+    let opt = CoralOptimizer::new(env.space().clone(), cons, seed);
+    let mut cl = ControlLoop::with_budget(env, opt, cons, DEFAULT_BUDGET);
     let out = cl.run();
     SweepResult {
         feasible: out.best.map(|b| b.feasible).unwrap_or(false),
@@ -130,15 +141,12 @@ fn sweep_job(s: DualScenario, seed: u64) -> SweepResult {
     }
 }
 
-/// CORAL across `scenarios` × `seeds` on `runner`'s workers. The result
-/// is identical for every worker count (see [`FleetRunner::map`]).
-pub fn fleet_sweep(scenarios: &[DualScenario], seeds: u64, runner: &FleetRunner) -> Vec<FleetStats> {
-    assert!(seeds >= 1, "need at least one seed");
-    let jobs: Vec<(DualScenario, u64)> = scenarios
-        .iter()
-        .flat_map(|&s| (0..seeds).map(move |seed| (s, seed)))
-        .collect();
-    let results = runner.map(jobs, |(s, seed)| sweep_job(s, seed));
+fn sweep_job(s: DualScenario, seed: u64) -> SweepResult {
+    sweep_job_in(SimEnv::new(sweep_device(s, seed)), s, seed)
+}
+
+/// Fold per-job sweep results into per-scenario [`FleetStats`].
+fn aggregate(scenarios: &[DualScenario], seeds: u64, results: &[SweepResult]) -> Vec<FleetStats> {
     let per = seeds as usize;
     scenarios
         .iter()
@@ -165,6 +173,56 @@ pub fn fleet_sweep(scenarios: &[DualScenario], seeds: u64, runner: &FleetRunner)
             }
         })
         .collect()
+}
+
+/// CORAL across `scenarios` × `seeds` on `runner`'s workers. The result
+/// is identical for every worker count (see [`FleetRunner::map`]).
+pub fn fleet_sweep(scenarios: &[DualScenario], seeds: u64, runner: &FleetRunner) -> Vec<FleetStats> {
+    assert!(seeds >= 1, "need at least one seed");
+    let jobs: Vec<(DualScenario, u64)> = scenarios
+        .iter()
+        .flat_map(|&s| (0..seeds).map(move |seed| (s, seed)))
+        .collect();
+    let results = runner.map(jobs, |(s, seed)| sweep_job(s, seed));
+    aggregate(scenarios, seeds, &results)
+}
+
+/// [`fleet_sweep`] with every job's board wrapped in a [`CachedEnv`]
+/// over the shared `store` — same scenarios, same per-job seeding, same
+/// deterministic parallelism.
+///
+/// Jobs are salted per scenario ([`CachedEnv::with_store_salted`]), so
+/// two scenarios probing the *same* (device, model, seed) board under
+/// different constraints keep disjoint key spaces — concurrent
+/// first-misses can never race on the board's stateful noise, and the
+/// result stays byte-identical for any worker count. Within one job a
+/// re-proposed configuration is answered from the store (that is the
+/// cache's contract), so on noisy surfaces a first pass can differ from
+/// the uncached [`fleet_sweep`]; re-running the sweep over the same
+/// store replays every window as a hit — identical outcomes at zero
+/// measurement cost. `bench_cache` quantifies both effects.
+pub fn fleet_sweep_cached(
+    scenarios: &[DualScenario],
+    seeds: u64,
+    runner: &FleetRunner,
+    store: &CacheStore,
+) -> Vec<FleetStats> {
+    assert!(seeds >= 1, "need at least one seed");
+    let jobs: Vec<(usize, DualScenario, u64)> = scenarios
+        .iter()
+        .enumerate()
+        .flat_map(|(i, &s)| (0..seeds).map(move |seed| (i, s, seed)))
+        .collect();
+    let store = store.clone();
+    let results = runner.map(jobs, move |(i, s, seed)| {
+        let env = CachedEnv::with_store_salted(
+            SimEnv::new(sweep_device(s, seed)),
+            store.clone(),
+            i as u64,
+        );
+        sweep_job_in(env, s, seed)
+    });
+    aggregate(scenarios, seeds, &results)
 }
 
 #[cfg(test)]
@@ -203,5 +261,37 @@ mod tests {
             "NX/YOLO should mostly converge: {:?}",
             seq[0]
         );
+    }
+
+    #[test]
+    fn cached_fleet_sweep_is_schedule_independent() {
+        let scenarios = &DUAL_SCENARIOS[..2];
+        let s1 = CacheStore::new();
+        let s2 = CacheStore::new();
+        let seq = fleet_sweep_cached(scenarios, 3, &FleetRunner::new(1), &s1);
+        let par = fleet_sweep_cached(scenarios, 3, &FleetRunner::new(4), &s2);
+        assert_eq!(format!("{seq:?}"), format!("{par:?}"));
+        assert_eq!(s1.stats().misses, s2.stats().misses);
+        assert!(!s1.is_empty());
+    }
+
+    #[test]
+    fn cached_fleet_sweep_replays_repeat_passes_from_the_store() {
+        let scenarios = &DUAL_SCENARIOS[..2];
+        let store = CacheStore::new();
+        let p1 = fleet_sweep_cached(scenarios, 3, &FleetRunner::new(1), &store);
+        let misses_p1 = store.stats().misses;
+        let p2 = fleet_sweep_cached(scenarios, 3, &FleetRunner::new(3), &store);
+        assert_eq!(store.stats().misses, misses_p1, "pass 2 runs zero real windows");
+        assert!(store.stats().hits > 0);
+        for (a, b) in p1.iter().zip(&p2) {
+            assert_eq!(a.feasible, b.feasible, "replayed outcomes identical");
+            assert_eq!(
+                format!("{:?}", a.mean_first_feasible),
+                format!("{:?}", b.mean_first_feasible)
+            );
+            assert!(a.mean_cost_s > 0.0);
+            assert_eq!(b.mean_cost_s, 0.0, "every pass-2 window hit the store");
+        }
     }
 }

@@ -18,6 +18,11 @@
 //!   ([`FleetEnv`] — including mixed NX/Orin fleets searched through
 //!   the normalized [`crate::device::NormSpace`] grid; EXPERIMENTS.md
 //!   §Heterogeneous fleets).
+//! * [`CachedEnv`] wraps any environment in the content-addressed
+//!   measurement cache ([`cache`]): repeated proposals are answered
+//!   byte-identically from the store at zero cost, and
+//!   [`DriftDetector`] firings bump an epoch that invalidates stale
+//!   entries (EXPERIMENTS.md §Measurement cache).
 //! * [`ControlLoop`] owns the drive loop every experiment, the CLI, and
 //!   the examples used to hand-roll: budget, first-feasible tracking,
 //!   uniform search-cost accounting, trace recording, an event log, and
@@ -35,6 +40,7 @@
 //! environments shared by unit tests, integration tests, and benches;
 //! gated behind `cfg(any(test, feature = "testkit"))`).
 
+pub mod cache;
 pub mod engine;
 pub mod env;
 pub mod fleet;
@@ -42,12 +48,13 @@ pub mod tenant;
 #[cfg(any(test, feature = "testkit"))]
 pub mod testkit;
 
+pub use cache::{CacheStats, CacheStore, CachedEnv};
 pub use engine::{
     ControlLoop, ControlLoopConfig, DriftConfig, DriftDetector, HoldOutcome, LoopEvent,
     LoopOutcome, Step, DEFAULT_BUDGET, MAX_SEARCH_RESTARTS,
 };
 pub use env::{Environment, FleetEnv, LiveEnv, SimEnv};
-pub use fleet::{fleet_sweep, FleetRunner, FleetStats};
+pub use fleet::{fleet_sweep, fleet_sweep_cached, FleetRunner, FleetStats};
 pub use tenant::{
     BudgetPolicy, RoundReport, Tenant, TenantArbiter, TenantRound, MAX_DRIFT_RESTARTS,
     WATERFILL_HEADROOM,

@@ -52,6 +52,7 @@ use crate::device::{ConfigSpace, Dim, HwConfig, Measured};
 use crate::models::ModelKind;
 use crate::optimizer::{Constraints, CoralOptimizer};
 
+use super::cache::{CacheStats, CachedEnv};
 use super::engine::{ControlLoop, ControlLoopConfig, DriftConfig, DEFAULT_BUDGET};
 use super::env::{Environment, FleetEnv};
 use super::fleet::FleetRunner;
@@ -171,6 +172,9 @@ pub struct TenantArbiter {
     /// Hold-phase windows per tenant per round (0 = no hold).
     hold_windows: u64,
     drift: DriftConfig,
+    /// Wrap each tenant's environment in a private [`CachedEnv`] at
+    /// registration ([`TenantArbiter::cached`]).
+    cached: bool,
     history: Vec<RoundReport>,
 }
 
@@ -188,6 +192,7 @@ impl TenantArbiter {
             budget_iters: DEFAULT_BUDGET,
             hold_windows: 12,
             drift: DriftConfig::default(),
+            cached: false,
             history: Vec::new(),
         }
     }
@@ -225,6 +230,17 @@ impl TenantArbiter {
         self
     }
 
+    /// Wrap every subsequently registered tenant environment in its own
+    /// private [`CachedEnv`] (call before [`TenantArbiter::add_tenant`]).
+    /// Re-measured allocations and the bootstrap presets every fresh
+    /// round re-probes then hit the tenant's store, while epochs stay
+    /// **per tenant**: one tenant's drift restart invalidates only its
+    /// own entries, never a neighbour's.
+    pub fn cached(mut self, cached: bool) -> TenantArbiter {
+        self.cached = cached;
+        self
+    }
+
     /// Run tenant rounds on the caller's thread (identical results; used
     /// to assert the parallel path byte-for-byte).
     pub fn sequential(mut self) -> TenantArbiter {
@@ -258,6 +274,11 @@ impl TenantArbiter {
         );
         // Placeholder constraints; every round re-budgets (and restarts)
         // the loop before stepping it.
+        let env: Box<dyn Environment + Send> = if self.cached {
+            Box::new(CachedEnv::new(env))
+        } else {
+            env
+        };
         let cons = Constraints::dual(spec.target_fps, self.global_budget_mw);
         let opt = CoralOptimizer::new(env.space().clone(), cons, seed);
         let cl = ControlLoop::new(env, opt, cons, ControlLoopConfig {
@@ -298,6 +319,16 @@ impl TenantArbiter {
     /// Registered tenant specs, in tenant order.
     pub fn specs(&self) -> Vec<Tenant> {
         self.tenants.iter().map(|t| t.spec).collect()
+    }
+
+    /// Per-tenant cache accounting, in tenant order (None for tenants
+    /// whose environments carry no cache layer). The CLI's tenant
+    /// report renders hit-rate / windows-saved columns from this.
+    pub fn tenant_cache_stats(&self) -> Vec<Option<CacheStats>> {
+        self.tenants
+            .iter()
+            .map(|t| t.cl.env().cache_stats())
+            .collect()
     }
 
     /// Demand-weighted shares of the global budget.
@@ -444,6 +475,16 @@ impl TenantArbiter {
     }
 }
 
+/// The arbiter as an [`Environment`].
+///
+/// **Never wrap the arbiter itself in a [`CachedEnv`].** Its `measure`
+/// ignores the proposed configuration and advances a stateful
+/// arbitration round, so a content-addressed cache over it would replay
+/// a stale round instead of running one (the deliberately space-only
+/// default [`Environment::fingerprint`] could not tell two arbiters
+/// apart either). Cache *inside* instead: [`TenantArbiter::cached`]
+/// wraps each tenant's environment, which is where repeated windows
+/// actually occur.
 impl Environment for TenantArbiter {
     /// One measurement window of the arbitrated box = one arbitration
     /// round. The proposed configuration is **ignored** — tenants run
@@ -468,6 +509,25 @@ impl Environment for TenantArbiter {
             .iter()
             .map(|t| t.cl.env().cost_s())
             .fold(0.0, f64::max)
+    }
+
+    /// Forwarded to every tenant environment — a box-wide invalidation
+    /// (each tenant's own drift restarts already bump only that
+    /// tenant's epoch through its [`ControlLoop`]).
+    fn bump_epoch(&mut self) {
+        for t in &mut self.tenants {
+            t.cl.env_mut().bump_epoch();
+        }
+    }
+
+    /// Merged tenant cache accounting — Some as soon as any tenant is
+    /// cached (see [`TenantArbiter::tenant_cache_stats`] for the
+    /// per-tenant view).
+    fn cache_stats(&self) -> Option<CacheStats> {
+        self.tenant_cache_stats()
+            .into_iter()
+            .flatten()
+            .reduce(|a, b| a.merged(&b))
     }
 }
 
@@ -696,6 +756,67 @@ mod tests {
             format!("{:?}", par.history()),
             format!("{:?}", seq.history()),
             "thread scheduling must never change a trajectory"
+        );
+    }
+
+    #[test]
+    fn cached_tenants_hit_across_rounds_with_per_tenant_epochs() {
+        // Tenant 0's surface drifts mid-hold (steps at env window 5);
+        // tenant 1 never shifts. The drift restart must bump only
+        // tenant 0's epoch, while tenant 1 collects hits from its
+        // re-measured allocation and the presets every round re-probes.
+        let mut arb = TenantArbiter::new(10_000.0, BudgetPolicy::DemandWeighted)
+            .budget_iters(3)
+            .hold_windows(6)
+            .cached(true);
+        arb.add_tenant(spec(0, 20.0, 1.0), Box::new(StepEnv::new(5).with_power(3_000.0)), 7);
+        arb.add_tenant(
+            spec(1, 20.0, 1.0),
+            Box::new(StepEnv::constant().with_levels(25.0, 25.0).with_power(3_000.0)),
+            8,
+        );
+        arb.run(2);
+        let stats = arb.tenant_cache_stats();
+        let s0 = stats[0].expect("tenant 0 cached");
+        let s1 = stats[1].expect("tenant 1 cached");
+        assert!(s0.epoch >= 1, "drifting tenant bumped its own epoch: {s0:?}");
+        assert_eq!(s1.epoch, 0, "steady tenant untouched by the neighbour's drift");
+        assert!(s1.hits > 0, "re-measured allocations and presets hit the store");
+        assert!(s1.refreshes > 0, "hold windows measured fresh");
+        let merged = arb.cache_stats().expect("cached tenants merge through the arbiter");
+        assert_eq!(merged.hits, s0.hits + s1.hits);
+        assert_eq!(merged.epoch, s0.epoch.max(s1.epoch));
+    }
+
+    #[test]
+    fn cached_parallel_rounds_match_sequential_byte_for_byte() {
+        let tenants = [(20.0, 30.0, 3_000.0), (10.0, 12.0, 2_500.0)];
+        let mk = |sequential: bool| {
+            let mut arb = TenantArbiter::new(9_000.0, BudgetPolicy::WaterFill)
+                .budget_iters(3)
+                .hold_windows(6)
+                .cached(true);
+            if sequential {
+                arb = arb.sequential();
+            }
+            for (i, &(target, fps, power)) in tenants.iter().enumerate() {
+                let env = StepEnv::constant().with_levels(fps, fps).with_power(power);
+                arb.add_tenant(spec(i, target, 1.0), Box::new(env), 0x5EED + i as u64);
+            }
+            arb
+        };
+        let mut par = mk(false);
+        let mut seq = mk(true);
+        par.run(3);
+        seq.run(3);
+        assert_eq!(
+            format!("{:?}", par.history()),
+            format!("{:?}", seq.history()),
+            "caching must not make trajectories schedule-dependent"
+        );
+        assert_eq!(
+            format!("{:?}", par.tenant_cache_stats()),
+            format!("{:?}", seq.tenant_cache_stats())
         );
     }
 

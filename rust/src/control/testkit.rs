@@ -115,6 +115,20 @@ impl Environment for StepEnv {
     fn cost_s(&self) -> f64 {
         self.windows as f64 * self.cost_per_window_s
     }
+
+    /// The full script: two same-space `StepEnv`s with different
+    /// levels, power, cost or step schedule are different surfaces and
+    /// must never share cache entries.
+    fn fingerprint(&self) -> u64 {
+        super::cache::stable_hash(&[
+            super::cache::space_fingerprint(&self.space),
+            self.step_after,
+            self.cost_per_window_s.to_bits(),
+            self.fps_before.to_bits(),
+            self.fps_after.to_bits(),
+            self.power_mw.to_bits(),
+        ])
+    }
 }
 
 /// Queue-shaped [`ModelServer`] stand-in: `tick` completes one request

@@ -42,6 +42,8 @@ pub struct Device {
     current: HwConfig,
     rng: Rng,
     thermal: Option<ThermalModel>,
+    /// Noise-seed lineage as passed to [`Device::new`] (cache identity).
+    seed: u64,
     /// Multiplier on measurement noise (robustness experiments).
     noise_scale: f64,
     /// Simulated wall-clock spent in warm-up + measurement (s) — used to
@@ -63,6 +65,7 @@ impl Device {
             current: kind.preset_default(),
             rng: Rng::new(seed ^ (kind.id() << 32) ^ model.id()),
             thermal: None,
+            seed,
             noise_scale: 1.0,
             sim_clock_s: 0.0,
             windows_run: 0,
@@ -97,6 +100,24 @@ impl Device {
 
     pub fn current_config(&self) -> HwConfig {
         self.current
+    }
+
+    /// The noise seed this device was created with (cache identity —
+    /// two same-surface devices with different seeds draw different
+    /// noise and must never share cache entries).
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    /// Current measurement-noise multiplier (cache identity).
+    pub fn noise_scale(&self) -> f64 {
+        self.noise_scale
+    }
+
+    /// Whether the thermal-throttle extension is active (a thermal
+    /// device's surface is history-dependent — cache identity).
+    pub fn has_thermal(&self) -> bool {
+        self.thermal.is_some()
     }
 
     /// Simulated seconds spent measuring so far.

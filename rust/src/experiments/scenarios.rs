@@ -186,6 +186,17 @@ impl TenantScenario {
         arb
     }
 
+    /// [`TenantScenario::arbiter`] with every tenant's board behind a
+    /// private measurement cache (`control::cache::CachedEnv`): repeat
+    /// proposals across rounds replay from each tenant's store, and a
+    /// drift restart of tenant *i* invalidates only tenant *i*'s
+    /// entries. Same boards, same seeds, per-tenant epochs.
+    pub fn arbiter_cached(&self, policy: BudgetPolicy, base_seed: u64) -> TenantArbiter {
+        let mut arb = TenantArbiter::new(self.global_budget_mw, policy).cached(true);
+        self.add_tenants(&mut arb, base_seed);
+        arb
+    }
+
     /// The unarbitrated baseline over the same boards and seeds (every
     /// tenant believes it owns the whole envelope).
     pub fn independent(&self, base_seed: u64) -> TenantArbiter {
@@ -434,6 +445,35 @@ mod tests {
             let ind = s.independent(9);
             assert_eq!(ind.sub_budgets(), vec![s.global_budget_mw; s.tenants.len()]);
         }
+    }
+
+    #[test]
+    fn cached_arbiter_wraps_every_tenant_and_hits_across_rounds() {
+        let s = TenantScenario::by_name("nx-pair").unwrap();
+        let mut arb = s.arbiter_cached(crate::control::BudgetPolicy::DemandWeighted, 9);
+        assert!(
+            arb.tenant_cache_stats().iter().all(|st| st.is_some()),
+            "every tenant board sits behind a CachedEnv"
+        );
+        // An uncached arbiter reports no cache stats at all.
+        assert!(s
+            .arbiter(crate::control::BudgetPolicy::DemandWeighted, 9)
+            .tenant_cache_stats()
+            .iter()
+            .all(|st| st.is_none()));
+        arb.run_round();
+        arb.run_round();
+        let merged = arb
+            .tenant_cache_stats()
+            .into_iter()
+            .flatten()
+            .reduce(|a, b| a.merged(&b))
+            .unwrap();
+        assert!(merged.misses > 0, "first proposals are real windows");
+        assert!(
+            merged.hits > 0,
+            "bootstrap presets / repeat proposals replay across rounds: {merged:?}"
+        );
     }
 
     #[test]

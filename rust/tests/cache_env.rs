@@ -1,0 +1,252 @@
+//! Integration regressions and properties for the measurement cache
+//! (`control::cache`): hits are byte-identical, wrapping an environment
+//! leaves same-seed trajectories unchanged, drift-epoch invalidation
+//! never resurfaces a stale entry, and tenant epochs stay per-tenant.
+
+use std::collections::HashMap;
+
+use coral::control::testkit::StepEnv;
+use coral::control::{
+    BudgetPolicy, CachedEnv, ControlLoop, Environment, LoopEvent, LoopOutcome, Tenant,
+    TenantArbiter,
+};
+use coral::device::{ConfigSpace, Device, DeviceKind, HwConfig, Measured};
+use coral::models::ModelKind;
+use coral::optimizer::{Constraints, CoralOptimizer};
+use coral::util::prop;
+
+#[test]
+fn cache_hit_returns_byte_identical_measured_on_a_noisy_board() {
+    // A noisy simulated board: re-measuring would draw fresh noise, so
+    // any replay that is not answered from the store diverges with
+    // overwhelming probability. The hit must be the stored window,
+    // byte for byte, with no real window run.
+    let dev = Device::new(DeviceKind::XavierNx, ModelKind::Yolo, 42);
+    let mut env = CachedEnv::new(coral::control::SimEnv::new(dev));
+    let mut rng = coral::util::Rng::new(7);
+    let cfgs: Vec<HwConfig> = (0..5).map(|_| env.space().random(&mut rng)).collect();
+    let first: Vec<Measured> = cfgs.iter().map(|&c| env.measure(c)).collect();
+    let windows_after_first = env.inner().device().windows_run();
+    let second: Vec<Measured> = cfgs.iter().map(|&c| env.measure(c)).collect();
+    assert_eq!(first, second, "hits must replay the stored windows exactly");
+    assert_eq!(
+        env.inner().device().windows_run(),
+        windows_after_first,
+        "no real window may back a hit"
+    );
+    assert!(env.stats().hits >= 5);
+}
+
+/// One search round over `env` with a fixed optimizer seed, digesting
+/// everything an outcome exposes that a cache layer must not perturb.
+fn drive(env: Box<dyn Environment + Send>) -> (String, LoopOutcome, bool) {
+    let cons = Constraints::dual(25.0, 6000.0);
+    let opt = CoralOptimizer::new(env.space().clone(), cons, 9);
+    let mut cl = ControlLoop::with_budget(env, opt, cons, 10);
+    let out = cl.run();
+    let digest = format!(
+        "{:?}|{:?}|{:?}|{:?}",
+        out.best,
+        out.first_feasible_iter,
+        out.feasible_by_iter,
+        out.trace
+            .steps
+            .iter()
+            .map(|s| (s.config, s.throughput_fps, s.power_mw))
+            .collect::<Vec<_>>()
+    );
+    let cache_events = cl
+        .events()
+        .iter()
+        .any(|e| matches!(e, LoopEvent::Cache { .. }));
+    (digest, out, cache_events)
+}
+
+#[test]
+fn wrapping_the_env_leaves_the_same_seed_trajectory_unchanged() {
+    // Deterministic surfaces (noise off / scripted constant), same
+    // optimizer seed: the cached loop must walk the identical
+    // trajectory — the cache's same-seed determinism contract.
+    let quiet =
+        || Device::new(DeviceKind::XavierNx, ModelKind::Yolo, 5).with_noise_scale(0.0);
+    let pairs: Vec<(Box<dyn Environment + Send>, Box<dyn Environment + Send>)> = vec![
+        (
+            Box::new(coral::control::SimEnv::new(quiet())),
+            Box::new(CachedEnv::new(coral::control::SimEnv::new(quiet()))),
+        ),
+        (
+            Box::new(StepEnv::constant()),
+            Box::new(CachedEnv::new(StepEnv::constant())),
+        ),
+    ];
+    for (plain, cached) in pairs {
+        let (d_plain, out_plain, ev_plain) = drive(plain);
+        let (d_cached, out_cached, ev_cached) = drive(cached);
+        assert_eq!(d_plain, d_cached, "wrapping must not perturb the trajectory");
+        assert!(out_plain.cache.is_none(), "plain loops report no cache stats");
+        assert!(!ev_plain, "plain event logs carry no Cache events");
+        let st = out_cached.cache.expect("cached loops report stats");
+        assert!(ev_cached, "cached loops log Cache events");
+        assert_eq!(st.epoch, 0, "no drift, no bump");
+        assert_eq!(st.lookups(), st.hits + st.misses);
+    }
+}
+
+/// Deterministic counter surface: every real window returns a value
+/// never produced before (`windows` strictly increases), so a stale
+/// cache entry is distinguishable from any fresh measurement.
+struct CounterEnv {
+    space: ConfigSpace,
+    windows: u64,
+}
+
+impl Environment for CounterEnv {
+    fn measure(&mut self, cfg: HwConfig) -> Measured {
+        self.windows += 1;
+        Measured {
+            config: cfg,
+            throughput_fps: self.windows as f64,
+            power_mw: 1000.0,
+            latency_ms: 1.0,
+            gpu_util: 0.5,
+            cpu_util: 0.5,
+            mem_util: 0.5,
+            failed: None,
+        }
+    }
+
+    fn space(&self) -> &ConfigSpace {
+        &self.space
+    }
+
+    fn cost_s(&self) -> f64 {
+        self.windows as f64
+    }
+}
+
+#[test]
+fn property_no_pre_epoch_entry_survives_a_bump() {
+    // Model-based property over random op sequences: a cached measure
+    // must return exactly what a per-epoch model predicts — the stored
+    // value within an epoch, a *fresh* (strictly newer) value for the
+    // first lookup after any bump. 120 seeded cases.
+    prop::check("post-bump lookups never see pre-epoch entries", 120, |g| {
+        let space = DeviceKind::XavierNx.space();
+        let mut env = CachedEnv::new(CounterEnv { space: space.clone(), windows: 0 });
+        let cfgs: Vec<HwConfig> =
+            (0..4).map(|_| env.space().random(&mut g.rng)).collect();
+        // What the current epoch may legitimately serve per config.
+        let mut model: HashMap<HwConfig, f64> = HashMap::new();
+        for _ in 0..30 {
+            let op = g.rng.below(10);
+            if op < 6 {
+                // measure: hit iff the model holds this config.
+                let cfg = *g.rng.choose(&cfgs);
+                let windows_before = env.inner().windows;
+                let m = env.measure(cfg);
+                match model.get(&cfg) {
+                    Some(&v) => {
+                        prop::assert_close(m.throughput_fps, v, 0.0)?;
+                        prop::assert_true(
+                            env.inner().windows == windows_before,
+                            "a hit must not run a real window",
+                        )?;
+                    }
+                    None => {
+                        prop::assert_close(
+                            m.throughput_fps,
+                            (windows_before + 1) as f64,
+                            0.0,
+                        )?;
+                        model.insert(cfg, m.throughput_fps);
+                    }
+                }
+            } else if op < 8 {
+                // measure_fresh: always a real window, entry refreshed.
+                let cfg = *g.rng.choose(&cfgs);
+                let windows_before = env.inner().windows;
+                let m = env.measure_fresh(cfg);
+                prop::assert_close(m.throughput_fps, (windows_before + 1) as f64, 0.0)?;
+                model.insert(cfg, m.throughput_fps);
+            } else {
+                // drift bump: everything cached so far is dead.
+                let epoch_before = env.epoch();
+                env.bump_epoch();
+                prop::assert_true(env.epoch() == epoch_before + 1, "epoch advances")?;
+                prop::assert_true(
+                    env.store().is_empty(),
+                    "a bump prunes every entry of this surface",
+                )?;
+                model.clear();
+            }
+        }
+        Ok(())
+    });
+}
+
+const TENANT_NAMES: [&str; 3] = ["prop-t0", "prop-t1", "prop-t2"];
+
+#[test]
+fn property_tenant_drift_restarts_stay_per_tenant() {
+    // Random cached tenant mixes where exactly one scripted tenant
+    // drifts mid-run: after two arbitration rounds the drifter's epoch
+    // advanced, every steady tenant still sits at epoch 0 with live
+    // (hitting) entries, and the drifter's reported allocation reflects
+    // the post-drift surface — never a resurrected pre-drift window.
+    // 100 seeded cases.
+    prop::check("tenant epochs are isolated", 100, |g| {
+        let n = 2 + g.rng.below(2); // 2..=3 tenants
+        let drifter = g.rng.below(n);
+        let base_seed = g.rng.below(1 << 16) as u64;
+        let policy = if g.rng.below(2) == 0 {
+            BudgetPolicy::DemandWeighted
+        } else {
+            BudgetPolicy::WaterFill
+        };
+        let mut arb = TenantArbiter::new(6000.0 * n as f64, policy).cached(true);
+        if g.rng.below(2) == 0 {
+            arb = arb.sequential();
+        }
+        for i in 0..n {
+            let env = if i == drifter {
+                // Steps 30 → 15 fps somewhere between mid-search and
+                // mid-hold of round 1: the hold detector must fire.
+                StepEnv::new(g.rng.range_usize(5, 12) as u64)
+            } else {
+                StepEnv::constant()
+            };
+            arb.add_tenant(
+                Tenant {
+                    name: TENANT_NAMES[i],
+                    model: ModelKind::ALL[i],
+                    target_fps: 20.0,
+                    weight: 1.0,
+                },
+                Box::new(env.with_power(2000.0)),
+                base_seed + i as u64,
+            );
+        }
+        arb.run_round();
+        arb.run_round();
+        let stats = arb.tenant_cache_stats();
+        for (i, st) in stats.iter().enumerate() {
+            let st = st.expect("cached arbiter wraps every tenant");
+            if i == drifter {
+                prop::assert_true(st.epoch >= 1, "the drifting tenant must bump")?;
+            } else {
+                prop::assert_true(
+                    st.epoch == 0,
+                    "a neighbour's restart must not touch this tenant's epoch",
+                )?;
+                prop::assert_true(
+                    st.hits > 0,
+                    "steady tenants keep replaying their live entries",
+                )?;
+            }
+        }
+        // Post-drift the surface serves 15 fps; a resurfaced pre-epoch
+        // entry would report 30.
+        let last = arb.history().last().expect("two rounds ran");
+        prop::assert_close(last.tenants[drifter].chosen.throughput_fps, 15.0, 0.0)
+    });
+}

@@ -9,7 +9,12 @@ Checks every ``[text](target)`` link in the root-level markdown files
 * ``#anchor`` fragments — standalone or on a markdown target — must
   match a heading in the target file, using GitHub's slug rules
   (lowercase, punctuation stripped, spaces to dashes);
-* absolute URLs (http/https) are skipped: the check must work offline.
+* absolute URLs (http/https) are skipped: the check must work offline;
+* absolute *filesystem* paths (``/root/...``, ``/home/...``, ...) are
+  rejected anywhere in a root markdown file — they describe one
+  author's machine, not the repository — except in fenced code blocks
+  and in ISSUE.md (a driver-managed work order that legitimately
+  quotes container paths).
 
 Usage: python3 scripts/check_links.py  (from anywhere; repo-root aware)
 """
@@ -22,6 +27,10 @@ REPO = Path(__file__).resolve().parent.parent
 LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
 HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
 CODE_FENCE_RE = re.compile(r"```.*?```", re.DOTALL)
+# Machine-local absolute paths that must never appear in committed docs.
+ABS_PATH_RE = re.compile(r"(?<![\w.])/(?:root|home|opt|tmp|usr|var|etc)/[\w./-]+")
+# Driver-managed work order; quotes container paths by design.
+ABS_PATH_EXEMPT = {"ISSUE.md"}
 
 
 def slugify(heading: str) -> str:
@@ -39,6 +48,12 @@ def anchors_of(md_path: Path) -> set:
 def check_file(md_path: Path) -> list:
     errors = []
     text = CODE_FENCE_RE.sub("", md_path.read_text(encoding="utf-8"))
+    if md_path.name not in ABS_PATH_EXEMPT and md_path.parent == REPO:
+        for hit in ABS_PATH_RE.findall(text):
+            errors.append(
+                f"{md_path.relative_to(REPO)}: absolute filesystem path "
+                f"'{hit}' (use a repo-relative path or name the thing instead)"
+            )
     for target in LINK_RE.findall(text):
         if target.startswith(("http://", "https://", "mailto:")):
             continue
