@@ -1,0 +1,270 @@
+//! Fleet-scale bench: per-round wall time and thread-spawn accounting
+//! for the persistent [`FleetPool`]-backed `FleetEnv` as fleets grow
+//! 10 → 10,000 members (EXPERIMENTS.md §Fleet-scale sweeps).
+//!
+//! Self-asserting, like every bench here:
+//!
+//! * **Zero post-construction spawns** — after the warm-up window builds
+//!   the pool, `spawned_threads()` never moves again, even at 10,000
+//!   members × several rounds.
+//! * **Sub-linear scaling** — per-*member* round time at the largest
+//!   fleet must be below the smallest fleet's: fixed dispatch overhead
+//!   amortizes, so per-round wall time grows sub-linearly in members at
+//!   fixed workers.
+//! * **Pool ≥ spawn-per-call at N=100** — the pool must not lose to the
+//!   old thread-per-member-per-round scheme it replaced (min-of-rounds
+//!   comparison, 10% tolerance).
+//!
+//! Reduced mode for CI: `CORAL_BENCH_FLEET_ROUNDS`,
+//! `CORAL_BENCH_FLEET_MAX` (largest member count to run) and
+//! `CORAL_BENCH_FLEET_WORKERS` shrink the run. Results are also written
+//! machine-readable to `BENCH_fleet_scale.json` (override the path with
+//! `CORAL_BENCH_JSON`) so the repo's perf trajectory has data points.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use coral::control::{Environment, FleetEnv};
+use coral::device::{Device, HwConfig, NormSpace};
+use coral::experiments::scenarios::{FleetScaleScenario, FLEET_SCALE_SCENARIOS};
+use coral::util::json::{self, Json};
+use coral::util::{table, Rng};
+
+const SEED: u64 = 0xF5CA1E;
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key)
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .filter(|&n| n >= 1)
+        .unwrap_or(default)
+}
+
+/// Timed measurement rounds per fleet (after one untimed warm-up window
+/// that builds the pool).
+fn rounds() -> usize {
+    env_usize("CORAL_BENCH_FLEET_ROUNDS", 4)
+}
+
+/// Largest fleet size to run (reduced CI mode caps this at 1,000).
+fn max_members() -> usize {
+    env_usize("CORAL_BENCH_FLEET_MAX", 10_000)
+}
+
+/// Fixed pool width: the scaling claim is "per-round time sub-linear in
+/// members at fixed workers", so every fleet gets the same pool size.
+fn workers() -> usize {
+    env_usize("CORAL_BENCH_FLEET_WORKERS", 4)
+}
+
+struct Outcome {
+    scenario: &'static str,
+    members: usize,
+    best_round_s: f64,
+    mean_round_s: f64,
+    spawned_threads: u64,
+    steals: u64,
+    feasible_rounds: usize,
+}
+
+/// Drive `rounds()` windows over one pool-backed fleet, asserting the
+/// spawn accounting on every round.
+fn drive(s: &FleetScaleScenario) -> Outcome {
+    let mut fleet = s.fleet(SEED).with_workers(workers());
+    let space = fleet.space().clone();
+    let cons = s.constraints();
+    let mut rng = Rng::new(SEED);
+    assert_eq!(fleet.spawned_threads(), 0, "{}: pool is lazy", s.name);
+    fleet.measure(space.midpoint()); // warm-up builds the pool
+    let spawned = fleet.spawned_threads();
+    assert_eq!(spawned, workers() as u64, "{}: pool spawns exactly its workers", s.name);
+    let mut best_round_s = f64::INFINITY;
+    let mut sum_s = 0.0;
+    let mut feasible_rounds = 0;
+    for round in 0..rounds() {
+        let cfg = space.random(&mut rng);
+        let t0 = Instant::now();
+        let m = fleet.measure(cfg);
+        let dt = t0.elapsed().as_secs_f64();
+        best_round_s = best_round_s.min(dt);
+        sum_s += dt;
+        if cons.feasible(m.throughput_fps, m.power_mw) {
+            feasible_rounds += 1;
+        }
+        assert_eq!(
+            fleet.spawned_threads(),
+            spawned,
+            "{}: round {round} spawned threads after pool construction",
+            s.name
+        );
+    }
+    Outcome {
+        scenario: s.name,
+        members: s.members,
+        best_round_s,
+        mean_round_s: sum_s / rounds() as f64,
+        spawned_threads: fleet.spawned_threads(),
+        steals: fleet.pool_steals(),
+        feasible_rounds,
+    }
+}
+
+/// The scheme the pool replaced: spawn one thread per member on every
+/// round, rejoin in member order, combine. Same boards, same decode,
+/// same proposal sequence as [`drive`] — only the dispatch differs.
+fn spawn_per_call_baseline(s: &FleetScaleScenario) -> f64 {
+    let kinds = s.kinds();
+    let ns = Arc::new(NormSpace::new(kinds.iter().map(|d| d.space()).collect()));
+    let mut devices: Vec<Device> = kinds
+        .iter()
+        .enumerate()
+        .map(|(i, &k)| Device::new(k, s.model, SEED + i as u64))
+        .collect();
+    let space = ns.grid().clone();
+    let mut rng = Rng::new(SEED);
+    let mut measure = |cfg: HwConfig| {
+        let handles: Vec<_> = devices
+            .drain(..)
+            .enumerate()
+            .map(|(i, mut dev)| {
+                let ns = Arc::clone(&ns);
+                std::thread::spawn(move || {
+                    let m = dev.run(ns.decode_for(i, &cfg));
+                    (dev, m)
+                })
+            })
+            .collect();
+        let mut out = Vec::with_capacity(handles.len());
+        for h in handles {
+            let (dev, m) = h.join().expect("baseline member panicked");
+            devices.push(dev);
+            out.push(m);
+        }
+        FleetEnv::combine(&out)
+    };
+    measure(space.midpoint()); // mirror the pool side's warm-up window
+    let mut best = f64::INFINITY;
+    for _ in 0..rounds() {
+        let cfg = space.random(&mut rng);
+        let t0 = Instant::now();
+        measure(cfg);
+        best = best.min(t0.elapsed().as_secs_f64());
+    }
+    best
+}
+
+fn main() {
+    println!(
+        "bench_fleet_scale — {} rounds per fleet, {} pool workers, fleets up to {} members\n",
+        rounds(),
+        workers(),
+        max_members()
+    );
+    let ran: Vec<FleetScaleScenario> = FLEET_SCALE_SCENARIOS
+        .iter()
+        .filter(|s| s.members <= max_members())
+        .copied()
+        .collect();
+    let skipped: Vec<&str> = FLEET_SCALE_SCENARIOS
+        .iter()
+        .filter(|s| s.members > max_members())
+        .map(|s| s.name)
+        .collect();
+    assert!(!ran.is_empty(), "CORAL_BENCH_FLEET_MAX excludes every scenario");
+    let outcomes: Vec<Outcome> = ran.iter().map(drive).collect();
+
+    // Sub-linear scaling: fixed dispatch overhead amortizes, so the
+    // per-member share of a round must fall as fleets grow.
+    if let [first, .., last] = outcomes.as_slice() {
+        let small = first.best_round_s / first.members as f64;
+        let large = last.best_round_s / last.members as f64;
+        assert!(
+            large < small,
+            "per-round time is not sub-linear in members: {:.3} us/member at {} vs \
+             {:.3} us/member at {}",
+            large * 1e6,
+            last.members,
+            small * 1e6,
+            first.members
+        );
+    }
+
+    // Pool vs the spawn-per-call scheme it replaced, at N=100.
+    let parity = ran
+        .iter()
+        .find(|s| s.members == 100)
+        .map(|s| (s.name, spawn_per_call_baseline(s)));
+    if let Some((name, spawn_best)) = parity {
+        let pool_best = outcomes
+            .iter()
+            .find(|o| o.members == 100)
+            .expect("fleet-100 ran")
+            .best_round_s;
+        assert!(
+            pool_best <= spawn_best * 1.10,
+            "{name}: pool round {:.3} ms lost to spawn-per-call {:.3} ms",
+            pool_best * 1e3,
+            spawn_best * 1e3
+        );
+        println!(
+            "N=100 parity: pool best {:.3} ms/round vs spawn-per-call best {:.3} ms/round\n",
+            pool_best * 1e3,
+            spawn_best * 1e3
+        );
+    } else {
+        println!("N=100 parity check skipped (CORAL_BENCH_FLEET_MAX below 100)\n");
+    }
+
+    let mut rows = Vec::new();
+    let mut records = Vec::new();
+    for o in &outcomes {
+        rows.push(vec![
+            o.scenario.to_string(),
+            o.members.to_string(),
+            workers().to_string(),
+            o.spawned_threads.to_string(),
+            o.steals.to_string(),
+            format!("{:.3}", o.best_round_s * 1e3),
+            format!("{:.3}", o.mean_round_s * 1e3),
+            format!("{:.3}", o.best_round_s * 1e6 / o.members as f64),
+            format!("{}/{}", o.feasible_rounds, rounds()),
+        ]);
+        records.push(json::obj(vec![
+            ("scenario", Json::Str(o.scenario.to_string())),
+            ("members", Json::Num(o.members as f64)),
+            ("workers", Json::Num(workers() as f64)),
+            ("rounds", Json::Num(rounds() as f64)),
+            ("best_round_s", Json::Num(o.best_round_s)),
+            ("mean_round_s", Json::Num(o.mean_round_s)),
+            ("spawned_threads", Json::Num(o.spawned_threads as f64)),
+            ("steals", Json::Num(o.steals as f64)),
+        ]));
+    }
+    print!(
+        "{}",
+        table::render(
+            &[
+                "scenario", "members", "workers", "spawned", "steals", "best ms", "mean ms",
+                "us/member", "feasible",
+            ],
+            &rows
+        )
+    );
+    if !skipped.is_empty() {
+        println!(
+            "\nskipped above CORAL_BENCH_FLEET_MAX={}: {}",
+            max_members(),
+            skipped.join(", ")
+        );
+    }
+
+    let path = std::env::var("CORAL_BENCH_JSON")
+        .unwrap_or_else(|_| "BENCH_fleet_scale.json".to_string());
+    std::fs::write(&path, Json::Arr(records).to_string_pretty() + "\n")
+        .expect("write bench json");
+    println!("\nmachine-readable results written to {path}");
+    println!(
+        "spawned == workers on every row: threads spawn once at pool construction; every \
+         later proposal is one O(1)-dispatch index batch plus a sharded combine."
+    );
+}

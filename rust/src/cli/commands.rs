@@ -29,6 +29,7 @@ USAGE:
   coral tenants   [--scenario nx-pair|nx-triple|orin-triple] [--policy static|demand|waterfill|independent]
                   [--rounds N] [--seed N] [--sequential] [--cached]
   coral hetero    [--scenario hetero-<model>-<pair|triple>] [--iters N] [--seed N] [--sequential]
+  coral fleetscale [--scenario fleet-<10|100|1k|10k>] [--rounds N] [--seed N] [--workers N]
   coral report    <specs|models|scenarios>
   coral artifacts-check [--dir DIR]
 
@@ -44,6 +45,7 @@ pub fn dispatch(args: &Args) -> Result<()> {
         Some("serve") => cmd_serve(args),
         Some("tenants") => cmd_tenants(args),
         Some("hetero") => cmd_hetero(args),
+        Some("fleetscale") => cmd_fleetscale(args),
         Some("report") => cmd_report(args),
         Some("artifacts-check") => cmd_artifacts_check(args),
         Some("help") | None => {
@@ -441,6 +443,93 @@ fn cmd_hetero(args: &Args) -> Result<()> {
     Ok(())
 }
 
+fn cmd_fleetscale(args: &Args) -> Result<()> {
+    let picked: Vec<&scenarios::FleetScaleScenario> = match args.opt("scenario") {
+        Some(name) => {
+            let s = scenarios::FleetScaleScenario::by_name(name).with_context(|| {
+                let names: Vec<&str> =
+                    scenarios::FLEET_SCALE_SCENARIOS.iter().map(|s| s.name).collect();
+                format!("unknown fleet scenario '{name}' (expected one of: {})", names.join(", "))
+            })?;
+            vec![s]
+        }
+        None => scenarios::FLEET_SCALE_SCENARIOS.iter().collect(),
+    };
+    let seed = args.opt_u64_or("seed", 42).map_err(anyhow::Error::msg)?;
+    let rounds = args.opt_u64_or("rounds", 3).map_err(anyhow::Error::msg)?.max(1);
+    let workers = args.opt_u64_or("workers", 0).map_err(anyhow::Error::msg)? as usize;
+    let workers_label = if workers > 0 {
+        workers.to_string()
+    } else {
+        "auto".to_string()
+    };
+    println!(
+        "fleet-scale sweep — {rounds} measurement rounds per fleet on one persistent \
+         work-stealing pool per fleet (workers: {workers_label})"
+    );
+    let mut rows = Vec::new();
+    for s in picked {
+        let mut fleet = s.fleet(seed);
+        if workers > 0 {
+            fleet = fleet.with_workers(workers);
+        }
+        let space = fleet.space().clone();
+        let mut rng = crate::util::Rng::new(seed);
+        // Warm-up window builds the pool; after this, spawn counts must
+        // never move (that is the whole point of the pool).
+        fleet.measure(space.midpoint());
+        let spawned_after_warmup = fleet.spawned_threads();
+        let mut best_s = f64::INFINITY;
+        let mut sum_s = 0.0;
+        let mut feasible = 0u64;
+        let cons = s.constraints();
+        for _ in 0..rounds {
+            let cfg = space.random(&mut rng);
+            let t0 = std::time::Instant::now();
+            let m = fleet.measure(cfg);
+            let dt = t0.elapsed().as_secs_f64();
+            best_s = best_s.min(dt);
+            sum_s += dt;
+            if cons.feasible(m.throughput_fps, m.power_mw) {
+                feasible += 1;
+            }
+        }
+        assert_eq!(
+            fleet.spawned_threads(),
+            spawned_after_warmup,
+            "pool must not respawn threads once measuring starts"
+        );
+        let mean_s = sum_s / rounds as f64;
+        rows.push(vec![
+            s.name.to_string(),
+            s.members.to_string(),
+            fleet.pool_workers().to_string(),
+            fleet.spawned_threads().to_string(),
+            fleet.pool_steals().to_string(),
+            format!("{:.2}", best_s * 1e3),
+            format!("{:.2}", mean_s * 1e3),
+            format!("{:.2}", mean_s * 1e6 / s.members as f64),
+            format!("{feasible}/{rounds}"),
+        ]);
+    }
+    print!(
+        "{}",
+        table::render(
+            &[
+                "scenario", "members", "workers", "spawned", "steals", "best ms", "mean ms",
+                "us/member", "feasible",
+            ],
+            &rows
+        )
+    );
+    println!(
+        "\nspawned == workers for every fleet: threads are spawned once at pool construction, \
+         then every round is O(1)-dispatch index jobs (see bench_fleet_scale for the asserted \
+         scaling curve)."
+    );
+    Ok(())
+}
+
 fn tenant_target(s: &scenarios::TenantScenario, name: &str) -> f64 {
     s.tenants
         .iter()
@@ -545,6 +634,25 @@ fn cmd_report(args: &Args) -> Result<()> {
                 "{}",
                 table::render(
                     &["scenario", "fleet", "model", "mean target fps", "mean budget mW"],
+                    &rows
+                )
+            );
+            println!("\nFleet-scale scenarios (`coral fleetscale`)");
+            let mut rows = Vec::new();
+            for s in scenarios::FLEET_SCALE_SCENARIOS {
+                rows.push(vec![
+                    s.name.to_string(),
+                    s.members.to_string(),
+                    "nx/orin alternating".to_string(),
+                    s.model.name().to_string(),
+                    format!("{}", s.target_fps),
+                    format!("{}", s.budget_mw),
+                ]);
+            }
+            print!(
+                "{}",
+                table::render(
+                    &["scenario", "members", "fleet", "model", "mean target fps", "mean budget mW"],
                     &rows
                 )
             );
@@ -688,5 +796,16 @@ mod tests {
     #[test]
     fn hetero_validates_scenario() {
         assert!(dispatch(&args("hetero --scenario mono-fleet")).is_err());
+    }
+
+    #[test]
+    fn fleetscale_smoke() {
+        let a = args("fleetscale --scenario fleet-10 --rounds 2 --seed 7 --workers 2");
+        assert!(dispatch(&a).is_ok());
+    }
+
+    #[test]
+    fn fleetscale_validates_scenario() {
+        assert!(dispatch(&args("fleetscale --scenario fleet-of-foot")).is_err());
     }
 }

@@ -14,11 +14,12 @@
 //!   warm-up discipline, power comes from the device model (a dev box
 //!   has no INA3221 power rails), and the whole thing degrades
 //!   gracefully to sim-backed windows when no PJRT artifacts exist.
-//! * [`FleetEnv`] — many boards measured per proposal (one thread per
-//!   member), observing fleet-mean metrics. Members with different
-//!   configuration spaces (mixed NX/Orin) make the fleet heterogeneous:
-//!   it searches the normalized [`NormSpace`] grid and decodes each
-//!   proposal per member (EXPERIMENTS.md §Heterogeneous fleets).
+//! * [`FleetEnv`] — many boards measured per proposal (one batch of
+//!   member-index jobs on a persistent [`super::FleetPool`]), observing
+//!   fleet-mean metrics. Members with different configuration spaces
+//!   (mixed NX/Orin) make the fleet heterogeneous: it searches the
+//!   normalized [`NormSpace`] grid and decodes each proposal per member
+//!   (EXPERIMENTS.md §Heterogeneous fleets, §Fleet-scale sweeps).
 //!
 //! Any of these can additionally be wrapped in [`super::CachedEnv`] —
 //! the content-addressed measurement cache ([`super::cache`]) — which
@@ -28,11 +29,15 @@
 //! [`Environment::cache_stats`]) all have pass-through defaults, so
 //! plain environments are unaffected.
 
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use crate::coordinator::{Server, ServerConfig, ServeReport};
+use crate::device::failure::FailureKind;
 use crate::device::sim::SAMPLES_PER_WINDOW;
 use crate::device::{ConfigSpace, Device, DeviceKind, HwConfig, Measured, NormSpace};
+
+use super::pool::{lock, FleetPool};
 use crate::models::{artifacts_dir, Manifest, ModelKind};
 use crate::runtime::PjrtRuntime;
 use crate::telemetry::{Sample, Sampler};
@@ -459,9 +464,10 @@ impl Environment for LiveEnv {
 ///
 /// One proposal is applied to every member; the observation the
 /// optimizer sees is the fleet mean (a config that crashes any member is
-/// prohibited fleet-wide). Members are measured on one thread each;
-/// results are aggregated in member order, so the parallel measurement
-/// is byte-identical to the sequential one — thread timing can change
+/// prohibited fleet-wide). Members are measured as one index-slotted
+/// batch on the fleet's persistent pool and aggregated by the pairwise
+/// tree combine — sharded or flat, parallel or sequential, the numbers
+/// are byte-identical; thread timing and steal schedules can change
 /// wall-clock, never numbers.
 ///
 /// **Heterogeneous fleets.** Members may carry *different*
@@ -473,20 +479,31 @@ impl Environment for LiveEnv {
 /// ([`NormSpace::decode_for`]). Decoding is pure and aggregation is
 /// unchanged, so parallel == sequential byte-identity is preserved.
 ///
-/// The thread-per-member fan-out models real fleet measurement, where a
-/// window costs seconds per board; for the microsecond-scale simulated
-/// `Device::run` the spawn overhead exceeds the work, so sim-only
-/// benchmarking should use [`FleetEnv::sequential`] (a persistent
-/// worker pool is a ROADMAP open item).
+/// Measurement runs on a persistent [`FleetPool`], built lazily at the
+/// first parallel window and reused for the fleet's whole lifetime —
+/// zero thread spawns per proposal, O(1) per-member dispatch (each pool
+/// job is a member index; its native config decodes inside the job,
+/// which is pure and therefore schedule-independent). That is what
+/// makes 10,000-member fleets practical where thread-per-member was not
+/// (`bench_fleet_scale`, EXPERIMENTS.md §Fleet-scale sweeps).
 pub struct FleetEnv {
-    members: Vec<Box<dyn Environment + Send>>,
+    /// Members behind per-member locks: pool jobs measure them in place
+    /// (each batch index is claimed exactly once, so every lock is
+    /// uncontended), and the `Arc` is what lets the pool's `'static`
+    /// jobs borrow nothing from the fleet.
+    members: Arc<Vec<Mutex<Box<dyn Environment + Send>>>>,
     /// The space proposals come from: the members' shared native grid
     /// for a homogeneous fleet, the normalized grid for a mixed one.
     space: ConfigSpace,
     /// Mixed-space decoding (None = homogeneous fleet; proposals pass
     /// through to members untouched).
-    norm: Option<NormSpace>,
+    norm: Option<Arc<NormSpace>>,
     parallel: bool,
+    /// Pinned pool size (None = [`FleetPool::auto`]'s choice).
+    workers: Option<usize>,
+    /// Lazily-built persistent pool; `spawned_threads` never moves once
+    /// this exists.
+    pool: Option<FleetPool>,
 }
 
 impl FleetEnv {
@@ -501,9 +518,16 @@ impl FleetEnv {
             (members[0].space().clone(), None)
         } else {
             let ns = NormSpace::new(members.iter().map(|m| m.space().clone()).collect());
-            (ns.grid().clone(), Some(ns))
+            (ns.grid().clone(), Some(Arc::new(ns)))
         };
-        FleetEnv { members, space, norm, parallel: true }
+        FleetEnv {
+            members: Arc::new(members.into_iter().map(Mutex::new).collect()),
+            space,
+            norm,
+            parallel: true,
+            workers: None,
+            pool: None,
+        }
     }
 
     /// A fleet of simulated boards.
@@ -543,6 +567,18 @@ impl FleetEnv {
     /// results; used to assert the parallel path byte-for-byte).
     pub fn sequential(mut self) -> FleetEnv {
         self.parallel = false;
+        self.pool = None;
+        self
+    }
+
+    /// Pin the fleet's pool to `workers` threads (benches pin this for
+    /// reproducible scaling curves; the default is [`FleetPool::auto`]'s
+    /// choice). Takes effect at the next parallel window — any
+    /// already-built pool is dropped and rebuilt lazily.
+    pub fn with_workers(mut self, workers: usize) -> FleetEnv {
+        assert!(workers >= 1, "a fleet pool needs at least one worker");
+        self.workers = Some(workers);
+        self.pool = None;
         self
     }
 
@@ -554,9 +590,30 @@ impl FleetEnv {
         self.members.is_empty()
     }
 
-    /// Member environments, in fleet order.
-    pub fn members(&self) -> &[Box<dyn Environment + Send>] {
-        &self.members
+    /// Run `f` against member `i` (members live behind per-member locks
+    /// so the pool's `'static` jobs can measure them in place).
+    pub fn with_member<R>(&self, i: usize, f: impl FnOnce(&dyn Environment) -> R) -> R {
+        f(&**lock(&self.members[i]))
+    }
+
+    /// Threads spawned by the fleet's persistent pool — 0 until the
+    /// first parallel window, constant forever after
+    /// (`bench_fleet_scale` asserts it never moves once measuring
+    /// starts).
+    pub fn spawned_threads(&self) -> u64 {
+        self.pool.as_ref().map_or(0, FleetPool::spawned_threads)
+    }
+
+    /// Jobs claimed off another worker's deque so far (work-stealing
+    /// traffic; diagnostics only — steals can never affect results).
+    pub fn pool_steals(&self) -> u64 {
+        self.pool.as_ref().map_or(0, FleetPool::steals)
+    }
+
+    /// Worker count of the built pool (0 before the first parallel
+    /// window).
+    pub fn pool_workers(&self) -> usize {
+        self.pool.as_ref().map_or(0, FleetPool::workers)
     }
 
     /// Whether proposals go through the normalized encoding (mixed
@@ -567,7 +624,7 @@ impl FleetEnv {
 
     /// The normalized encoding of a mixed fleet (None when homogeneous).
     pub fn norm(&self) -> Option<&NormSpace> {
-        self.norm.as_ref()
+        self.norm.as_deref()
     }
 
     /// The native configuration each member would run for proposal
@@ -587,34 +644,168 @@ impl FleetEnv {
     /// the whole group. This is both the fleet's per-proposal
     /// aggregation and the multi-tenant arbiter's per-round observation
     /// (`control::tenant`).
+    ///
+    /// Internally a pairwise tree reduction over fixed midpoints (see
+    /// [`partial_over`]): the summation tree depends only on `results.
+    /// len()`, so [`FleetEnv::combine_sharded`] — which cuts the same
+    /// tree at interior nodes to aggregate shard-parallel — is
+    /// byte-identical to this flat form for every shard count.
     pub fn combine(results: &[Measured]) -> Measured {
         assert!(!results.is_empty(), "combine needs at least one window");
-        let n = results.len() as f64;
-        let mean = |f: fn(&Measured) -> f64| results.iter().map(f).sum::<f64>() / n;
-        if let Some(failed) = results.iter().find(|m| m.failed.is_some()) {
-            // One crashed member prohibits the config fleet-wide; the
-            // surviving boards still draw power.
-            return Measured {
-                config: results[0].config,
-                throughput_fps: 0.0,
-                power_mw: mean(|m| m.power_mw),
-                latency_ms: f64::INFINITY,
-                gpu_util: 0.0,
-                cpu_util: 0.0,
-                mem_util: 0.0,
-                failed: failed.failed,
-            };
+        finish(partial_over(results, 0, results.len()))
+    }
+
+    /// Hierarchical aggregation: per-shard partials first, then the
+    /// cross-shard merge — byte-identical to [`FleetEnv::combine`] by
+    /// construction, because shard boundaries ([`shard_bounds`]) land
+    /// only on interior nodes of the flat combine's summation tree and
+    /// [`merge_partials`] mirrors that tree's shape. `shards` is clamped
+    /// to `1..=results.len()`. This is what lets the fleet mean itself
+    /// parallelize at 10,000 members ([`FleetEnv::measure`] shards
+    /// across the pool above [`HIER_COMBINE_MIN`]).
+    pub fn combine_sharded(results: &[Measured], shards: usize) -> Measured {
+        assert!(!results.is_empty(), "combine needs at least one window");
+        let shards = shards.clamp(1, results.len());
+        let mut bounds = Vec::with_capacity(shards);
+        shard_bounds(0, results.len(), shards, &mut bounds);
+        let parts: Vec<Partial> = bounds
+            .iter()
+            .map(|&(lo, hi)| partial_over(results, lo, hi))
+            .collect();
+        finish(merge_partials(&parts))
+    }
+}
+
+/// Fleets at or above this many members aggregate shard-parallel on the
+/// pool ([`FleetEnv::combine_sharded`]); smaller fleets combine flat on
+/// the measuring thread, where sharding overhead would dominate.
+const HIER_COMBINE_MIN: usize = 512;
+
+/// Running sums over one contiguous member range — the unit of
+/// hierarchical aggregation. Merging two adjacent partials is one
+/// interior node of the combine tree, so any cut of that tree into
+/// partials re-merges to the identical result.
+#[derive(Debug, Clone, Copy)]
+struct Partial {
+    /// Config of the range's first member (fleet order), echoed into the
+    /// combined observation like the old left-fold did.
+    config: HwConfig,
+    n: usize,
+    throughput_fps: f64,
+    power_mw: f64,
+    latency_ms: f64,
+    gpu_util: f64,
+    cpu_util: f64,
+    mem_util: f64,
+    /// First failure in fleet order (left-priority merge), regardless of
+    /// which thread measured it.
+    failed: Option<FailureKind>,
+}
+
+impl Partial {
+    fn leaf(m: &Measured) -> Partial {
+        Partial {
+            config: m.config,
+            n: 1,
+            throughput_fps: m.throughput_fps,
+            power_mw: m.power_mw,
+            latency_ms: m.latency_ms,
+            gpu_util: m.gpu_util,
+            cpu_util: m.cpu_util,
+            mem_util: m.mem_util,
+            failed: m.failed,
         }
-        Measured {
-            config: results[0].config,
-            throughput_fps: mean(|m| m.throughput_fps),
-            power_mw: mean(|m| m.power_mw),
-            latency_ms: mean(|m| m.latency_ms),
-            gpu_util: mean(|m| m.gpu_util),
-            cpu_util: mean(|m| m.cpu_util),
-            mem_util: mean(|m| m.mem_util),
-            failed: None,
+    }
+
+    /// One interior tree node: `left` covers the members immediately
+    /// before `right` in fleet order.
+    fn merge(left: Partial, right: Partial) -> Partial {
+        Partial {
+            config: left.config,
+            n: left.n + right.n,
+            throughput_fps: left.throughput_fps + right.throughput_fps,
+            power_mw: left.power_mw + right.power_mw,
+            latency_ms: left.latency_ms + right.latency_ms,
+            gpu_util: left.gpu_util + right.gpu_util,
+            cpu_util: left.cpu_util + right.cpu_util,
+            mem_util: left.mem_util + right.mem_util,
+            failed: left.failed.or(right.failed),
         }
+    }
+}
+
+/// The combine tree over `results[lo..hi]`: split at the fixed ceiling
+/// midpoint (left half takes the odd element) and merge the halves.
+/// The tree shape is a pure function of the range, never of threads —
+/// that is where sharded == flat byte-identity comes from. The ceiling
+/// split makes n ≤ 3 associate exactly like a left fold, `(a + b) + c`,
+/// which keeps historical small-group aggregates (pairs, 3-tenant
+/// rounds) bit-identical to the pre-tree implementation.
+fn partial_over(results: &[Measured], lo: usize, hi: usize) -> Partial {
+    debug_assert!(lo < hi && hi <= results.len());
+    if hi - lo == 1 {
+        return Partial::leaf(&results[lo]);
+    }
+    let mid = lo + (hi - lo + 1) / 2;
+    Partial::merge(partial_over(results, lo, mid), partial_over(results, mid, hi))
+}
+
+/// Cut `results[lo..hi]` into exactly `shards` contiguous ranges whose
+/// boundaries are interior nodes of [`partial_over`]'s tree: recurse
+/// down the same ceiling midpoints, sending `ceil(shards / 2)` shards
+/// left. Both sides stay feasible (`1 ≤ shards ≤ elements`) because the
+/// left half holds `ceil(n / 2) ≥ ceil(shards / 2)` elements and the
+/// right half `floor(n / 2) ≥ floor(shards / 2)`.
+fn shard_bounds(lo: usize, hi: usize, shards: usize, out: &mut Vec<(usize, usize)>) {
+    debug_assert!(shards >= 1 && shards <= hi - lo);
+    if shards == 1 {
+        out.push((lo, hi));
+        return;
+    }
+    let mid = lo + (hi - lo + 1) / 2;
+    let left = (shards + 1) / 2;
+    shard_bounds(lo, mid, left, out);
+    shard_bounds(mid, hi, shards - left, out);
+}
+
+/// Merge per-shard partials by mirroring [`shard_bounds`]'s recursion:
+/// the first `ceil(k / 2)` partials are exactly the left half's shards,
+/// so this rebuilds the flat tree's interior nodes bottom-up.
+fn merge_partials(parts: &[Partial]) -> Partial {
+    debug_assert!(!parts.is_empty());
+    if parts.len() == 1 {
+        return parts[0];
+    }
+    let left = parts.len().div_ceil(2);
+    Partial::merge(merge_partials(&parts[..left]), merge_partials(&parts[left..]))
+}
+
+/// Turn a full-fleet partial into the observation the optimizer sees:
+/// metric means, with one crashed member prohibiting the config
+/// fleet-wide (the surviving boards still draw power).
+fn finish(p: Partial) -> Measured {
+    let n = p.n as f64;
+    if let Some(failed) = p.failed {
+        return Measured {
+            config: p.config,
+            throughput_fps: 0.0,
+            power_mw: p.power_mw / n,
+            latency_ms: f64::INFINITY,
+            gpu_util: 0.0,
+            cpu_util: 0.0,
+            mem_util: 0.0,
+            failed: Some(failed),
+        };
+    }
+    Measured {
+        config: p.config,
+        throughput_fps: p.throughput_fps / n,
+        power_mw: p.power_mw / n,
+        latency_ms: p.latency_ms / n,
+        gpu_util: p.gpu_util / n,
+        cpu_util: p.cpu_util / n,
+        mem_util: p.mem_util / n,
+        failed: None,
     }
 }
 
@@ -623,50 +814,64 @@ impl FleetEnv {
     /// measure through their cache layers (`measure`) or past them
     /// (`measure_fresh`) — both hold-phase and search-phase windows
     /// share every other line of this.
+    ///
+    /// Parallel fleets dispatch one index batch over the persistent
+    /// pool: zero thread spawns per proposal and O(1) per-member
+    /// dispatch — the only per-proposal allocation proportional to
+    /// fleet size is the results vec itself. Each job decodes its own
+    /// member's native config *inside* the job
+    /// ([`NormSpace::decode_for`] is pure, so the steal schedule cannot
+    /// influence what a member measures), measures the member behind
+    /// its lock (each index is claimed exactly once — every lock is
+    /// uncontended), and stores the window into its index slot.
     fn measure_members(&mut self, cfg: HwConfig, fresh: bool) -> Measured {
-        // Pure per-member decode (identity for homogeneous fleets)
-        // happens before any thread is spawned, so the parallel schedule
-        // cannot influence which native config a member measures.
-        let natives = self.decoded(cfg);
-        let results: Vec<Measured> = if self.parallel && self.members.len() > 1 {
-            // One thread per member; members are moved out and rejoined
-            // in order, so aggregation order never depends on timing.
-            let handles: Vec<_> = self
-                .members
-                .drain(..)
-                .zip(natives)
-                .map(|(mut env, native)| {
-                    std::thread::spawn(move || {
-                        let m = if fresh {
-                            env.measure_fresh(native)
-                        } else {
-                            env.measure(native)
-                        };
-                        (env, m)
-                    })
-                })
-                .collect();
-            let mut out = Vec::with_capacity(handles.len());
-            for h in handles {
-                let (env, m) = h.join().expect("fleet member panicked");
-                self.members.push(env);
-                out.push(m);
-            }
-            out
+        let n = self.members.len();
+        let results: Vec<Measured> = if self.parallel && n > 1 {
+            let workers = self.workers;
+            let pool = self.pool.get_or_insert_with(|| match workers {
+                Some(w) => FleetPool::new(w),
+                None => FleetPool::auto(),
+            });
+            let members = Arc::clone(&self.members);
+            let norm = self.norm.clone();
+            let slots: Arc<Mutex<Vec<Option<Measured>>>> = Arc::new(Mutex::new(vec![None; n]));
+            let out = Arc::clone(&slots);
+            pool.run(n, move |i| {
+                let native = match &norm {
+                    Some(ns) => ns.decode_for(i, &cfg),
+                    None => cfg,
+                };
+                let mut env = lock(&members[i]);
+                let m = if fresh {
+                    env.measure_fresh(native)
+                } else {
+                    env.measure(native)
+                };
+                lock(&out)[i] = Some(m);
+            });
+            std::mem::take(&mut *lock(&slots))
+                .into_iter()
+                .map(|m| m.expect("every member measured"))
+                .collect()
         } else {
             self.members
-                .iter_mut()
-                .zip(&natives)
-                .map(|(env, native)| {
+                .iter()
+                .enumerate()
+                .map(|(i, member)| {
+                    let native = match &self.norm {
+                        Some(ns) => ns.decode_for(i, &cfg),
+                        None => cfg,
+                    };
+                    let mut env = lock(member);
                     if fresh {
-                        env.measure_fresh(*native)
+                        env.measure_fresh(native)
                     } else {
-                        env.measure(*native)
+                        env.measure(native)
                     }
                 })
                 .collect()
         };
-        let mut m = FleetEnv::combine(&results);
+        let mut m = self.combine_results(results);
         if self.norm.is_some() {
             // Per-member windows carry per-member *native* configs; the
             // observation the optimizer sees must echo its normalized
@@ -674,6 +879,28 @@ impl FleetEnv {
             m.config = self.space.snap_config(cfg.as_vec());
         }
         m
+    }
+
+    /// Aggregate one proposal's member windows. Small fleets combine
+    /// flat on this thread; at [`HIER_COMBINE_MIN`] members and above a
+    /// parallel fleet computes per-shard partials on the pool (one
+    /// shard per worker) and merges across shards — byte-identical to
+    /// flat by the [`shard_bounds`] construction.
+    fn combine_results(&self, results: Vec<Measured>) -> Measured {
+        let n = results.len();
+        let pool = match &self.pool {
+            Some(pool) if self.parallel && n >= HIER_COMBINE_MIN => pool,
+            _ => return FleetEnv::combine(&results),
+        };
+        let shards = pool.workers().clamp(1, n);
+        let mut bounds = Vec::with_capacity(shards);
+        shard_bounds(0, n, shards, &mut bounds);
+        let results = Arc::new(results);
+        let parts: Vec<Partial> = pool.map(bounds, {
+            let results = Arc::clone(&results);
+            move |_, (lo, hi)| partial_over(&results, lo, hi)
+        });
+        finish(merge_partials(&parts))
     }
 }
 
@@ -693,7 +920,7 @@ impl Environment for FleetEnv {
     /// Fleet members measure concurrently, so wall-clock cost is the
     /// slowest member, not the sum.
     fn cost_s(&self) -> f64 {
-        self.members.iter().map(|m| m.cost_s()).fold(0.0, f64::max)
+        self.members.iter().map(|m| lock(m).cost_s()).fold(0.0, f64::max)
     }
 
     /// The ordered member fingerprints plus the encoding flag: two
@@ -701,15 +928,15 @@ impl Environment for FleetEnv {
     /// workload) and the proposal encoding match.
     fn fingerprint(&self) -> u64 {
         let mut words = vec![self.members.len() as u64, self.norm.is_some() as u64];
-        words.extend(self.members.iter().map(|m| m.fingerprint()));
+        words.extend(self.members.iter().map(|m| lock(m).fingerprint()));
         super::cache::stable_hash(&words)
     }
 
     /// Forwarded to every member: fleet-level drift invalidates each
     /// member's cache layer (if any).
     fn bump_epoch(&mut self) {
-        for m in &mut self.members {
-            m.bump_epoch();
+        for m in self.members.iter() {
+            lock(m).bump_epoch();
         }
     }
 
@@ -718,7 +945,7 @@ impl Environment for FleetEnv {
     fn cache_stats(&self) -> Option<super::CacheStats> {
         self.members
             .iter()
-            .filter_map(|m| m.cache_stats())
+            .filter_map(|m| lock(m).cache_stats())
             .reduce(|a, b| a.merged(&b))
     }
 }
@@ -823,7 +1050,7 @@ mod tests {
         assert_eq!(fleet.space().device(), DeviceKind::XavierNx);
         let cfg = fleet.space().midpoint();
         assert_eq!(fleet.decoded(cfg), vec![cfg, cfg]);
-        assert_eq!(fleet.members().len(), 2);
+        assert_eq!(fleet.len(), 2);
     }
 
     #[test]
@@ -878,10 +1105,11 @@ mod tests {
         assert_eq!(fleet.cache_stats().expect("still cached").epoch, 1);
         fleet.measure(cfg);
         assert_eq!(fleet.cache_stats().unwrap().misses, 6, "post-bump windows re-measure");
-        assert!(fleet
-            .members()
-            .iter()
-            .all(|m| m.cache_stats().map_or(false, |s| s.epoch == 1)));
+        for i in 0..fleet.len() {
+            let epoch_bumped =
+                fleet.with_member(i, |m| m.cache_stats().is_some_and(|s| s.epoch == 1));
+            assert!(epoch_bumped, "member {i} cache layer missed the epoch bump");
+        }
     }
 
     #[test]
@@ -905,6 +1133,80 @@ mod tests {
         for _ in 0..6 {
             let cfg = space.random(&mut rng);
             assert_eq!(par.measure(cfg), seq.measure(cfg), "{cfg:?}");
+        }
+        assert_eq!(par.cost_s(), seq.cost_s());
+    }
+
+    #[test]
+    fn fleet_builds_one_pool_lazily_and_reuses_it() {
+        let mut fleet =
+            FleetEnv::replicas(DeviceKind::OrinNano, ModelKind::Yolo, 6, 11).with_workers(2);
+        assert_eq!(fleet.spawned_threads(), 0, "pool is lazy");
+        assert_eq!(fleet.pool_workers(), 0);
+        let cfg = fleet.space().midpoint();
+        for _ in 0..5 {
+            fleet.measure(cfg);
+            assert_eq!(fleet.spawned_threads(), 2, "one pool, built once");
+            assert_eq!(fleet.pool_workers(), 2);
+        }
+        // Sequential fleets never build a pool at all.
+        let mut seq = FleetEnv::replicas(DeviceKind::OrinNano, ModelKind::Yolo, 6, 11).sequential();
+        seq.measure(cfg);
+        assert_eq!(seq.spawned_threads(), 0);
+    }
+
+    /// The hierarchical-aggregation contract: cutting the combine tree
+    /// into any number of shards and re-merging is byte-identical to
+    /// the flat combine — including failure propagation (first failure
+    /// in member order wins, survivors' power still averages in).
+    #[test]
+    fn sharded_combine_is_byte_identical_to_flat_for_every_shard_count() {
+        use crate::util::prop;
+        let cfg = DeviceKind::OrinNano.preset_default();
+        prop::check("sharded combine matches flat", 120, |g| {
+            let n = g.rng.range_usize(1, 40);
+            let results: Vec<Measured> = (0..n)
+                .map(|_| Measured {
+                    config: cfg,
+                    throughput_fps: g.rng.range_f64(0.1, 90.0),
+                    power_mw: g.rng.range_f64(800.0, 16_000.0),
+                    latency_ms: g.rng.range_f64(2.0, 220.0),
+                    gpu_util: g.rng.f64(),
+                    cpu_util: g.rng.f64(),
+                    mem_util: g.rng.f64(),
+                    failed: if g.rng.chance(0.1) {
+                        Some(FailureKind::OutOfMemory)
+                    } else {
+                        None
+                    },
+                })
+                .collect();
+            let flat = FleetEnv::combine(&results);
+            for shards in 1..=n + 2 {
+                let sharded = FleetEnv::combine_sharded(&results, shards);
+                prop::assert_true(
+                    format!("{flat:?}") == format!("{sharded:?}"),
+                    "sharded combine diverged from flat",
+                )?;
+            }
+            Ok(())
+        });
+    }
+
+    /// At `HIER_COMBINE_MIN` members and beyond, the parallel fleet
+    /// measures *and aggregates* on the pool — and must still be
+    /// byte-identical to the plain sequential fleet.
+    #[test]
+    fn large_fleet_hierarchical_path_matches_sequential_byte_for_byte() {
+        const PAIR: [DeviceKind; 2] = [DeviceKind::XavierNx, DeviceKind::OrinNano];
+        let n = HIER_COMBINE_MIN + 88;
+        let kinds: Vec<DeviceKind> = (0..n).map(|i| PAIR[i % 2]).collect();
+        let mut par = FleetEnv::mixed(&kinds, ModelKind::Yolo, 0xF1EE7).with_workers(3);
+        let mut seq = FleetEnv::mixed(&kinds, ModelKind::Yolo, 0xF1EE7).sequential();
+        let cfg = par.space().midpoint();
+        for _ in 0..2 {
+            assert_eq!(par.measure(cfg), seq.measure(cfg), "hierarchical path diverged");
+            assert_eq!(par.spawned_threads(), 3, "zero spawns after pool construction");
         }
         assert_eq!(par.cost_s(), seq.cost_s());
     }

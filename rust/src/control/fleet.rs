@@ -1,9 +1,11 @@
-//! Fleet-parallel control: run many independent control loops on OS
-//! threads without changing a single number.
+//! Fleet-parallel control: run many independent control loops on a
+//! persistent worker pool without changing a single number.
 //!
 //! Every job owns its RNG seed and results land by job index, so the
-//! parallel schedule affects wall-clock only — `fleet_sweep` over any
-//! worker count is asserted byte-identical to the sequential run.
+//! parallel schedule — including work stealing on the underlying
+//! [`FleetPool`](super::FleetPool) — affects wall-clock only:
+//! `fleet_sweep` over any worker count is asserted byte-identical to
+//! the sequential run.
 //! (This is the *many independent searches* axis; one search observing
 //! many boards per window is [`super::FleetEnv`]. EXPERIMENTS.md
 //! §Closed-loop serving covers both.)
@@ -13,7 +15,7 @@
 //! shared [`CacheStore`], so re-running the sweep replays every window
 //! from the store (EXPERIMENTS.md §Measurement cache, `bench_cache`).
 
-use std::sync::Arc;
+use std::sync::OnceLock;
 
 use crate::device::Device;
 use crate::experiments::scenarios::DualScenario;
@@ -22,39 +24,52 @@ use crate::optimizer::{Constraints, CoralOptimizer};
 use super::cache::{CacheStore, CachedEnv};
 use super::engine::{ControlLoop, DEFAULT_BUDGET};
 use super::env::{Environment, SimEnv};
+use super::pool::{auto_workers, FleetPool};
 
-/// A deterministic parallel job runner over OS threads.
+/// A deterministic parallel job runner over a persistent [`FleetPool`].
+///
+/// The pool is built lazily on the first parallel [`FleetRunner::map`]
+/// and reused for every later call — zero further thread spawns for the
+/// runner's whole lifetime, which is what lets `fleet_sweep` and
+/// `TenantArbiter` rounds scale past the paper's 2-board experiments.
 pub struct FleetRunner {
     workers: usize,
+    pool: OnceLock<FleetPool>,
 }
 
 impl FleetRunner {
     pub fn new(workers: usize) -> FleetRunner {
         assert!(workers >= 1, "need at least one worker");
-        FleetRunner { workers }
+        FleetRunner { workers, pool: OnceLock::new() }
     }
 
-    /// One worker per available CPU (at least 2).
+    /// One worker per available CPU (at least 2); the
+    /// `CORAL_FLEET_WORKERS` env var overrides, clamped ≥ 1, so CI and
+    /// benches pin worker counts reproducibly (EXPERIMENTS.md
+    /// §Fleet-scale sweeps).
     pub fn auto() -> FleetRunner {
-        let workers = std::thread::available_parallelism()
-            .map(|n| n.get())
-            .unwrap_or(2);
-        FleetRunner::new(workers.max(2))
+        FleetRunner::new(auto_workers())
     }
 
     pub fn workers(&self) -> usize {
         self.workers
     }
 
+    /// Threads this runner's pool has ever spawned: 0 until the first
+    /// parallel `map`, then exactly [`FleetRunner::workers`] forever.
+    pub fn spawned_threads(&self) -> u64 {
+        self.pool.get().map_or(0, FleetPool::spawned_threads)
+    }
+
+    fn pool(&self) -> &FleetPool {
+        self.pool.get_or_init(|| FleetPool::new(self.workers))
+    }
+
     /// Parallel map preserving job order. Results are byte-identical for
-    /// any worker count: each job is self-contained (own seed, own
-    /// device state) and lands in its slot by index, so thread timing
-    /// cannot reorder or perturb anything.
-    ///
-    /// Deliberately `std::thread::spawn` + owned jobs (hence the
-    /// `'static` bounds) rather than scoped threads: it matches the
-    /// ownership-passing thread idiom used across the coordinator and
-    /// keeps the minimum-toolchain floor low for offline builds.
+    /// any worker count and any steal schedule: each job is
+    /// self-contained (own seed, own device state) and lands in its slot
+    /// by index, so thread timing cannot reorder or perturb anything
+    /// (the [`super::pool`] determinism contract).
     pub fn map<J, R, F>(&self, jobs: Vec<J>, f: F) -> Vec<R>
     where
         J: Send + 'static,
@@ -64,37 +79,7 @@ impl FleetRunner {
         if self.workers == 1 || jobs.len() <= 1 {
             return jobs.into_iter().map(f).collect();
         }
-        let n = jobs.len();
-        let f = Arc::new(f);
-        // Strided round-robin partition keeps per-worker load even when
-        // job cost varies systematically along the list. Never spawn
-        // more threads than there are jobs.
-        let workers = self.workers.min(n);
-        let mut buckets: Vec<Vec<(usize, J)>> = (0..workers).map(|_| Vec::new()).collect();
-        for (i, job) in jobs.into_iter().enumerate() {
-            buckets[i % workers].push((i, job));
-        }
-        let mut handles = Vec::with_capacity(buckets.len());
-        for bucket in buckets {
-            let f = Arc::clone(&f);
-            handles.push(std::thread::spawn(move || {
-                bucket
-                    .into_iter()
-                    .map(|(i, job)| (i, f(job)))
-                    .collect::<Vec<(usize, R)>>()
-            }));
-        }
-        let mut slots: Vec<Option<R>> = Vec::with_capacity(n);
-        slots.resize_with(n, || None);
-        for h in handles {
-            for (i, r) in h.join().expect("fleet worker panicked") {
-                slots[i] = Some(r);
-            }
-        }
-        slots
-            .into_iter()
-            .map(|r| r.expect("every job produced a result"))
-            .collect()
+        self.pool().map(jobs, move |_, job| f(job))
     }
 }
 
@@ -239,7 +224,22 @@ mod tests {
             assert_eq!(seq, par, "{workers} workers");
         }
         assert_eq!(seq[22], 22 * 22 + 1);
-        assert!(FleetRunner::auto().workers() >= 2);
+        assert!(FleetRunner::auto().workers() >= 1);
+    }
+
+    #[test]
+    fn runner_reuses_one_pool_across_calls() {
+        let runner = FleetRunner::new(3);
+        assert_eq!(runner.spawned_threads(), 0, "pool is lazy");
+        for pass in 0..5u64 {
+            let got = runner.map((0..40u64).collect(), move |j| j + pass);
+            assert_eq!(got[39], 39 + pass);
+            assert_eq!(runner.spawned_threads(), 3, "pass {pass} spawned threads");
+        }
+        // The sequential fast path never builds a pool at all.
+        let seq = FleetRunner::new(1);
+        seq.map((0..10u64).collect(), |j| j);
+        assert_eq!(seq.spawned_threads(), 0);
     }
 
     #[test]

@@ -28,8 +28,13 @@
 //!   uniform search-cost accounting, trace recording, an event log, and
 //!   hold phases with windowed-throughput drift detection that
 //!   re-trigger search.
+//! * [`FleetPool`] is the persistent work-stealing pool every parallel
+//!   path above dispatches on — workers spawn once, every later batch
+//!   is O(1)-dispatch index jobs, and results are byte-identical to
+//!   sequential for every worker count and steal schedule
+//!   (EXPERIMENTS.md §Fleet-scale sweeps).
 //! * [`FleetRunner`] / [`fleet_sweep`] run many independent loops
-//!   thread-parallel with deterministic per-job seeding — results are
+//!   pool-parallel with deterministic per-job seeding — results are
 //!   byte-identical to the sequential run, only faster.
 //! * [`TenantArbiter`] arbitrates several loops sharing one power
 //!   envelope: per-round budget splitting (static / demand-weighted /
@@ -44,6 +49,7 @@ pub mod cache;
 pub mod engine;
 pub mod env;
 pub mod fleet;
+pub mod pool;
 pub mod tenant;
 #[cfg(any(test, feature = "testkit"))]
 pub mod testkit;
@@ -55,6 +61,7 @@ pub use engine::{
 };
 pub use env::{Environment, FleetEnv, LiveEnv, SimEnv};
 pub use fleet::{fleet_sweep, fleet_sweep_cached, FleetRunner, FleetStats};
+pub use pool::{auto_workers, BatchTicket, FleetPool, PoolWatcher};
 pub use tenant::{
     BudgetPolicy, RoundReport, Tenant, TenantArbiter, TenantRound, MAX_DRIFT_RESTARTS,
     WATERFILL_HEADROOM,

@@ -1,0 +1,535 @@
+//! The persistent work-stealing pool behind every fleet-parallel path.
+//!
+//! [`FleetRunner`](super::FleetRunner) sweeps, [`FleetEnv`](super::FleetEnv)
+//! member fan-out and [`TenantArbiter`](super::TenantArbiter) rounds used
+//! to spawn fresh `std::thread`s per call — fine for the paper's 2-board
+//! experiments, fatal at production fleet sizes where spawn cost dominates
+//! the microsecond-scale simulated windows. [`FleetPool`] spawns its
+//! workers **once** and dispatches every later batch over them:
+//!
+//! * **Injector + per-worker deques.** A batch of `n` index jobs is cut
+//!   into contiguous ranges, one deque per worker. Owners pop single
+//!   indices off the *front* of their own deque; an idle worker steals
+//!   the back *half* of the first non-empty victim deque (classic deque
+//!   discipline, mutex-backed — the offline mirror has no lock-free
+//!   Chase–Lev to lean on, and jobs here are coarse enough that a
+//!   sub-microsecond mutex pop is noise).
+//! * **Determinism by construction.** Jobs carry their index and write
+//!   into index slots; each job owns its state (seed, member, device).
+//!   The steal schedule decides only *which thread* runs a job, never
+//!   what the job computes or where its result lands, so results are
+//!   byte-identical to sequential for every worker count and every steal
+//!   schedule. Property-tested under an adversarial scripted scheduler
+//!   (seeded per-job delays that force steals) in this module and in
+//!   `tests/fleet_pool.rs`.
+//! * **The submitter helps.** [`BatchTicket::join`] claims and runs jobs
+//!   like any worker, so completion never depends on pool workers being
+//!   free — nested `run` calls from inside a job cannot deadlock, and a
+//!   ticket outliving a dropped pool still finishes its batch.
+//! * **Teardown.** Dropping the pool mirrors the coordinator
+//!   `WorkerPool` contract: close the injector, wake parked workers,
+//!   never join (a worker stuck inside a job must not block the
+//!   dropper). Workers finish the batch they are helping, observe the
+//!   closed injector, and exit on their own.
+//!
+//! `bench_fleet_scale` tracks the two numbers this module exists for:
+//! thread spawns after construction (must be zero, even at 10,000
+//! members) and per-round wall time vs fleet size (must grow
+//! sub-linearly). EXPERIMENTS.md §Fleet-scale sweeps has the curves.
+
+use std::collections::VecDeque;
+use std::panic::{self, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+
+/// Poison-tolerant lock: a panicked job must not wedge the pool (same
+/// helper the coordinator's `WorkerPool` uses).
+pub(crate) fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    match m.lock() {
+        Ok(g) => g,
+        Err(poisoned) => poisoned.into_inner(),
+    }
+}
+
+/// Parse a `CORAL_FLEET_WORKERS`-style override. Any parseable value is
+/// honored but clamped ≥ 1; unset or unparseable means "no override".
+fn worker_override(raw: Option<&str>) -> Option<usize> {
+    raw.and_then(|v| v.trim().parse::<usize>().ok())
+        .map(|w| w.max(1))
+}
+
+/// Worker count for [`FleetPool::auto`] (and `FleetRunner::auto`): the
+/// `CORAL_FLEET_WORKERS` env var when set (clamped ≥ 1, so CI and
+/// benches pin worker counts reproducibly — EXPERIMENTS.md §Fleet-scale
+/// sweeps), else one per available CPU, at least 2.
+pub fn auto_workers() -> usize {
+    let env = std::env::var("CORAL_FLEET_WORKERS").ok();
+    if let Some(w) = worker_override(env.as_deref()) {
+        return w;
+    }
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(2)
+        .max(2)
+}
+
+/// Completion accounting of one batch, behind one mutex so the final
+/// `complete` and the joiner's wakeup cannot miss each other.
+struct BatchDone {
+    completed: usize,
+    poisoned: bool,
+}
+
+/// One submitted batch: `total` index jobs behind per-worker deques of
+/// half-open index ranges.
+struct Batch {
+    /// Runs job `i`. Captures the caller's shared state (jobs in, index
+    /// slots out) — the pool itself never sees job payloads or results.
+    task: Box<dyn Fn(usize) + Send + Sync>,
+    /// Per-worker deques. Owners pop indices off the front range;
+    /// thieves split the back range (see module docs).
+    queues: Vec<Mutex<VecDeque<(usize, usize)>>>,
+    total: usize,
+    done: Mutex<BatchDone>,
+    done_cv: Condvar,
+}
+
+impl Batch {
+    fn new(total: usize, queues: usize, task: Box<dyn Fn(usize) + Send + Sync>) -> Batch {
+        let queues = queues.min(total.max(1)).max(1);
+        let deques = (0..queues)
+            .map(|q| {
+                // Contiguous near-even split; stealing rebalances from
+                // there, so initial placement only has to be fair.
+                let lo = q * total / queues;
+                let hi = (q + 1) * total / queues;
+                let mut dq = VecDeque::new();
+                if lo < hi {
+                    dq.push_back((lo, hi));
+                }
+                Mutex::new(dq)
+            })
+            .collect();
+        Batch {
+            task,
+            queues: deques,
+            total,
+            done: Mutex::new(BatchDone { completed: 0, poisoned: false }),
+            done_cv: Condvar::new(),
+        }
+    }
+
+    /// Pop one index off the front of deque `q` (owner side).
+    fn pop_front(&self, q: usize) -> Option<usize> {
+        let mut dq = lock(&self.queues[q]);
+        let &(s, e) = dq.front()?;
+        if s + 1 == e {
+            dq.pop_front();
+        } else {
+            dq.front_mut().expect("nonempty deque").0 = s + 1;
+        }
+        Some(s)
+    }
+
+    /// Steal from the back of deque `victim`: the whole back range if it
+    /// is a single index, else its back half (the victim keeps the
+    /// front half — steal-half amortizes steals at scale).
+    fn steal_back(&self, victim: usize) -> Option<(usize, usize)> {
+        let mut dq = lock(&self.queues[victim]);
+        let &(s, e) = dq.back()?;
+        if e - s <= 1 {
+            dq.pop_back();
+            return Some((s, e));
+        }
+        let mid = s + (e - s) / 2;
+        dq.back_mut().expect("nonempty deque").1 = mid;
+        Some((mid, e))
+    }
+
+    /// Claim one index: own deque first, then scan victims in ring
+    /// order. A stolen multi-index range parks its remainder on the
+    /// claimant's own deque (where it can be stolen from in turn).
+    fn claim(&self, home: usize, steals: &AtomicU64) -> Option<usize> {
+        let k = self.queues.len();
+        let home = home % k;
+        if let Some(i) = self.pop_front(home) {
+            return Some(i);
+        }
+        for off in 1..k {
+            if let Some((s, e)) = self.steal_back((home + off) % k) {
+                steals.fetch_add(1, Ordering::Relaxed);
+                if e - s > 1 {
+                    lock(&self.queues[home]).push_back((s + 1, e));
+                }
+                return Some(s);
+            }
+        }
+        None
+    }
+
+    /// No unclaimed indices left (claimed-but-running jobs may remain;
+    /// completion is what `done` tracks).
+    fn drained(&self) -> bool {
+        self.queues.iter().all(|q| lock(q).is_empty())
+    }
+
+    /// Run claimed job `i`, containing panics: a poisoned batch still
+    /// completes (so joiners wake) and the worker thread survives to
+    /// serve later batches.
+    fn run_one(&self, i: usize) {
+        let ok = panic::catch_unwind(AssertUnwindSafe(|| (self.task)(i))).is_ok();
+        let mut d = lock(&self.done);
+        d.completed += 1;
+        d.poisoned |= !ok;
+        if d.completed == self.total {
+            self.done_cv.notify_all();
+        }
+    }
+}
+
+/// Claim-and-run until the batch has no unclaimed jobs. Used identically
+/// by pool workers and by joining submitter threads.
+fn help(batch: &Batch, home: usize, steals: &AtomicU64) {
+    while let Some(i) = batch.claim(home, steals) {
+        batch.run_one(i);
+    }
+}
+
+/// The injector: submitted batches awaiting workers, plus the closed
+/// flag that tears the pool down.
+struct Injector {
+    batches: VecDeque<Arc<Batch>>,
+    closed: bool,
+}
+
+struct PoolShared {
+    injector: Mutex<Injector>,
+    work_cv: Condvar,
+    /// Threads ever spawned — exactly the worker count for the pool's
+    /// whole lifetime (`bench_fleet_scale` asserts it never moves after
+    /// construction).
+    spawned: AtomicU64,
+    /// Workers currently running their loop; drops to 0 after teardown
+    /// (the Drop regression test watches this through [`PoolWatcher`]).
+    alive: AtomicUsize,
+    /// Successful steals across all batches (diagnostics only — steals
+    /// can never affect results, only wall-clock).
+    steals: AtomicU64,
+}
+
+fn worker_loop(shared: &Arc<PoolShared>, home: usize) {
+    loop {
+        let batch = {
+            let mut inj = lock(&shared.injector);
+            loop {
+                // Retire drained batches off the front so parked workers
+                // never spin on exhausted work.
+                while inj.batches.front().is_some_and(|b| b.drained()) {
+                    inj.batches.pop_front();
+                }
+                if let Some(b) = inj.batches.front() {
+                    break Arc::clone(b);
+                }
+                if inj.closed {
+                    return;
+                }
+                inj = match shared.work_cv.wait(inj) {
+                    Ok(g) => g,
+                    Err(poisoned) => poisoned.into_inner(),
+                };
+            }
+        };
+        help(&batch, home, &shared.steals);
+    }
+}
+
+/// A persistent work-stealing pool of OS threads (see module docs).
+///
+/// Construction spawns the workers; every later [`FleetPool::run`] /
+/// [`FleetPool::map`] dispatches over them with zero thread spawns and
+/// O(1) per-job dispatch (an index pop), for any batch size.
+pub struct FleetPool {
+    shared: Arc<PoolShared>,
+    workers: usize,
+}
+
+impl FleetPool {
+    pub fn new(workers: usize) -> FleetPool {
+        assert!(workers >= 1, "need at least one worker");
+        let shared = Arc::new(PoolShared {
+            injector: Mutex::new(Injector { batches: VecDeque::new(), closed: false }),
+            work_cv: Condvar::new(),
+            spawned: AtomicU64::new(0),
+            alive: AtomicUsize::new(0),
+            steals: AtomicU64::new(0),
+        });
+        for home in 0..workers {
+            shared.spawned.fetch_add(1, Ordering::Relaxed);
+            shared.alive.fetch_add(1, Ordering::Relaxed);
+            let sh = Arc::clone(&shared);
+            std::thread::Builder::new()
+                .name(format!("fleet-pool-{home}"))
+                .spawn(move || {
+                    // Decrement on every exit path, including a panic
+                    // unwinding out of the loop itself.
+                    struct Alive(Arc<PoolShared>);
+                    impl Drop for Alive {
+                        fn drop(&mut self) {
+                            self.0.alive.fetch_sub(1, Ordering::Release);
+                        }
+                    }
+                    let _alive = Alive(Arc::clone(&sh));
+                    worker_loop(&sh, home);
+                })
+                .expect("spawn fleet pool worker");
+        }
+        FleetPool { shared, workers }
+    }
+
+    /// A pool sized by [`auto_workers`] (`CORAL_FLEET_WORKERS` override,
+    /// else available parallelism).
+    pub fn auto() -> FleetPool {
+        FleetPool::new(auto_workers())
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Threads this pool has ever spawned — equals [`FleetPool::workers`]
+    /// forever; the fleet-scale bench asserts exactly that.
+    pub fn spawned_threads(&self) -> u64 {
+        self.shared.spawned.load(Ordering::Relaxed)
+    }
+
+    /// Successful steals so far (diagnostics; cannot affect results).
+    pub fn steals(&self) -> u64 {
+        self.shared.steals.load(Ordering::Relaxed)
+    }
+
+    /// A counters-only view that may outlive the pool (the teardown
+    /// regression test asserts `alive_workers` reaches 0 after drop).
+    pub fn watcher(&self) -> PoolWatcher {
+        PoolWatcher { shared: Arc::clone(&self.shared) }
+    }
+
+    /// Submit `total` index jobs without blocking; `task(i)` runs exactly
+    /// once for every `i < total`, on any worker or on the thread that
+    /// joins the ticket.
+    pub fn submit(
+        &self,
+        total: usize,
+        task: impl Fn(usize) + Send + Sync + 'static,
+    ) -> BatchTicket {
+        let queues = self.workers.min(total.max(1));
+        let batch = Arc::new(Batch::new(total, queues, Box::new(task)));
+        {
+            let mut inj = lock(&self.shared.injector);
+            assert!(!inj.closed, "submit on a closed FleetPool");
+            if total > 0 {
+                inj.batches.push_back(Arc::clone(&batch));
+            }
+        }
+        self.shared.work_cv.notify_all();
+        BatchTicket { batch, shared: Arc::clone(&self.shared) }
+    }
+
+    /// Run `total` index jobs to completion. The calling thread helps
+    /// (claims and runs jobs like any worker), so progress never depends
+    /// on workers being free — including nested `run` calls from inside
+    /// a job.
+    pub fn run(&self, total: usize, task: impl Fn(usize) + Send + Sync + 'static) {
+        self.submit(total, task).join();
+    }
+
+    /// Parallel map preserving job order. Results land by index, so the
+    /// output is byte-identical for every worker count and every steal
+    /// schedule; panicking jobs propagate as a panic after the batch
+    /// completes.
+    pub fn map<J, R, F>(&self, jobs: Vec<J>, f: F) -> Vec<R>
+    where
+        J: Send + 'static,
+        R: Send + 'static,
+        F: Fn(usize, J) -> R + Send + Sync + 'static,
+    {
+        let n = jobs.len();
+        let jobs: Arc<Mutex<Vec<Option<J>>>> =
+            Arc::new(Mutex::new(jobs.into_iter().map(Some).collect()));
+        let slots: Arc<Mutex<Vec<Option<R>>>> =
+            Arc::new(Mutex::new((0..n).map(|_| None).collect()));
+        let out = Arc::clone(&slots);
+        self.run(n, move |i| {
+            let job = lock(&jobs)[i].take().expect("each job claimed once");
+            let r = f(i, job);
+            lock(&slots)[i] = Some(r);
+        });
+        std::mem::take(&mut *lock(&out))
+            .into_iter()
+            .map(|r| r.expect("every job produced a result"))
+            .collect()
+    }
+}
+
+impl Drop for FleetPool {
+    /// Close the injector and wake every parked worker; never join (the
+    /// coordinator `WorkerPool` contract — a worker stuck inside a job
+    /// must not block the dropper). Workers finish the batch they are
+    /// helping, then observe the closed injector and exit on their own;
+    /// queued batches are abandoned unless an outstanding
+    /// [`BatchTicket::join`] claims their jobs itself.
+    fn drop(&mut self) {
+        lock(&self.shared.injector).closed = true;
+        self.shared.work_cv.notify_all();
+    }
+}
+
+/// Handle to one submitted batch (see [`FleetPool::submit`]).
+pub struct BatchTicket {
+    batch: Arc<Batch>,
+    shared: Arc<PoolShared>,
+}
+
+impl BatchTicket {
+    /// Help run the batch to completion, then wait for stragglers
+    /// claimed by workers. Valid even after the pool is dropped: the
+    /// joiner claims everything the workers abandoned. Panics if any
+    /// job panicked.
+    pub fn join(self) {
+        help(&self.batch, 0, &self.shared.steals);
+        let mut d = lock(&self.batch.done);
+        while d.completed < self.batch.total {
+            d = match self.batch.done_cv.wait(d) {
+                Ok(g) => g,
+                Err(poisoned) => poisoned.into_inner(),
+            };
+        }
+        let poisoned = d.poisoned;
+        drop(d);
+        // Retire the (fully drained) batch now rather than at the next
+        // worker wakeup, so its captured state is freed promptly.
+        let mut inj = lock(&self.shared.injector);
+        if let Some(pos) = inj.batches.iter().position(|b| Arc::ptr_eq(b, &self.batch)) {
+            inj.batches.remove(pos);
+        }
+        drop(inj);
+        if poisoned {
+            panic!("fleet pool job panicked");
+        }
+    }
+}
+
+/// Counters-only view of a pool's worker accounting; may outlive the
+/// pool itself.
+pub struct PoolWatcher {
+    shared: Arc<PoolShared>,
+}
+
+impl PoolWatcher {
+    pub fn alive_workers(&self) -> usize {
+        self.shared.alive.load(Ordering::Acquire)
+    }
+
+    pub fn spawned_threads(&self) -> u64 {
+        self.shared.spawned.load(Ordering::Relaxed)
+    }
+
+    pub fn steals(&self) -> u64 {
+        self.shared.steals.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use std::sync::atomic::AtomicUsize;
+    use std::time::Duration;
+
+    #[test]
+    fn worker_override_parses_and_clamps() {
+        assert_eq!(worker_override(None), None);
+        assert_eq!(worker_override(Some("")), None);
+        assert_eq!(worker_override(Some("not a number")), None);
+        assert_eq!(worker_override(Some("0")), Some(1), "clamped ≥ 1");
+        assert_eq!(worker_override(Some("1")), Some(1));
+        assert_eq!(worker_override(Some(" 12 ")), Some(12));
+        assert!(auto_workers() >= 1);
+    }
+
+    #[test]
+    fn map_is_index_slotted_for_any_worker_count() {
+        let jobs: Vec<u64> = (0..57).collect();
+        let expect: Vec<u64> = jobs.iter().map(|j| j * 3 + 1).collect();
+        for workers in [1, 2, 3, 7, 16] {
+            let pool = FleetPool::new(workers);
+            let got = pool.map(jobs.clone(), |_, j| j * 3 + 1);
+            assert_eq!(got, expect, "{workers} workers");
+            assert_eq!(pool.spawned_threads(), workers as u64);
+        }
+    }
+
+    #[test]
+    fn empty_and_single_job_batches_complete() {
+        let pool = FleetPool::new(3);
+        assert_eq!(pool.map(Vec::<u64>::new(), |_, j| j), Vec::<u64>::new());
+        assert_eq!(pool.map(vec![41u64], |i, j| j + i as u64 + 1), vec![42]);
+    }
+
+    /// The adversarial scripted scheduler: seeded per-job delays skew
+    /// which deques drain first, forcing different steal schedules case
+    /// by case — under all of which results must be byte-identical to
+    /// sequential. Steals must actually occur across the run for the
+    /// property to mean anything.
+    #[test]
+    fn scripted_steal_schedules_never_change_results() {
+        let mut total_steals = 0u64;
+        prop::check("scripted steal schedules", 60, |g| {
+            let n = g.rng.range_usize(2, 32);
+            let workers = g.rng.range_usize(2, 5);
+            // The script: each job sleeps its own seeded delay before
+            // computing, so deque drain order varies adversarially.
+            let delays: Vec<u64> = (0..n).map(|_| g.rng.below(120) as u64).collect();
+            let salt = g.rng.next_u64();
+            let expect: Vec<u64> = (0..n as u64).map(|j| j.wrapping_mul(salt) ^ j).collect();
+            let pool = FleetPool::new(workers);
+            let got = pool.map((0..n as u64).collect(), move |i, j| {
+                std::thread::sleep(Duration::from_micros(delays[i]));
+                j.wrapping_mul(salt) ^ j
+            });
+            total_steals += pool.steals();
+            prop::assert_true(got == expect, "steal schedule changed results")
+        });
+        assert!(total_steals > 0, "no case ever stole — scheduler not adversarial");
+    }
+
+    #[test]
+    fn nested_runs_on_the_same_pool_complete() {
+        let pool = Arc::new(FleetPool::new(2));
+        let inner_pool = Arc::clone(&pool);
+        let total = Arc::new(AtomicUsize::new(0));
+        let outer_total = Arc::clone(&total);
+        pool.run(4, move |_| {
+            let inner_total = Arc::clone(&outer_total);
+            inner_pool.run(8, move |_| {
+                inner_total.fetch_add(1, Ordering::Relaxed);
+            });
+        });
+        assert_eq!(total.load(Ordering::Relaxed), 32);
+    }
+
+    #[test]
+    fn panicking_job_poisons_the_batch_but_not_the_pool() {
+        let pool = FleetPool::new(2);
+        let poisoned = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            pool.map((0..8u64).collect(), |_, j| {
+                assert!(j != 5, "scripted job failure");
+                j
+            })
+        }));
+        assert!(poisoned.is_err(), "poisoned batch must propagate the panic");
+        // Workers survived the contained panic; the pool still serves.
+        let ok = pool.map((0..8u64).collect(), |_, j| j + 1);
+        assert_eq!(ok, (1..9u64).collect::<Vec<u64>>());
+        assert_eq!(pool.spawned_threads(), 2, "no respawn after a poisoned batch");
+    }
+}

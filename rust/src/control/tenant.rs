@@ -145,7 +145,8 @@ pub struct RoundReport {
 }
 
 /// Per-tenant driving state (self-contained: it is the unit shipped to
-/// a [`FleetRunner`] worker, so rounds parallelize without sharing).
+/// a [`FleetRunner`] job, so rounds parallelize on the runner's
+/// persistent pool without sharing).
 struct TenantState {
     spec: Tenant,
     seed: u64,

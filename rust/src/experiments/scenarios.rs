@@ -344,6 +344,84 @@ impl HeteroScenario {
     }
 }
 
+/// One fleet-scale sweep point: `members` simulated boards, alternating
+/// NX/Orin, measured as one [`FleetEnv`] observation per proposal.
+///
+/// The family exists to prove the persistent [`crate::control::FleetPool`]
+/// scaling story (O(1) per-member dispatch, zero thread spawns per
+/// proposal, hierarchical aggregation): `coral fleetscale` and
+/// `bench_fleet_scale` sweep it 10 → 10,000 members (EXPERIMENTS.md
+/// §Fleet-scale sweeps). Constraints are `hetero-yolo-pair`'s fleet-mean
+/// numbers: every member count here is even and the kinds alternate, so
+/// the fleet-mean surface matches the pair's at any size.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FleetScaleScenario {
+    pub name: &'static str,
+    /// Fleet size (even; kinds alternate NX/Orin).
+    pub members: usize,
+    pub model: ModelKind,
+    /// Fleet-mean throughput target (fps).
+    pub target_fps: f64,
+    /// Fleet-mean power budget (mW).
+    pub budget_mw: f64,
+}
+
+/// The fleet-scale family: 10 → 10,000 mixed boards, one decade apart.
+pub const FLEET_SCALE_SCENARIOS: [FleetScaleScenario; 4] = [
+    FleetScaleScenario {
+        name: "fleet-10",
+        members: 10,
+        model: ModelKind::Yolo,
+        target_fps: 40.0,
+        budget_mw: 6_400.0,
+    },
+    FleetScaleScenario {
+        name: "fleet-100",
+        members: 100,
+        model: ModelKind::Yolo,
+        target_fps: 40.0,
+        budget_mw: 6_400.0,
+    },
+    FleetScaleScenario {
+        name: "fleet-1k",
+        members: 1_000,
+        model: ModelKind::Yolo,
+        target_fps: 40.0,
+        budget_mw: 6_400.0,
+    },
+    FleetScaleScenario {
+        name: "fleet-10k",
+        members: 10_000,
+        model: ModelKind::Yolo,
+        target_fps: 40.0,
+        budget_mw: 6_400.0,
+    },
+];
+
+impl FleetScaleScenario {
+    /// Find a scenario by name.
+    pub fn by_name(name: &str) -> Option<&'static FleetScaleScenario> {
+        FLEET_SCALE_SCENARIOS.iter().find(|s| s.name == name)
+    }
+
+    /// Fleet-mean constraints governing the shared search.
+    pub fn constraints(&self) -> Constraints {
+        Constraints::dual(self.target_fps, self.budget_mw)
+    }
+
+    /// Member device kinds: NX/Orin alternating, in fleet order.
+    pub fn kinds(&self) -> Vec<DeviceKind> {
+        (0..self.members).map(|i| PAIR[i % PAIR.len()]).collect()
+    }
+
+    /// The mixed fleet over fresh simulated boards (member `i` seeded
+    /// `base_seed + i`); heterogeneous by construction, so it searches
+    /// the normalized grid like the hetero scenarios.
+    pub fn fleet(&self, base_seed: u64) -> FleetEnv {
+        FleetEnv::mixed(&self.kinds(), self.model, base_seed)
+    }
+}
+
 /// Constraints of the dual scenario for (device, model).
 pub fn dual_constraints(device: DeviceKind, model: ModelKind) -> Constraints {
     let s = DUAL_SCENARIOS
@@ -589,6 +667,40 @@ mod tests {
             assert!((sum_t / n - s.target_fps).abs() < 1e-9, "{}", s.name);
             assert!((sum_b / n - s.budget_mw).abs() < 1e-9, "{}", s.name);
         }
+    }
+
+    #[test]
+    fn fleet_scale_family_spans_three_decades_of_even_mixed_fleets() {
+        assert!(FLEET_SCALE_SCENARIOS.windows(2).all(|w| w[0].members * 10 == w[1].members));
+        assert_eq!(FLEET_SCALE_SCENARIOS[0].members, 10);
+        assert_eq!(FLEET_SCALE_SCENARIOS[3].members, 10_000);
+        assert!(FleetScaleScenario::by_name("fleet-1k").is_some());
+        assert!(FleetScaleScenario::by_name("bogus").is_none());
+        let pair = HeteroScenario::by_name("hetero-yolo-pair").unwrap();
+        for s in &FLEET_SCALE_SCENARIOS {
+            // Even, alternating kinds: the fleet-mean surface is the
+            // yolo pair's at every size, so its constraints carry over.
+            assert_eq!(s.members % 2, 0, "{}", s.name);
+            let kinds = s.kinds();
+            assert_eq!(kinds.len(), s.members);
+            assert_eq!(&kinds[..2], PAIR);
+            assert_eq!(s.target_fps, pair.target_fps);
+            assert_eq!(s.budget_mw, pair.budget_mw);
+            assert_eq!(s.constraints().power_budget_mw, Some(s.budget_mw));
+        }
+    }
+
+    #[test]
+    fn fleet_scale_smallest_fleet_measures_on_the_normalized_grid() {
+        let s = FleetScaleScenario::by_name("fleet-10").unwrap();
+        let mut fleet = s.fleet(77);
+        assert_eq!(fleet.len(), 10);
+        assert!(fleet.is_normalized(), "mixed kinds → normalized grid");
+        let cfg = fleet.space().midpoint();
+        let m = fleet.measure(cfg);
+        assert_eq!(m.config, cfg);
+        assert!(m.throughput_fps > 0.0);
+        assert!(m.power_mw > 0.0);
     }
 
     #[test]

@@ -1,0 +1,121 @@
+//! Integration tests for the persistent [`FleetPool`]: the teardown
+//! contract (mirroring the coordinator `WorkerPool` Drop regression
+//! test) and the pool-reuse determinism property — one pool reused
+//! across many map / measure / sweep calls stays byte-identical to
+//! fresh sequential runs, interleaved with cached sweeps.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use coral::control::{
+    fleet_sweep, fleet_sweep_cached, CacheStore, Environment, FleetEnv, FleetPool, FleetRunner,
+};
+use coral::device::DeviceKind;
+use coral::experiments::scenarios::DUAL_SCENARIOS;
+use coral::models::ModelKind;
+use coral::util::prop;
+
+/// The PR-3 coordinator `WorkerPool` Drop contract, restated for the
+/// fleet pool: dropping a pool with batches still queued must (a) let
+/// outstanding tickets finish their batches on the joining thread and
+/// (b) release every worker thread — close + wake, never join, workers
+/// exit on their own once the remaining work is drained.
+#[test]
+fn dropping_pool_with_queued_jobs_releases_workers() {
+    let pool = FleetPool::new(2);
+    let watcher = pool.watcher();
+    assert_eq!(watcher.alive_workers(), 2, "both workers start alive");
+
+    // Enough slow jobs that batches are still queued at drop time.
+    let ran = Arc::new(AtomicUsize::new(0));
+    let tickets: Vec<_> = (0..3)
+        .map(|_| {
+            let ran = Arc::clone(&ran);
+            pool.submit(16, move |_| {
+                std::thread::sleep(Duration::from_micros(200));
+                ran.fetch_add(1, Ordering::Relaxed);
+            })
+        })
+        .collect();
+    drop(pool);
+
+    // Tickets outlive the pool: the joiner claims whatever the workers
+    // abandoned, so every job still runs exactly once.
+    for t in tickets {
+        t.join();
+    }
+    assert_eq!(ran.load(Ordering::Relaxed), 3 * 16, "every queued job ran exactly once");
+
+    // Workers observe the closed injector and exit on their own.
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while watcher.alive_workers() != 0 {
+        assert!(Instant::now() < deadline, "workers failed to exit after pool drop");
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    assert_eq!(watcher.spawned_threads(), 2, "teardown never respawns threads");
+}
+
+/// One persistent pool, reused across hundreds of heterogeneous calls —
+/// runner maps, twin fleet-member fan-outs, and (interleaved) cached and
+/// uncached sweeps — must stay byte-identical to fresh sequential runs
+/// the whole way through. This is the pool determinism contract under
+/// realistic mixed traffic rather than one call shape at a time.
+#[test]
+fn pool_reuse_is_byte_identical_to_fresh_sequential_runs() {
+    let runner = FleetRunner::new(3);
+    let store = CacheStore::new();
+    let seq_store = CacheStore::new();
+    let kinds = [DeviceKind::XavierNx, DeviceKind::OrinNano, DeviceKind::OrinNano];
+    let mut par = FleetEnv::mixed(&kinds, ModelKind::Yolo, 0xBEE5).with_workers(2);
+    let mut seq = FleetEnv::mixed(&kinds, ModelKind::Yolo, 0xBEE5).sequential();
+    let mut case = 0u64;
+    prop::check("pool reuse vs fresh sequential", 100, |g| {
+        case += 1;
+        // (a) runner map through the shared pool vs inline sequential.
+        let salt = g.rng.next_u64();
+        let jobs: Vec<u64> = (0..g.rng.range_usize(1, 24) as u64).collect();
+        let expect: Vec<u64> = jobs.iter().map(|j| j.wrapping_mul(salt) ^ j).collect();
+        let got = runner.map(jobs, move |j| j.wrapping_mul(salt) ^ j);
+        prop::assert_true(got == expect, "shared-pool map diverged from sequential")?;
+
+        // (b) twin fleets, same proposal: the pool-parallel member
+        // fan-out (and its hierarchical combine) vs the sequential twin.
+        let cfg = par.space().random(&mut g.rng);
+        let a = par.measure(cfg);
+        let b = seq.measure(cfg);
+        prop::assert_true(
+            format!("{a:?}") == format!("{b:?}"),
+            "fleet measure diverged from sequential twin",
+        )?;
+
+        // (c) interleaved sweeps through the same shared runner: cached
+        // sweeps share one store per side, so replay passes stay
+        // comparable; uncached sweeps are schedule-independent outright.
+        if case % 20 == 0 {
+            let scenarios = &DUAL_SCENARIOS[..1];
+            let p = fleet_sweep_cached(scenarios, 2, &runner, &store);
+            let s = fleet_sweep_cached(scenarios, 2, &FleetRunner::new(1), &seq_store);
+            prop::assert_true(
+                format!("{p:?}") == format!("{s:?}"),
+                "cached sweep through the shared pool diverged",
+            )?;
+        }
+        if case % 25 == 0 {
+            let scenarios = &DUAL_SCENARIOS[..1];
+            let p = fleet_sweep(scenarios, 2, &runner);
+            let s = fleet_sweep(scenarios, 2, &FleetRunner::new(1));
+            prop::assert_true(
+                format!("{p:?}") == format!("{s:?}"),
+                "uncached sweep through the shared pool diverged",
+            )?;
+        }
+        Ok(())
+    });
+    // The whole run reused exactly two pools: the runner's and the
+    // parallel fleet's. Zero spawns beyond their construction.
+    assert_eq!(runner.spawned_threads(), 3, "runner pool built once, reused throughout");
+    assert_eq!(par.spawned_threads(), 2, "fleet pool built once, reused throughout");
+    assert_eq!(seq.spawned_threads(), 0, "sequential twin never builds a pool");
+    assert!(!store.is_empty(), "interleaved cached sweeps populated the store");
+}
