@@ -1,0 +1,331 @@
+//! Open-loop load bench: shed points per policy across `LOAD_SCENARIOS`
+//! and the case for `max_batch` as a sixth search dimension
+//! (EXPERIMENTS.md §Open-loop load).
+//!
+//! Self-asserting, like every bench here:
+//!
+//! * **Batching is load-bearing** — on the noise-free surface there is a
+//!   strict SLO+power operating point (one ramp step past the 5-dim
+//!   space's shed point) where *no* fixed-`max_batch = 1` config is
+//!   feasible — the best 5-dim sweep fails — yet the joint 6-dim CORAL
+//!   search finds a feasible config, and its pick batches (`max_batch >
+//!   1`).
+//! * **Singleton-batch byte-identity** — pinning the batch axis to its
+//!   legacy singleton `[1]` leaves same-seed trajectories on the
+//!   existing dual scenarios byte-identical to the default (5-dim)
+//!   space: identical proposal sequence, identical measurements, every
+//!   proposal carrying `max_batch = 1`.
+//! * **Shed-point ordering** — every `LOAD_SCENARIOS` policy reports a
+//!   finite shed point (the ramp provably vanishes), with CORAL's shed
+//!   point ≥ every static preset's on every scenario.
+//!
+//! Reduced mode for CI: `CORAL_BENCH_LOAD_STEPS` caps the ramp steps per
+//! policy, `CORAL_BENCH_LOAD_ITERS` the per-search window budget and
+//! `CORAL_BENCH_LOAD_SEEDS` the restart seeds. Results are also written
+//! machine-readable to `BENCH_load.json` (override the path with
+//! `CORAL_BENCH_JSON`).
+
+use coral::control::{ControlLoop, Environment, SimEnv};
+use coral::device::{failure, Device, HwConfig};
+use coral::experiments::scenarios::{LoadScenario, DUAL_SCENARIOS, LOAD_SCENARIOS};
+use coral::optimizer::{BestConfig, Constraints, CoralOptimizer};
+use coral::util::json::{self, Json};
+use coral::util::table;
+use coral::workload::ArrivalProfile;
+
+const SEED: u64 = 0x10AD;
+/// The opened batch axis — the load family's canonical one (powers of
+/// two through 4; see the constant's docs for why 8 stays closed).
+const BATCH_CAPS: &[u32] = LoadScenario::BATCH_CAPS;
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key)
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .filter(|&n| n >= 1)
+        .unwrap_or(default)
+}
+
+/// Ramp steps per policy before the CORAL shed scan gives up (full mode
+/// is far above any scenario's real shed point, so hitting the cap means
+/// reduced mode — finiteness is then asserted on the noise-free oracle
+/// ramp instead).
+fn max_ramp_steps() -> usize {
+    env_usize("CORAL_BENCH_LOAD_STEPS", 40)
+}
+
+/// Measurement windows per CORAL search.
+fn iters() -> usize {
+    env_usize("CORAL_BENCH_LOAD_ITERS", 12)
+}
+
+/// Restart seeds per operating point before declaring a rate infeasible
+/// for the searched policy.
+fn seeds() -> usize {
+    env_usize("CORAL_BENCH_LOAD_SEEDS", 3)
+}
+
+/// Every valid config of the scenario's board with the batch axis open.
+fn valid6(s: &LoadScenario) -> Vec<HwConfig> {
+    Device::new(s.device, s.model, SEED)
+        .with_batch_caps(BATCH_CAPS.to_vec())
+        .space()
+        .enumerate()
+        .into_iter()
+        .filter(|c| failure::check(s.device, s.model, c).is_none())
+        .collect()
+}
+
+/// One CORAL search on a noise-free board whose windows queue against a
+/// steady offered load of `rate` fps, judged by the scenario's SLO+power
+/// pair at that rate.
+fn coral_best_at(s: &LoadScenario, rate: f64, caps: &[u32], seed: u64) -> Option<BestConfig> {
+    let cons = s.constraints_at(rate);
+    let dev = Device::new(s.device, s.model, seed)
+        .with_batch_caps(caps.to_vec())
+        .with_noise_scale(0.0);
+    let space = dev.space().clone();
+    let env = SimEnv::new(dev).under_load(ArrivalProfile::steady(rate, seed));
+    let opt = CoralOptimizer::new(space, cons, seed);
+    let mut cl = ControlLoop::with_budget(env, opt, cons, iters());
+    cl.run().best
+}
+
+/// Feasibility of one config exactly as a live measurement reports it:
+/// the noise-free board still applies its per-chip silicon-lottery
+/// factors (±3 %), which `LoadScenario::config_feasible_at` — the raw
+/// noise-free surface — does not. Near a shed boundary the two views
+/// disagree, so searched shed points must be bounded by a *measured*
+/// oracle, not the raw one.
+fn measured_feasible_at(s: &LoadScenario, cfg: &HwConfig, rate: f64) -> bool {
+    let dev = Device::new(s.device, s.model, SEED)
+        .with_batch_caps(BATCH_CAPS.to_vec())
+        .with_noise_scale(0.0);
+    let mut env = SimEnv::new(dev).under_load(ArrivalProfile::steady(rate, SEED));
+    let m = env.measure(*cfg);
+    s.constraints_at(rate)
+        .satisfied(m.throughput_fps, m.power_mw, m.p99_latency_ms)
+}
+
+/// Shed point of a candidate set under the measured (lottery-aware)
+/// view — the ceiling for any searched policy, which certifies
+/// feasibility through the same measurements.
+fn measured_shed_point(s: &LoadScenario, candidates: &[HwConfig], step: f64) -> f64 {
+    let mut highest = 0.0;
+    let mut rate = s.base_rate_fps;
+    while candidates.iter().any(|c| measured_feasible_at(s, c, rate)) {
+        highest = rate;
+        rate += step;
+    }
+    highest
+}
+
+/// First feasible CORAL outcome across restart seeds, if any.
+fn coral_feasible_at(s: &LoadScenario, rate: f64, caps: &[u32]) -> Option<BestConfig> {
+    (0..seeds() as u64)
+        .filter_map(|k| coral_best_at(s, rate, caps, SEED + k))
+        .find(|b| b.feasible)
+}
+
+/// CORAL's shed point: climb the ramp until no restart seed finds a
+/// feasible config. Returns (shed_fps, hit_step_cap).
+fn coral_shed_point(s: &LoadScenario, step: f64) -> (f64, bool) {
+    let mut highest = 0.0;
+    let mut rate = s.base_rate_fps;
+    for _ in 0..max_ramp_steps() {
+        if coral_feasible_at(s, rate, BATCH_CAPS).is_none() {
+            return (highest, false);
+        }
+        highest = rate;
+        rate += step;
+    }
+    (highest, true)
+}
+
+/// Same-seed trajectory digest on the first dual scenario; `pin_batch`
+/// builds the space through `with_batch_caps([1])` instead of the
+/// default (legacy) singleton axis.
+fn dual_trajectory_digest(pin_batch: bool) -> String {
+    let s = DUAL_SCENARIOS[0];
+    let cons = Constraints::dual(s.target_fps, s.budget_mw);
+    let mut dev = Device::new(s.device, s.model, SEED);
+    if pin_batch {
+        dev = dev.with_batch_caps(vec![1]);
+    }
+    let opt = CoralOptimizer::new(dev.space().clone(), cons, SEED);
+    let mut cl = ControlLoop::with_budget(SimEnv::new(dev), opt, cons, 10);
+    let out = cl.run();
+    for st in &out.trace.steps {
+        assert_eq!(st.config.max_batch, 1, "singleton axis proposes only batch=1");
+    }
+    format!(
+        "{:?}",
+        out.trace
+            .steps
+            .iter()
+            .map(|st| (st.config, st.throughput_fps, st.power_mw))
+            .collect::<Vec<_>>()
+    )
+}
+
+fn main() {
+    println!(
+        "bench_load — {} window budget, {} restart seeds, ramp cap {} steps\n",
+        iters(),
+        seeds(),
+        max_ramp_steps()
+    );
+
+    // ---- (b) Singleton-batch byte-identity on the existing scenarios.
+    let legacy = dual_trajectory_digest(false);
+    assert_eq!(
+        legacy,
+        dual_trajectory_digest(false),
+        "same-seed trajectories must be deterministic"
+    );
+    assert_eq!(
+        legacy,
+        dual_trajectory_digest(true),
+        "pinning the batch axis to [1] must leave same-seed 5-dim trajectories \
+         byte-identical"
+    );
+    println!("singleton-batch byte-identity: OK (same-seed dual trajectory unchanged)\n");
+
+    // ---- (a) The strict pair only batching satisfies, on scenario 0.
+    let s0 = &LOAD_SCENARIOS[0];
+    let step0 = s0.base_rate_fps * 0.25;
+    let all6 = valid6(s0);
+    let all5: Vec<HwConfig> = all6.iter().filter(|c| c.max_batch == 1).copied().collect();
+    let shed5 = s0.shed_point_fps(&all5, step0);
+    let shed6 = s0.shed_point_fps(&all6, step0);
+    assert!(
+        shed6 > shed5,
+        "{}: opening the batch axis must raise the oracle shed point ({shed6} vs {shed5})",
+        s0.name
+    );
+    let probe = shed5 + step0;
+    assert!(
+        all5.iter().all(|c| !s0.config_feasible_at(c, probe)),
+        "{}: the best fixed-max_batch 5-dim sweep must fail at {probe} fps",
+        s0.name
+    );
+    assert!(
+        all6.iter().any(|c| s0.config_feasible_at(c, probe)),
+        "{}: the 6-dim region must be nonempty at {probe} fps",
+        s0.name
+    );
+    for k in 0..seeds() as u64 {
+        let pinned = coral_best_at(s0, probe, &[1], SEED + k);
+        assert!(
+            pinned.map_or(true, |b| !b.feasible),
+            "{}: a batch-pinned search cannot satisfy an empty region (seed {k})",
+            s0.name
+        );
+    }
+    let joint = coral_feasible_at(s0, probe, BATCH_CAPS).unwrap_or_else(|| {
+        panic!("{}: joint 6-dim CORAL found nothing feasible at {probe} fps", s0.name)
+    });
+    assert!(
+        joint.config.max_batch > 1,
+        "{}: the only feasible configs at {probe} fps batch",
+        s0.name
+    );
+    println!(
+        "{}: at {probe:.1} fps offered, 5-dim sweep fails exhaustively; joint search \
+         serves it with {} (p99 {:.0} ms @ {:.0} mW)\n",
+        s0.name, joint.config, joint.p99_latency_ms, joint.power_mw
+    );
+
+    // ---- (c) Shed points per policy across the family.
+    let mut rows = Vec::new();
+    let mut records = Vec::new();
+    for s in &LOAD_SCENARIOS {
+        let step = s.base_rate_fps * 0.25;
+        let all6 = valid6(s);
+        let oracle6 = s.shed_point_fps(&all6, step);
+        let oracle5 = s.oracle_shed_point_fps(step);
+        let measured6 = measured_shed_point(s, &all6, step);
+        let (coral_shed, capped) = coral_shed_point(s, step);
+        let preset_max = s.shed_point_fps(&[s.device.preset_max_power()], step);
+        let preset_def = s.shed_point_fps(&[s.device.preset_default()], step);
+        // Finite by construction on the oracle ramps (shed_point_fps
+        // terminates only by vanishing); the searched ramp proves the
+        // same unless reduced mode capped it first.
+        assert!(oracle6.is_finite() && oracle5.is_finite() && measured6.is_finite());
+        assert!(coral_shed.is_finite());
+        // The raw and measured oracles may disagree by a ramp step near
+        // the boundary (silicon lottery, ±3 % on capacity and power) but
+        // never wildly.
+        assert!(
+            (measured6 - oracle6).abs() <= step + 1e-9,
+            "{}: measured oracle {measured6} vs raw {oracle6} drifted past one step",
+            s.name
+        );
+        if !capped {
+            assert!(
+                coral_shed <= measured6,
+                "{}: searched shed {coral_shed} beyond the measured oracle {measured6}",
+                s.name
+            );
+        }
+        for (label, p) in [("max-power", preset_max), ("default", preset_def)] {
+            assert!(
+                coral_shed >= p,
+                "{}: CORAL shed {coral_shed} below {label} preset's {p}",
+                s.name
+            );
+        }
+        assert!(
+            coral_shed >= s.base_rate_fps,
+            "{}: CORAL must serve at least the base load",
+            s.name
+        );
+        rows.push(vec![
+            s.name.to_string(),
+            format!("{:.0}", s.base_rate_fps),
+            format!("{:.0}ms/{:.0}mW", s.latency_slo_ms, s.budget_mw),
+            format!("{:.1}{}", coral_shed, if capped { "+" } else { "" }),
+            format!("{measured6:.1}"),
+            format!("{oracle6:.1}"),
+            format!("{oracle5:.1}"),
+            format!("{preset_max:.1}"),
+            format!("{preset_def:.1}"),
+        ]);
+        records.push(json::obj(vec![
+            ("scenario", Json::Str(s.name.to_string())),
+            ("base_rate_fps", Json::Num(s.base_rate_fps)),
+            ("latency_slo_ms", Json::Num(s.latency_slo_ms)),
+            ("budget_mw", Json::Num(s.budget_mw)),
+            ("shed_coral_fps", Json::Num(coral_shed)),
+            ("shed_ramp_capped", Json::Bool(capped)),
+            ("shed_oracle_6d_measured_fps", Json::Num(measured6)),
+            ("shed_oracle_6d_fps", Json::Num(oracle6)),
+            ("shed_oracle_5d_fps", Json::Num(oracle5)),
+            ("shed_preset_max_power_fps", Json::Num(preset_max)),
+            ("shed_preset_default_fps", Json::Num(preset_def)),
+            ("iters", Json::Num(iters() as f64)),
+            ("seeds", Json::Num(seeds() as f64)),
+        ]));
+    }
+    print!(
+        "{}",
+        table::render(
+            &[
+                "scenario", "base fps", "slo/budget", "coral shed", "meas 6d", "oracle 6d",
+                "oracle 5d", "max-power", "default",
+            ],
+            &rows
+        )
+    );
+
+    let path =
+        std::env::var("CORAL_BENCH_JSON").unwrap_or_else(|_| "BENCH_load.json".to_string());
+    std::fs::write(&path, Json::Arr(records).to_string_pretty() + "\n")
+        .expect("write bench json");
+    println!("\nmachine-readable results written to {path}");
+    println!(
+        "every policy sheds at a finite offered rate; CORAL (which bootstraps from both \
+         presets) never sheds before a static preset, and only the opened batch axis \
+         survives past the 5-dim space's shed point."
+    );
+}

@@ -30,6 +30,7 @@ USAGE:
                   [--rounds N] [--seed N] [--sequential] [--cached]
   coral hetero    [--scenario hetero-<model>-<pair|triple>] [--iters N] [--seed N] [--sequential]
   coral fleetscale [--scenario fleet-<10|100|1k|10k>] [--rounds N] [--seed N] [--workers N]
+  coral load      [--scenario load-<name>] [--iters N] [--seed N]
   coral report    <specs|models|scenarios>
   coral artifacts-check [--dir DIR]
 
@@ -46,6 +47,7 @@ pub fn dispatch(args: &Args) -> Result<()> {
         Some("tenants") => cmd_tenants(args),
         Some("hetero") => cmd_hetero(args),
         Some("fleetscale") => cmd_fleetscale(args),
+        Some("load") => cmd_load(args),
         Some("report") => cmd_report(args),
         Some("artifacts-check") => cmd_artifacts_check(args),
         Some("help") | None => {
@@ -190,7 +192,7 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     let mut dev = Device::new(device, model, 0x53EE9);
     let mut csv = crate::util::csv::Csv::new(&[
         "cpu_freq_mhz", "cpu_cores", "gpu_freq_mhz", "mem_freq_mhz", "concurrency",
-        "throughput_fps", "power_mw", "latency_ms",
+        "max_batch", "throughput_fps", "power_mw", "latency_ms",
     ]);
     for cfg in failure::valid_configs(device, model) {
         let m = dev.run(cfg);
@@ -200,6 +202,7 @@ fn cmd_sweep(args: &Args) -> Result<()> {
             cfg.gpu_freq_mhz.to_string(),
             cfg.mem_freq_mhz.to_string(),
             cfg.concurrency.to_string(),
+            cfg.max_batch.to_string(),
             format!("{:.2}", m.throughput_fps),
             format!("{:.0}", m.power_mw),
             format!("{:.2}", m.latency_ms),
@@ -538,6 +541,78 @@ fn tenant_target(s: &scenarios::TenantScenario, name: &str) -> f64 {
         .unwrap_or(0.0)
 }
 
+fn cmd_load(args: &Args) -> Result<()> {
+    let name = args.opt_or("scenario", "load-nx-yolo-steady");
+    let s = scenarios::LoadScenario::by_name(&name).with_context(|| {
+        let names: Vec<&str> = scenarios::LOAD_SCENARIOS.iter().map(|s| s.name).collect();
+        format!("unknown load scenario '{name}' (one of: {})", names.join(", "))
+    })?;
+    let iters = args.opt_u64_or("iters", 10).map_err(anyhow::Error::msg)? as usize;
+    let seed = args.opt_u64_or("seed", 42).map_err(anyhow::Error::msg)?;
+    let cons = s.constraints();
+    println!(
+        "{}: {}/{} under '{}' arrivals at {:.0} fps — {}",
+        s.name,
+        s.device,
+        s.model,
+        s.profile,
+        s.base_rate_fps,
+        cons.describe()
+    );
+
+    // CORAL over the 6-dim space, every window queued against the load.
+    let opt = CoralOptimizer::new(s.env(seed).space().clone(), cons, seed);
+    let mut cl = ControlLoop::with_budget(s.env(seed), opt, cons, iters);
+    let out = cl.run();
+    let best = out.best.context("no observations")?;
+    println!(
+        "best after {} windows: {} -> {:.1} fps @ {:.0} mW, p99 {:.1} ms  feasible={}",
+        out.iters,
+        best.config,
+        best.throughput_fps,
+        best.power_mw,
+        best.p99_latency_ms,
+        best.feasible
+    );
+
+    // Noise-free shed ramp: the offered rate each policy sustains. The
+    // oracle ramps over the opened 6-dim grid; the batch=1 slice is the
+    // legacy 5-dim ceiling the sixth dimension buys headroom over.
+    let step = s.base_rate_fps * 0.25;
+    let valid6: Vec<_> = s
+        .env(seed)
+        .space()
+        .enumerate()
+        .into_iter()
+        .filter(|c| failure::check(s.device, s.model, c).is_none())
+        .collect();
+    let valid5: Vec<_> = valid6.iter().filter(|c| c.max_batch == 1).copied().collect();
+    let rows = vec![
+        vec![
+            "oracle (batch axis open)".to_string(),
+            format!("{:.1}", s.shed_point_fps(&valid6, step)),
+        ],
+        vec![
+            "oracle (batch=1)".to_string(),
+            format!("{:.1}", s.shed_point_fps(&valid5, step)),
+        ],
+        vec![
+            "coral best".to_string(),
+            format!("{:.1}", s.shed_point_fps(&[best.config], step)),
+        ],
+        vec![
+            "preset max-power".to_string(),
+            format!("{:.1}", s.shed_point_fps(&[s.device.preset_max_power()], step)),
+        ],
+        vec![
+            "preset default".to_string(),
+            format!("{:.1}", s.shed_point_fps(&[s.device.preset_default()], step)),
+        ],
+    ];
+    print!("{}", table::render(&["policy", "shed point (fps)"], &rows));
+    Ok(())
+}
+
 fn cmd_report(args: &Args) -> Result<()> {
     match args.sub() {
         Some("specs") => {
@@ -807,5 +882,16 @@ mod tests {
     #[test]
     fn fleetscale_validates_scenario() {
         assert!(dispatch(&args("fleetscale --scenario fleet-of-foot")).is_err());
+    }
+
+    #[test]
+    fn load_smoke() {
+        let a = args("load --scenario load-nx-yolo-steady --iters 3 --seed 7");
+        assert!(dispatch(&a).is_ok());
+    }
+
+    #[test]
+    fn load_validates_scenario() {
+        assert!(dispatch(&args("load --scenario load-shedding-grid")).is_err());
     }
 }

@@ -284,12 +284,14 @@ impl<E: Environment, O: Optimizer> ControlLoop<E, O> {
         let cost_before = self.env.cost_s();
         let m = self.env.measure(config);
         self.search_cost_s += self.env.cost_s() - cost_before;
-        self.opt.observe(config, m.throughput_fps, m.power_mw);
+        self.opt.observe(config, m.throughput_fps, m.power_mw, m.p99_latency_ms);
         self.trace.record(config, m.throughput_fps, m.power_mw);
         self.window += 1;
         self.iter += 1;
         let this_iter = self.iter - 1;
-        let feasible = self.cons.feasible(m.throughput_fps, m.power_mw);
+        // `satisfied` adds the p99 SLO clause; without an SLO it is
+        // exactly the historical Eq. 6 check.
+        let feasible = self.cons.satisfied(m.throughput_fps, m.power_mw, m.p99_latency_ms);
         if feasible && self.first_feasible.is_none() {
             self.first_feasible = Some(self.iter);
             self.events

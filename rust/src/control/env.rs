@@ -41,7 +41,7 @@ use super::pool::{lock, FleetPool};
 use crate::models::{artifacts_dir, Manifest, ModelKind};
 use crate::runtime::PjrtRuntime;
 use crate::telemetry::{Sample, Sampler};
-use crate::workload::VideoSource;
+use crate::workload::{ArrivalProfile, VideoSource};
 
 /// A place where hardware configurations can be applied and measured.
 ///
@@ -108,11 +108,28 @@ pub trait Environment {
 #[derive(Debug, Clone)]
 pub struct SimEnv {
     dev: Device,
+    /// Open-loop offered load (None = the paper's closed-loop windows).
+    arrival: Option<ArrivalProfile>,
 }
 
 impl SimEnv {
     pub fn new(dev: Device) -> SimEnv {
-        SimEnv { dev }
+        SimEnv { dev, arrival: None }
+    }
+
+    /// Measure every window under an open-loop offered load: the rate
+    /// the profile holds at the window's (simulated) start time queues
+    /// against the config's capacity (`device::sim::under_offered_load`)
+    /// — p99 latency becomes the load-dependent signal the SLO
+    /// constraint reads.
+    pub fn under_load(mut self, profile: ArrivalProfile) -> SimEnv {
+        self.arrival = Some(profile);
+        self
+    }
+
+    /// The active arrival profile, if any.
+    pub fn arrival(&self) -> Option<&ArrivalProfile> {
+        self.arrival.as_ref()
     }
 
     /// The underlying simulated device (thermal state, window counts).
@@ -131,7 +148,17 @@ impl SimEnv {
 
 impl Environment for SimEnv {
     fn measure(&mut self, cfg: HwConfig) -> Measured {
-        self.dev.run(cfg)
+        match &self.arrival {
+            Some(p) => {
+                // The window's offered rate is the profile's rate at the
+                // moment the window starts (simulated clock = logical
+                // arrival time), so diurnal/flash phases play out over a
+                // long search exactly as they would against a wall clock.
+                let rate = p.rate_at(self.dev.sim_clock_s());
+                self.dev.run_under_load(cfg, rate)
+            }
+            None => self.dev.run(cfg),
+        }
     }
 
     fn space(&self) -> &ConfigSpace {
@@ -146,9 +173,15 @@ impl Environment for SimEnv {
     /// parameters — everything that shapes what a window can return.
     /// Thermal devices additionally fold in the flag so their
     /// history-dependent surface never shares entries with a
-    /// thermal-free twin.
+    /// thermal-free twin, and an offered-load profile folds in its
+    /// full shape (rate, phase schedule, seed): windows measured under
+    /// different traffic must never answer for each other.
     fn fingerprint(&self) -> u64 {
-        device_fingerprint(&self.dev)
+        let dev = device_fingerprint(&self.dev);
+        match &self.arrival {
+            Some(p) => super::cache::stable_hash(&[dev, p.fingerprint()]),
+            None => dev,
+        }
     }
 }
 
@@ -235,6 +268,11 @@ pub struct LiveEnv {
     /// Cumulative serving-pump wakeups across all live windows.
     pump_iterations: u64,
     last_report: Option<ServeReport>,
+    /// Open-loop offered load (None = closed-loop windows).
+    arrival: Option<ArrivalProfile>,
+    /// Logical seconds of offered-load exposure so far (drives the
+    /// profile's phase schedule across successive windows).
+    arrival_clock_s: f64,
 }
 
 impl LiveEnv {
@@ -252,7 +290,23 @@ impl LiveEnv {
             serving_wall_s: 0.0,
             pump_iterations: 0,
             last_report: None,
+            arrival: None,
+            arrival_clock_s: 0.0,
         }
+    }
+
+    /// Measure every window under an open-loop offered load (same
+    /// contract as [`SimEnv::under_load`]): the closed-loop window
+    /// establishes the config's service capacity, then the offered rate
+    /// queues against it deterministically.
+    pub fn under_load(mut self, profile: ArrivalProfile) -> LiveEnv {
+        self.arrival = Some(profile);
+        self
+    }
+
+    /// The active arrival profile, if any.
+    pub fn arrival(&self) -> Option<&ArrivalProfile> {
+        self.arrival.as_ref()
     }
 
     /// Live mode over an already-built server. `video` must match the
@@ -355,6 +409,20 @@ impl LiveEnv {
     pub fn shutdown(self) -> Option<u64> {
         self.backend.map(|b| b.server.shutdown())
     }
+
+    /// Apply the offered-load transform (if any) to a finished window
+    /// and advance the logical arrival clock by one window span, so the
+    /// profile's phase schedule plays out across successive windows.
+    fn finish_window(&mut self, m: Measured) -> Measured {
+        let Some(p) = &self.arrival else { return m };
+        let rate = p.rate_at(self.arrival_clock_s);
+        self.arrival_clock_s += crate::device::sim::WARMUP_S + SAMPLES_PER_WINDOW as f64;
+        crate::device::sim::under_offered_load(
+            m,
+            rate,
+            self.sim.kind().model_params().static_mw,
+        )
+    }
 }
 
 impl Environment for LiveEnv {
@@ -371,7 +439,7 @@ impl Environment for LiveEnv {
         // cost ~no wall-clock (on physical hardware the crash would
         // consume a window — the sim clock still records that view).
         if self.backend.is_none() || sim_m.failed.is_some() {
-            return sim_m;
+            return self.finish_window(sim_m);
         }
         let backend = self.backend.as_mut().expect("live mode checked above");
 
@@ -379,6 +447,7 @@ impl Environment for LiveEnv {
         self.sampler.reset(); // reconfiguration restarts warm-up
         let t0 = Instant::now();
         let mut lat_ms_sum = 0.0;
+        let mut p99_ms_sum = 0.0;
         let mut lat_chunks = 0u32;
         while self.sampler.len() < SAMPLES_PER_WINDOW {
             // Percentiles must describe this chunk, not the server's
@@ -402,6 +471,7 @@ impl Environment for LiveEnv {
                         // Window latency aggregates the retained chunks,
                         // same discipline as throughput.
                         lat_ms_sum += report.latency_p50_ms;
+                        p99_ms_sum += report.latency_p99_ms;
                         lat_chunks += 1;
                     }
                     self.last_report = Some(report);
@@ -413,13 +483,13 @@ impl Environment for LiveEnv {
                     // window's stats: the returned measurement is
                     // sim-backed, so report no live stats for it.
                     self.last_report = None;
-                    return sim_m;
+                    return self.finish_window(sim_m);
                 }
             }
         }
         self.serving_wall_s += t0.elapsed().as_secs_f64();
         let w = self.sampler.window().expect("retained samples exist");
-        Measured {
+        let m = Measured {
             config: sim_m.config,
             throughput_fps: w.throughput_fps,
             power_mw: sim_m.power_mw,
@@ -428,11 +498,17 @@ impl Environment for LiveEnv {
             } else {
                 sim_m.latency_ms
             },
+            p99_latency_ms: if lat_chunks > 0 {
+                p99_ms_sum / lat_chunks as f64
+            } else {
+                sim_m.p99_latency_ms
+            },
             gpu_util: sim_m.gpu_util,
             cpu_util: sim_m.cpu_util,
             mem_util: sim_m.mem_util,
             failed: None,
-        }
+        };
+        self.finish_window(m)
     }
 
     fn space(&self) -> &ConfigSpace {
@@ -449,13 +525,15 @@ impl Environment for LiveEnv {
 
     /// The sim device's identity plus the live serving knobs — and the
     /// live/degraded flag itself, since the two modes answer windows
-    /// from different surfaces.
+    /// from different surfaces. An offered-load profile folds in its
+    /// full shape: traffic changes every number a window reports.
     fn fingerprint(&self) -> u64 {
         super::cache::stable_hash(&[
             device_fingerprint(&self.sim),
             self.is_live() as u64,
             self.frames_per_sample,
             self.inflight as u64,
+            self.arrival.as_ref().map_or(0, |p| p.fingerprint()),
         ])
     }
 }
@@ -694,6 +772,7 @@ struct Partial {
     throughput_fps: f64,
     power_mw: f64,
     latency_ms: f64,
+    p99_latency_ms: f64,
     gpu_util: f64,
     cpu_util: f64,
     mem_util: f64,
@@ -710,6 +789,7 @@ impl Partial {
             throughput_fps: m.throughput_fps,
             power_mw: m.power_mw,
             latency_ms: m.latency_ms,
+            p99_latency_ms: m.p99_latency_ms,
             gpu_util: m.gpu_util,
             cpu_util: m.cpu_util,
             mem_util: m.mem_util,
@@ -726,6 +806,10 @@ impl Partial {
             throughput_fps: left.throughput_fps + right.throughput_fps,
             power_mw: left.power_mw + right.power_mw,
             latency_ms: left.latency_ms + right.latency_ms,
+            // The fleet's tail is the *worst* member tail, not a mean:
+            // an SLO is violated if any member violates it. Max merges
+            // associatively, so sharded == flat still holds.
+            p99_latency_ms: left.p99_latency_ms.max(right.p99_latency_ms),
             gpu_util: left.gpu_util + right.gpu_util,
             cpu_util: left.cpu_util + right.cpu_util,
             mem_util: left.mem_util + right.mem_util,
@@ -791,6 +875,7 @@ fn finish(p: Partial) -> Measured {
             throughput_fps: 0.0,
             power_mw: p.power_mw / n,
             latency_ms: f64::INFINITY,
+            p99_latency_ms: f64::INFINITY,
             gpu_util: 0.0,
             cpu_util: 0.0,
             mem_util: 0.0,
@@ -802,6 +887,8 @@ fn finish(p: Partial) -> Measured {
         throughput_fps: p.throughput_fps / n,
         power_mw: p.power_mw / n,
         latency_ms: p.latency_ms / n,
+        // Already the worst member tail (max-merged, not summed).
+        p99_latency_ms: p.p99_latency_ms,
         gpu_util: p.gpu_util / n,
         cpu_util: p.cpu_util / n,
         mem_util: p.mem_util / n,
@@ -1171,6 +1258,7 @@ mod tests {
                     throughput_fps: g.rng.range_f64(0.1, 90.0),
                     power_mw: g.rng.range_f64(800.0, 16_000.0),
                     latency_ms: g.rng.range_f64(2.0, 220.0),
+                    p99_latency_ms: g.rng.range_f64(2.0, 900.0),
                     gpu_util: g.rng.f64(),
                     cpu_util: g.rng.f64(),
                     mem_util: g.rng.f64(),

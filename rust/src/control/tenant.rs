@@ -550,6 +550,7 @@ fn floor_config(space: &ConfigSpace) -> HwConfig {
         gpu_freq_mhz: space.min(Dim::GpuFreq),
         mem_freq_mhz: space.min(Dim::MemFreq),
         concurrency: space.min(Dim::Concurrency),
+        max_batch: space.min(Dim::BatchCap),
     }
 }
 

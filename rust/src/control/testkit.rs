@@ -101,6 +101,7 @@ impl Environment for StepEnv {
             throughput_fps: fps,
             power_mw: self.power_mw,
             latency_ms: 10.0,
+            p99_latency_ms: 10.0,
             gpu_util: 0.5,
             cpu_util: 0.5,
             mem_util: 0.5,

@@ -70,6 +70,12 @@ pub struct ServeReport {
     /// Pump wakes caused by the batcher's release deadline firing
     /// (partial batches whose oldest request hit `max_wait`).
     pub deadline_fires: u64,
+    /// Open-loop only: requests completed within the per-request
+    /// latency deadline ([`Server::run_open_loop`]'s `deadline_ms`).
+    /// Closed-loop runs have no deadlines — both counters stay 0.
+    pub deadline_hits: u64,
+    /// Open-loop only: requests that completed late or failed.
+    pub deadline_misses: u64,
 }
 
 impl std::fmt::Display for ServeReport {
@@ -425,6 +431,127 @@ impl Server {
             wall_s: wall,
             pump_iterations,
             deadline_fires,
+            deadline_hits: 0,
+            deadline_misses: 0,
+        })
+    }
+
+    /// Drive an open loop: requests arrive on `gen`'s schedule whether or
+    /// not the server keeps up, until `total` requests have terminated
+    /// (completions + failures). Each completion is scored against the
+    /// per-request latency `deadline_ms` —
+    /// [`ServeReport::deadline_hits`] / [`ServeReport::deadline_misses`]
+    /// record the outcome (failures count as misses).
+    ///
+    /// Event-driven like [`Server::run_closed_loop`]: a no-progress tick
+    /// blocks on the pool's completion signal, with the timeout bounded
+    /// by whichever comes first of the next scheduled arrival and the
+    /// batcher's release deadline. A backlogged server therefore keeps
+    /// absorbing arrivals into the batcher queue — the queueing delay
+    /// this builds up is exactly what the deadline accounting measures.
+    pub fn run_open_loop(
+        &mut self,
+        video: &mut VideoSource,
+        gen: &mut crate::workload::OpenLoopGen,
+        total: u64,
+        deadline_ms: f64,
+    ) -> Result<ServeReport> {
+        assert_eq!(video.side(), self.input_side(), "video must match model input");
+        assert!(deadline_ms > 0.0, "deadline must be positive");
+        let t0 = self.now();
+        let failed_at_start = self.metrics.failed();
+        let deadline = Duration::from_secs_f64(deadline_ms / 1000.0);
+        let mut submitted_at: std::collections::HashMap<u64, Duration> =
+            std::collections::HashMap::new();
+        let mut issued = 0u64;
+        let mut completed = 0u64;
+        let mut failed_seen = 0u64;
+        let mut deadline_hits = 0u64;
+        let mut deadline_misses = 0u64;
+        let mut pump_iterations = 0u64;
+        let mut deadline_fires = 0u64;
+        while completed + failed_seen < total {
+            pump_iterations += 1;
+            // Admit every arrival that is due. Arrival timestamps are
+            // measured from t0 so the schedule is independent of what
+            // ran on this server before.
+            let now = self.now();
+            if issued < total {
+                for r in gen.poll(now - t0) {
+                    if issued >= total {
+                        break; // poll can overshoot the request budget
+                    }
+                    self.submit(r.id, video.frame(r.frame_index));
+                    submitted_at.insert(r.id, now);
+                    issued += 1;
+                }
+            }
+            let done = self.tick();
+            let done_at = self.now();
+            for (id, _) in &done {
+                match submitted_at.remove(id) {
+                    Some(at) if done_at - at <= deadline => deadline_hits += 1,
+                    _ => deadline_misses += 1,
+                }
+            }
+            completed += done.len() as u64;
+            let failed_now = self.metrics.failed() - failed_at_start;
+            let newly_failed = failed_now - failed_seen;
+            if newly_failed > 0 {
+                failed_seen = failed_now;
+                deadline_misses += newly_failed;
+            }
+            if done.is_empty() && newly_failed == 0 {
+                let now = self.now();
+                let mut timeout = PUMP_STALL_WAIT;
+                let mut deadline_bounded = false;
+                if issued < total {
+                    let due = t0 + gen.due(); // schedule is relative to t0
+                    if due <= now {
+                        continue; // an arrival is already due: re-poll
+                    }
+                    timeout = timeout.min(due - now);
+                }
+                let budget_free = self.inflight_batches < self.pool.size() * 2;
+                if let Some(d) = self.batcher.next_deadline(now) {
+                    if budget_free {
+                        let wait = d.saturating_sub(now);
+                        if wait < timeout {
+                            timeout = wait;
+                            deadline_bounded = true;
+                        }
+                    }
+                }
+                match self.pool.wait_event(timeout) {
+                    PoolEvent::ResultReady => {}
+                    PoolEvent::TimedOut => {
+                        if deadline_bounded {
+                            deadline_fires += 1;
+                        }
+                    }
+                    PoolEvent::Dead => {
+                        self.reconcile_lost_inflight();
+                        self.fail_queued_requests();
+                    }
+                }
+            }
+        }
+        let wall = (self.now() - t0).as_secs_f64();
+        Ok(ServeReport {
+            requests: completed,
+            failed: failed_seen,
+            throughput_fps: finite_rate(completed as f64, wall),
+            latency_p50_ms: self.metrics.latency_ms(50.0),
+            latency_p95_ms: self.metrics.latency_ms(95.0),
+            latency_p99_ms: self.metrics.latency_ms(99.0),
+            mean_batch: self.metrics.mean_batch_size(),
+            mean_exec_ms: self.metrics.mean_exec_ms(),
+            concurrency: self.pool.size(),
+            wall_s: wall,
+            pump_iterations,
+            deadline_fires,
+            deadline_hits,
+            deadline_misses,
         })
     }
 

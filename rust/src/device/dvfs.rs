@@ -1,11 +1,16 @@
 //! DVFS + concurrency configuration space (paper Eq. 5), plus the
 //! normalized encoding that lets one optimizer span different devices.
 //!
-//! A configuration is the 5-tuple `s = (s_cpu, c_cpu, s_gpu, s_mem, c)`.
-//! The space is a discrete grid per device (paper Table 2 ranges with
-//! ~100 MHz steps, §IV-A); this module provides enumeration, clamping/
-//! rounding onto the grid (Algorithm 2's `MINMAX(ROUND(v), r)`), indexing
-//! and neighbourhood moves.
+//! A configuration is the 6-tuple `s = (s_cpu, c_cpu, s_gpu, s_mem, c,
+//! b)` — the paper's 5 DVFS/concurrency knobs (Table 2 ranges with
+//! ~100 MHz steps, §IV-A) plus `max_batch`, the coordinator's batch cap
+//! promoted into the search space (the joint batching+DVFS optimum is
+//! coupled — Xu et al., arXiv 2504.14611). Device grids default the
+//! batch axis to the singleton `[1]` (the paper's per-frame serving),
+//! so every legacy 5-dim surface is the `b = 1` slice of this space;
+//! [`ConfigSpace::with_batch_caps`] opens the axis. This module
+//! provides enumeration, clamping/rounding onto the grid (Algorithm 2's
+//! `MINMAX(ROUND(v), r)`), indexing and neighbourhood moves.
 //!
 //! **Heterogeneous fleets** (ARCHITECTURE.md, EXPERIMENTS.md
 //! §Heterogeneous fleets): the paper tunes one device class at a time,
@@ -33,6 +38,10 @@ pub struct HwConfig {
     pub mem_freq_mhz: u32,
     /// Concurrency level: number of inference instances.
     pub concurrency: u32,
+    /// Batch cap: frames aggregated per inference call (the
+    /// coordinator's `max_batch`, now a search dimension). 1 = the
+    /// paper's per-frame serving.
+    pub max_batch: u32,
 }
 
 /// Configuration dimensions, in the canonical order used everywhere
@@ -44,11 +53,21 @@ pub enum Dim {
     GpuFreq,
     MemFreq,
     Concurrency,
+    /// The batch cap — appended last so the first five columns keep
+    /// their historical order everywhere (window columns, dCor weight
+    /// indices, enumeration order on singleton-batch grids).
+    BatchCap,
 }
 
 impl Dim {
-    pub const ALL: [Dim; 5] =
-        [Dim::CpuFreq, Dim::CpuCores, Dim::GpuFreq, Dim::MemFreq, Dim::Concurrency];
+    pub const ALL: [Dim; 6] = [
+        Dim::CpuFreq,
+        Dim::CpuCores,
+        Dim::GpuFreq,
+        Dim::MemFreq,
+        Dim::Concurrency,
+        Dim::BatchCap,
+    ];
 
     pub fn name(self) -> &'static str {
         match self {
@@ -57,6 +76,7 @@ impl Dim {
             Dim::GpuFreq => "gpu_freq_mhz",
             Dim::MemFreq => "mem_freq_mhz",
             Dim::Concurrency => "concurrency",
+            Dim::BatchCap => "max_batch",
         }
     }
 
@@ -67,13 +87,14 @@ impl Dim {
             Dim::GpuFreq => 2,
             Dim::MemFreq => 3,
             Dim::Concurrency => 4,
+            Dim::BatchCap => 5,
         }
     }
 }
 
 impl HwConfig {
     /// Number of tunable dimensions.
-    pub const NDIMS: usize = 5;
+    pub const NDIMS: usize = 6;
 
     /// Configuration as an f64 vector in [`Dim::ALL`] order.
     pub fn as_vec(&self) -> [f64; Self::NDIMS] {
@@ -83,6 +104,7 @@ impl HwConfig {
             self.gpu_freq_mhz as f64,
             self.mem_freq_mhz as f64,
             self.concurrency as f64,
+            self.max_batch as f64,
         ]
     }
 
@@ -94,6 +116,7 @@ impl HwConfig {
             gpu_freq_mhz: v[2] as u32,
             mem_freq_mhz: v[3] as u32,
             concurrency: v[4] as u32,
+            max_batch: v[5] as u32,
         }
     }
 
@@ -105,6 +128,7 @@ impl HwConfig {
             Dim::GpuFreq => self.gpu_freq_mhz,
             Dim::MemFreq => self.mem_freq_mhz,
             Dim::Concurrency => self.concurrency,
+            Dim::BatchCap => self.max_batch,
         }
     }
 
@@ -117,12 +141,29 @@ impl HwConfig {
             Dim::GpuFreq => c.gpu_freq_mhz = value,
             Dim::MemFreq => c.mem_freq_mhz = value,
             Dim::Concurrency => c.concurrency = value,
+            Dim::BatchCap => c.max_batch = value,
         }
         c
     }
 
-    /// Stable hash-input encoding.
-    pub fn key(&self) -> [u64; 5] {
+    /// Stable hash-input encoding of the full tuple.
+    pub fn key(&self) -> [u64; 6] {
+        [
+            self.cpu_freq_mhz as u64,
+            self.cpu_cores as u64,
+            self.gpu_freq_mhz as u64,
+            self.mem_freq_mhz as u64,
+            self.concurrency as u64,
+            self.max_batch as u64,
+        ]
+    }
+
+    /// Stable hash-input encoding of the hardware knobs alone. The
+    /// simulator's chip-lottery draw hashes this — silicon variance is
+    /// a property of the DVFS state, never of the application's batch
+    /// cap — which also keeps every `max_batch = 1` measurement
+    /// bit-identical to the historical 5-dim surface.
+    pub fn hw_key(&self) -> [u64; 5] {
         [
             self.cpu_freq_mhz as u64,
             self.cpu_cores as u64,
@@ -137,9 +178,9 @@ impl std::fmt::Display for HwConfig {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(
             f,
-            "cpu={}MHzx{} gpu={}MHz mem={}MHz conc={}",
+            "cpu={}MHzx{} gpu={}MHz mem={}MHz conc={} batch={}",
             self.cpu_freq_mhz, self.cpu_cores, self.gpu_freq_mhz, self.mem_freq_mhz,
-            self.concurrency
+            self.concurrency, self.max_batch
         )
     }
 }
@@ -157,6 +198,9 @@ pub struct ConfigSpace {
 }
 
 impl ConfigSpace {
+    /// Build a grid over the paper's five knobs; the batch axis starts
+    /// as the singleton `[1]` (the legacy 5-dim surface). Open it with
+    /// [`ConfigSpace::with_batch_caps`].
     pub fn new(
         device: DeviceKind,
         cpu_freqs: Vec<u32>,
@@ -165,12 +209,23 @@ impl ConfigSpace {
         mem_freqs: Vec<u32>,
         concurrency: Vec<u32>,
     ) -> ConfigSpace {
-        let dims = [cpu_freqs, cpu_cores, gpu_freqs, mem_freqs, concurrency];
+        let dims = [cpu_freqs, cpu_cores, gpu_freqs, mem_freqs, concurrency, vec![1]];
         for (i, d) in dims.iter().enumerate() {
             assert!(!d.is_empty(), "dimension {i} empty");
             assert!(d.windows(2).all(|w| w[0] < w[1]), "dimension {i} not sorted/unique");
         }
         ConfigSpace { device, dims, normalized: false }
+    }
+
+    /// Open the batch axis to `caps` (sorted, unique, non-empty). The
+    /// default singleton `[1]` is exactly the legacy 5-dim space; any
+    /// wider axis makes `max_batch` a sixth search dimension.
+    pub fn with_batch_caps(mut self, caps: Vec<u32>) -> ConfigSpace {
+        assert!(!caps.is_empty(), "batch axis empty");
+        assert!(caps.windows(2).all(|w| w[0] < w[1]), "batch axis not sorted/unique");
+        assert!(caps[0] >= 1, "a batch cap below 1 serves nothing");
+        self.dims[Dim::BatchCap.index()] = caps;
+        self
     }
 
     /// Device this grid belongs to. A normalized grid spans several
@@ -248,10 +303,13 @@ impl ConfigSpace {
             gpu_freq_mhz: out[2],
             mem_freq_mhz: out[3],
             concurrency: out[4],
+            max_batch: out[5],
         }
     }
 
-    /// Enumerate the full grid in lexicographic order.
+    /// Enumerate the full grid in lexicographic order (the batch axis
+    /// iterates innermost, so singleton-batch grids enumerate in the
+    /// historical 5-dim order).
     pub fn enumerate(&self) -> Vec<HwConfig> {
         let mut out = Vec::with_capacity(self.raw_size());
         for &cf in &self.dims[0] {
@@ -259,13 +317,16 @@ impl ConfigSpace {
                 for &gf in &self.dims[2] {
                     for &mf in &self.dims[3] {
                         for &c in &self.dims[4] {
-                            out.push(HwConfig {
-                                cpu_freq_mhz: cf,
-                                cpu_cores: cc,
-                                gpu_freq_mhz: gf,
-                                mem_freq_mhz: mf,
-                                concurrency: c,
-                            });
+                            for &b in &self.dims[5] {
+                                out.push(HwConfig {
+                                    cpu_freq_mhz: cf,
+                                    cpu_cores: cc,
+                                    gpu_freq_mhz: gf,
+                                    mem_freq_mhz: mf,
+                                    concurrency: c,
+                                    max_batch: b,
+                                });
+                            }
                         }
                     }
                 }
@@ -298,14 +359,22 @@ impl ConfigSpace {
             gpu_freq_mhz: mid(Dim::GpuFreq),
             mem_freq_mhz: mid(Dim::MemFreq),
             concurrency: mid(Dim::Concurrency),
+            max_batch: mid(Dim::BatchCap),
         }
     }
 
-    /// Uniform random on-grid configuration.
+    /// Uniform random on-grid configuration. A singleton dimension has
+    /// nothing to choose, so it consumes no randomness — which keeps
+    /// the draw stream (and thus every same-seed trajectory) of a
+    /// singleton-batch grid bit-identical to the historical 5-dim one.
     pub fn random(&self, rng: &mut crate::util::Rng) -> HwConfig {
         let pick = |d: Dim, rng: &mut crate::util::Rng| {
             let v = self.values(d);
-            v[rng.below(v.len())]
+            if v.len() == 1 {
+                v[0]
+            } else {
+                v[rng.below(v.len())]
+            }
         };
         HwConfig {
             cpu_freq_mhz: pick(Dim::CpuFreq, rng),
@@ -313,6 +382,7 @@ impl ConfigSpace {
             gpu_freq_mhz: pick(Dim::GpuFreq, rng),
             mem_freq_mhz: pick(Dim::MemFreq, rng),
             concurrency: pick(Dim::Concurrency, rng),
+            max_batch: pick(Dim::BatchCap, rng),
         }
     }
 
@@ -358,9 +428,12 @@ impl ConfigSpace {
         if self.normalized {
             let mut c = self.midpoint();
             c.concurrency = self.min(Dim::Concurrency);
+            c.max_batch = self.min(Dim::BatchCap);
             c
         } else {
-            self.device.preset_default()
+            let mut c = self.device.preset_default();
+            c.max_batch = self.min(Dim::BatchCap);
+            c
         }
     }
 
@@ -377,9 +450,12 @@ impl ConfigSpace {
                 gpu_freq_mhz: self.max(Dim::GpuFreq),
                 mem_freq_mhz: self.max(Dim::MemFreq),
                 concurrency: self.min(Dim::Concurrency),
+                max_batch: self.min(Dim::BatchCap),
             }
         } else {
-            self.device.preset_max_power()
+            let mut c = self.device.preset_max_power();
+            c.max_batch = self.min(Dim::BatchCap);
+            c
         }
     }
 
@@ -392,12 +468,13 @@ impl ConfigSpace {
         if self.normalized {
             let pct = |v: u32| 100.0 * v as f64 / NormSpace::RESOLUTION as f64;
             format!(
-                "norm cpu={:.0}%x{:.0}% gpu={:.0}% mem={:.0}% conc={:.0}%",
+                "norm cpu={:.0}%x{:.0}% gpu={:.0}% mem={:.0}% conc={:.0}% batch={:.0}%",
                 pct(cfg.cpu_freq_mhz),
                 pct(cfg.cpu_cores),
                 pct(cfg.gpu_freq_mhz),
                 pct(cfg.mem_freq_mhz),
                 pct(cfg.concurrency),
+                pct(cfg.max_batch),
             )
         } else {
             format!("{} {cfg}", self.device.name())
@@ -481,6 +558,7 @@ impl NormSpace {
                 dim_vals(Dim::GpuFreq),
                 dim_vals(Dim::MemFreq),
                 dim_vals(Dim::Concurrency),
+                dim_vals(Dim::BatchCap),
             ],
             normalized: true,
         };
@@ -516,6 +594,7 @@ impl NormSpace {
             f(cfg.gpu_freq_mhz),
             f(cfg.mem_freq_mhz),
             f(cfg.concurrency),
+            f(cfg.max_batch),
         ])
         .clamped()
     }
@@ -537,6 +616,7 @@ impl NormSpace {
             v(Dim::GpuFreq),
             v(Dim::MemFreq),
             v(Dim::Concurrency),
+            v(Dim::BatchCap),
         ])
     }
 }
@@ -604,6 +684,7 @@ mod tests {
                 g.rng.range_f64(-100.0, 2000.0),
                 g.rng.range_f64(0.0, 5000.0),
                 g.rng.range_f64(-1.0, 9.0),
+                g.rng.range_f64(-1.0, 20.0),
             ];
             let cfg = s.snap_config(v);
             prop::assert_true(s.contains(&cfg), "snapped config on grid")?;
@@ -679,6 +760,7 @@ mod tests {
                 g.rng.range_f64(-0.5, 1.5),
                 g.rng.range_f64(-0.5, 1.5),
                 g.rng.range_f64(-0.5, 1.5),
+                g.rng.range_f64(-0.5, 1.5),
             ];
             let cfg = s.decode(&NormConfig(raw));
             prop::assert_true(s.contains(&cfg), "decoded config on the native grid")?;
@@ -714,7 +796,13 @@ mod tests {
         assert!(!nx().is_normalized());
         for &d in &Dim::ALL {
             assert_eq!(g.min(d), 0, "{d:?}");
-            assert_eq!(g.max(d), NormSpace::RESOLUTION, "{d:?}");
+            if d == Dim::BatchCap {
+                // Both members keep the singleton batch axis, whose
+                // only rank fraction is 0.
+                assert_eq!(g.values(d), &[0], "{d:?}");
+            } else {
+                assert_eq!(g.max(d), NormSpace::RESOLUTION, "{d:?}");
+            }
         }
         // Equal-length dims coincide (8 CPU clocks on both boards);
         // unequal ones union (6 NX + 4 Orin GPU clocks → 8 distinct
@@ -781,5 +869,89 @@ mod tests {
         let cfg = s.midpoint();
         assert!(s.describe(&cfg).starts_with("xavier-nx "), "{}", s.describe(&cfg));
         assert_ne!(s.describe(&cfg), orin().describe(&cfg));
+    }
+
+    #[test]
+    fn default_batch_axis_is_the_legacy_singleton() {
+        for d in DeviceKind::ALL {
+            let s = d.space();
+            assert_eq!(s.values(Dim::BatchCap), &[1], "{d:?}");
+            assert_eq!(s.midpoint().max_batch, 1);
+            assert_eq!(s.preset_default().max_batch, 1);
+            assert_eq!(s.preset_max_power().max_batch, 1);
+        }
+    }
+
+    #[test]
+    fn with_batch_caps_opens_a_real_sixth_dimension() {
+        let s = nx().with_batch_caps(vec![1, 2, 4, 8]);
+        assert_eq!(s.raw_size(), nx().raw_size() * 4);
+        assert_eq!(s.values(Dim::BatchCap), &[1, 2, 4, 8]);
+        assert_eq!(s.snap(Dim::BatchCap, 3.0), 2, "halfway ties to the lower cap");
+        assert_eq!(s.snap(Dim::BatchCap, 100.0), 8);
+        assert_eq!(s.midpoint().max_batch, 4);
+        // Presets stay at the axis minimum: frameworks never touch
+        // application knobs (same rule as concurrency).
+        assert_eq!(s.preset_default().max_batch, 1);
+        assert_eq!(s.preset_max_power().max_batch, 1);
+        // Enumeration covers every batch cap and index_of still matches.
+        let all = s.enumerate();
+        assert_eq!(all.len(), s.raw_size());
+        for (i, cfg) in all.iter().enumerate().step_by(131) {
+            assert_eq!(s.index_of(cfg), Some(i));
+        }
+        let mut rng = Rng::new(3);
+        let drawn: std::collections::BTreeSet<u32> =
+            (0..200).map(|_| s.random(&mut rng).max_batch).collect();
+        assert_eq!(drawn.into_iter().collect::<Vec<_>>(), vec![1, 2, 4, 8]);
+    }
+
+    #[test]
+    fn singleton_batch_axis_preserves_the_random_draw_stream() {
+        // The whole byte-identity story for legacy scenarios: a
+        // singleton batch axis must consume no randomness, so the
+        // same-seed draw sequence matches the historical 5-dim grid's.
+        let s = nx();
+        let mut a = Rng::new(77);
+        let mut b = Rng::new(77);
+        for _ in 0..50 {
+            let cfg = s.random(&mut a);
+            assert_eq!(cfg.max_batch, 1);
+            // Replay the historical five draws by hand on the twin rng.
+            let mut v = [0.0f64; HwConfig::NDIMS];
+            for (i, &d) in Dim::ALL.iter().enumerate() {
+                let vals = s.values(d);
+                v[i] = if vals.len() == 1 {
+                    vals[0] as f64
+                } else {
+                    vals[b.below(vals.len())] as f64
+                };
+            }
+            assert_eq!(cfg, HwConfig::from_vec(v));
+        }
+    }
+
+    #[test]
+    fn normalized_grid_over_batched_members_spans_the_axis() {
+        let ns = NormSpace::new(vec![
+            nx().with_batch_caps(vec![1, 2, 4, 8]),
+            orin().with_batch_caps(vec![1, 4]),
+        ]);
+        let g = ns.grid();
+        assert_eq!(g.min(Dim::BatchCap), 0);
+        assert_eq!(g.max(Dim::BatchCap), NormSpace::RESOLUTION);
+        let mut p = g.midpoint();
+        p.max_batch = NormSpace::RESOLUTION;
+        assert_eq!(ns.decode_for(0, &p).max_batch, 8);
+        assert_eq!(ns.decode_for(1, &p).max_batch, 4);
+        p.max_batch = 0;
+        assert_eq!(ns.decode_for(0, &p).max_batch, 1);
+        assert_eq!(ns.decode_for(1, &p).max_batch, 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "batch axis")]
+    fn unsorted_batch_caps_panic() {
+        let _ = nx().with_batch_caps(vec![4, 2]);
     }
 }

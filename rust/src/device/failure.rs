@@ -42,12 +42,26 @@ fn runtime_error_rate(model: ModelKind) -> f64 {
 /// OS + runtime baseline footprint (GB).
 const OS_GB: f64 = 2.0;
 
-/// Estimated peak memory footprint (GB) of `model` at `cfg`.
+/// Share of an instance's footprint that is per-frame activations —
+/// the part that grows with every extra frame a batch holds in flight
+/// (weights are shared across the batch).
+const ACTIVATION_BATCH_FRAC: f64 = 0.35;
+
+/// Estimated peak memory footprint (GB) of `model` at `cfg`. Batch
+/// caps above 1 stack extra activation buffers per instance; the
+/// `max_batch = 1` footprint is byte-identical to the historical
+/// 5-dim model (the batch term is structurally skipped).
 pub fn peak_memory_gb(dev: DeviceKind, model: ModelKind, cfg: &HwConfig) -> f64 {
     let prof = model.profile();
-    OS_GB
-        + prof.mem_gb_base
-        + prof.mem_gb_per_instance * lpddr_factor(dev) * cfg.concurrency as f64
+    let per_instance = prof.mem_gb_per_instance * lpddr_factor(dev);
+    let mut peak = OS_GB + prof.mem_gb_base + per_instance * cfg.concurrency as f64;
+    if cfg.max_batch > 1 {
+        peak += per_instance
+            * cfg.concurrency as f64
+            * ACTIVATION_BATCH_FRAC
+            * (cfg.max_batch - 1) as f64;
+    }
+    peak
 }
 
 /// Why a configuration is excluded.
@@ -65,7 +79,10 @@ pub fn check(dev: DeviceKind, model: ModelKind, cfg: &HwConfig) -> Option<Failur
 
     // Deterministic per-config jitter: allocator/fragmentation variance
     // observed when the paper's sweep ran each config on real hardware.
-    let mut key = cfg.key().to_vec();
+    // Keyed on the hardware knobs alone (`hw_key`): allocator variance
+    // belongs to the DVFS state, and the 5-word key keeps every
+    // `max_batch = 1` verdict bit-identical to the pre-batch model.
+    let mut key = cfg.hw_key().to_vec();
     key.push(model.id());
     key.push(dev.id());
     key.push(0xA110C); // salt: memory stream

@@ -88,16 +88,35 @@ pub fn evaluate(dev: DeviceKind, model: ModelKind, cfg: &HwConfig) -> PerfPoint 
     // c instances in flight, gated by the binding resource, degraded by
     // memory-bus interference between instances.
     let interference = (1.0 - p.mem_interference * (c - 1.0)).max(0.2);
-    let tput_ms = (c / serial_ms).min(cap_gpu).min(cap_cpu).min(cap_mem) * interference;
+    let mut tput_ms = (c / serial_ms).min(cap_gpu).min(cap_cpu).min(cap_mem) * interference;
+
+    // Batching amortizes kernel launches and CPU pre/post dispatch over
+    // `max_batch` frames: sublinear throughput gain (b=4 → ~1.41×), paid
+    // for in per-frame residency — a frame now waits for its whole batch
+    // to clear the pipeline. The `max_batch = 1` path is structurally
+    // unchanged so legacy 5-dim results stay byte-identical.
+    let b = cfg.max_batch.max(1) as f64;
+    let batch_gain = if cfg.max_batch > 1 {
+        (1.0 + 0.28 * (b - 1.0)) / (1.0 + 0.10 * (b - 1.0))
+    } else {
+        1.0
+    };
+    if cfg.max_batch > 1 {
+        tput_ms *= batch_gain;
+    }
 
     let throughput_fps = tput_ms * 1000.0;
-    let latency_ms = c / tput_ms;
+    // Little's law over frames in flight: c instances × b frames each.
+    let latency_ms = if cfg.max_batch > 1 { c * b / tput_ms } else { c / tput_ms };
 
     PerfPoint {
         throughput_fps,
         latency_ms,
-        gpu_util: (tput_ms * t.gpu_ms).clamp(0.0, 1.0),
-        cpu_util: (tput_ms * t.cpu_ms / (cores * p.cpu_usable_frac)).clamp(0.0, 1.0),
+        // Batched kernels spend less GPU/CPU time per frame (amortized
+        // launches); memory traffic per frame is unchanged.
+        gpu_util: (tput_ms * t.gpu_ms / batch_gain).clamp(0.0, 1.0),
+        cpu_util: (tput_ms * t.cpu_ms / batch_gain / (cores * p.cpu_usable_frac))
+            .clamp(0.0, 1.0),
         mem_util: (tput_ms * t.mem_ms).clamp(0.0, 1.0),
     }
 }
@@ -115,6 +134,7 @@ mod tests {
             gpu_freq_mhz: gpu,
             mem_freq_mhz: mem,
             concurrency: c,
+            max_batch: 1,
         }
     }
 
@@ -195,6 +215,45 @@ mod tests {
                 1e-6,
             )
         });
+    }
+
+    #[test]
+    fn batching_gains_throughput_sublinearly_and_costs_latency() {
+        let at = |b: u32| {
+            let mut c = cfg(1908, 6, 1100, 1866, 2);
+            c.max_batch = b;
+            evaluate(DeviceKind::XavierNx, ModelKind::Yolo, &c)
+        };
+        let b1 = at(1);
+        let b2 = at(2);
+        let b8 = at(8);
+        // Throughput improves with batch, but never linearly.
+        assert!(b2.throughput_fps > b1.throughput_fps * 1.05);
+        assert!(b8.throughput_fps > b2.throughput_fps);
+        assert!(b8.throughput_fps < b1.throughput_fps * 3.0);
+        // Per-frame latency grows: a frame rides with its whole batch.
+        assert!(b2.latency_ms > b1.latency_ms);
+        assert!(b8.latency_ms > b2.latency_ms);
+        // Generalized Little's law: latency == frames-in-flight / rate.
+        let expect = 2.0 * 8.0 / (b8.throughput_fps / 1000.0);
+        assert!((b8.latency_ms - expect).abs() < 1e-9, "{} {expect}", b8.latency_ms);
+    }
+
+    #[test]
+    fn batch_of_one_is_bit_identical_to_the_legacy_model() {
+        // `max_batch = 1` must reproduce the 5-dim surface exactly; the
+        // batch terms are structurally skipped, not merely ≈1.
+        for dev in DeviceKind::ALL {
+            for model in ModelKind::ALL {
+                for c in dev.space().enumerate().into_iter().step_by(97) {
+                    let p = evaluate(dev, model, &c);
+                    assert!((p.latency_ms
+                        - c.concurrency as f64 / (p.throughput_fps / 1000.0))
+                        .abs()
+                        < 1e-12);
+                }
+            }
+        }
     }
 
     #[test]

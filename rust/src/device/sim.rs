@@ -22,6 +22,11 @@ pub struct Measured {
     pub power_mw: f64,
     /// Mean per-frame latency (ms). ∞ for failed configs.
     pub latency_ms: f64,
+    /// 99th-percentile per-frame latency (ms). Equal to `latency_ms`
+    /// under closed-loop measurement (no external queue); under an
+    /// offered load it adds the queueing tail (see
+    /// [`under_offered_load`]). ∞ for failed or saturated configs.
+    pub p99_latency_ms: f64,
     pub gpu_util: f64,
     pub cpu_util: f64,
     pub mem_util: f64,
@@ -75,6 +80,14 @@ impl Device {
     /// Enable the thermal-throttle extension (ablation benches).
     pub fn with_thermal(mut self, t: ThermalModel) -> Device {
         self.thermal = Some(t);
+        self
+    }
+
+    /// Open the batch axis to `caps`, making `max_batch` a live sixth
+    /// search dimension on this board (the default axis is the legacy
+    /// singleton `[1]`; see [`ConfigSpace::with_batch_caps`]).
+    pub fn with_batch_caps(mut self, caps: Vec<u32>) -> Device {
+        self.space = self.space.with_batch_caps(caps);
         self
     }
 
@@ -172,6 +185,7 @@ impl Device {
                 power_mw: p.static_mw
                     * self.rng.noise_factor(p.noise_rel * self.noise_scale),
                 latency_ms: f64::INFINITY,
+                p99_latency_ms: f64::INFINITY,
                 gpu_util: 0.0,
                 cpu_util: 0.0,
                 mem_util: 0.0,
@@ -185,9 +199,13 @@ impl Device {
         }
 
         // Per-chip variation: consistent across repeated visits to the
-        // same configuration (manufacturing spread, binning).
+        // same configuration (manufacturing spread, binning). Keyed on
+        // the hardware knobs alone (`hw_key`): silicon is a property of
+        // the DVFS state, never of the app's batch cap — and the 5-word
+        // key keeps every `max_batch = 1` read bit-identical to the
+        // pre-batch model.
         let p = self.kind.model_params();
-        let mut key = applied.key().to_vec();
+        let mut key = applied.hw_key().to_vec();
         key.extend_from_slice(&[self.model.id(), self.kind.id(), 0x1077]);
         let lot_t = 1.0 + p.lottery_rel * 2.0 * (hash_unit(&key) - 0.5);
         *key.last_mut().unwrap() = 0x1077 + 1;
@@ -198,17 +216,67 @@ impl Device {
         let tput = pf.throughput_fps * lot_t * self.rng.noise_factor(rel);
         let pwr = pw.total_mw() * lot_p * self.rng.noise_factor(rel);
 
+        // Frames in flight: c instances × max_batch frames each. The
+        // u32 multiply by 1 is exact, so 5-dim reads are byte-identical.
+        let in_flight = (applied.concurrency * applied.max_batch.max(1)) as f64;
+        let latency_ms = in_flight / (tput / 1000.0);
         Measured {
             config: applied,
             throughput_fps: tput,
             power_mw: pwr,
-            latency_ms: applied.concurrency as f64 / (tput / 1000.0),
+            latency_ms,
+            p99_latency_ms: latency_ms,
             gpu_util: pf.gpu_util,
             cpu_util: pf.cpu_util,
             mem_util: pf.mem_util,
             failed: None,
         }
     }
+
+    /// Run one measurement window under an open-loop offered load of
+    /// `offered_fps` arrivals per second (see [`under_offered_load`]).
+    pub fn run_under_load(&mut self, cfg: HwConfig, offered_fps: f64) -> Measured {
+        let m = self.run(cfg);
+        under_offered_load(m, offered_fps, self.kind.model_params().static_mw)
+    }
+}
+
+/// Transform a closed-loop window into what the same configuration
+/// observes under an open-loop offered load of `offered_fps` (fluid
+/// M/M/1-flavored approximation, fully deterministic):
+///
+/// * saturated (λ ≥ μ) — the backlog grows without bound: the config
+///   **sheds**, served throughput pins at capacity and p99 → ∞;
+/// * stable (λ < μ) — the device serves exactly what arrives; mean
+///   latency gains the mean queue wait ρ/(μ−λ) and p99 gains the tail
+///   wait ln(100·ρ)/(μ−λ) (from P(wait > t) ≈ ρ·e^{−(μ−λ)t});
+/// * utilizations scale with ρ and power interpolates from `static_mw`
+///   toward the full-rate draw — an idling device cools down.
+pub fn under_offered_load(mut m: Measured, offered_fps: f64, static_mw: f64) -> Measured {
+    assert!(
+        offered_fps.is_finite() && offered_fps >= 0.0,
+        "offered load must be finite and non-negative: {offered_fps}"
+    );
+    if m.failed.is_some() || m.throughput_fps <= 0.0 {
+        m.p99_latency_ms = f64::INFINITY;
+        return m;
+    }
+    let mu = m.throughput_fps;
+    let rho = offered_fps / mu;
+    if rho >= 1.0 {
+        m.p99_latency_ms = f64::INFINITY;
+        return m;
+    }
+    let mean_wait_s = rho / (mu - offered_fps);
+    let p99_wait_s = (100.0 * rho).ln().max(0.0) / (mu - offered_fps);
+    m.p99_latency_ms = m.latency_ms + p99_wait_s * 1000.0;
+    m.latency_ms += mean_wait_s * 1000.0;
+    m.throughput_fps = offered_fps;
+    m.gpu_util *= rho;
+    m.cpu_util *= rho;
+    m.mem_util *= rho;
+    m.power_mw = static_mw + (m.power_mw - static_mw).max(0.0) * rho;
+    m
 }
 
 #[cfg(test)]
@@ -256,10 +324,63 @@ mod tests {
             gpu_freq_mhz: 0,
             mem_freq_mhz: 1700,
             concurrency: 2,
+            max_batch: 7,
         });
         assert!(d.space().contains(&applied));
         assert_eq!(applied.cpu_cores, 6);
         assert_eq!(applied.gpu_freq_mhz, 510);
+        // The device space carries the legacy singleton batch axis.
+        assert_eq!(applied.max_batch, 1);
+    }
+
+    #[test]
+    fn closed_loop_p99_equals_mean_latency() {
+        let mut d = Device::new(DeviceKind::XavierNx, ModelKind::Yolo, 4);
+        let m = d.run(d.space().midpoint());
+        assert_eq!(m.p99_latency_ms, m.latency_ms);
+        assert!(m.p99_latency_ms.is_finite());
+    }
+
+    #[test]
+    fn offered_load_adds_queueing_tail_then_sheds() {
+        let mut d =
+            Device::new(DeviceKind::OrinNano, ModelKind::Yolo, 5).with_noise_scale(0.0);
+        let cfg = d.space().midpoint();
+        let free = d.run(cfg);
+        let mu = free.throughput_fps;
+
+        // Light load: served rate == offered rate, modest tail.
+        let light = d.run_under_load(cfg, 0.3 * mu);
+        assert!((light.throughput_fps - 0.3 * mu).abs() < 1e-9);
+        assert!(light.p99_latency_ms >= light.latency_ms);
+        assert!(light.p99_latency_ms.is_finite());
+        assert!(light.power_mw < free.power_mw, "idling device draws less");
+
+        // Heavy-but-stable load: the tail blows up as ρ → 1.
+        let heavy = d.run_under_load(cfg, 0.97 * mu);
+        assert!(heavy.p99_latency_ms > light.p99_latency_ms * 3.0);
+
+        // Saturation: p99 is unbounded — the config sheds.
+        let shed = d.run_under_load(cfg, 1.05 * mu);
+        assert!(shed.p99_latency_ms.is_infinite());
+        assert!(shed.failed.is_none(), "shedding is overload, not a crash");
+    }
+
+    #[test]
+    fn under_offered_load_is_deterministic_and_monotone_in_rate() {
+        let mut d =
+            Device::new(DeviceKind::XavierNx, ModelKind::Frcnn, 6).with_noise_scale(0.0);
+        let cfg = d.space().midpoint();
+        let base = d.run(cfg);
+        let static_mw = DeviceKind::XavierNx.model_params().static_mw;
+        let mut prev = 0.0;
+        for frac in [0.1, 0.3, 0.5, 0.7, 0.9, 0.99] {
+            let m = under_offered_load(base, frac * base.throughput_fps, static_mw);
+            let again = under_offered_load(base, frac * base.throughput_fps, static_mw);
+            assert_eq!(m, again, "pure function of (window, rate)");
+            assert!(m.p99_latency_ms >= prev, "tail grows with offered load");
+            prev = m.p99_latency_ms;
+        }
     }
 
     #[test]

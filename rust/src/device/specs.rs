@@ -85,6 +85,7 @@ impl DeviceKind {
             gpu_freq_mhz: s.max(super::dvfs::Dim::GpuFreq),
             mem_freq_mhz: s.max(super::dvfs::Dim::MemFreq),
             concurrency: 1,
+            max_batch: 1,
         }
     }
 
@@ -98,6 +99,7 @@ impl DeviceKind {
                 gpu_freq_mhz: 630,
                 mem_freq_mhz: 1690,
                 concurrency: 1,
+                max_batch: 1,
             },
             DeviceKind::OrinNano => HwConfig {
                 cpu_freq_mhz: 1006,
@@ -105,6 +107,7 @@ impl DeviceKind {
                 gpu_freq_mhz: 412,
                 mem_freq_mhz: 2133,
                 concurrency: 1,
+                max_batch: 1,
             },
         }
     }

@@ -422,6 +422,167 @@ impl FleetScaleScenario {
     }
 }
 
+/// Open-loop load scenario: one (device, model) pair serving
+/// arrival-driven traffic under a p99 latency SLO and a power budget
+/// (`coral load`, the `open_loop` example, `bench_load`).
+///
+/// Unlike the closed-loop duals, the throughput clause here is the
+/// offered load itself — a feasible config must serve *everything that
+/// arrives* (no shedding), inside the power envelope, with the queueing
+/// tail under the SLO. Ramping the offered rate therefore shrinks the
+/// feasible region from both sides (capacity and tail) until it
+/// vanishes: the **shed point** of a policy is the highest offered rate
+/// it still sustains.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LoadScenario {
+    pub name: &'static str,
+    pub device: DeviceKind,
+    pub model: ModelKind,
+    /// Arrival shape name (`workload::ArrivalProfile::by_name`).
+    pub profile: &'static str,
+    /// Base offered load the profile modulates (fps).
+    pub base_rate_fps: f64,
+    /// p99 latency SLO (ms).
+    pub latency_slo_ms: f64,
+    /// Power budget (mW) — the member's paper dual budget.
+    pub budget_mw: f64,
+}
+
+/// The open-loop load family: a steady YOLO feed on each board plus a
+/// diurnal swing and a flash crowd. Base rates sit well under the
+/// boards' best closed-loop capacity (the dual targets), so the regions
+/// start nonempty and the ramps have room to climb before they shed.
+pub const LOAD_SCENARIOS: [LoadScenario; 4] = [
+    LoadScenario {
+        name: "load-nx-yolo-steady",
+        device: DeviceKind::XavierNx,
+        model: ModelKind::Yolo,
+        profile: "steady",
+        base_rate_fps: 20.0,
+        latency_slo_ms: 350.0,
+        budget_mw: 6_500.0,
+    },
+    LoadScenario {
+        name: "load-orin-yolo-diurnal",
+        device: DeviceKind::OrinNano,
+        model: ModelKind::Yolo,
+        profile: "diurnal",
+        base_rate_fps: 30.0,
+        latency_slo_ms: 150.0,
+        budget_mw: 5_600.0,
+    },
+    LoadScenario {
+        name: "load-nx-frcnn-flash",
+        device: DeviceKind::XavierNx,
+        model: ModelKind::Frcnn,
+        profile: "flash-crowd",
+        base_rate_fps: 4.0,
+        latency_slo_ms: 900.0,
+        budget_mw: 6_000.0,
+    },
+    LoadScenario {
+        name: "load-orin-retinanet-steady",
+        device: DeviceKind::OrinNano,
+        model: ModelKind::RetinaNet,
+        profile: "steady",
+        base_rate_fps: 5.0,
+        latency_slo_ms: 1_100.0,
+        budget_mw: 4_600.0,
+    },
+];
+
+impl LoadScenario {
+    /// Find a scenario by name.
+    pub fn by_name(name: &str) -> Option<&'static LoadScenario> {
+        LOAD_SCENARIOS.iter().find(|s| s.name == name)
+    }
+
+    /// The scenario's arrival profile (Poisson draws seeded `seed`).
+    pub fn arrival(&self, seed: u64) -> crate::workload::ArrivalProfile {
+        crate::workload::ArrivalProfile::by_name(self.profile, self.base_rate_fps, seed)
+            .expect("LOAD_SCENARIOS use registered profile names")
+    }
+
+    /// Constraints at an offered rate: serve the whole load, under the
+    /// budget, with the p99 tail inside the SLO.
+    pub fn constraints_at(&self, offered_fps: f64) -> Constraints {
+        Constraints::dual(offered_fps, self.budget_mw).with_latency_slo(self.latency_slo_ms)
+    }
+
+    /// Constraints at the scenario's base rate.
+    pub fn constraints(&self) -> Constraints {
+        self.constraints_at(self.base_rate_fps)
+    }
+
+    /// The batch axis the load family searches. Powers of two, capped
+    /// at 4: on the heavy detectors (frcnn, retinanet) batch 8 inflates
+    /// the activation footprint past the boards' memory budget at
+    /// *every* concurrency, so opening it would only add a fully-OOM
+    /// plane that costs the searched policy iterations without widening
+    /// any scenario's feasible region.
+    pub const BATCH_CAPS: &'static [u32] = &[1, 2, 4];
+
+    /// The environment the scenario measures: a simulated board with
+    /// the batch axis opened ([`LoadScenario::BATCH_CAPS`]) whose every
+    /// window queues against the scenario's offered load.
+    pub fn env(&self, seed: u64) -> SimEnv {
+        let dev = Device::new(self.device, self.model, seed)
+            .with_batch_caps(Self::BATCH_CAPS.to_vec());
+        SimEnv::new(dev).under_load(self.arrival(seed))
+    }
+
+    /// Noise-free feasibility of one config at a steady offered rate:
+    /// the true surfaces pushed through the deterministic queueing
+    /// transform, judged by [`LoadScenario::constraints_at`].
+    pub fn config_feasible_at(&self, cfg: &crate::device::HwConfig, offered_fps: f64) -> bool {
+        use crate::device::{failure, perf, power, sim, Measured};
+        if failure::check(self.device, self.model, cfg).is_some() {
+            return false;
+        }
+        let pf = perf::evaluate(self.device, self.model, cfg);
+        let pw = power::evaluate(self.device, cfg, &pf).total_mw();
+        let m = Measured {
+            config: *cfg,
+            throughput_fps: pf.throughput_fps,
+            power_mw: pw,
+            latency_ms: pf.latency_ms,
+            p99_latency_ms: pf.latency_ms,
+            gpu_util: pf.gpu_util,
+            cpu_util: pf.cpu_util,
+            mem_util: pf.mem_util,
+            failed: None,
+        };
+        let loaded =
+            sim::under_offered_load(m, offered_fps, self.device.model_params().static_mw);
+        self.constraints_at(offered_fps)
+            .satisfied(loaded.throughput_fps, loaded.power_mw, loaded.p99_latency_ms)
+    }
+
+    /// Shed point of a candidate set: ramp the steady offered rate from
+    /// the base in `step_fps` increments and return the highest rate at
+    /// which *some* candidate still satisfies the SLO+power pair
+    /// (0.0 if none does even at the base). Every config's capacity is
+    /// finite, so the ramp always terminates — shed points are finite
+    /// by construction.
+    pub fn shed_point_fps(&self, candidates: &[crate::device::HwConfig], step_fps: f64) -> f64 {
+        assert!(step_fps > 0.0 && step_fps.is_finite());
+        let mut highest = 0.0;
+        let mut rate = self.base_rate_fps;
+        while candidates.iter().any(|c| self.config_feasible_at(c, rate)) {
+            highest = rate;
+            rate += step_fps;
+        }
+        highest
+    }
+
+    /// The scenario's oracle shed point: the ramp over *every* valid
+    /// config — the ceiling no policy, searched or fixed, can beat.
+    pub fn oracle_shed_point_fps(&self, step_fps: f64) -> f64 {
+        let valid = crate::device::failure::valid_configs(self.device, self.model);
+        self.shed_point_fps(&valid, step_fps)
+    }
+}
+
 /// Constraints of the dual scenario for (device, model).
 pub fn dual_constraints(device: DeviceKind, model: ModelKind) -> Constraints {
     let s = DUAL_SCENARIOS
@@ -701,6 +862,70 @@ mod tests {
         assert_eq!(m.config, cfg);
         assert!(m.throughput_fps > 0.0);
         assert!(m.power_mw > 0.0);
+    }
+
+    #[test]
+    fn load_family_lookup_profiles_and_constraints() {
+        assert!(LoadScenario::by_name("load-nx-yolo-steady").is_some());
+        assert!(LoadScenario::by_name("bogus").is_none());
+        for s in &LOAD_SCENARIOS {
+            let p = s.arrival(7);
+            assert_eq!(p.base_rate_fps, s.base_rate_fps, "{}", s.name);
+            let cons = s.constraints();
+            assert_eq!(cons.throughput_target_fps, Some(s.base_rate_fps));
+            assert_eq!(cons.power_budget_mw, Some(s.budget_mw));
+            assert_eq!(cons.latency_slo_ms, Some(s.latency_slo_ms));
+            // The ramped clause tracks the offered rate.
+            let up = s.constraints_at(s.base_rate_fps * 2.0);
+            assert_eq!(up.throughput_target_fps, Some(s.base_rate_fps * 2.0));
+            // The environment folds the load into its cache identity.
+            assert_ne!(
+                crate::control::Environment::fingerprint(&s.env(3)),
+                crate::control::Environment::fingerprint(&SimEnv::new(Device::new(
+                    s.device, s.model, 3
+                ))),
+                "{}: loaded and unloaded surfaces must not share a cache",
+                s.name
+            );
+        }
+    }
+
+    #[test]
+    fn load_regions_start_nonempty_and_shed_points_are_finite_and_ordered() {
+        // The family's premise: at the base rate some valid config
+        // serves the whole load inside SLO+power (the search has a
+        // target), the ramp always sheds eventually (finite shed
+        // points), and no fixed preset outlasts the full-space oracle.
+        for s in &LOAD_SCENARIOS {
+            let valid = failure::valid_configs(s.device, s.model);
+            let at_base =
+                valid.iter().filter(|c| s.config_feasible_at(c, s.base_rate_fps)).count();
+            assert!(at_base > 0, "{}: empty region at the base rate", s.name);
+            let step = s.base_rate_fps * 0.25;
+            let oracle = s.oracle_shed_point_fps(step);
+            assert!(
+                oracle >= s.base_rate_fps && oracle.is_finite(),
+                "{}: oracle shed point {oracle}",
+                s.name
+            );
+            for (label, cfg) in [
+                ("max-power", s.device.preset_max_power()),
+                ("default", s.device.preset_default()),
+            ] {
+                let preset = s.shed_point_fps(&[cfg], step);
+                assert!(preset.is_finite(), "{}/{label}", s.name);
+                assert!(
+                    preset <= oracle,
+                    "{}/{label}: preset shed {preset} above oracle {oracle}",
+                    s.name
+                );
+            }
+            // The ramp genuinely vanishes: nothing survives far beyond
+            // the oracle's shed point.
+            assert!(valid
+                .iter()
+                .all(|c| !s.config_feasible_at(c, oracle + 10.0 * step)));
+        }
     }
 
     #[test]

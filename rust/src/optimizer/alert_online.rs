@@ -43,13 +43,20 @@ impl Optimizer for AlertOnlineOptimizer {
         self.space.random(&mut self.rng)
     }
 
-    fn observe(&mut self, config: HwConfig, throughput_fps: f64, power_mw: f64) {
+    fn observe(
+        &mut self,
+        config: HwConfig,
+        throughput_fps: f64,
+        power_mw: f64,
+        p99_latency_ms: f64,
+    ) {
         self.tried.push(config);
-        let out = reward(&self.cons, throughput_fps, power_mw);
+        let out = reward(&self.cons, throughput_fps, power_mw, p99_latency_ms);
         let cand = BestConfig {
             config,
             throughput_fps,
             power_mw,
+            p99_latency_ms,
             reward: out.reward,
             feasible: out.feasible,
         };
@@ -121,7 +128,7 @@ mod tests {
             let c = opt.propose();
             assert!(seen.insert(c), "repeat proposal {c}");
             let m = dev.run(c);
-            opt.observe(c, m.throughput_fps, m.power_mw);
+            opt.observe(c, m.throughput_fps, m.power_mw, m.p99_latency_ms);
         }
     }
 }

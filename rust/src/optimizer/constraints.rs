@@ -1,5 +1,13 @@
 //! Optimization constraints (paper Eq. 6): throughput target τ_target
-//! and/or power budget p_budget.
+//! and/or power budget p_budget, plus the serving extension's p99
+//! latency SLO for open-loop (arrival-driven) scenarios.
+//!
+//! Every constructor sanitizes non-finite bounds to `None`: an infinite
+//! or NaN target/budget/SLO constrains nothing, and letting one leak
+//! into `feasible`/`target_or_zero` silently inverted comparisons (the
+//! historical `max_throughput` preset carried `Some(f64::INFINITY)`).
+//! "Always climb" semantics live in [`Constraints::climb_target_fps`],
+//! keyed off the objective rather than a sentinel target.
 
 /// What "best" means once constraints are handled.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -24,19 +32,29 @@ pub struct Constraints {
     /// Power floor p_min (mW): below this, further power reduction is not
     /// worth chasing (Algorithm 2's `p_min`; defaults to 0 = always try).
     pub power_floor_mw: f64,
+    /// p99 latency SLO (ms): p99(s) ≤ slo required. `None` disables the
+    /// clause — closed-loop scenarios never set it.
+    pub latency_slo_ms: Option<f64>,
     /// Ranking objective.
     pub objective: Objective,
 }
 
+/// A bound that is not a finite number constrains nothing.
+fn finite(bound: Option<f64>) -> Option<f64> {
+    bound.filter(|v| v.is_finite())
+}
+
 impl Constraints {
     /// Single-constraint throughput-maximization scenario (paper Figs
-    /// 3–4): no power budget, unreachable target (search always climbs),
-    /// ranking by raw throughput.
+    /// 3–4): no power budget, no reachable target — the search always
+    /// climbs (see [`Constraints::climb_target_fps`]) and ranking is by
+    /// raw throughput.
     pub fn max_throughput() -> Constraints {
         Constraints {
-            throughput_target_fps: Some(f64::INFINITY),
+            throughput_target_fps: None,
             power_budget_mw: None,
             power_floor_mw: 0.0,
+            latency_slo_ms: None,
             objective: Objective::Throughput,
         }
     }
@@ -44,9 +62,10 @@ impl Constraints {
     /// Dual-constraint scenario (paper §IV-B).
     pub fn dual(throughput_fps: f64, power_mw: f64) -> Constraints {
         Constraints {
-            throughput_target_fps: Some(throughput_fps),
-            power_budget_mw: Some(power_mw),
+            throughput_target_fps: finite(Some(throughput_fps)),
+            power_budget_mw: finite(Some(power_mw)),
             power_floor_mw: 0.0,
+            latency_slo_ms: None,
             objective: Objective::Efficiency,
         }
     }
@@ -55,9 +74,10 @@ impl Constraints {
     /// (soft) target; no power budget.
     pub fn throughput_only(target_fps: f64) -> Constraints {
         Constraints {
-            throughput_target_fps: Some(target_fps),
+            throughput_target_fps: finite(Some(target_fps)),
             power_budget_mw: None,
             power_floor_mw: 0.0,
+            latency_slo_ms: None,
             objective: Objective::Efficiency,
         }
     }
@@ -68,12 +88,19 @@ impl Constraints {
             throughput_target_fps: None,
             power_budget_mw: None,
             power_floor_mw: 0.0,
+            latency_slo_ms: None,
             objective: Objective::Efficiency,
         }
     }
 
     pub fn with_power_floor(mut self, floor_mw: f64) -> Constraints {
         self.power_floor_mw = floor_mw;
+        self
+    }
+
+    /// Add a p99 latency SLO (ms). Non-finite values disable the clause.
+    pub fn with_latency_slo(mut self, slo_ms: f64) -> Constraints {
+        self.latency_slo_ms = finite(Some(slo_ms));
         self
     }
 
@@ -99,15 +126,63 @@ impl Constraints {
         true
     }
 
+    /// Full satisfaction check for arrival-driven measurements: Eq. 6
+    /// plus the p99 latency clause. A shed configuration (p99 = ∞)
+    /// fails any active SLO.
+    pub fn satisfied(&self, throughput_fps: f64, power_mw: f64, p99_latency_ms: f64) -> bool {
+        self.feasible(throughput_fps, power_mw) && self.latency_ok(p99_latency_ms)
+    }
+
+    /// The p99 latency clause alone (`true` when no SLO is set).
+    pub fn latency_ok(&self, p99_latency_ms: f64) -> bool {
+        match self.latency_slo_ms {
+            Some(slo) => p99_latency_ms <= slo,
+            None => true,
+        }
+    }
+
     /// τ_target, with the convention that "no target" behaves as 0
     /// (any throughput satisfies it).
     pub fn target_or_zero(&self) -> f64 {
         self.throughput_target_fps.unwrap_or(0.0)
     }
 
+    /// The throughput level above which Algorithm 2 stops climbing and
+    /// starts trading power down. Under [`Objective::Throughput`] there
+    /// is no such level — the search always climbs — so this is ∞;
+    /// otherwise it is the target (0 when unset).
+    pub fn climb_target_fps(&self) -> f64 {
+        if self.objective == Objective::Throughput {
+            f64::INFINITY
+        } else {
+            self.target_or_zero()
+        }
+    }
+
     /// p_budget, with "no budget" = ∞.
     pub fn budget_or_inf(&self) -> f64 {
         self.power_budget_mw.unwrap_or(f64::INFINITY)
+    }
+
+    /// Human-readable summary for scenario tables and CLI output.
+    pub fn describe(&self) -> String {
+        let mut parts = Vec::new();
+        if let Some(t) = self.throughput_target_fps {
+            parts.push(format!("tput>={t:.0}fps"));
+        }
+        if let Some(p) = self.power_budget_mw {
+            parts.push(format!("power<={p:.0}mW"));
+        }
+        if let Some(l) = self.latency_slo_ms {
+            parts.push(format!("p99<={l:.0}ms"));
+        }
+        if parts.is_empty() {
+            parts.push(match self.objective {
+                Objective::Throughput => "max-throughput".to_string(),
+                Objective::Efficiency => "unconstrained".to_string(),
+            });
+        }
+        parts.join(" ")
     }
 }
 
@@ -142,8 +217,62 @@ mod tests {
     fn max_throughput_scenario() {
         let c = Constraints::max_throughput();
         assert_eq!(c.objective, Objective::Throughput);
-        assert!(!c.feasible(1000.0, 100.0), "target unreachable by design");
+        assert_eq!(c.throughput_target_fps, None, "no sentinel target");
+        assert!(c.feasible(1000.0, 100.0), "any running config satisfies Eq. 6");
+        assert!(!c.feasible(0.0, 100.0), "crashes never do");
         assert_eq!(c.budget_or_inf(), f64::INFINITY);
+        assert_eq!(c.climb_target_fps(), f64::INFINITY, "the search always climbs");
+    }
+
+    #[test]
+    fn non_finite_bounds_sanitize_to_none() {
+        // Regression: `max_throughput` used to carry
+        // `throughput_target_fps: Some(f64::INFINITY)`, which made
+        // `target_or_zero()` return ∞ and every measurement infeasible.
+        for bad in [f64::INFINITY, f64::NEG_INFINITY, f64::NAN] {
+            let c = Constraints::dual(bad, bad);
+            assert_eq!(c.throughput_target_fps, None, "{bad} target");
+            assert_eq!(c.power_budget_mw, None, "{bad} budget");
+            assert_eq!(c.target_or_zero(), 0.0);
+            assert_eq!(c.budget_or_inf(), f64::INFINITY);
+            assert!(c.feasible(10.0, 5000.0), "sanitized bounds constrain nothing");
+            let t = Constraints::throughput_only(bad);
+            assert_eq!(t.throughput_target_fps, None);
+            let s = Constraints::none().with_latency_slo(bad);
+            assert_eq!(s.latency_slo_ms, None);
+            assert!(s.latency_ok(f64::INFINITY), "disabled SLO passes even sheds");
+        }
+        // Finite bounds pass through untouched.
+        assert_eq!(Constraints::dual(30.0, 6500.0).throughput_target_fps, Some(30.0));
+    }
+
+    #[test]
+    fn latency_slo_clause() {
+        let c = Constraints::dual(25.0, 6500.0).with_latency_slo(80.0);
+        assert_eq!(c.latency_slo_ms, Some(80.0));
+        assert!(c.satisfied(30.0, 6000.0, 79.9));
+        assert!(c.satisfied(30.0, 6000.0, 80.0), "boundary is inclusive");
+        assert!(!c.satisfied(30.0, 6000.0, 80.1), "tail too long");
+        assert!(!c.satisfied(30.0, 6000.0, f64::INFINITY), "shed violates the SLO");
+        assert!(!c.satisfied(20.0, 6000.0, 10.0), "Eq. 6 still applies");
+        // Without an SLO, satisfied == feasible for any p99.
+        let d = Constraints::dual(25.0, 6500.0);
+        assert!(d.satisfied(30.0, 6000.0, f64::INFINITY));
+    }
+
+    #[test]
+    fn climb_target_matches_eq6_target_for_efficiency() {
+        assert_eq!(Constraints::dual(30.0, 6500.0).climb_target_fps(), 30.0);
+        assert_eq!(Constraints::none().climb_target_fps(), 0.0);
+        assert_eq!(Constraints::throughput_only(24.0).climb_target_fps(), 24.0);
+    }
+
+    #[test]
+    fn describe_lists_active_clauses() {
+        let c = Constraints::dual(30.0, 6500.0).with_latency_slo(80.0);
+        assert_eq!(c.describe(), "tput>=30fps power<=6500mW p99<=80ms");
+        assert_eq!(Constraints::max_throughput().describe(), "max-throughput");
+        assert_eq!(Constraints::none().describe(), "unconstrained");
     }
 
     #[test]

@@ -118,6 +118,7 @@ struct Scored {
     config: HwConfig,
     throughput_fps: f64,
     power_mw: f64,
+    p99_latency_ms: f64,
     reward: f64,
     feasible: bool,
 }
@@ -237,6 +238,12 @@ impl CoralOptimizer {
                 } else {
                     let mut c = self.space.preset_max_power();
                     c.concurrency = self.space.max(Dim::Concurrency);
+                    // Span the batch axis too: presets carry the axis
+                    // minimum, so without this probe the |best − second|
+                    // spread along `max_batch` is zero and Eq. 10 steps
+                    // never explore batching. On legacy singleton axes
+                    // max = min = 1 — the probe is unchanged there.
+                    c.max_batch = self.space.max(Dim::BatchCap);
                     c
                 };
                 return self.next_untried(z);
@@ -244,7 +251,10 @@ impl CoralOptimizer {
         };
 
         let last = self.last.unwrap_or(x);
-        let go_down = last.throughput_fps > self.cons.target_or_zero()
+        // `climb_target_fps` is ∞ under the throughput objective (the
+        // search always climbs) — previously encoded as a sentinel
+        // `Some(f64::INFINITY)` target, now explicit.
+        let go_down = last.throughput_fps > self.cons.climb_target_fps()
             && last.power_mw >= self.cons.power_floor_mw;
 
         let xv = x.config.as_vec();
@@ -292,7 +302,7 @@ impl CoralOptimizer {
         // collision nudges sweep the neighbouring levels anyway
         // (DESIGN.md §2 notes this interpretation).
         if let Some(bt) = self.best_tput {
-            if bt.throughput_fps > self.cons.target_or_zero()
+            if bt.throughput_fps > self.cons.climb_target_fps()
                 && bt.power_mw > self.cons.power_floor_mw
                 && self.cfg.heuristic != Heuristic::Off
             {
@@ -387,13 +397,22 @@ impl Optimizer for CoralOptimizer {
         z
     }
 
-    fn observe(&mut self, config: HwConfig, throughput_fps: f64, power_mw: f64) {
+    fn observe(
+        &mut self,
+        config: HwConfig,
+        throughput_fps: f64,
+        power_mw: f64,
+        p99_latency_ms: f64,
+    ) {
         self.iter += 1;
         self.pending = None;
         self.visited.insert(config);
 
-        // Step 1: reward evaluation (Algorithm 1).
-        let out = reward(&self.cons, throughput_fps, power_mw);
+        // Step 1: reward evaluation (Algorithm 1, SLO-aware). A window
+        // that violates the latency SLO joins PS like any other
+        // constraint violation — the tail is a property of the
+        // configuration under the current offered load.
+        let out = reward(&self.cons, throughput_fps, power_mw, p99_latency_ms);
         if !out.feasible {
             self.prohibited.insert(config); // PS.APPEND(x)
         }
@@ -401,6 +420,7 @@ impl Optimizer for CoralOptimizer {
             config,
             throughput_fps,
             power_mw,
+            p99_latency_ms,
             reward: out.reward,
             feasible: out.feasible,
         };
@@ -450,6 +470,7 @@ impl Optimizer for CoralOptimizer {
             config: b.config,
             throughput_fps: b.throughput_fps,
             power_mw: b.power_mw,
+            p99_latency_ms: b.p99_latency_ms,
             reward: b.reward,
             feasible: b.feasible,
         })
@@ -562,8 +583,10 @@ mod tests {
                     "re-proposed a prohibited config",
                 )?;
                 let m = device.run(cfg);
-                opt.observe(cfg, m.throughput_fps, m.power_mw);
-                if !reward(&dual_cons(dev), m.throughput_fps, m.power_mw).feasible {
+                opt.observe(cfg, m.throughput_fps, m.power_mw, m.p99_latency_ms);
+                if !reward(&dual_cons(dev), m.throughput_fps, m.power_mw, m.p99_latency_ms)
+                    .feasible
+                {
                     seen_prohibited.push(cfg);
                 }
             }
@@ -584,7 +607,7 @@ mod tests {
                 let cfg = opt.propose();
                 prop::assert_true(space.contains(&cfg), "on grid")?;
                 let m = device.run(cfg);
-                opt.observe(cfg, m.throughput_fps, m.power_mw);
+                opt.observe(cfg, m.throughput_fps, m.power_mw, m.p99_latency_ms);
             }
             Ok(())
         });
@@ -619,9 +642,9 @@ mod tests {
         let mut opt = CoralOptimizer::new(space.clone(), Constraints::none(), 1);
         let a = space.midpoint();
         let b = a.with(Dim::GpuFreq, 510);
-        opt.observe(a, 30.0, 6000.0);
-        opt.observe(a, 31.0, 6000.0); // same config better score
-        opt.observe(b, 20.0, 5000.0);
+        opt.observe(a, 30.0, 6000.0, 10.0);
+        opt.observe(a, 31.0, 6000.0, 10.0); // same config better score
+        opt.observe(b, 20.0, 5000.0, 10.0);
         assert_eq!(opt.best().unwrap().config, a);
         assert_eq!(opt.second.unwrap().config, b);
     }
@@ -632,7 +655,7 @@ mod tests {
         let mut opt =
             CoralOptimizer::new(space.clone(), Constraints::dual(30.0, 6500.0), 1);
         let c = space.midpoint();
-        opt.observe(c, 0.0, 2350.0);
+        opt.observe(c, 0.0, 2350.0, f64::INFINITY);
         assert_eq!(opt.prohibited_len(), 1);
         assert_eq!(opt.window.len(), 0);
         assert_eq!(opt.best().unwrap().reward, f64::NEG_INFINITY);
@@ -655,7 +678,7 @@ mod tests {
         for _ in 0..140 {
             let c = opt.propose();
             let m = device.run(c);
-            opt.observe(c, m.throughput_fps, m.power_mw);
+            opt.observe(c, m.throughput_fps, m.power_mw, m.p99_latency_ms);
         }
         assert!(
             opt.window_len() > crate::stats::dcov::FAST_PATH_MIN_N,
@@ -677,8 +700,8 @@ mod tests {
         let mut opt = CoralOptimizer::new(space.clone(), cons, 7);
         let a = space.midpoint();
         let b = a.with(Dim::GpuFreq, 510);
-        opt.observe(a, 10.0, 9000.0); // infeasible both ways -> PS
-        opt.observe(b, 35.0, 6000.0); // feasible
+        opt.observe(a, 10.0, 9000.0, 10.0); // infeasible both ways -> PS
+        opt.observe(b, 35.0, 6000.0, 10.0); // feasible
         assert_eq!(opt.prohibited_len(), 1);
         assert_eq!(opt.window_len(), 2);
         assert!(opt.best().is_some());
@@ -694,7 +717,7 @@ mod tests {
         for _ in 0..12 {
             let cfg = opt.propose();
             assert_ne!(cfg, a, "prohibited config re-proposed after reset");
-            opt.observe(cfg, 20.0, 5000.0);
+            opt.observe(cfg, 20.0, 5000.0, 10.0);
         }
     }
 
@@ -703,9 +726,9 @@ mod tests {
         let space = DeviceKind::XavierNx.space();
         let mut opt = CoralOptimizer::new(space.clone(), Constraints::none(), 1);
         let c = space.midpoint();
-        opt.observe(c, 30.0, 6000.0);
-        opt.observe(c, 0.0, 2000.0); // crashed window: not recorded
-        opt.observe(c, 28.0, 5900.0);
+        opt.observe(c, 30.0, 6000.0, 10.0);
+        opt.observe(c, 0.0, 2000.0, f64::INFINITY); // crashed window: not recorded
+        opt.observe(c, 28.0, 5900.0, 10.0);
         assert_eq!(opt.window_throughputs(), &[30.0, 28.0]);
     }
 
@@ -730,7 +753,7 @@ mod tests {
             // A smooth synthetic response keeps the search moving.
             let fps = 30.0 + cfg.gpu_freq_mhz as f64 / 50.0;
             let mw = 4000.0 + 2.0 * cfg.gpu_freq_mhz as f64 + cfg.concurrency as f64;
-            opt.observe(cfg, fps, mw);
+            opt.observe(cfg, fps, mw, 10.0);
         }
         assert!(opt.best().is_some());
         // Probe 0 is the normalized default (mid knobs, min concurrency),

@@ -37,6 +37,10 @@ pub struct BestConfig {
     pub config: HwConfig,
     pub throughput_fps: f64,
     pub power_mw: f64,
+    /// p99 request latency (ms) of the winning window. Equal to the mean
+    /// latency under closed-loop measurement; carries the queueing tail
+    /// under open-loop load (∞ for a shed window).
+    pub p99_latency_ms: f64,
     /// Reward score (efficiency τ/p for feasible configurations).
     pub reward: f64,
     /// Whether the configuration met all active constraints when measured.
@@ -53,7 +57,7 @@ pub struct BestConfig {
 /// for _ in 0..budget {
 ///     let cfg = opt.propose();
 ///     let m = env.measure(cfg);            // sim, live server, or fleet
-///     opt.observe(cfg, m.throughput_fps, m.power_mw);
+///     opt.observe(cfg, m.throughput_fps, m.power_mw, m.p99_latency_ms);
 /// }
 /// let chosen = opt.best();
 /// ```
@@ -62,8 +66,15 @@ pub trait Optimizer {
     fn propose(&mut self) -> HwConfig;
 
     /// Feed back the measured metrics of a proposed configuration.
-    /// Failed configurations report `throughput_fps == 0.0`.
-    fn observe(&mut self, config: HwConfig, throughput_fps: f64, power_mw: f64);
+    /// Failed configurations report `throughput_fps == 0.0`; shed
+    /// open-loop windows report `p99_latency_ms == f64::INFINITY`.
+    fn observe(
+        &mut self,
+        config: HwConfig,
+        throughput_fps: f64,
+        power_mw: f64,
+        p99_latency_ms: f64,
+    );
 
     /// Best configuration found so far (feasible preferred).
     fn best(&self) -> Option<BestConfig>;
@@ -105,8 +116,14 @@ impl<T: Optimizer + ?Sized> Optimizer for Box<T> {
         (**self).propose()
     }
 
-    fn observe(&mut self, config: HwConfig, throughput_fps: f64, power_mw: f64) {
-        (**self).observe(config, throughput_fps, power_mw)
+    fn observe(
+        &mut self,
+        config: HwConfig,
+        throughput_fps: f64,
+        power_mw: f64,
+        p99_latency_ms: f64,
+    ) {
+        (**self).observe(config, throughput_fps, power_mw, p99_latency_ms)
     }
 
     fn best(&self) -> Option<BestConfig> {
@@ -145,7 +162,7 @@ mod tests {
         for _ in 0..iters {
             let cfg = opt.propose();
             let m = dev.run(cfg);
-            opt.observe(cfg, m.throughput_fps, m.power_mw);
+            opt.observe(cfg, m.throughput_fps, m.power_mw, m.p99_latency_ms);
         }
         opt.best()
     }

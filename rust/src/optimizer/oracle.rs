@@ -56,13 +56,20 @@ impl Optimizer for OracleOptimizer {
         c
     }
 
-    fn observe(&mut self, config: HwConfig, throughput_fps: f64, power_mw: f64) {
+    fn observe(
+        &mut self,
+        config: HwConfig,
+        throughput_fps: f64,
+        power_mw: f64,
+        p99_latency_ms: f64,
+    ) {
         self.measured += 1;
-        let out = reward(&self.cons, throughput_fps, power_mw);
+        let out = reward(&self.cons, throughput_fps, power_mw, p99_latency_ms);
         let cand = BestConfig {
             config,
             throughput_fps,
             power_mw,
+            p99_latency_ms,
             reward: out.reward,
             feasible: out.feasible,
         };
@@ -100,7 +107,7 @@ mod tests {
         for _ in 0..n {
             let c = o.propose();
             let m = dev.run(c);
-            o.observe(c, m.throughput_fps, m.power_mw);
+            o.observe(c, m.throughput_fps, m.power_mw, m.p99_latency_ms);
         }
         assert!(o.done());
         let best = o.best().unwrap();
@@ -119,7 +126,7 @@ mod tests {
         for _ in 0..o.sweep_len() {
             let c = o.propose();
             let m = dev.run(c);
-            o.observe(c, m.throughput_fps, m.power_mw);
+            o.observe(c, m.throughput_fps, m.power_mw, m.p99_latency_ms);
         }
         assert!(!o.best().unwrap().feasible);
     }

@@ -67,13 +67,20 @@ impl Optimizer for PresetOptimizer {
         self.config
     }
 
-    fn observe(&mut self, config: HwConfig, throughput_fps: f64, power_mw: f64) {
-        let out = reward(&self.cons, throughput_fps, power_mw);
+    fn observe(
+        &mut self,
+        config: HwConfig,
+        throughput_fps: f64,
+        power_mw: f64,
+        p99_latency_ms: f64,
+    ) {
+        let out = reward(&self.cons, throughput_fps, power_mw, p99_latency_ms);
         // Keep the latest measurement (steady-state view of the preset).
         self.best = Some(BestConfig {
             config,
             throughput_fps,
             power_mw,
+            p99_latency_ms,
             reward: out.reward,
             feasible: out.feasible,
         });
@@ -100,7 +107,7 @@ mod tests {
         let mut opt =
             PresetOptimizer::max_power(DeviceKind::XavierNx, Constraints::none());
         let first = opt.propose();
-        opt.observe(first, 10.0, 9000.0);
+        opt.observe(first, 10.0, 9000.0, 10.0);
         assert_eq!(opt.propose(), first);
     }
 

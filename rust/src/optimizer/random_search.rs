@@ -33,12 +33,19 @@ impl Optimizer for RandomOptimizer {
         self.space.random(&mut self.rng)
     }
 
-    fn observe(&mut self, config: HwConfig, throughput_fps: f64, power_mw: f64) {
-        let out = reward(&self.cons, throughput_fps, power_mw);
+    fn observe(
+        &mut self,
+        config: HwConfig,
+        throughput_fps: f64,
+        power_mw: f64,
+        p99_latency_ms: f64,
+    ) {
+        let out = reward(&self.cons, throughput_fps, power_mw, p99_latency_ms);
         let cand = BestConfig {
             config,
             throughput_fps,
             power_mw,
+            p99_latency_ms,
             reward: out.reward,
             feasible: out.feasible,
         };

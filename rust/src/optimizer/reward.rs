@@ -23,26 +23,48 @@ pub struct RewardOutcome {
 /// (τ = 0) gets −∞ so it sorts below every other infeasible config, and a
 /// zero power reading (impossible physically) is clamped to avoid ±∞
 /// efficiency.
-pub fn reward(cons: &Constraints, throughput_fps: f64, power_mw: f64) -> RewardOutcome {
+///
+/// The serving extension adds the p99 latency SLO: when
+/// [`Constraints::latency_slo_ms`] is set, an SLO-violating window is
+/// infeasible and its penalty is the Eq. 8 inverted ratio scaled by how
+/// badly the tail missed (`p99 / slo`), so among violators the search
+/// still feels a gradient toward the SLO region and a shed window
+/// (p99 = ∞) ranks with crashes. With no SLO the score is untouched.
+pub fn reward(
+    cons: &Constraints,
+    throughput_fps: f64,
+    power_mw: f64,
+    p99_latency_ms: f64,
+) -> RewardOutcome {
     let p = power_mw.max(1e-9);
+    let latency_ok = cons.latency_ok(p99_latency_ms);
+    // Eq. 8 penalty, amplified by the SLO miss ratio when that is the
+    // violated clause (ratio > 1 by construction; ∞ p99 → −∞ reward).
+    let penalty = |t: f64| -> f64 {
+        let base = -(p / t);
+        match cons.latency_slo_ms {
+            Some(slo) if !latency_ok => base * (p99_latency_ms / slo),
+            _ => base,
+        }
+    };
     if cons.objective == Objective::Throughput {
-        // Single-constraint throughput maximization (Figs 3–4): the
-        // target is unreachable by construction, so ranking is raw
-        // throughput among configurations that run within budget.
-        return if throughput_fps > 0.0 && power_mw <= cons.budget_or_inf() {
+        // Single-constraint throughput maximization (Figs 3–4): no
+        // reachable target, so ranking is raw throughput among
+        // configurations that run within budget (and SLO, if any).
+        return if throughput_fps > 0.0 && power_mw <= cons.budget_or_inf() && latency_ok {
             RewardOutcome { reward: throughput_fps, feasible: true }
         } else if throughput_fps <= 0.0 {
             RewardOutcome { reward: f64::NEG_INFINITY, feasible: false }
         } else {
-            RewardOutcome { reward: -(p / throughput_fps), feasible: false }
+            RewardOutcome { reward: penalty(throughput_fps), feasible: false }
         };
     }
-    if cons.feasible(throughput_fps, power_mw) {
+    if cons.feasible(throughput_fps, power_mw) && latency_ok {
         RewardOutcome { reward: throughput_fps / p, feasible: true }
     } else if throughput_fps <= 0.0 {
         RewardOutcome { reward: f64::NEG_INFINITY, feasible: false }
     } else {
-        RewardOutcome { reward: -(p / throughput_fps), feasible: false }
+        RewardOutcome { reward: penalty(throughput_fps), feasible: false }
     }
 }
 
@@ -54,7 +76,7 @@ mod tests {
     #[test]
     fn feasible_reward_is_efficiency() {
         let c = Constraints::dual(30.0, 6500.0);
-        let r = reward(&c, 33.0, 5500.0);
+        let r = reward(&c, 33.0, 5500.0, 0.0);
         assert!(r.feasible);
         assert!((r.reward - 33.0 / 5500.0).abs() < 1e-12);
     }
@@ -62,7 +84,7 @@ mod tests {
     #[test]
     fn infeasible_reward_is_negative_inverse() {
         let c = Constraints::dual(30.0, 6500.0);
-        let r = reward(&c, 20.0, 7000.0);
+        let r = reward(&c, 20.0, 7000.0, 0.0);
         assert!(!r.feasible);
         assert!((r.reward + 7000.0 / 20.0).abs() < 1e-12);
     }
@@ -70,7 +92,7 @@ mod tests {
     #[test]
     fn crashed_config_is_worst() {
         let c = Constraints::dual(30.0, 6500.0);
-        let r = reward(&c, 0.0, 2350.0);
+        let r = reward(&c, 0.0, 2350.0, 0.0);
         assert!(!r.feasible);
         assert_eq!(r.reward, f64::NEG_INFINITY);
     }
@@ -78,24 +100,61 @@ mod tests {
     #[test]
     fn throughput_objective_ranks_by_fps() {
         let c = Constraints::max_throughput();
-        let hi = reward(&c, 40.0, 9000.0);
-        let lo = reward(&c, 30.0, 3000.0);
+        let hi = reward(&c, 40.0, 9000.0, 0.0);
+        let lo = reward(&c, 30.0, 3000.0, 0.0);
         assert!(hi.feasible && lo.feasible);
         assert!(hi.reward > lo.reward, "raw fps ranking");
-        assert_eq!(reward(&c, 0.0, 2000.0).reward, f64::NEG_INFINITY);
+        assert_eq!(reward(&c, 0.0, 2000.0, 0.0).reward, f64::NEG_INFINITY);
+    }
+
+    #[test]
+    fn slo_violation_is_infeasible_and_shaped() {
+        let c = Constraints::dual(25.0, 6500.0).with_latency_slo(80.0);
+        let ok = reward(&c, 30.0, 6000.0, 50.0);
+        assert!(ok.feasible);
+        assert!((ok.reward - 30.0 / 6000.0).abs() < 1e-12);
+        // Same window, tail past the SLO: infeasible, penalty scaled by
+        // the miss ratio — a worse miss ranks strictly lower.
+        let near = reward(&c, 30.0, 6000.0, 100.0);
+        let far = reward(&c, 30.0, 6000.0, 400.0);
+        assert!(!near.feasible && !far.feasible);
+        assert!((near.reward + (6000.0 / 30.0) * (100.0 / 80.0)).abs() < 1e-9);
+        assert!(far.reward < near.reward, "deeper SLO miss ranks lower");
+        // A shed window (p99 = ∞) ranks with crashes.
+        assert_eq!(reward(&c, 30.0, 6000.0, f64::INFINITY).reward, f64::NEG_INFINITY);
+        // No SLO set: the p99 argument is inert.
+        let d = Constraints::dual(25.0, 6500.0);
+        assert_eq!(
+            reward(&d, 30.0, 6000.0, f64::INFINITY),
+            reward(&d, 30.0, 6000.0, 0.0),
+        );
+    }
+
+    #[test]
+    fn slo_applies_to_throughput_objective_too() {
+        let c = Constraints::max_throughput().with_latency_slo(80.0);
+        assert!(reward(&c, 40.0, 9000.0, 50.0).feasible);
+        let miss = reward(&c, 40.0, 9000.0, 160.0);
+        assert!(!miss.feasible);
+        assert!((miss.reward + (9000.0 / 40.0) * 2.0).abs() < 1e-9);
     }
 
     #[test]
     fn prop_feasible_always_outranks_infeasible() {
         // The paper's design goal for Eq. 8.
         prop::check("feasible > infeasible reward", 300, |g| {
-            let c = Constraints::dual(g.rng.range_f64(1.0, 100.0), g.rng.range_f64(3000.0, 9000.0));
+            let mut c = Constraints::dual(g.rng.range_f64(1.0, 100.0), g.rng.range_f64(3000.0, 9000.0));
+            if g.rng.below(2) == 0 {
+                c = c.with_latency_slo(g.rng.range_f64(50.0, 300.0));
+            }
             let t1 = g.rng.range_f64(0.0, 120.0);
             let p1 = g.rng.range_f64(2000.0, 10_000.0);
             let t2 = g.rng.range_f64(0.0, 120.0);
             let p2 = g.rng.range_f64(2000.0, 10_000.0);
-            let r1 = reward(&c, t1, p1);
-            let r2 = reward(&c, t2, p2);
+            let l1 = if g.rng.below(2) == 0 { g.rng.range_f64(1.0, 500.0) } else { 0.0 };
+            let l2 = if g.rng.below(2) == 0 { g.rng.range_f64(1.0, 500.0) } else { 0.0 };
+            let r1 = reward(&c, t1, p1, l1);
+            let r2 = reward(&c, t2, p2, l2);
             if r1.feasible && !r2.feasible {
                 prop::assert_true(r1.reward > r2.reward, "feasible outranks")?;
             }
@@ -114,8 +173,8 @@ mod tests {
             let p1 = g.rng.range_f64(2000.0, 10_000.0);
             let t2 = g.rng.range_f64(1.0, 100.0);
             let p2 = g.rng.range_f64(2000.0, 10_000.0);
-            let r1 = reward(&c, t1, p1).reward;
-            let r2 = reward(&c, t2, p2).reward;
+            let r1 = reward(&c, t1, p1, 0.0).reward;
+            let r2 = reward(&c, t2, p2, 0.0).reward;
             prop::assert_true(
                 (r1 > r2) == (t1 / p1 > t2 / p2),
                 "efficiency ordering",

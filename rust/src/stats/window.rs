@@ -134,6 +134,7 @@ mod tests {
                 gpu_freq_mhz: 800,
                 mem_freq_mhz: 1600,
                 concurrency: 2,
+                max_batch: 1,
             },
             throughput_fps: fps,
             power_mw: mw,

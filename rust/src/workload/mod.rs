@@ -6,6 +6,6 @@ pub mod requests;
 pub mod trace;
 pub mod video;
 
-pub use requests::{ClosedLoopGen, OpenLoopGen, Request};
+pub use requests::{ArrivalPhase, ArrivalProfile, ClosedLoopGen, OpenLoopGen, Request};
 pub use trace::{Trace, TraceReplay, TraceStep};
 pub use video::VideoSource;

@@ -62,7 +62,168 @@ impl ClosedLoopGen {
     }
 }
 
-/// Open-loop Poisson generator over logical time.
+/// One phase of a traffic shape: a multiplier on the profile's base
+/// rate, held for a span of logical seconds.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ArrivalPhase {
+    /// Rate multiplier applied to the profile's base rate (> 0).
+    pub rate_mult: f64,
+    /// Phase length in logical seconds (> 0).
+    pub dur_s: f64,
+}
+
+/// Traffic shape over logical time: Poisson arrivals whose rate follows
+/// a repeating phase schedule. An empty schedule is steady traffic at
+/// the base rate. Phases switch on **exact** logical-time boundaries
+/// (half-open `[start, end)` — the instant `t == end` already belongs
+/// to the next phase).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArrivalProfile {
+    /// Offered load at `rate_mult = 1.0`, in arrivals per second.
+    pub base_rate_fps: f64,
+    /// Phase schedule, cycled forever. Empty = steady.
+    pub phases: Vec<ArrivalPhase>,
+    /// Seed of the Poisson draw stream of generators built from this
+    /// profile (cache identity: same shape + different seed = different
+    /// arrivals).
+    pub seed: u64,
+}
+
+impl ArrivalProfile {
+    /// Steady Poisson traffic at `rate_fps`.
+    pub fn steady(rate_fps: f64, seed: u64) -> ArrivalProfile {
+        ArrivalProfile { base_rate_fps: rate_fps, phases: Vec::new(), seed }
+    }
+
+    /// Day/night swing: trough → ramp → peak → ramp, repeating. The
+    /// peak offers 1.6× the base rate, the trough 0.4×; the
+    /// duration-weighted mean multiplier is exactly 1.0.
+    pub fn diurnal(base_rate_fps: f64, seed: u64) -> ArrivalProfile {
+        ArrivalProfile {
+            base_rate_fps,
+            phases: vec![
+                ArrivalPhase { rate_mult: 0.4, dur_s: 300.0 },
+                ArrivalPhase { rate_mult: 1.0, dur_s: 300.0 },
+                ArrivalPhase { rate_mult: 1.6, dur_s: 300.0 },
+                ArrivalPhase { rate_mult: 1.0, dur_s: 300.0 },
+            ],
+            seed,
+        }
+    }
+
+    /// Flash crowd: long calm at the base rate, then a short 6× spike.
+    pub fn flash_crowd(base_rate_fps: f64, seed: u64) -> ArrivalProfile {
+        ArrivalProfile {
+            base_rate_fps,
+            phases: vec![
+                ArrivalPhase { rate_mult: 1.0, dur_s: 540.0 },
+                ArrivalPhase { rate_mult: 6.0, dur_s: 60.0 },
+            ],
+            seed,
+        }
+    }
+
+    /// Named profile for CLI surfaces: `steady` | `diurnal` | `flash`.
+    pub fn by_name(name: &str, base_rate_fps: f64, seed: u64) -> Option<ArrivalProfile> {
+        match name.to_ascii_lowercase().as_str() {
+            "steady" | "poisson" => Some(Self::steady(base_rate_fps, seed)),
+            "diurnal" | "day" => Some(Self::diurnal(base_rate_fps, seed)),
+            "flash" | "flash-crowd" | "burst" => Some(Self::flash_crowd(base_rate_fps, seed)),
+            _ => None,
+        }
+    }
+
+    fn assert_valid(&self) {
+        assert!(
+            self.base_rate_fps > 0.0 && self.base_rate_fps.is_finite(),
+            "base rate must be finite and positive"
+        );
+        for p in &self.phases {
+            assert!(p.rate_mult > 0.0 && p.rate_mult.is_finite(), "phase rate_mult");
+            assert!(p.dur_s > 0.0 && p.dur_s.is_finite(), "phase duration");
+        }
+    }
+
+    /// Length of one full schedule cycle (0 for steady profiles).
+    pub fn cycle_s(&self) -> f64 {
+        self.phases.iter().map(|p| p.dur_s).sum()
+    }
+
+    /// Offered rate at logical time `t_s` (piecewise constant over the
+    /// repeating schedule; the boundary instant belongs to the *next*
+    /// phase).
+    pub fn rate_at(&self, t_s: f64) -> f64 {
+        if self.phases.is_empty() {
+            return self.base_rate_fps;
+        }
+        let mut t = t_s % self.cycle_s();
+        for p in &self.phases {
+            if t < p.dur_s {
+                return self.base_rate_fps * p.rate_mult;
+            }
+            t -= p.dur_s;
+        }
+        // Float round-off at the cycle's very end: last phase still rules.
+        self.base_rate_fps * self.phases.last().unwrap().rate_mult
+    }
+
+    /// The schedule's highest offered rate — what a config must survive
+    /// to never shed over a full cycle.
+    pub fn peak_rate_fps(&self) -> f64 {
+        let peak_mult = self
+            .phases
+            .iter()
+            .map(|p| p.rate_mult)
+            .fold(1.0f64, f64::max);
+        self.base_rate_fps * if self.phases.is_empty() { 1.0 } else { peak_mult }
+    }
+
+    /// Duration-weighted mean offered rate over one cycle.
+    pub fn mean_rate_fps(&self) -> f64 {
+        if self.phases.is_empty() {
+            return self.base_rate_fps;
+        }
+        let weighted: f64 = self.phases.iter().map(|p| p.rate_mult * p.dur_s).sum();
+        self.base_rate_fps * weighted / self.cycle_s()
+    }
+
+    /// Stable identity of the whole traffic shape (rate, every phase,
+    /// seed) — folded into environment fingerprints so windows measured
+    /// under different offered loads can never answer for each other
+    /// from a cache.
+    pub fn fingerprint(&self) -> u64 {
+        let mut words = vec![
+            0x4152_5249_5641_4Cu64, // "ARRIVAL" salt
+            self.base_rate_fps.to_bits(),
+            self.seed,
+            self.phases.len() as u64,
+        ];
+        for p in &self.phases {
+            words.push(p.rate_mult.to_bits());
+            words.push(p.dur_s.to_bits());
+        }
+        crate::control::cache::stable_hash(&words)
+    }
+}
+
+impl std::fmt::Display for ArrivalProfile {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        if self.phases.is_empty() {
+            write!(f, "steady {:.1} req/s", self.base_rate_fps)
+        } else {
+            write!(
+                f,
+                "{:.1} req/s x{} phases (peak {:.1})",
+                self.base_rate_fps,
+                self.phases.len(),
+                self.peak_rate_fps()
+            )
+        }
+    }
+}
+
+/// Open-loop Poisson generator over logical time, optionally driven by
+/// an [`ArrivalProfile`] phase schedule.
 #[derive(Debug, Clone)]
 pub struct OpenLoopGen {
     next_id: u64,
@@ -70,6 +231,8 @@ pub struct OpenLoopGen {
     rate_per_s: f64,
     rng: Rng,
     next_arrival_s: f64,
+    /// Phase machinery (None = steady at `rate_per_s` forever).
+    profile: Option<ArrivalProfile>,
 }
 
 impl OpenLoopGen {
@@ -81,14 +244,81 @@ impl OpenLoopGen {
             rate_per_s,
             rng: Rng::new(seed),
             next_arrival_s: 0.0,
+            profile: None,
         };
-        g.next_arrival_s = g.draw_gap();
+        g.schedule_next(0.0);
         g
     }
 
-    fn draw_gap(&mut self) -> f64 {
-        // Exponential inter-arrival.
-        -self.rng.f64().max(f64::MIN_POSITIVE).ln() / self.rate_per_s
+    /// Arrivals following `profile`'s phase schedule (seeded by the
+    /// profile itself).
+    pub fn with_profile(profile: ArrivalProfile, frames: usize) -> Self {
+        profile.assert_valid();
+        assert!(frames > 0);
+        let mut g = OpenLoopGen {
+            next_id: 0,
+            frames,
+            rate_per_s: profile.base_rate_fps,
+            rng: Rng::new(profile.seed),
+            next_arrival_s: 0.0,
+            profile: Some(profile),
+        };
+        g.schedule_next(0.0);
+        g
+    }
+
+    /// Phase end strictly after `t_s` (∞ when steady).
+    fn phase_end_after(&self, t_s: f64) -> f64 {
+        let Some(p) = &self.profile else { return f64::INFINITY };
+        if p.phases.is_empty() {
+            return f64::INFINITY;
+        }
+        let cycle = p.cycle_s();
+        let base = (t_s / cycle).floor() * cycle;
+        let mut edge = base;
+        for ph in &p.phases {
+            edge += ph.dur_s;
+            if edge > t_s {
+                return edge;
+            }
+        }
+        // Round-off landed `t_s` at the cycle's end: next cycle's first edge.
+        base + cycle + p.phases[0].dur_s
+    }
+
+    fn rate_at(&self, t_s: f64) -> f64 {
+        match &self.profile {
+            Some(p) => p.rate_at(t_s),
+            None => self.rate_per_s,
+        }
+    }
+
+    /// Schedule the arrival after `from_s`: draw one unit-exponential
+    /// and integrate it through the piecewise-constant rate. Phase
+    /// switches happen on **exact** logical boundaries — the leftover
+    /// exponential mass carries across the edge and continues at the
+    /// new rate (this is the exact inversion of the inhomogeneous
+    /// Poisson integral, not an approximation).
+    fn schedule_next(&mut self, from_s: f64) {
+        let mut units = -self.rng.f64().max(f64::MIN_POSITIVE).ln();
+        let mut t = from_s;
+        loop {
+            let rate = self.rate_at(t);
+            let end = self.phase_end_after(t);
+            let span_units = (end - t) * rate;
+            if units <= span_units || end.is_infinite() {
+                self.next_arrival_s = t + units / rate;
+                return;
+            }
+            units -= span_units;
+            t = end;
+        }
+    }
+
+    /// Timestamp of the next (not yet polled) arrival. Monotonically
+    /// non-decreasing across `poll` calls.
+    pub fn due(&self) -> Duration {
+        Duration::from_secs_f64(self.next_arrival_s)
     }
 
     /// All arrivals with timestamp ≤ `now`.
@@ -101,8 +331,7 @@ impl OpenLoopGen {
                 frame_index: (self.next_id as usize) % self.frames,
             });
             self.next_id += 1;
-            let gap = self.draw_gap();
-            self.next_arrival_s += gap;
+            self.schedule_next(self.next_arrival_s);
         }
         out
     }
@@ -163,5 +392,122 @@ mod tests {
         let mut g2 = OpenLoopGen::new(50.0, 30, 5);
         let all = g2.poll(Duration::from_secs(2)).len();
         assert_eq!(a + b, all);
+    }
+
+    #[test]
+    fn open_loop_seeded_determinism() {
+        // Same profile (same seed) → identical arrival streams; a
+        // different seed must diverge.
+        let p = ArrivalProfile::diurnal(40.0, 17);
+        let a = OpenLoopGen::with_profile(p.clone(), 30).poll(Duration::from_secs(700));
+        let b = OpenLoopGen::with_profile(p.clone(), 30).poll(Duration::from_secs(700));
+        assert_eq!(a, b);
+        let mut other = p;
+        other.seed = 18;
+        let c = OpenLoopGen::with_profile(other, 30).poll(Duration::from_secs(700));
+        assert_ne!(a.len(), 0);
+        assert!(a.len() != c.len() || a != c, "seed must matter");
+    }
+
+    #[test]
+    fn open_loop_empirical_rate_matches_profile_over_long_horizons() {
+        // Property: over many cycles the empirical arrival rate lands
+        // within a few percent of the profile's duration-weighted mean.
+        for (name, p) in [
+            ("steady", ArrivalProfile::steady(25.0, 3)),
+            ("diurnal", ArrivalProfile::diurnal(25.0, 4)),
+            ("flash", ArrivalProfile::flash_crowd(25.0, 5)),
+        ] {
+            let horizon_s = 6000.0; // 5–10 full cycles
+            let n = OpenLoopGen::with_profile(p.clone(), 30)
+                .poll(Duration::from_secs_f64(horizon_s))
+                .len() as f64;
+            let expect = p.mean_rate_fps() * horizon_s;
+            let rel = (n - expect).abs() / expect;
+            assert!(rel < 0.05, "{name}: n={n} expect={expect} rel={rel}");
+        }
+    }
+
+    #[test]
+    fn due_is_monotone_and_consistent_with_poll() {
+        let mut g = OpenLoopGen::with_profile(ArrivalProfile::flash_crowd(30.0, 9), 30);
+        let mut prev = Duration::ZERO;
+        for step in 1..200u64 {
+            let due_before = g.due();
+            assert!(due_before >= prev, "due() never runs backwards");
+            let now = Duration::from_millis(step * 500);
+            let got = g.poll(now);
+            if due_before <= now {
+                assert!(!got.is_empty(), "an arrival was due by {now:?}");
+            } else {
+                assert!(got.is_empty(), "nothing was due before {now:?}");
+            }
+            assert!(g.due() > now, "poll drains everything due");
+            prev = g.due();
+        }
+    }
+
+    #[test]
+    fn phase_transitions_land_on_exact_boundaries() {
+        // Half-open phases: the boundary instant already belongs to the
+        // next phase, including the wrap back to phase 0.
+        let p = ArrivalProfile {
+            base_rate_fps: 10.0,
+            phases: vec![
+                ArrivalPhase { rate_mult: 1.0, dur_s: 10.0 },
+                ArrivalPhase { rate_mult: 5.0, dur_s: 10.0 },
+            ],
+            seed: 7,
+        };
+        assert_eq!(p.rate_at(0.0), 10.0);
+        assert_eq!(p.rate_at(10.0 - 1e-9), 10.0);
+        assert_eq!(p.rate_at(10.0), 50.0, "boundary belongs to the next phase");
+        assert_eq!(p.rate_at(20.0 - 1e-9), 50.0);
+        assert_eq!(p.rate_at(20.0), 10.0, "cycle wraps on the exact edge");
+        assert_eq!(p.cycle_s(), 20.0);
+        assert_eq!(p.peak_rate_fps(), 50.0);
+
+        // The generator sees those rates: ~100 arrivals in the slow
+        // half, ~500 in the fast half of each cycle.
+        let mut g = OpenLoopGen::with_profile(p, 30);
+        let slow = g.poll(Duration::from_secs_f64(10.0)).len() as f64;
+        let fast = g.poll(Duration::from_secs_f64(20.0)).len() as f64;
+        assert!((slow - 100.0).abs() < 50.0, "slow={slow}");
+        assert!((fast - 500.0).abs() < 110.0, "fast={fast}");
+        assert!(fast > 2.5 * slow, "spike visible: {slow} vs {fast}");
+    }
+
+    #[test]
+    fn steady_profile_generator_matches_plain_open_loop() {
+        // `with_profile(steady)` and the legacy constructor draw the
+        // same exponential stream from the same seed.
+        let a = OpenLoopGen::new(42.0, 30, 21).poll(Duration::from_secs(60));
+        let b = OpenLoopGen::with_profile(ArrivalProfile::steady(42.0, 21), 30)
+            .poll(Duration::from_secs(60));
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn profile_fingerprints_separate_rate_phases_and_seed() {
+        let base = ArrivalProfile::diurnal(30.0, 1);
+        let mut rate = base.clone();
+        rate.base_rate_fps = 31.0;
+        let mut seed = base.clone();
+        seed.seed = 2;
+        let mut sched = base.clone();
+        sched.phases[0].dur_s += 1.0;
+        let fps: Vec<u64> = [&base, &rate, &seed, &sched]
+            .iter()
+            .map(|p| p.fingerprint())
+            .collect();
+        for i in 0..fps.len() {
+            for j in i + 1..fps.len() {
+                assert_ne!(fps[i], fps[j], "profiles {i} vs {j} must not collide");
+            }
+        }
+        assert_ne!(
+            ArrivalProfile::steady(30.0, 1).fingerprint(),
+            ArrivalProfile::flash_crowd(30.0, 1).fingerprint()
+        );
     }
 }

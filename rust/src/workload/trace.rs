@@ -72,7 +72,7 @@ impl Trace {
     pub fn to_csv(&self) -> Csv {
         let mut csv = Csv::new(&[
             "iter", "cpu_freq_mhz", "cpu_cores", "gpu_freq_mhz", "mem_freq_mhz",
-            "concurrency", "throughput_fps", "power_mw", "failed",
+            "concurrency", "max_batch", "throughput_fps", "power_mw", "failed",
         ]);
         for s in &self.steps {
             csv.push(vec![
@@ -82,6 +82,7 @@ impl Trace {
                 s.config.gpu_freq_mhz.to_string(),
                 s.config.mem_freq_mhz.to_string(),
                 s.config.concurrency.to_string(),
+                s.config.max_batch.to_string(),
                 format!("{:.3}", s.throughput_fps),
                 format!("{:.1}", s.power_mw),
                 (s.failed as u8).to_string(),
@@ -109,6 +110,9 @@ impl Trace {
             col("mem_freq_mhz")?,
             col("concurrency")?,
         );
+        // Traces recorded before the batch dimension existed have no
+        // `max_batch` column; they were measured at the implicit cap of 1.
+        let cb = csv.col("max_batch");
         let (ti, pi, fi, ii) = (
             col("throughput_fps")?,
             col("power_mw")?,
@@ -128,6 +132,10 @@ impl Trace {
                     gpu_freq_mhz: f(cg)? as u32,
                     mem_freq_mhz: f(cm)? as u32,
                     concurrency: f(cl)? as u32,
+                    max_batch: match cb {
+                        Some(i) => f(i)? as u32,
+                        None => 1,
+                    },
                 },
                 throughput_fps: f(ti)?,
                 power_mw: f(pi)?,
@@ -236,8 +244,18 @@ mod tests {
             gpu_freq_mhz: 1,
             mem_freq_mhz: 1,
             concurrency: 1,
+            max_batch: 1,
         };
         assert!(replay.measure(&unseen).is_err());
+    }
+
+    #[test]
+    fn legacy_csv_without_batch_column_parses_at_cap_one() {
+        let text = "iter,cpu_freq_mhz,cpu_cores,gpu_freq_mhz,mem_freq_mhz,concurrency,throughput_fps,power_mw,failed\n\
+                    0,1390,4,630,1690,2,31.500,6400.0,0\n";
+        let t = Trace::parse(text).unwrap();
+        assert_eq!(t.steps[0].config.max_batch, 1);
+        assert_eq!(t.steps[0].config.concurrency, 2);
     }
 
     #[test]

@@ -108,6 +108,7 @@ impl Environment for CounterEnv {
             throughput_fps: self.windows as f64,
             power_mw: 1000.0,
             latency_ms: 1.0,
+            p99_latency_ms: 1.0,
             gpu_util: 0.5,
             cpu_util: 0.5,
             mem_util: 0.5,
@@ -182,6 +183,42 @@ fn property_no_pre_epoch_entry_survives_a_bump() {
         }
         Ok(())
     });
+}
+
+#[test]
+fn arrival_profile_is_part_of_the_cache_fingerprint() {
+    // Satellite regression: a cached measurement taken under one offered
+    // load must never answer a lookup under another. The environment
+    // fingerprint (which keys the cache's surface identity) has to fold
+    // in the arrival profile — rate, phase schedule, and seed — and the
+    // no-load environment must differ from every loaded one.
+    use coral::workload::ArrivalProfile;
+    let dev = || Device::new(DeviceKind::XavierNx, ModelKind::Yolo, 3).with_noise_scale(0.0);
+    let base = coral::control::SimEnv::new(dev());
+    let profiles = [
+        ArrivalProfile::steady(30.0, 1),
+        ArrivalProfile::steady(60.0, 1),  // rate differs
+        ArrivalProfile::steady(30.0, 2),  // seed differs
+        ArrivalProfile::diurnal(30.0, 1), // phase schedule differs
+        ArrivalProfile::flash_crowd(30.0, 1),
+    ];
+    let mut prints = vec![base.fingerprint()];
+    for p in &profiles {
+        prints.push(coral::control::SimEnv::new(dev()).under_load(p.clone()).fingerprint());
+    }
+    for i in 0..prints.len() {
+        for j in (i + 1)..prints.len() {
+            assert_ne!(
+                prints[i], prints[j],
+                "fingerprints {i} and {j} collide: two load surfaces would share a cache"
+            );
+        }
+    }
+    // Same profile, same device → same fingerprint (hits still possible).
+    let a = coral::control::SimEnv::new(dev())
+        .under_load(ArrivalProfile::steady(30.0, 1))
+        .fingerprint();
+    assert_eq!(a, prints[1], "identical load surfaces must still share entries");
 }
 
 const TENANT_NAMES: [&str; 3] = ["prop-t0", "prop-t1", "prop-t2"];

@@ -347,6 +347,49 @@ fn dropping_pool_without_shutdown_releases_workers() {
     );
 }
 
+#[test]
+fn open_loop_generous_deadline_scores_every_request_a_hit() {
+    use coral::workload::OpenLoopGen;
+    let mut server = Server::with_engine(Arc::new(InstantEngine), cfg(2, 4, 1));
+    let mut v = video();
+    let mut gen = OpenLoopGen::new(2000.0, 30, 7);
+    let total: u64 = 20;
+    let report = server.run_open_loop(&mut v, &mut gen, total, 10_000.0).unwrap();
+    assert_eq!(report.requests, total);
+    assert_eq!(report.failed, 0);
+    assert_eq!(report.deadline_hits, total, "instant engine beats a 10 s deadline");
+    assert_eq!(report.deadline_misses, 0);
+    assert!(report.throughput_fps.is_finite());
+    // Closed-loop runs carry no deadlines: both counters stay zero.
+    let closed = server.run_closed_loop(&mut v, 4, 4).unwrap();
+    assert_eq!((closed.deadline_hits, closed.deadline_misses), (0, 0));
+    server.shutdown();
+}
+
+#[test]
+fn open_loop_overload_scores_misses_for_late_requests() {
+    use coral::workload::OpenLoopGen;
+    // Service takes 10 ms per single-request batch on one worker
+    // (μ = 100/s); arrivals at 1000/s swamp it and the deadline (5 ms)
+    // is below even the bare execution time — every request misses.
+    let mut server = Server::with_engine(
+        Arc::new(SlowEngine(Duration::from_millis(10))),
+        cfg(1, 1, 0),
+    );
+    let mut v = video();
+    let mut gen = OpenLoopGen::new(1000.0, 30, 3);
+    let total: u64 = 12;
+    let report = server.run_open_loop(&mut v, &mut gen, total, 5.0).unwrap();
+    assert_eq!(report.requests + report.failed, total, "every request terminates");
+    assert_eq!(report.deadline_hits, 0, "10 ms execution can never beat 5 ms");
+    assert_eq!(report.deadline_misses, total);
+    assert!(
+        report.latency_p99_ms >= report.latency_p50_ms,
+        "queueing under overload stretches the tail"
+    );
+    server.shutdown();
+}
+
 fn sim_backed_trajectory(seed: u64) -> Vec<(f64, f64)> {
     let env = LiveEnv::sim_backed(Device::new(DeviceKind::XavierNx, ModelKind::Yolo, seed));
     let cons = Constraints::dual(30.0, 6500.0);
