@@ -1,0 +1,78 @@
+//! Chaos fleet: CORAL surviving a deterministic fault schedule.
+//!
+//! `control::chaos::ChaosEnv` decorates any `Environment` with a
+//! seeded schedule of faults — member dropout and rejoin, thermal
+//! throttling (enable / heat soak / ambient shift), sensor-glitch
+//! bursts (NaN and stuck-at readings), and power-budget steps — and
+//! keeps per-event recovery accounting: the window each event fired,
+//! and the first window at or after it whose measurement satisfied the
+//! then-current constraints again.
+//!
+//! The run drives CORAL (search → drift-watched hold → re-search)
+//! through every `CHAOS_SCENARIOS` family on the mixed NX+Orin pair,
+//! prints the recovery table, then replays the combined schedule
+//! against a static all-max preset to show why a non-adaptive baseline
+//! never comes back after a budget step. `bench_chaos` scores the same
+//! comparison with assertions (EXPERIMENTS.md §Chaos fleet).
+//!
+//! ```sh
+//! cargo run --release --example chaos_fleet
+//! ```
+
+use coral::control::{drive_coral, drive_static, Environment};
+use coral::experiments::scenarios::CHAOS_SCENARIOS;
+use coral::util::table;
+
+const SEED: u64 = 42;
+
+fn main() {
+    println!("CORAL chaos fleet — deterministic fault schedules over the NX+Orin pair\n");
+
+    let mut rows = Vec::new();
+    for s in &CHAOS_SCENARIOS {
+        let env = s.chaos(SEED);
+        println!(
+            "{}: {} windows, {} scheduled events",
+            s.name,
+            s.windows,
+            env.schedule().len()
+        );
+        let done = drive_coral(env, s.constraints(), SEED, s.windows);
+        for r in done.recoveries() {
+            rows.push(vec![
+                s.name.to_string(),
+                r.label.clone(),
+                r.at_window.to_string(),
+                r.recovered_at.map_or("never".to_string(), |w| w.to_string()),
+                r.windows().map_or("∞".to_string(), |w| w.to_string()),
+            ]);
+        }
+        println!(
+            "  mean recovery {:.1} windows, all recovered: {}\n",
+            done.mean_recovery_windows(),
+            done.all_recovered()
+        );
+    }
+    print!(
+        "{}",
+        table::render(&["scenario", "event", "at window", "recovered at", "windows"], &rows)
+    );
+
+    // --- Baseline: a static all-max preset through the combined schedule.
+    let s = &CHAOS_SCENARIOS[3];
+    let env = s.chaos(SEED);
+    let cfg = env.space().max_config();
+    let done = drive_static(env, cfg, s.windows);
+    println!(
+        "\nstatic all-max baseline on {}: mean recovery {} windows, all recovered: {} — \
+         a fixed preset cannot re-enter the feasible region once a budget step moves it, \
+         while CORAL re-searches its way back",
+        s.name,
+        if done.mean_recovery_windows().is_finite() {
+            format!("{:.1}", done.mean_recovery_windows())
+        } else {
+            "∞".to_string()
+        },
+        done.all_recovered()
+    );
+}

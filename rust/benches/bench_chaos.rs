@@ -1,0 +1,213 @@
+//! Chaos-fleet bench: recovery under injected faults, CORAL and the
+//! `TenantArbiter` vs the unarbitrated static baseline
+//! (EXPERIMENTS.md §Chaos fleet).
+//!
+//! Self-asserting, like every bench here:
+//!
+//! * **CORAL recovers** — driven search → drift-watched hold →
+//!   re-search through every `CHAOS_SCENARIOS` fault schedule, every
+//!   scheduled event sees a re-feasible window: mean recovery is
+//!   finite on all four families.
+//! * **The static baseline does not** — the same schedules replayed
+//!   against a fixed all-max preset (the PolyThrottle regime; see
+//!   PAPERS.md) leave recovery records open forever: the preset either
+//!   crashes a member or sits over the fleet budget on every window,
+//!   so its mean recovery is infinite.
+//! * **Arbitration recovers the shared box** — a thermal-soak +
+//!   glitch schedule through a `ChaosEnv`-wrapped `TenantArbiter`
+//!   (nx-pair, demand-weighted) re-reaches the combined tenant
+//!   targets under the global envelope; the independent baseline
+//!   (every controller handed the full envelope) is reported alongside
+//!   for the overdraw comparison.
+//!
+//! Reduced mode for CI: `CORAL_BENCH_CHAOS_EVENTS` keeps only the
+//! first N scheduled events per scenario and `CORAL_BENCH_CHAOS_WINDOWS`
+//! bounds the driven windows (the run is always extended past the last
+//! kept event so recovery stays measurable). Results are also written
+//! machine-readable to `BENCH_chaos.json` (override the path with
+//! `CORAL_BENCH_JSON`).
+
+use coral::control::{
+    drive_coral, drive_static, BudgetPolicy, ChaosEnv, ChaosEvent, ChaosSchedule, Environment,
+    GlitchKind,
+};
+use coral::experiments::scenarios::{ChaosScenario, TenantScenario, CHAOS_SCENARIOS};
+use coral::optimizer::Constraints;
+use coral::util::json::{self, Json};
+use coral::util::table;
+
+const SEED: u64 = 42;
+/// Windows kept past the last scheduled fault (rejoin included) so the
+/// driver always has room to re-search its way back to feasibility.
+const RECOVERY_MARGIN: u64 = 25;
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key)
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .filter(|&n| n >= 1)
+        .unwrap_or(default)
+}
+
+/// Scheduled events kept per scenario (CI reduction; default: all).
+fn events_cap() -> usize {
+    env_usize("CORAL_BENCH_CHAOS_EVENTS", usize::MAX)
+}
+
+/// Requested driven windows per scenario (default: the scenario's own
+/// horizon); always extended to `last event + RECOVERY_MARGIN`.
+fn requested_windows(s: &ChaosScenario) -> u64 {
+    env_usize("CORAL_BENCH_CHAOS_WINDOWS", s.windows as usize) as u64
+}
+
+/// Last window any part of `schedule` touches (a dropout's rejoin
+/// lands `down_windows` after the drop).
+fn last_fault_window(schedule: &ChaosSchedule) -> u64 {
+    schedule
+        .events()
+        .iter()
+        .map(|(w, ev)| match ev {
+            ChaosEvent::Dropout { down_windows, .. } => w + down_windows,
+            _ => *w,
+        })
+        .max()
+        .expect("non-empty schedule")
+}
+
+fn fmt_mean(mean: f64) -> String {
+    if mean.is_finite() {
+        format!("{mean:.1}")
+    } else {
+        "∞".to_string()
+    }
+}
+
+fn main() {
+    println!(
+        "bench_chaos — events cap {}, recovery margin {RECOVERY_MARGIN} windows\n",
+        if events_cap() == usize::MAX { "none".to_string() } else { events_cap().to_string() }
+    );
+
+    let mut rows = Vec::new();
+    let mut records = Vec::new();
+
+    // ---- CORAL vs the static all-max preset on every fault family.
+    for s in &CHAOS_SCENARIOS {
+        let schedule = s.schedule(SEED ^ 0x0DD5_EED5).take(events_cap());
+        assert!(!schedule.is_empty(), "{}: reduced schedule kept no events", s.name);
+        let total = requested_windows(s).max(last_fault_window(&schedule) + RECOVERY_MARGIN);
+
+        let env = ChaosEnv::new(s.fleet(SEED), schedule.clone(), s.constraints());
+        let coral = drive_coral(env, s.constraints(), SEED, total);
+        assert!(
+            coral.all_recovered(),
+            "{}: CORAL left events unrecovered: {:?}",
+            s.name,
+            coral.recoveries()
+        );
+        let coral_mean = coral.mean_recovery_windows();
+        assert!(coral_mean.is_finite(), "{}: CORAL mean recovery not finite", s.name);
+
+        let env = ChaosEnv::new(s.fleet(SEED), schedule, s.constraints());
+        let max_cfg = env.space().max_config();
+        let fixed = drive_static(env, max_cfg, total);
+        assert!(
+            !fixed.all_recovered(),
+            "{}: the static all-max preset must stay infeasible or over-budget \
+             after a fault, yet every record closed",
+            s.name
+        );
+        let static_mean = fixed.mean_recovery_windows();
+        assert!(static_mean.is_infinite(), "{}: static mean recovery finite", s.name);
+
+        rows.push(vec![
+            s.name.to_string(),
+            coral.recoveries().len().to_string(),
+            total.to_string(),
+            fmt_mean(coral_mean),
+            format!("{:.0}", coral.max_recovery_windows().unwrap_or(0.0)),
+            fmt_mean(static_mean),
+        ]);
+        records.push(json::obj(vec![
+            ("scenario", Json::Str(s.name.to_string())),
+            ("events", Json::Num(coral.recoveries().len() as f64)),
+            ("windows", Json::Num(total as f64)),
+            ("coral_mean_recovery_windows", Json::Num(coral_mean)),
+            (
+                "coral_max_recovery_windows",
+                Json::Num(coral.max_recovery_windows().unwrap_or(0.0)),
+            ),
+            ("coral_all_recovered", Json::Bool(coral.all_recovered())),
+            ("static_all_recovered", Json::Bool(fixed.all_recovered())),
+        ]));
+    }
+    print!(
+        "{}",
+        table::render(
+            &[
+                "scenario", "events", "windows", "coral mean w", "coral max w", "static mean w",
+            ],
+            &rows
+        )
+    );
+
+    // ---- Arbitrated shared box vs the independent (unarbitrated) one.
+    let ts = TenantScenario::by_name("nx-pair").expect("tenant scenario exists");
+    let n = ts.tenants.len() as f64;
+    let mean_target: f64 = ts.tenants.iter().map(|t| t.target_fps).sum::<f64>() / n;
+    let cons = Constraints::dual(mean_target, ts.global_budget_mw / n);
+    let tenant_schedule = || {
+        ChaosSchedule::new()
+            .at(1, ChaosEvent::ThermalEnable { model: ChaosScenario::thermal_model() })
+            .at(3, ChaosEvent::HeatSoak { power_mw: 30_000.0, soak_s: 60.0 })
+            .at(5, ChaosEvent::GlitchBurst { windows: 1, kind: GlitchKind::NonFinite })
+            .take(events_cap())
+    };
+    let rounds = last_fault_window(&tenant_schedule()) + 5;
+    let mut drive_tenants = |label: &str, arb| {
+        let mut env = ChaosEnv::new(arb, tenant_schedule(), cons);
+        let probe = env.space().midpoint(); // ignored: each window is one round
+        let mut max_overdraw_mw: f64 = 0.0;
+        for _ in 0..rounds {
+            let m = env.measure(probe);
+            max_overdraw_mw = max_overdraw_mw.max(m.power_mw * n - ts.global_budget_mw);
+        }
+        println!(
+            "{}/{label}: {rounds} rounds, mean recovery {} rounds, all recovered: {}, \
+             max overdraw {:.0} mW",
+            ts.name,
+            fmt_mean(env.mean_recovery_windows()),
+            env.all_recovered(),
+            max_overdraw_mw
+        );
+        records.push(json::obj(vec![
+            ("scenario", Json::Str(format!("{}/{label}", ts.name))),
+            ("rounds", Json::Num(rounds as f64)),
+            ("mean_recovery_rounds", Json::Num(env.mean_recovery_windows())),
+            ("all_recovered", Json::Bool(env.all_recovered())),
+            ("max_overdraw_mw", Json::Num(max_overdraw_mw)),
+        ]));
+        env
+    };
+    println!();
+    let arbitrated = drive_tenants("demand", ts.arbiter(BudgetPolicy::DemandWeighted, SEED));
+    assert!(
+        arbitrated.all_recovered(),
+        "{}: the arbitrated box must re-reach the combined tenant targets \
+         under the global envelope: {:?}",
+        ts.name,
+        arbitrated.recoveries()
+    );
+    drive_tenants("independent", ts.independent(SEED));
+
+    let path =
+        std::env::var("CORAL_BENCH_JSON").unwrap_or_else(|_| "BENCH_chaos.json".to_string());
+    std::fs::write(&path, Json::Arr(records).to_string_pretty() + "\n")
+        .expect("write bench json");
+    println!("\nmachine-readable results written to {path}");
+    println!(
+        "recovery = windows from each scheduled event to the first measurement that \
+         again satisfied the then-current constraints; CORAL re-searches its way back \
+         on every family while the static all-max preset never does."
+    );
+}

@@ -6,7 +6,9 @@ use std::time::Duration;
 use anyhow::{bail, Context, Result};
 
 use super::args::Args;
-use crate::control::{BudgetPolicy, ControlLoop, Environment, SimEnv};
+use crate::control::{
+    drive_coral, BudgetPolicy, ControlLoop, Environment, SimEnv, CHAOS_HOLD_WINDOWS,
+};
 use crate::coordinator::{BatcherConfig, Server, ServerConfig};
 use crate::device::{failure, Device, DeviceKind, Dim};
 use crate::experiments::{self, runner, scenarios};
@@ -29,6 +31,7 @@ USAGE:
   coral tenants   [--scenario nx-pair|nx-triple|orin-triple] [--policy static|demand|waterfill|independent]
                   [--rounds N] [--seed N] [--sequential] [--cached]
   coral hetero    [--scenario hetero-<model>-<pair|triple>] [--iters N] [--seed N] [--sequential]
+  coral chaos     [--scenario chaos-<dropout|thermal|glitch|combined>-pair] [--windows N] [--seed N]
   coral fleetscale [--scenario fleet-<10|100|1k|10k>] [--rounds N] [--seed N] [--workers N]
   coral load      [--scenario load-<name>] [--iters N] [--seed N]
   coral report    <specs|models|scenarios>
@@ -46,6 +49,7 @@ pub fn dispatch(args: &Args) -> Result<()> {
         Some("serve") => cmd_serve(args),
         Some("tenants") => cmd_tenants(args),
         Some("hetero") => cmd_hetero(args),
+        Some("chaos") => cmd_chaos(args),
         Some("fleetscale") => cmd_fleetscale(args),
         Some("load") => cmd_load(args),
         Some("report") => cmd_report(args),
@@ -443,6 +447,66 @@ fn cmd_hetero(args: &Args) -> Result<()> {
         s.devices.len(),
         s.devices.len()
     );
+    Ok(())
+}
+
+fn cmd_chaos(args: &Args) -> Result<()> {
+    let picked: Vec<&scenarios::ChaosScenario> = match args.opt("scenario") {
+        Some(name) => {
+            let s = scenarios::ChaosScenario::by_name(name).with_context(|| {
+                let names: Vec<&str> =
+                    scenarios::CHAOS_SCENARIOS.iter().map(|s| s.name).collect();
+                format!("unknown chaos scenario '{name}' (expected one of: {})", names.join(", "))
+            })?;
+            vec![s]
+        }
+        None => scenarios::CHAOS_SCENARIOS.iter().collect(),
+    };
+    let seed = args.opt_u64_or("seed", 42).map_err(anyhow::Error::msg)?;
+    let windows_opt = args.opt_u64_or("windows", 0).map_err(anyhow::Error::msg)?;
+    println!(
+        "chaos fleet — CORAL driven through a deterministic fault schedule \
+         (search → hold → re-search every {CHAOS_HOLD_WINDOWS}-window hold; \
+         recovery = windows from event to first re-feasible measurement)"
+    );
+    let mut rows = Vec::new();
+    let mut summaries = Vec::new();
+    for s in picked {
+        let windows = if windows_opt > 0 { windows_opt } else { s.windows };
+        println!(
+            "\n{}: [{}] serving {} — target {} fps, budget {} mW, {} windows, {} scheduled events",
+            s.name,
+            s.devices.iter().map(|d| d.name()).collect::<Vec<_>>().join(" + "),
+            s.model,
+            s.target_fps,
+            s.budget_mw,
+            windows,
+            s.schedule(seed ^ 0x0DD5_EED5).len(),
+        );
+        let env = s.chaos(seed);
+        let done = drive_coral(env, s.constraints(), seed, windows);
+        for r in done.recoveries() {
+            rows.push(vec![
+                s.name.to_string(),
+                r.label.clone(),
+                r.at_window.to_string(),
+                r.recovered_at.map_or("never".to_string(), |w| w.to_string()),
+                r.windows().map_or("∞".to_string(), |w| w.to_string()),
+            ]);
+        }
+        summaries.push((s.name, done.mean_recovery_windows(), done.all_recovered()));
+    }
+    print!(
+        "{}",
+        table::render(&["scenario", "event", "at window", "recovered at", "windows"], &rows)
+    );
+    println!();
+    for (name, mean, all) in summaries {
+        println!(
+            "{name}: mean recovery {:.1} windows, all events recovered: {all}",
+            mean
+        );
+    }
     Ok(())
 }
 
@@ -871,6 +935,17 @@ mod tests {
     #[test]
     fn hetero_validates_scenario() {
         assert!(dispatch(&args("hetero --scenario mono-fleet")).is_err());
+    }
+
+    #[test]
+    fn chaos_smoke() {
+        let a = args("chaos --scenario chaos-dropout-pair --windows 30 --seed 5");
+        assert!(dispatch(&a).is_ok());
+    }
+
+    #[test]
+    fn chaos_validates_scenario() {
+        assert!(dispatch(&args("chaos --scenario chaos-meteor-strike")).is_err());
     }
 
     #[test]

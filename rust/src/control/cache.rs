@@ -330,6 +330,17 @@ impl<E: Environment> CachedEnv<E> {
 
 impl<E: Environment> Environment for CachedEnv<E> {
     fn measure(&mut self, cfg: HwConfig) -> Measured {
+        // A history-dependent surface (thermal board, arbiter round
+        // state) must never be answered from the store: a window
+        // measured cold is not the window a hot board produces, and a
+        // zero-cost hit would skip stepping the very state that makes
+        // the surface history-dependent — freezing the temperature
+        // trajectory. Checked per call, not at construction: faults
+        // (`ThermalEnable`) can make an inner surface history-dependent
+        // mid-run.
+        if self.inner.history_dependent() {
+            return self.measure_fresh(cfg);
+        }
         let key = self.key_for(cfg);
         if let Some(m) = self.store.lookup(&key) {
             return m; // inner cost_s untouched: the hit charges zero.
@@ -380,6 +391,17 @@ impl<E: Environment> Environment for CachedEnv<E> {
 
     fn cache_stats(&self) -> Option<CacheStats> {
         Some(self.stats())
+    }
+
+    /// Transparent: the wrapper is history-dependent exactly when the
+    /// surface underneath is (which is also what routes `measure`
+    /// through `measure_fresh` above).
+    fn history_dependent(&self) -> bool {
+        self.inner.history_dependent()
+    }
+
+    fn inject_fault(&mut self, fault: &crate::control::chaos::ChaosFault) {
+        self.inner.inject_fault(fault)
     }
 }
 
@@ -478,6 +500,48 @@ mod tests {
         assert_eq!(cached.measure(cfg).throughput_fps, 15.0, "entry refreshed");
         let stats = cached.stats();
         assert_eq!((stats.hits, stats.misses, stats.refreshes), (1, 1, 1));
+    }
+
+    #[test]
+    fn thermal_board_behind_a_cache_never_replays_a_stale_window() {
+        // Regression: `device_fingerprint` folds only the has_thermal
+        // *flag*, not the temperature, so a cached thermal board used
+        // to replay cold windows as hits forever — and hits (cost 0)
+        // never stepped the thermal model, freezing the trajectory.
+        // History-dependent surfaces must route through measure_fresh.
+        let dev = Device::new(DeviceKind::XavierNx, ModelKind::Yolo, 7)
+            .with_thermal(crate::device::thermal::ThermalModel::default());
+        let mut cached = CachedEnv::new(SimEnv::new(dev));
+        assert!(cached.history_dependent());
+        let cfg = cached.space().snap_config([1.0; crate::device::HwConfig::NDIMS]);
+        let mut cost = cached.cost_s();
+        let mut windows = Vec::new();
+        for _ in 0..40 {
+            windows.push(cached.measure(cfg).throughput_fps);
+            let now = cached.cost_s();
+            assert!(now > cost, "every window ran for real (no zero-cost hit)");
+            cost = now;
+        }
+        let stats = cached.stats();
+        assert_eq!(stats.hits, 0, "a stale-temperature window must never replay");
+        assert_eq!(stats.refreshes, 40, "every repeat re-measured the live surface");
+        // The trajectory actually moves: sustained max-power windows
+        // heat the board past the throttle knee, so later windows are
+        // slower than the cold first one — visible only because no hit
+        // froze the model.
+        let hot = windows.last().copied().unwrap();
+        assert!(
+            hot < windows[0],
+            "throttling must show up through the cache: first {} vs hot {hot}",
+            windows[0]
+        );
+        // A thermal-free twin of the same device still caches normally.
+        let mut plain =
+            CachedEnv::new(SimEnv::new(Device::new(DeviceKind::XavierNx, ModelKind::Yolo, 7)));
+        assert!(!plain.history_dependent());
+        plain.measure(cfg);
+        plain.measure(cfg);
+        assert_eq!(plain.stats().hits, 1);
     }
 
     #[test]

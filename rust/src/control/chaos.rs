@@ -1,0 +1,658 @@
+//! Fault injection: a chaos decorator over any [`Environment`].
+//!
+//! The paper evaluates CORAL on healthy boards over short windows; a
+//! deployed optimizer meets member dropout, sustained thermal
+//! throttling, flaky sensors and operator-driven budget changes.
+//! [`ChaosEnv`] wraps any environment with a **deterministic, seeded
+//! fault schedule** — the same seed replays the same fault sequence at
+//! the same windows, so chaos runs are as reproducible as clean ones —
+//! and keeps **per-event recovery accounting**: for every scheduled
+//! event, the number of measurement windows until the first window that
+//! again satisfies the (possibly stepped) constraints.
+//!
+//! Fault delivery is the [`Environment::inject_fault`] hook: the
+//! decorator stays fully generic while each layer handles its own fault
+//! family — [`super::FleetEnv`] takes member dropout/rejoin (down
+//! flags, survivor aggregation), device-backed environments take the
+//! thermal family, and [`ChaosEnv`] itself owns what no inner layer
+//! can see: sensor-glitch corruption of the *observation* and
+//! power-budget steps (which change the constraints the caller should
+//! optimize under, not the hardware).
+//!
+//! A `ChaosEnv` with an **empty schedule is a byte-identical
+//! passthrough**: same-seed trajectories through the decorator equal
+//! the undecorated environment's bit for bit (the acceptance tests pin
+//! this), so measurements under chaos are directly comparable to clean
+//! baselines.
+
+use crate::device::thermal::ThermalModel;
+use crate::device::{ConfigSpace, HwConfig, Measured};
+use crate::optimizer::{Constraints, CoralOptimizer};
+
+use super::{ControlLoop, ControlLoopConfig, DriftConfig, Environment, DEFAULT_BUDGET};
+
+/// One fault as *delivered* to an environment layer via
+/// [`Environment::inject_fault`]. Layers ignore families that are not
+/// theirs: the fleet handles `Member*`, device-backed environments the
+/// thermal trio, and decorators forward everything inward.
+#[derive(Debug, Clone)]
+pub enum ChaosFault {
+    /// Fleet member `member` vanishes (modulo fleet size).
+    MemberDown { member: usize },
+    /// Fleet member `member` rejoins.
+    MemberUp { member: usize },
+    /// Switch the board's thermal extension on (or replace its model)
+    /// mid-run — the surface becomes history-dependent from here on.
+    ThermalEnable { model: ThermalModel },
+    /// Externally-forced heating: advance the thermal model as if
+    /// `power_mw` had been drawn for `dt_s` seconds (a blocked fan, a
+    /// co-located burst). No-op on boards without a thermal model.
+    HeatSoak { power_mw: f64, dt_s: f64 },
+    /// Shift the thermal model's ambient temperature (enclosure heat
+    /// wave). No-op on boards without a thermal model.
+    AmbientShift { delta_c: f64 },
+}
+
+/// How a glitch burst corrupts the throughput reading.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GlitchKind {
+    /// The sensor reports NaN (a dead tegrastats line). Exercises the
+    /// non-finite drops in `telemetry::Sampler` / `DriftDetector`.
+    NonFinite,
+    /// The sensor sticks at its last good reading — plausible-looking
+    /// but frozen, the nastier failure mode.
+    StuckAt,
+}
+
+/// One *scheduled* fault event. `Dropout` is the only compound one: it
+/// expands into a `MemberDown` at its window and the matching
+/// `MemberUp` `down_windows` later, so rejoin needs no separate entry.
+#[derive(Debug, Clone)]
+pub enum ChaosEvent {
+    /// Member `member` drops for exactly `down_windows` windows, then
+    /// rejoins (its RNG/clock/thermal state frozen while away).
+    Dropout { member: usize, down_windows: u64 },
+    /// Enable the thermal extension on every board underneath.
+    ThermalEnable { model: ThermalModel },
+    /// Force-heat every thermal board: `power_mw` for `soak_s` seconds.
+    HeatSoak { power_mw: f64, soak_s: f64 },
+    /// Ambient shift on every thermal board.
+    AmbientShift { delta_c: f64 },
+    /// Corrupt the next `windows` throughput observations.
+    GlitchBurst { windows: u64, kind: GlitchKind },
+    /// Step the power budget (operator/energy-price action): the
+    /// decorator's [`ChaosEnv::current_constraints`] changes and the
+    /// driving loop re-optimizes under the new envelope.
+    BudgetStep { budget_mw: f64 },
+}
+
+impl ChaosEvent {
+    /// Human-readable tag used in recovery tables.
+    pub fn label(&self) -> String {
+        match self {
+            ChaosEvent::Dropout { member, down_windows } => {
+                format!("dropout(m{member},{down_windows}w)")
+            }
+            ChaosEvent::ThermalEnable { .. } => "thermal-enable".to_string(),
+            ChaosEvent::HeatSoak { power_mw, soak_s } => {
+                format!("heat-soak({:.0}mW,{soak_s:.0}s)", power_mw)
+            }
+            ChaosEvent::AmbientShift { delta_c } => format!("ambient({delta_c:+.0}C)"),
+            ChaosEvent::GlitchBurst { windows, kind } => {
+                let k = match kind {
+                    GlitchKind::NonFinite => "nan",
+                    GlitchKind::StuckAt => "stuck",
+                };
+                format!("glitch({k},{windows}w)")
+            }
+            ChaosEvent::BudgetStep { budget_mw } => format!("budget({budget_mw:.0}mW)"),
+        }
+    }
+
+    fn words(&self, out: &mut Vec<u64>) {
+        match self {
+            ChaosEvent::Dropout { member, down_windows } => {
+                out.extend([1, *member as u64, *down_windows])
+            }
+            ChaosEvent::ThermalEnable { model } => out.extend([
+                2,
+                model.ambient_c.to_bits(),
+                model.heat_per_ws.to_bits(),
+                model.cool_rate.to_bits(),
+                model.throttle_start_c.to_bits(),
+                model.throttle_full_c.to_bits(),
+                model.max_derate.to_bits(),
+            ]),
+            ChaosEvent::HeatSoak { power_mw, soak_s } => {
+                out.extend([3, power_mw.to_bits(), soak_s.to_bits()])
+            }
+            ChaosEvent::AmbientShift { delta_c } => out.extend([4, delta_c.to_bits()]),
+            ChaosEvent::GlitchBurst { windows, kind } => {
+                out.extend([5, *windows, *kind as u64])
+            }
+            ChaosEvent::BudgetStep { budget_mw } => out.extend([6, budget_mw.to_bits()]),
+        }
+    }
+}
+
+/// A deterministic fault schedule: `(window, event)` pairs. Events fire
+/// *before* the measurement of their window (an event at window 0
+/// shapes the very first window). Multiple events may share a window;
+/// they fire in insertion order.
+#[derive(Debug, Clone, Default)]
+pub struct ChaosSchedule {
+    events: Vec<(u64, ChaosEvent)>,
+}
+
+impl ChaosSchedule {
+    pub fn new() -> ChaosSchedule {
+        ChaosSchedule { events: Vec::new() }
+    }
+
+    /// Schedule `event` to fire before window `window`'s measurement.
+    pub fn at(mut self, window: u64, event: ChaosEvent) -> ChaosSchedule {
+        self.events.push((window, event));
+        self
+    }
+
+    /// The scheduled `(window, event)` pairs, in insertion order.
+    pub fn events(&self) -> &[(u64, ChaosEvent)] {
+        &self.events
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Keep only the first `n` scheduled events (insertion order) — the
+    /// CI-reduction knob (`CORAL_BENCH_CHAOS_EVENTS`). Applied *before*
+    /// expansion, so a kept `Dropout` keeps its rejoin.
+    pub fn take(mut self, n: usize) -> ChaosSchedule {
+        self.events.truncate(n);
+        self
+    }
+
+    /// Stable identity of the schedule (cache keying through the
+    /// decorator: two chaos runs share entries only for identical
+    /// schedules).
+    pub fn fingerprint(&self) -> u64 {
+        let mut words = vec![self.events.len() as u64];
+        for (w, ev) in &self.events {
+            words.push(*w);
+            ev.words(&mut words);
+        }
+        super::cache::stable_hash(&words)
+    }
+}
+
+/// Per-event recovery accounting: the event's window, and the first
+/// window at or after it whose measurement satisfied the (then-current)
+/// constraints again with no failure. `recovered_at == at_window` means
+/// the fleet absorbed the fault without ever going infeasible.
+#[derive(Debug, Clone)]
+pub struct RecoveryRecord {
+    /// [`ChaosEvent::label`] of the event this record tracks.
+    pub label: String,
+    /// Window the event fired before.
+    pub at_window: u64,
+    /// First re-feasible window (None = never recovered so far).
+    pub recovered_at: Option<u64>,
+}
+
+impl RecoveryRecord {
+    /// Windows from event to recovery (None while unrecovered).
+    pub fn windows(&self) -> Option<u64> {
+        self.recovered_at.map(|r| r - self.at_window)
+    }
+}
+
+/// What the decorator does when a timeline entry fires.
+#[derive(Debug, Clone)]
+enum Action {
+    /// Deliver to the inner environment ([`Environment::inject_fault`]).
+    Fault(ChaosFault),
+    /// Start corrupting observations (handled by the decorator itself).
+    Glitch { windows: u64, kind: GlitchKind },
+    /// Step the constraints' power budget (decorator-owned too: budgets
+    /// live in the caller's head, not in the hardware).
+    Budget { budget_mw: f64 },
+}
+
+/// The chaos decorator. See the module docs for the contract; the
+/// short version: wrap any environment, give it a [`ChaosSchedule`]
+/// and the starting [`Constraints`], and every `measure`/`measure_fresh`
+/// first fires the events due at the current window, then measures,
+/// then corrupts the observation if a glitch burst is active, then
+/// closes any open [`RecoveryRecord`]s if the window came back
+/// feasible.
+pub struct ChaosEnv<E: Environment> {
+    inner: E,
+    schedule: ChaosSchedule,
+    /// Expanded timeline, sorted by window (stable: same-window entries
+    /// keep schedule order). `Some(label)` opens a recovery record.
+    timeline: Vec<(u64, Action, Option<String>)>,
+    next: usize,
+    window: u64,
+    /// Constraints as of now — [`ChaosEvent::BudgetStep`] mutates the
+    /// budget; recovery is judged against this.
+    cons: Constraints,
+    glitch_left: u64,
+    glitch_kind: GlitchKind,
+    /// Last good throughput reading (what a stuck sensor reports).
+    stuck_fps: f64,
+    recoveries: Vec<RecoveryRecord>,
+}
+
+impl<E: Environment> ChaosEnv<E> {
+    pub fn new(inner: E, schedule: ChaosSchedule, cons: Constraints) -> ChaosEnv<E> {
+        let mut timeline = Vec::with_capacity(schedule.events.len() + 4);
+        for (w, ev) in &schedule.events {
+            let label = Some(ev.label());
+            match ev {
+                ChaosEvent::Dropout { member, down_windows } => {
+                    timeline.push((
+                        *w,
+                        Action::Fault(ChaosFault::MemberDown { member: *member }),
+                        label,
+                    ));
+                    // The rejoin is part of the same event: no record.
+                    timeline.push((
+                        w + down_windows,
+                        Action::Fault(ChaosFault::MemberUp { member: *member }),
+                        None,
+                    ));
+                }
+                ChaosEvent::ThermalEnable { model } => timeline.push((
+                    *w,
+                    Action::Fault(ChaosFault::ThermalEnable { model: model.clone() }),
+                    label,
+                )),
+                ChaosEvent::HeatSoak { power_mw, soak_s } => timeline.push((
+                    *w,
+                    Action::Fault(ChaosFault::HeatSoak { power_mw: *power_mw, dt_s: *soak_s }),
+                    label,
+                )),
+                ChaosEvent::AmbientShift { delta_c } => timeline.push((
+                    *w,
+                    Action::Fault(ChaosFault::AmbientShift { delta_c: *delta_c }),
+                    label,
+                )),
+                ChaosEvent::GlitchBurst { windows, kind } => {
+                    timeline.push((*w, Action::Glitch { windows: *windows, kind: *kind }, label))
+                }
+                ChaosEvent::BudgetStep { budget_mw } => {
+                    timeline.push((*w, Action::Budget { budget_mw: *budget_mw }, label))
+                }
+            }
+        }
+        timeline.sort_by_key(|e| e.0);
+        ChaosEnv {
+            inner,
+            schedule,
+            timeline,
+            next: 0,
+            window: 0,
+            cons,
+            glitch_left: 0,
+            glitch_kind: GlitchKind::NonFinite,
+            stuck_fps: f64::NAN,
+            recoveries: Vec::new(),
+        }
+    }
+
+    /// Windows measured through the decorator so far.
+    pub fn windows(&self) -> u64 {
+        self.window
+    }
+
+    /// The schedule this decorator replays.
+    pub fn schedule(&self) -> &ChaosSchedule {
+        &self.schedule
+    }
+
+    /// Constraints as of the last fired event ([`ChaosEvent::BudgetStep`]
+    /// moves the budget). Driving loops poll this and re-optimize when
+    /// it shifts — the budget change is an *operator* action the
+    /// optimizer must be told about, unlike the physical faults it can
+    /// only observe.
+    pub fn current_constraints(&self) -> Constraints {
+        self.cons
+    }
+
+    /// Per-event recovery records, in firing order.
+    pub fn recoveries(&self) -> &[RecoveryRecord] {
+        &self.recoveries
+    }
+
+    /// Whether every fired event has seen a re-feasible window.
+    pub fn all_recovered(&self) -> bool {
+        self.recoveries.iter().all(|r| r.recovered_at.is_some())
+    }
+
+    /// Mean windows-to-recovery over fired events: infinite while any
+    /// event is unrecovered, 0.0 with no events fired (a fleet that
+    /// absorbs every fault without going infeasible reports 0).
+    pub fn mean_recovery_windows(&self) -> f64 {
+        if self.recoveries.is_empty() {
+            return 0.0;
+        }
+        let mut sum = 0.0;
+        for r in &self.recoveries {
+            match r.windows() {
+                Some(w) => sum += w as f64,
+                None => return f64::INFINITY,
+            }
+        }
+        sum / self.recoveries.len() as f64
+    }
+
+    /// Worst windows-to-recovery (None with no fired events; infinite
+    /// while any is unrecovered).
+    pub fn max_recovery_windows(&self) -> Option<f64> {
+        self.recoveries
+            .iter()
+            .map(|r| r.windows().map_or(f64::INFINITY, |w| w as f64))
+            .fold(None, |acc, w| Some(acc.map_or(w, |a: f64| a.max(w))))
+    }
+
+    pub fn inner(&self) -> &E {
+        &self.inner
+    }
+
+    pub fn inner_mut(&mut self) -> &mut E {
+        &mut self.inner
+    }
+
+    pub fn into_inner(self) -> E {
+        self.inner
+    }
+
+    /// The one measurement path (`fresh` picks the inner entry point).
+    fn chaos_measure(&mut self, cfg: HwConfig, fresh: bool) -> Measured {
+        let w = self.window;
+        while self.next < self.timeline.len() && self.timeline[self.next].0 <= w {
+            let (_, action, label) = self.timeline[self.next].clone();
+            if let Some(label) = label {
+                self.recoveries.push(RecoveryRecord {
+                    label,
+                    at_window: w,
+                    recovered_at: None,
+                });
+            }
+            match action {
+                Action::Fault(fault) => self.inner.inject_fault(&fault),
+                Action::Glitch { windows, kind } => {
+                    self.glitch_left = windows;
+                    self.glitch_kind = kind;
+                }
+                Action::Budget { budget_mw } => self.cons.power_budget_mw = Some(budget_mw),
+            }
+            self.next += 1;
+        }
+        let mut m = if fresh {
+            self.inner.measure_fresh(cfg)
+        } else {
+            self.inner.measure(cfg)
+        };
+        if self.glitch_left > 0 {
+            self.glitch_left -= 1;
+            match self.glitch_kind {
+                GlitchKind::NonFinite => m.throughput_fps = f64::NAN,
+                // Stuck at the last good reading (NaN if the burst
+                // started before any window — no reading to stick at).
+                GlitchKind::StuckAt => m.throughput_fps = self.stuck_fps,
+            }
+        } else {
+            self.stuck_fps = m.throughput_fps;
+        }
+        if m.failed.is_none()
+            && self
+                .cons
+                .satisfied(m.throughput_fps, m.power_mw, m.p99_latency_ms)
+        {
+            for r in self.recoveries.iter_mut() {
+                if r.recovered_at.is_none() {
+                    r.recovered_at = Some(w);
+                }
+            }
+        }
+        self.window += 1;
+        m
+    }
+}
+
+impl<E: Environment> Environment for ChaosEnv<E> {
+    fn measure(&mut self, cfg: HwConfig) -> Measured {
+        self.chaos_measure(cfg, false)
+    }
+
+    fn measure_fresh(&mut self, cfg: HwConfig) -> Measured {
+        self.chaos_measure(cfg, true)
+    }
+
+    fn space(&self) -> &ConfigSpace {
+        self.inner.space()
+    }
+
+    fn cost_s(&self) -> f64 {
+        self.inner.cost_s()
+    }
+
+    /// Inner identity + the schedule: two chaos runs share cache
+    /// entries only when both the surface and the fault sequence match.
+    fn fingerprint(&self) -> u64 {
+        super::cache::stable_hash(&[self.inner.fingerprint(), self.schedule.fingerprint()])
+    }
+
+    fn bump_epoch(&mut self) {
+        self.inner.bump_epoch()
+    }
+
+    fn cache_stats(&self) -> Option<super::CacheStats> {
+        self.inner.cache_stats()
+    }
+
+    /// Any non-empty schedule makes the surface history-dependent: what
+    /// a window returns depends on which events have fired, which is a
+    /// function of the window counter — pure replay would skip faults.
+    fn history_dependent(&self) -> bool {
+        !self.schedule.is_empty() || self.inner.history_dependent()
+    }
+
+    /// Nested chaos (or an outer driver injecting by hand): forward in.
+    fn inject_fault(&mut self, fault: &ChaosFault) {
+        self.inner.inject_fault(fault)
+    }
+}
+
+/// Hold length of the chaos driver's serve phases: short enough that a
+/// fault fired mid-hold is re-searched within a few windows, long
+/// enough that the drift detector's window fills.
+pub const CHAOS_HOLD_WINDOWS: u64 = 5;
+
+/// Drive CORAL through a chaos run: search → hold (drift-watched) →
+/// re-search, until `total_windows` windows have been measured. The
+/// loop re-reads [`ChaosEnv::current_constraints`] at every phase
+/// boundary, so [`ChaosEvent::BudgetStep`]s reach the optimizer as a
+/// constraint change; every re-search gets a deterministically
+/// re-seeded optimizer (`seed ^ k·golden`), so the whole run is a pure
+/// function of `(env, cons, seed, total_windows)`. Returns the
+/// decorator for recovery inspection ([`ChaosEnv::recoveries`]).
+pub fn drive_coral<E: Environment>(
+    env: ChaosEnv<E>,
+    cons: Constraints,
+    seed: u64,
+    total_windows: u64,
+) -> ChaosEnv<E> {
+    let space = env.space().clone();
+    let opt = CoralOptimizer::new(space.clone(), cons, seed);
+    let cfg = ControlLoopConfig {
+        budget: DEFAULT_BUDGET,
+        drift: Some(DriftConfig::default()),
+        search_drift: None,
+    };
+    let mut cl = ControlLoop::new(env, opt, cons, cfg);
+    let mut restarts: u64 = 0;
+    loop {
+        cl.run();
+        let live = cl.env().current_constraints();
+        if live != cl.cons() {
+            cl.set_cons(live);
+        }
+        cl.hold(CHAOS_HOLD_WINDOWS);
+        let live = cl.env().current_constraints();
+        if live != cl.cons() {
+            cl.set_cons(live);
+        }
+        if cl.windows() >= total_windows {
+            break;
+        }
+        // Always re-search after a hold: chaos surfaces move, and a
+        // drift firing mid-hold lands here anyway. Deterministic
+        // re-seed per restart keeps the run replayable.
+        restarts += 1;
+        let reseed = seed ^ restarts.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        cl.restart(CoralOptimizer::new(space.clone(), cl.cons(), reseed));
+    }
+    cl.into_env()
+}
+
+/// The unarbitrated baseline: serve one fixed configuration through the
+/// whole chaos run, never adapting (a PolyThrottle-style static preset;
+/// see PAPERS.md). Recovery accounting runs identically — which is the
+/// point: the static preset's records simply never close once an event
+/// pushes its one config out of feasibility.
+pub fn drive_static<E: Environment>(
+    mut env: ChaosEnv<E>,
+    cfg: HwConfig,
+    total_windows: u64,
+) -> ChaosEnv<E> {
+    while env.windows() < total_windows {
+        env.measure(cfg);
+    }
+    env
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::control::testkit::StepEnv;
+    use crate::control::SimEnv;
+    use crate::device::{Device, DeviceKind};
+    use crate::models::ModelKind;
+
+    fn loose_cons() -> Constraints {
+        Constraints::dual(20.0, 8000.0)
+    }
+
+    #[test]
+    fn empty_schedule_is_a_byte_identical_passthrough() {
+        let mk = |seed| Device::new(DeviceKind::XavierNx, ModelKind::Yolo, seed);
+        let mut plain = SimEnv::new(mk(11));
+        let mut chaos = ChaosEnv::new(SimEnv::new(mk(11)), ChaosSchedule::new(), loose_cons());
+        let cfgs: Vec<HwConfig> = {
+            let space = plain.space().clone();
+            let mut rng = crate::util::rng::Rng::new(3);
+            (0..12).map(|_| space.random(&mut rng)).collect()
+        };
+        for cfg in cfgs {
+            let a = plain.measure(cfg);
+            let b = chaos.measure(cfg);
+            assert_eq!(format!("{a:?}"), format!("{b:?}"), "trajectories diverged");
+        }
+        assert_eq!(plain.cost_s(), chaos.cost_s());
+        assert!(chaos.recoveries().is_empty());
+        assert!(!chaos.history_dependent());
+    }
+
+    #[test]
+    fn glitch_burst_corrupts_observations_not_the_surface() {
+        let schedule = ChaosSchedule::new()
+            .at(2, ChaosEvent::GlitchBurst { windows: 2, kind: GlitchKind::NonFinite });
+        let mut env = ChaosEnv::new(StepEnv::constant(), schedule, loose_cons());
+        let cfg = env.space().midpoint();
+        for w in 0..6 {
+            let m = env.measure(cfg);
+            if w == 2 || w == 3 {
+                assert!(m.throughput_fps.is_nan(), "window {w} must be glitched");
+            } else {
+                assert_eq!(m.throughput_fps, 30.0, "window {w} clean");
+            }
+            assert!(m.failed.is_none(), "a glitch is not a failure");
+        }
+    }
+
+    #[test]
+    fn stuck_at_glitch_reports_the_last_good_reading() {
+        // A 30 → 15 fps step hidden behind a stuck sensor: the glitched
+        // windows keep reporting 30 even though the surface moved.
+        let schedule = ChaosSchedule::new()
+            .at(1, ChaosEvent::GlitchBurst { windows: 2, kind: GlitchKind::StuckAt });
+        let mut env = ChaosEnv::new(StepEnv::new(1), schedule, loose_cons());
+        let cfg = env.space().midpoint();
+        assert_eq!(env.measure(cfg).throughput_fps, 30.0);
+        assert_eq!(env.measure(cfg).throughput_fps, 30.0, "stuck at the old level");
+        assert_eq!(env.measure(cfg).throughput_fps, 30.0, "still stuck");
+        assert_eq!(env.measure(cfg).throughput_fps, 15.0, "sensor unstuck, truth visible");
+    }
+
+    #[test]
+    fn budget_step_moves_constraints_and_recovery_closes_on_refeasibility() {
+        // StepEnv serves 30 fps at 5000 mW forever. Stepping the budget
+        // to 4000 makes it infeasible (record stays open); stepping
+        // back to 6000 re-closes it on the next window.
+        let schedule = ChaosSchedule::new()
+            .at(2, ChaosEvent::BudgetStep { budget_mw: 4000.0 })
+            .at(5, ChaosEvent::BudgetStep { budget_mw: 6000.0 });
+        let mut env = ChaosEnv::new(StepEnv::constant(), schedule, Constraints::dual(20.0, 8000.0));
+        let cfg = env.space().midpoint();
+        for _ in 0..8 {
+            env.measure(cfg);
+        }
+        assert_eq!(env.current_constraints().power_budget_mw, Some(6000.0));
+        let rec = env.recoveries();
+        assert_eq!(rec.len(), 2);
+        assert_eq!(rec[0].label, "budget(4000mW)");
+        assert_eq!(
+            rec[0].recovered_at,
+            Some(5),
+            "first budget step recovers only when the second lifts it"
+        );
+        assert_eq!(rec[1].windows(), Some(0), "second step is feasible immediately");
+        assert!(env.all_recovered());
+        assert!((env.mean_recovery_windows() - 1.5).abs() < 1e-12);
+        assert_eq!(env.max_recovery_windows(), Some(3.0));
+    }
+
+    #[test]
+    fn unrecovered_events_report_infinite_mean() {
+        let schedule =
+            ChaosSchedule::new().at(1, ChaosEvent::BudgetStep { budget_mw: 1.0 });
+        let mut env = ChaosEnv::new(StepEnv::constant(), schedule, loose_cons());
+        let cfg = env.space().midpoint();
+        for _ in 0..5 {
+            env.measure(cfg);
+        }
+        assert!(!env.all_recovered());
+        assert!(env.mean_recovery_windows().is_infinite());
+        assert!(env.history_dependent(), "non-empty schedule is history-dependent");
+    }
+
+    #[test]
+    fn schedule_take_preserves_dropout_rejoins_and_fingerprints_differ() {
+        let full = ChaosSchedule::new()
+            .at(3, ChaosEvent::Dropout { member: 1, down_windows: 4 })
+            .at(9, ChaosEvent::BudgetStep { budget_mw: 6000.0 });
+        let cut = full.clone().take(1);
+        assert_eq!(cut.len(), 1);
+        // The kept Dropout still expands to down + rejoin.
+        let env = ChaosEnv::new(StepEnv::constant(), cut.clone(), loose_cons());
+        assert_eq!(env.timeline.len(), 2, "down + rejoin both survive a take");
+        assert_ne!(full.fingerprint(), cut.fingerprint());
+        assert_ne!(full.fingerprint(), ChaosSchedule::new().fingerprint());
+    }
+}

@@ -48,17 +48,24 @@ pub struct DriftDetector {
     cfg: DriftConfig,
     reference_fps: f64,
     recent: VecDeque<f64>,
+    /// Non-finite samples dropped instead of entering the window.
+    glitches: u64,
 }
 
 impl DriftDetector {
     pub fn new(cfg: DriftConfig, reference_fps: f64) -> DriftDetector {
         assert!(cfg.window >= 1, "drift window must hold a sample");
         assert!(cfg.rel_threshold > 0.0, "drift threshold must be positive");
-        DriftDetector { cfg, reference_fps, recent: VecDeque::new() }
+        DriftDetector { cfg, reference_fps, recent: VecDeque::new(), glitches: 0 }
     }
 
     pub fn reference_fps(&self) -> f64 {
         self.reference_fps
+    }
+
+    /// Non-finite samples dropped so far (sensor glitches).
+    pub fn glitches(&self) -> u64 {
+        self.glitches
     }
 
     /// Feed one throughput sample. Returns the windowed mean when it has
@@ -66,11 +73,17 @@ impl DriftDetector {
     /// noisy window cannot fire; the mean over `window` samples must
     /// shift).
     ///
-    /// A non-finite sample (a degenerate serving window) is recorded as
-    /// a collapsed window — 0 fps — rather than poisoning the windowed
-    /// mean with NaN/inf forever.
+    /// A non-finite sample is a sensor glitch, not a measurement: it is
+    /// dropped — counted in [`DriftDetector::glitches`], never entering
+    /// the window — so a NaN burst cannot masquerade as a throughput
+    /// collapse and fire a spurious drift (epoch bump, cache purge,
+    /// restart). A *real* collapse reports finite 0 fps windows and
+    /// still fires.
     pub fn push(&mut self, throughput_fps: f64) -> Option<f64> {
-        let throughput_fps = if throughput_fps.is_finite() { throughput_fps } else { 0.0 };
+        if !throughput_fps.is_finite() {
+            self.glitches += 1;
+            return None;
+        }
         self.recent.push_back(throughput_fps);
         if self.recent.len() > self.cfg.window {
             self.recent.pop_front();
@@ -866,18 +879,29 @@ mod tests {
     }
 
     #[test]
-    fn drift_detector_survives_non_finite_samples() {
-        // inf/NaN windows (zero-wall serving, dead pool) count as
-        // collapsed (0 fps) windows: the detector fires on the sustained
-        // collapse instead of returning NaN comparisons forever.
-        let mut det = DriftDetector::new(
-            DriftConfig { window: 2, rel_threshold: 0.1 },
-            100.0,
-        );
-        assert!(det.push(f64::INFINITY).is_none(), "window not full yet");
-        let fired = det.push(f64::NAN).expect("collapsed mean must fire");
-        assert!(fired.is_finite());
+    fn glitch_burst_fires_no_drift_but_real_collapse_does() {
+        // A 3-sample NaN burst on a steady board is a sensor glitch:
+        // dropped, counted, no drift — the historical sanitize-to-0.0
+        // read it as a collapse and fired (epoch bump, cache purge,
+        // restart) on a perfectly healthy surface.
+        let cfg = DriftConfig { window: 3, rel_threshold: 0.1 };
+        let mut det = DriftDetector::new(cfg, 100.0);
+        for _ in 0..3 {
+            det.push(100.0);
+        }
+        for _ in 0..3 {
+            assert!(det.push(f64::NAN).is_none(), "glitch burst must not fire");
+        }
+        assert_eq!(det.glitches(), 3);
+        assert!(det.push(101.0).is_none(), "healthy window after the burst");
+
+        // A real collapse reports finite 0 fps windows and still fires.
+        let mut det = DriftDetector::new(cfg, 100.0);
+        det.push(0.0);
+        det.push(0.0);
+        let fired = det.push(0.0).expect("sustained 0 fps collapse must fire");
         assert_eq!(fired, 0.0);
+        assert_eq!(det.glitches(), 0);
     }
 
     #[test]

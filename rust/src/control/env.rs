@@ -29,6 +29,7 @@
 //! [`Environment::cache_stats`]) all have pass-through defaults, so
 //! plain environments are unaffected.
 
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
@@ -102,6 +103,29 @@ pub trait Environment {
     fn cache_stats(&self) -> Option<super::CacheStats> {
         None
     }
+
+    /// Whether this surface's answers depend on measurement *history*
+    /// (a thermal board whose temperature integrates past windows, a
+    /// multi-tenant arbiter whose round state evolves) rather than on
+    /// the configuration alone. A [`super::CachedEnv`] must never
+    /// replay a stored window for such a surface — a window measured
+    /// cold is simply not the window a hot board would produce, and a
+    /// zero-cost hit would freeze the very state (temperature) that
+    /// makes the surface history-dependent. `CachedEnv` therefore
+    /// routes these through [`Environment::measure_fresh`]
+    /// unconditionally. Default: false (pure config→window surfaces).
+    fn history_dependent(&self) -> bool {
+        false
+    }
+
+    /// Deliver one injected fault ([`super::chaos::ChaosFault`]) to
+    /// this surface. Environments ignore faults that don't apply to
+    /// them (the default ignores everything): device-backed
+    /// environments handle thermal faults, [`FleetEnv`] handles member
+    /// dropout/rejoin and forwards the rest to every member,
+    /// decorators forward to their inner environment. Called by the
+    /// [`super::chaos::ChaosEnv`] decorator when its schedule fires.
+    fn inject_fault(&mut self, _fault: &super::chaos::ChaosFault) {}
 }
 
 /// The simulated Jetson board as an [`Environment`].
@@ -183,6 +207,37 @@ impl Environment for SimEnv {
             None => dev,
         }
     }
+
+    /// A thermal board's windows depend on its temperature trajectory.
+    fn history_dependent(&self) -> bool {
+        self.dev.has_thermal()
+    }
+
+    fn inject_fault(&mut self, fault: &super::chaos::ChaosFault) {
+        apply_device_fault(&mut self.dev, fault);
+    }
+}
+
+/// Apply a fault to a simulated device: the thermal family acts on its
+/// [`crate::device::thermal::ThermalModel`] (shared by [`SimEnv`] and
+/// [`LiveEnv`], whose power/DVFS side is this device); everything else
+/// is someone else's fault to handle and is ignored.
+fn apply_device_fault(dev: &mut Device, fault: &super::chaos::ChaosFault) {
+    use super::chaos::ChaosFault;
+    match fault {
+        ChaosFault::ThermalEnable { model } => dev.enable_thermal(model.clone()),
+        ChaosFault::HeatSoak { power_mw, dt_s } => {
+            if let Some(t) = dev.thermal_mut() {
+                t.step(*power_mw, *dt_s);
+            }
+        }
+        ChaosFault::AmbientShift { delta_c } => {
+            if let Some(t) = dev.thermal_mut() {
+                t.ambient_c += delta_c;
+            }
+        }
+        ChaosFault::MemberDown { .. } | ChaosFault::MemberUp { .. } => {}
+    }
 }
 
 /// Cache identity of one simulated device (shared by [`SimEnv`] and
@@ -230,6 +285,14 @@ impl<E: Environment + ?Sized> Environment for Box<E> {
 
     fn cache_stats(&self) -> Option<super::CacheStats> {
         (**self).cache_stats()
+    }
+
+    fn history_dependent(&self) -> bool {
+        (**self).history_dependent()
+    }
+
+    fn inject_fault(&mut self, fault: &super::chaos::ChaosFault) {
+        (**self).inject_fault(fault)
     }
 }
 
@@ -536,6 +599,16 @@ impl Environment for LiveEnv {
             self.arrival.as_ref().map_or(0, |p| p.fingerprint()),
         ])
     }
+
+    /// The power/DVFS side is the sim device; thermal state there makes
+    /// the whole live surface history-dependent.
+    fn history_dependent(&self) -> bool {
+        self.sim.has_thermal()
+    }
+
+    fn inject_fault(&mut self, fault: &super::chaos::ChaosFault) {
+        apply_device_fault(&mut self.sim, fault);
+    }
 }
 
 /// A fleet of boards measured together, as an [`Environment`].
@@ -582,6 +655,12 @@ pub struct FleetEnv {
     /// Lazily-built persistent pool; `spawned_threads` never moves once
     /// this exists.
     pool: Option<FleetPool>,
+    /// Per-member dropout flags (chaos injection / operator action): a
+    /// down member is not measured — its round observation is the
+    /// synthetic [`dropped_window`] and the fleet aggregate is computed
+    /// over the survivors. `Arc`'d alongside `members` so pool jobs can
+    /// read the flags without borrowing the fleet.
+    down: Arc<Vec<AtomicBool>>,
 }
 
 impl FleetEnv {
@@ -598,6 +677,7 @@ impl FleetEnv {
             let ns = NormSpace::new(members.iter().map(|m| m.space().clone()).collect());
             (ns.grid().clone(), Some(Arc::new(ns)))
         };
+        let n = members.len();
         FleetEnv {
             members: Arc::new(members.into_iter().map(Mutex::new).collect()),
             space,
@@ -605,6 +685,7 @@ impl FleetEnv {
             parallel: true,
             workers: None,
             pool: None,
+            down: Arc::new((0..n).map(|_| AtomicBool::new(false)).collect()),
         }
     }
 
@@ -674,6 +755,26 @@ impl FleetEnv {
         f(&**lock(&self.members[i]))
     }
 
+    /// Mark member `i` down (true) or rejoined (false). A down member
+    /// is skipped by every window — its observation is the synthetic
+    /// dropped window ([`FailureKind::Dropout`]) and the fleet
+    /// aggregate is the survivor mean. The member itself is untouched
+    /// while away: its RNG, simulated clock and thermal state freeze,
+    /// so a rejoin resumes exactly where the dropout left it.
+    pub fn set_member_down(&self, i: usize, down: bool) {
+        self.down[i].store(down, Ordering::Relaxed);
+    }
+
+    /// Whether member `i` is currently marked down.
+    pub fn member_down(&self, i: usize) -> bool {
+        self.down[i].load(Ordering::Relaxed)
+    }
+
+    /// Members currently up (fleet size minus down-flagged members).
+    pub fn live_members(&self) -> usize {
+        self.down.iter().filter(|d| !d.load(Ordering::Relaxed)).count()
+    }
+
     /// Threads spawned by the fleet's persistent pool — 0 until the
     /// first parallel window, constant forever after
     /// (`bench_fleet_scale` asserts it never moves once measuring
@@ -723,6 +824,14 @@ impl FleetEnv {
     /// aggregation and the multi-tenant arbiter's per-round observation
     /// (`control::tenant`).
     ///
+    /// **Dropout is not a crash.** A window carrying
+    /// [`FailureKind::Dropout`] (a member that vanished mid-round) does
+    /// not veto the config: it contributes nothing and the means are
+    /// taken over the *survivors* (quorum-weighted). Only when every
+    /// member dropped does the aggregate itself report `Dropout`.
+    /// Fault-free groups divide by the same count as before, so their
+    /// aggregates stay byte-identical.
+    ///
     /// Internally a pairwise tree reduction over fixed midpoints (see
     /// [`partial_over`]): the summation tree depends only on `results.
     /// len()`, so [`FleetEnv::combine_sharded`] — which cuts the same
@@ -769,6 +878,11 @@ struct Partial {
     /// combined observation like the old left-fold did.
     config: HwConfig,
     n: usize,
+    /// Members in this range that actually produced a window (dropped
+    /// members contribute identity elements and `live: 0`); the means
+    /// divide by this. Fault-free ranges have `live == n`, so every
+    /// historical aggregate divides by the same count bit-for-bit.
+    live: usize,
     throughput_fps: f64,
     power_mw: f64,
     latency_ms: f64,
@@ -776,16 +890,38 @@ struct Partial {
     gpu_util: f64,
     cpu_util: f64,
     mem_util: f64,
-    /// First failure in fleet order (left-priority merge), regardless of
-    /// which thread measured it.
+    /// First *config* failure in fleet order (left-priority merge),
+    /// regardless of which thread measured it. Dropout never lands
+    /// here — a vanished member is a missing observation, not a verdict
+    /// on the configuration.
     failed: Option<FailureKind>,
 }
 
 impl Partial {
     fn leaf(m: &Measured) -> Partial {
+        if m.failed == Some(FailureKind::Dropout) {
+            // A dropped member contributes the sums' identity elements
+            // (0.0 adds, NEG_INFINITY max) so the merge arithmetic of
+            // every *other* member is untouched, and live: 0 so the
+            // final means divide by survivors only.
+            return Partial {
+                config: m.config,
+                n: 1,
+                live: 0,
+                throughput_fps: 0.0,
+                power_mw: 0.0,
+                latency_ms: 0.0,
+                p99_latency_ms: f64::NEG_INFINITY,
+                gpu_util: 0.0,
+                cpu_util: 0.0,
+                mem_util: 0.0,
+                failed: None,
+            };
+        }
         Partial {
             config: m.config,
             n: 1,
+            live: 1,
             throughput_fps: m.throughput_fps,
             power_mw: m.power_mw,
             latency_ms: m.latency_ms,
@@ -803,6 +939,7 @@ impl Partial {
         Partial {
             config: left.config,
             n: left.n + right.n,
+            live: left.live + right.live,
             throughput_fps: left.throughput_fps + right.throughput_fps,
             power_mw: left.power_mw + right.power_mw,
             latency_ms: left.latency_ms + right.latency_ms,
@@ -865,11 +1002,17 @@ fn merge_partials(parts: &[Partial]) -> Partial {
 }
 
 /// Turn a full-fleet partial into the observation the optimizer sees:
-/// metric means, with one crashed member prohibiting the config
-/// fleet-wide (the surviving boards still draw power).
+/// metric means over the *live* members, with one crashed member
+/// prohibiting the config fleet-wide (the surviving boards still draw
+/// power). Dropped members are excluded from every mean (`live < n`);
+/// a fully-dropped group is itself a [`FailureKind::Dropout`] window.
+/// Fault-free groups have `live == n`, so their divisions — and hence
+/// their aggregates — are byte-identical to the historical form.
 fn finish(p: Partial) -> Measured {
-    let n = p.n as f64;
     if let Some(failed) = p.failed {
+        // A config crash vetoes the group; its power mean is still the
+        // survivors' (the live boards keep drawing power).
+        let n = p.live.max(1) as f64;
         return Measured {
             config: p.config,
             throughput_fps: 0.0,
@@ -882,17 +1025,43 @@ fn finish(p: Partial) -> Measured {
             failed: Some(failed),
         };
     }
+    if p.live == 0 {
+        // Every member dropped: no observation exists this round.
+        return dropped_window(p.config);
+    }
+    let n = p.live as f64;
     Measured {
         config: p.config,
         throughput_fps: p.throughput_fps / n,
         power_mw: p.power_mw / n,
         latency_ms: p.latency_ms / n,
-        // Already the worst member tail (max-merged, not summed).
+        // Already the worst *live* member tail (max-merged, not
+        // summed; dropped leaves contribute NEG_INFINITY).
         p99_latency_ms: p.p99_latency_ms,
         gpu_util: p.gpu_util / n,
         cpu_util: p.cpu_util / n,
         mem_util: p.mem_util / n,
         failed: None,
+    }
+}
+
+/// The synthetic observation of a member that vanished mid-round (down
+/// flag, panicked measurement job): zero throughput and power — a
+/// vanished board serves nothing and its rail reads nothing — infinite
+/// latency, and the [`FailureKind::Dropout`] marker the aggregation
+/// treats as "exclude from the survivor means" rather than as a config
+/// veto.
+fn dropped_window(native: HwConfig) -> Measured {
+    Measured {
+        config: native,
+        throughput_fps: 0.0,
+        power_mw: 0.0,
+        latency_ms: f64::INFINITY,
+        p99_latency_ms: f64::INFINITY,
+        gpu_util: 0.0,
+        cpu_util: 0.0,
+        mem_util: 0.0,
+        failed: Some(FailureKind::Dropout),
     }
 }
 
@@ -920,14 +1089,26 @@ impl FleetEnv {
                 None => FleetPool::auto(),
             });
             let members = Arc::clone(&self.members);
+            let down = Arc::clone(&self.down);
             let norm = self.norm.clone();
             let slots: Arc<Mutex<Vec<Option<Measured>>>> = Arc::new(Mutex::new(vec![None; n]));
             let out = Arc::clone(&slots);
-            pool.run(n, move |i| {
+            // `run_contained`, not `run`: one panicking member must not
+            // abort the fleet round. The pool contains the panic, the
+            // dead job's slot stays unfilled, and the collection below
+            // turns it into a dropped observation.
+            pool.run_contained(n, move |i| {
                 let native = match &norm {
                     Some(ns) => ns.decode_for(i, &cfg),
                     None => cfg,
                 };
+                if down[i].load(Ordering::Relaxed) {
+                    // Skip the member entirely: no lock, no RNG draw,
+                    // no clock advance — a down board is frozen, not
+                    // measured-at-zero.
+                    lock(&out)[i] = Some(dropped_window(native));
+                    return;
+                }
                 let mut env = lock(&members[i]);
                 let m = if fresh {
                     env.measure_fresh(native)
@@ -938,7 +1119,19 @@ impl FleetEnv {
             });
             std::mem::take(&mut *lock(&slots))
                 .into_iter()
-                .map(|m| m.expect("every member measured"))
+                .enumerate()
+                .map(|(i, m)| {
+                    m.unwrap_or_else(|| {
+                        // The member's job panicked mid-window (slot
+                        // never filled): this round, that member is
+                        // simply gone.
+                        let native = match &self.norm {
+                            Some(ns) => ns.decode_for(i, &cfg),
+                            None => cfg,
+                        };
+                        dropped_window(native)
+                    })
+                })
                 .collect()
         } else {
             self.members
@@ -949,12 +1142,22 @@ impl FleetEnv {
                         Some(ns) => ns.decode_for(i, &cfg),
                         None => cfg,
                     };
-                    let mut env = lock(member);
-                    if fresh {
-                        env.measure_fresh(native)
-                    } else {
-                        env.measure(native)
+                    if self.down[i].load(Ordering::Relaxed) {
+                        return dropped_window(native);
                     }
+                    // Same containment as the pool path: a panicking
+                    // member yields a dropped window, not an aborted
+                    // round (`lock` is poison-tolerant, so the member
+                    // stays reachable next round).
+                    std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                        let mut env = lock(member);
+                        if fresh {
+                            env.measure_fresh(native)
+                        } else {
+                            env.measure(native)
+                        }
+                    }))
+                    .unwrap_or_else(|_| dropped_window(native))
                 })
                 .collect()
         };
@@ -1034,6 +1237,31 @@ impl Environment for FleetEnv {
             .iter()
             .filter_map(|m| lock(m).cache_stats())
             .reduce(|a, b| a.merged(&b))
+    }
+
+    /// History-dependent as soon as any member is (one thermal board
+    /// makes the whole fleet mean trajectory-dependent).
+    fn history_dependent(&self) -> bool {
+        self.members.iter().any(|m| lock(m).history_dependent())
+    }
+
+    /// Member dropout/rejoin is the fleet's own fault family (the down
+    /// flags); everything else is forwarded to every member.
+    fn inject_fault(&mut self, fault: &super::chaos::ChaosFault) {
+        use super::chaos::ChaosFault;
+        match fault {
+            ChaosFault::MemberDown { member } => {
+                self.set_member_down(member % self.len(), true)
+            }
+            ChaosFault::MemberUp { member } => {
+                self.set_member_down(member % self.len(), false)
+            }
+            other => {
+                for m in self.members.iter() {
+                    lock(m).inject_fault(other);
+                }
+            }
+        }
     }
 }
 

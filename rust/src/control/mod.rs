@@ -46,6 +46,7 @@
 //! gated behind `cfg(any(test, feature = "testkit"))`).
 
 pub mod cache;
+pub mod chaos;
 pub mod engine;
 pub mod env;
 pub mod fleet;
@@ -55,6 +56,10 @@ pub mod tenant;
 pub mod testkit;
 
 pub use cache::{CacheStats, CacheStore, CachedEnv};
+pub use chaos::{
+    drive_coral, drive_static, ChaosEnv, ChaosEvent, ChaosFault, ChaosSchedule, GlitchKind,
+    RecoveryRecord, CHAOS_HOLD_WINDOWS,
+};
 pub use engine::{
     ControlLoop, ControlLoopConfig, DriftConfig, DriftDetector, HoldOutcome, LoopEvent,
     LoopOutcome, Step, DEFAULT_BUDGET, MAX_SEARCH_RESTARTS,

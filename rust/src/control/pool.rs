@@ -342,6 +342,18 @@ impl FleetPool {
         self.submit(total, task).join();
     }
 
+    /// Run `total` index jobs to completion, containing panics: every
+    /// job runs exactly once, panicked jobs simply leave whatever
+    /// side-effect slot they owned unfilled, and the batch — and the
+    /// pool — stay usable. Returns `true` if any job panicked.
+    pub fn run_contained(
+        &self,
+        total: usize,
+        task: impl Fn(usize) + Send + Sync + 'static,
+    ) -> bool {
+        self.submit(total, task).join_quiet()
+    }
+
     /// Parallel map preserving job order. Results land by index, so the
     /// output is byte-identical for every worker count and every steal
     /// schedule; panicking jobs propagate as a panic after the batch
@@ -395,6 +407,17 @@ impl BatchTicket {
     /// joiner claims everything the workers abandoned. Panics if any
     /// job panicked.
     pub fn join(self) {
+        if self.join_quiet() {
+            panic!("fleet pool job panicked");
+        }
+    }
+
+    /// Like [`BatchTicket::join`], but a panicked job is *reported*
+    /// (returns `true`) rather than re-raised — the containment entry
+    /// point for fault-tolerant callers (`FleetEnv` survivor
+    /// aggregation), which read their per-job result slots and treat
+    /// unfilled ones as dropped members instead of aborting the round.
+    pub fn join_quiet(self) -> bool {
         help(&self.batch, 0, &self.shared.steals);
         let mut d = lock(&self.batch.done);
         while d.completed < self.batch.total {
@@ -412,9 +435,7 @@ impl BatchTicket {
             inj.batches.remove(pos);
         }
         drop(inj);
-        if poisoned {
-            panic!("fleet pool job panicked");
-        }
+        poisoned
     }
 }
 
@@ -531,5 +552,32 @@ mod tests {
         let ok = pool.map((0..8u64).collect(), |_, j| j + 1);
         assert_eq!(ok, (1..9u64).collect::<Vec<u64>>());
         assert_eq!(pool.spawned_threads(), 2, "no respawn after a poisoned batch");
+    }
+
+    #[test]
+    fn run_contained_reports_the_panic_and_runs_every_other_job() {
+        // The fault-tolerant entry point: a scripted job panic must not
+        // propagate, every *other* job still runs exactly once (its slot
+        // fills), and the caller learns the batch was poisoned.
+        let pool = FleetPool::new(2);
+        let slots: Arc<Mutex<Vec<Option<u64>>>> =
+            Arc::new(Mutex::new((0..8).map(|_| None).collect()));
+        let write = Arc::clone(&slots);
+        let poisoned = pool.run_contained(8, move |i| {
+            assert!(i != 3, "scripted member failure");
+            lock(&write)[i] = Some(i as u64 * 10);
+        });
+        assert!(poisoned, "the panic must be reported");
+        let got = lock(&slots).clone();
+        for (i, slot) in got.iter().enumerate() {
+            if i == 3 {
+                assert!(slot.is_none(), "panicked job leaves its slot unfilled");
+            } else {
+                assert_eq!(*slot, Some(i as u64 * 10));
+            }
+        }
+        // A fault-free batch on the same pool reports clean.
+        assert!(!pool.run_contained(4, |_| {}));
+        assert_eq!(pool.spawned_threads(), 2, "no respawn after containment");
     }
 }

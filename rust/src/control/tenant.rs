@@ -530,6 +530,22 @@ impl Environment for TenantArbiter {
             .flatten()
             .reduce(|a, b| a.merged(&b))
     }
+
+    /// Always true: each window advances stateful round/search state,
+    /// so a cache must never replay one. This makes the "never wrap the
+    /// arbiter in a [`CachedEnv`]" rule above self-enforcing — a cache
+    /// wrapper now routes every arbiter window through `measure_fresh`.
+    fn history_dependent(&self) -> bool {
+        true
+    }
+
+    /// Forwarded to every tenant's environment: a fault on the shared
+    /// box (thermal soak, ambient shift) is visible to all tenants.
+    fn inject_fault(&mut self, fault: &super::chaos::ChaosFault) {
+        for t in &mut self.tenants {
+            t.cl.env_mut().inject_fault(fault);
+        }
+    }
 }
 
 /// Deterministic per-(tenant, round, restart) optimizer seed: parallel

@@ -459,6 +459,26 @@ impl ConfigSpace {
         }
     }
 
+    /// Every dimension pinned to its maximum grid value — the "all-max"
+    /// configuration the chaos baselines serve statically. Distinct
+    /// from [`ConfigSpace::preset_max_power`] (the manufacturer preset,
+    /// which leaves the application knobs at their minimum): this maxes
+    /// concurrency and the batch axis too. On a normalized grid every
+    /// dimension sits at rank 1.0, which decodes to each member's own
+    /// maximum. Note that `snap_config([1.0; 6])` does **not** build
+    /// this configuration — 1.0 is a raw grid value there and snaps to
+    /// each dimension's *minimum*.
+    pub fn max_config(&self) -> HwConfig {
+        HwConfig {
+            cpu_freq_mhz: self.max(Dim::CpuFreq),
+            cpu_cores: self.max(Dim::CpuCores),
+            gpu_freq_mhz: self.max(Dim::GpuFreq),
+            mem_freq_mhz: self.max(Dim::MemFreq),
+            concurrency: self.max(Dim::Concurrency),
+            max_batch: self.max(Dim::BatchCap),
+        }
+    }
+
     /// Render `cfg` with its space context. Heterogeneous-fleet reports
     /// must distinguish an NX configuration from an Orin one with
     /// identical raw values — bare [`HwConfig`]'s `Display` cannot —
@@ -869,6 +889,32 @@ mod tests {
         let cfg = s.midpoint();
         assert!(s.describe(&cfg).starts_with("xavier-nx "), "{}", s.describe(&cfg));
         assert_ne!(s.describe(&cfg), orin().describe(&cfg));
+    }
+
+    #[test]
+    fn max_config_is_the_per_dim_maximum_not_snap_of_ones() {
+        for d in DeviceKind::ALL {
+            let s = d.space();
+            let m = s.max_config();
+            assert!(s.contains(&m), "{d:?}");
+            for &dim in &Dim::ALL {
+                assert_eq!(m.get(dim), s.max(dim), "{d:?} {dim:?}");
+            }
+        }
+        // On the normalized permille grid, raw 1.0 is a *value* and
+        // snaps to each dimension's minimum — the opposite corner.
+        let ns = nx_orin();
+        let g = ns.grid();
+        let ones = g.snap_config([1.0; HwConfig::NDIMS]);
+        for &dim in &Dim::ALL {
+            assert_eq!(ones.get(dim), g.min(dim), "{dim:?}");
+        }
+        assert_ne!(ones, g.max_config());
+        // All-max decodes to every member's own native maxima.
+        let p = g.max_config();
+        for (i, m) in ns.members().iter().enumerate() {
+            assert_eq!(ns.decode_for(i, &p), m.max_config(), "member {i}");
+        }
     }
 
     #[test]

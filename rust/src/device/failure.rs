@@ -64,13 +64,21 @@ pub fn peak_memory_gb(dev: DeviceKind, model: ModelKind, cfg: &HwConfig) -> f64 
     peak
 }
 
-/// Why a configuration is excluded.
+/// Why a configuration is excluded — or, for [`FailureKind::Dropout`],
+/// why a window carries no observation at all.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum FailureKind {
     /// Peak footprint exceeded the memory budget (OOM).
     OutOfMemory,
     /// Non-deterministic-looking runtime error (driver, timeout).
     RuntimeError,
+    /// The board vanished mid-window (fleet member dropout, a panicked
+    /// member job). A property of the *moment*, not of the
+    /// configuration: never returned by [`check`], injected only by the
+    /// fleet layer (`control::env::FleetEnv`) and the chaos decorator
+    /// (`control::chaos::ChaosEnv`), and aggregated as a missing member
+    /// rather than a prohibited config.
+    Dropout,
 }
 
 /// Check a configuration; `None` = valid.
@@ -156,13 +164,63 @@ mod tests {
 
     #[test]
     fn failures_deterministic() {
+        // Verdict stability must hold across *independently constructed*
+        // spaces and devices — the fixed-exclusion-list property the
+        // paper's sweep relies on — not merely for one `check` call
+        // compared against itself.
+        for dev in DeviceKind::ALL {
+            for model in ModelKind::ALL {
+                let first: Vec<Option<FailureKind>> = dev
+                    .space()
+                    .enumerate()
+                    .iter()
+                    .map(|c| check(dev, model, c))
+                    .collect();
+                // Second pass: fresh space, fresh enumeration, fresh
+                // config values.
+                let second: Vec<Option<FailureKind>> = dev
+                    .space()
+                    .enumerate()
+                    .iter()
+                    .map(|c| check(dev, model, c))
+                    .collect();
+                assert_eq!(first, second, "{dev}/{model}: verdicts drifted");
+            }
+        }
+    }
+
+    #[test]
+    fn memory_and_runtime_salt_streams_diverge() {
+        // The two rules draw from *differently salted* hash streams; if a
+        // salt regression collapsed them onto one stream, the memory
+        // jitter and the runtime-error draw would correlate perfectly.
+        // At least one config must see the streams disagree.
         let dev = DeviceKind::XavierNx;
-        let cfgs = dev.space().enumerate();
-        for cfg in cfgs.iter().step_by(131) {
-            assert_eq!(
-                check(dev, ModelKind::Frcnn, cfg),
-                check(dev, ModelKind::Frcnn, cfg)
-            );
+        let model = ModelKind::Yolo;
+        let diverged = dev.space().enumerate().iter().any(|cfg| {
+            let mut key = cfg.hw_key().to_vec();
+            key.push(model.id());
+            key.push(dev.id());
+            key.push(0xA110C);
+            let mem = hash_unit(&key);
+            *key.last_mut().unwrap() = 0xE4404;
+            let rt = hash_unit(&key);
+            (mem - rt).abs() > 1e-12
+        });
+        assert!(diverged, "memory and runtime-error streams are identical");
+    }
+
+    #[test]
+    fn dropout_never_returned_by_check() {
+        // `Dropout` is a property of the moment (fleet member vanished),
+        // injected by the fleet/chaos layers — the config filter must
+        // never produce it.
+        for dev in DeviceKind::ALL {
+            for model in ModelKind::ALL {
+                for cfg in dev.space().enumerate() {
+                    assert_ne!(check(dev, model, &cfg), Some(FailureKind::Dropout));
+                }
+            }
         }
     }
 

@@ -133,6 +133,20 @@ impl Device {
         self.thermal.is_some()
     }
 
+    /// Enable (or replace) the thermal extension on a live device —
+    /// the in-place counterpart of [`Device::with_thermal`], used by
+    /// fault injection (`control::chaos`) to switch throttling on
+    /// mid-run.
+    pub fn enable_thermal(&mut self, t: ThermalModel) {
+        self.thermal = Some(t);
+    }
+
+    /// Mutable view of the active thermal model, if any (fault
+    /// injection: heat soaks, ambient shifts).
+    pub fn thermal_mut(&mut self) -> Option<&mut ThermalModel> {
+        self.thermal.as_mut()
+    }
+
     /// Simulated seconds spent measuring so far.
     pub fn sim_clock_s(&self) -> f64 {
         self.sim_clock_s

@@ -45,10 +45,24 @@ impl ThermalModel {
     }
 
     /// Advance the model by `dt_s` seconds at `power_mw` draw.
+    ///
+    /// Closed-form exponential relaxation toward the step's equilibrium
+    /// `T_eq = ambient + heating_rate / cool_rate` — exact for constant
+    /// power within the step, for *any* `dt_s`. The explicit-Euler form
+    /// this replaced overshot below ambient (and could oscillate) once
+    /// `cool_rate * dt_s > 1`, which chaos schedules and long idle gaps
+    /// between rounds actually reach; here cooling monotonically
+    /// approaches ambient and never crosses it.
     pub fn step(&mut self, power_mw: f64, dt_s: f64) {
-        let heat = power_mw / 1000.0 * self.heat_per_ws * dt_s;
-        let cool = (self.temp_c - self.ambient_c) * self.cool_rate * dt_s;
-        self.temp_c += heat - cool;
+        let heating_c_per_s = power_mw / 1000.0 * self.heat_per_ws;
+        if self.cool_rate <= 0.0 {
+            // Degenerate (adiabatic) configuration: no equilibrium to
+            // relax toward, heat just integrates.
+            self.temp_c += heating_c_per_s * dt_s;
+            return;
+        }
+        let t_eq = self.ambient_c + heating_c_per_s / self.cool_rate;
+        self.temp_c = t_eq + (self.temp_c - t_eq) * (-self.cool_rate * dt_s).exp();
     }
 
     /// Effective clock multiplier at the current temperature, in
@@ -93,6 +107,30 @@ mod tests {
         let eq = t.temperature_c();
         t.step(9000.0, 1.0);
         assert!((t.temperature_c() - eq).abs() < 0.05, "settled");
+    }
+
+    #[test]
+    fn large_dt_cooling_never_overshoots_ambient() {
+        // Explicit Euler with cool_rate * dt > 1 used to swing below
+        // ambient and oscillate; the closed form relaxes monotonically.
+        let mut t = ThermalModel { temp_c: 90.0, ..ThermalModel::default() };
+        let mut prev = t.temp_c;
+        for _ in 0..5 {
+            t.step(0.0, 60.0); // cool_rate * dt = 4.8 ≫ 1
+            assert!(t.temp_c >= t.ambient_c, "crossed ambient: {}", t.temp_c);
+            assert!(t.temp_c <= prev, "cooling must be monotone");
+            prev = t.temp_c;
+        }
+        assert!((t.temp_c - t.ambient_c).abs() < 1e-6);
+    }
+
+    #[test]
+    fn large_dt_heating_lands_on_the_step_equilibrium() {
+        // T_eq = 35 + (9 W · 0.6 °C/Ws) / 0.08 = 102.5 °C; one giant
+        // step lands on it exactly, never beyond.
+        let mut t = ThermalModel::default();
+        t.step(9000.0, 1e6);
+        assert!((t.temp_c - 102.5).abs() < 1e-9);
     }
 
     #[test]

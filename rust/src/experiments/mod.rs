@@ -15,7 +15,8 @@ pub mod table4;
 
 pub use runner::{run_method, MethodKind, MethodOutcome};
 pub use scenarios::{
-    dual_constraints, DualScenario, HeteroScenario, DUAL_SCENARIOS, HETERO_SCENARIOS,
+    dual_constraints, ChaosFamily, ChaosScenario, DualScenario, HeteroScenario, CHAOS_SCENARIOS,
+    DUAL_SCENARIOS, HETERO_SCENARIOS,
 };
 
 use std::path::Path;

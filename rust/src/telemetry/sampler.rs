@@ -24,6 +24,13 @@ pub struct MetricsWindow {
     pub gpu_util: f64,
     pub cpu_util: f64,
     pub mem_util: f64,
+    /// Post-warm-up samples dropped because a field was non-finite (a
+    /// sensor glitch — NaN tegrastats line, inf from a zero-wall
+    /// report). Glitches are *dropped*, never recorded as zeros: a
+    /// zeroed glitch reads as a throughput collapse and falsely fires
+    /// drift (`control::DriftDetector`), which is exactly the failure
+    /// mode the chaos scenarios exercise.
+    pub glitches: usize,
 }
 
 /// Warm-up-aware sampler over ring buffers.
@@ -31,6 +38,9 @@ pub struct MetricsWindow {
 pub struct Sampler {
     warmup: usize,
     skipped: usize,
+    /// Post-warm-up samples dropped for carrying a non-finite field
+    /// (since the last [`Sampler::reset`]).
+    glitches: usize,
     tput: RingBuffer,
     power: RingBuffer,
     gpu: RingBuffer,
@@ -45,6 +55,7 @@ impl Sampler {
         Sampler {
             warmup,
             skipped: 0,
+            glitches: 0,
             tput: RingBuffer::new(window),
             power: RingBuffer::new(window),
             gpu: RingBuffer::new(window),
@@ -80,22 +91,38 @@ impl Sampler {
     /// Record one periodic sample; warm-up samples are discarded.
     /// Returns true if the sample was retained.
     ///
-    /// Non-finite fields are sanitized to 0.0 before retention: the
-    /// window means and the columnar dCor series downstream assume
-    /// finite inputs, and one degenerate serving window (zero wall,
-    /// dead worker pool) must not poison a whole retained history.
+    /// A sample with any non-finite field is a sensor glitch (NaN
+    /// tegrastats line, inf from a zero-wall report): it is **dropped
+    /// whole** — nothing retained in any series — and counted in
+    /// [`MetricsWindow::glitches`]. The historical sanitize-to-0.0
+    /// behavior made a NaN burst indistinguishable from a real
+    /// throughput collapse, deflating window means and falsely firing
+    /// drift; dropping keeps the retained history finite *and* honest.
     pub fn record(&mut self, s: Sample) -> bool {
         if self.skipped < self.warmup {
             self.skipped += 1;
             return false;
         }
-        let finite = |v: f64| if v.is_finite() { v } else { 0.0 };
-        self.tput.push(finite(s.throughput_fps));
-        self.power.push(finite(s.power_mw));
-        self.gpu.push(finite(s.gpu_util));
-        self.cpu.push(finite(s.cpu_util));
-        self.mem.push(finite(s.mem_util));
+        let finite = s.throughput_fps.is_finite()
+            && s.power_mw.is_finite()
+            && s.gpu_util.is_finite()
+            && s.cpu_util.is_finite()
+            && s.mem_util.is_finite();
+        if !finite {
+            self.glitches += 1;
+            return false;
+        }
+        self.tput.push(s.throughput_fps);
+        self.power.push(s.power_mw);
+        self.gpu.push(s.gpu_util);
+        self.cpu.push(s.cpu_util);
+        self.mem.push(s.mem_util);
         true
+    }
+
+    /// Post-warm-up samples dropped as glitches since the last reset.
+    pub fn glitches(&self) -> usize {
+        self.glitches
     }
 
     /// Retained-sample count.
@@ -130,6 +157,7 @@ impl Sampler {
             gpu_util: self.gpu.mean(),
             cpu_util: self.cpu.mean(),
             mem_util: self.mem.mean(),
+            glitches: self.glitches,
         })
     }
 }
@@ -195,19 +223,30 @@ mod tests {
     }
 
     #[test]
-    fn non_finite_samples_sanitized() {
-        // A degenerate serving window (inf fps from a zero-wall report,
-        // NaN from a failed run) must not poison the retained means or
-        // the dCor series with non-finite values.
+    fn non_finite_samples_dropped_and_counted() {
+        // A glitched sample (inf fps from a zero-wall report, NaN from a
+        // dead sensor) is dropped whole — not sanitized to 0.0, which
+        // read as a throughput collapse — and shows up in the window's
+        // glitch counter instead.
         let mut sm = Sampler::new(0, 4);
-        sm.record(s(f64::INFINITY, f64::NAN));
-        sm.record(s(30.0, 6000.0));
+        assert!(!sm.record(s(f64::INFINITY, f64::NAN)), "glitch not retained");
+        assert!(sm.record(s(30.0, 6000.0)));
+        assert_eq!(sm.glitches(), 1);
         let w = sm.window().unwrap();
-        assert!(w.throughput_fps.is_finite());
-        assert!(w.power_mw.is_finite());
-        assert!((w.throughput_fps - 15.0).abs() < 1e-12, "inf recorded as 0");
+        assert_eq!(w.samples, 1, "only the clean sample retained");
+        assert_eq!(w.glitches, 1);
+        assert!((w.throughput_fps - 30.0).abs() < 1e-12, "mean undeflated by the glitch");
         assert!(sm.throughput_series().iter().all(|v| v.is_finite()));
         assert!(sm.power_series().iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn reset_clears_the_glitch_counter() {
+        let mut sm = Sampler::new(0, 4);
+        sm.record(s(f64::NAN, 1.0));
+        assert_eq!(sm.glitches(), 1);
+        sm.reset();
+        assert_eq!(sm.glitches(), 0, "per-configuration counter");
     }
 
     #[test]

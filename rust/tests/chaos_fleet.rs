@@ -1,0 +1,191 @@
+//! Chaos-fleet acceptance tests: the fault-injecting [`ChaosEnv`]
+//! decorator driven over real simulated fleets and the scripted
+//! fleet-robustness contract it forced (EXPERIMENTS.md §Chaos fleet).
+//!
+//! The simulated legs pin the headline claim — CORAL re-converges
+//! within a bounded number of windows after *every* scheduled fault in
+//! every `CHAOS_SCENARIOS` family, and an arbitrated multi-tenant box
+//! recovers through the same decorator. The scripted legs pin the
+//! structural contract underneath: a down or panicking member is a
+//! per-member failed observation aggregated over survivors, never a
+//! poisoned fleet round, and a fault-free chaos schedule is a
+//! byte-identical passthrough.
+
+mod common;
+
+use common::StepEnv;
+use coral::control::{
+    drive_coral, BudgetPolicy, ChaosEnv, ChaosEvent, ChaosSchedule, Environment, FleetEnv,
+    GlitchKind,
+};
+use coral::device::{ConfigSpace, DeviceKind, HwConfig, Measured};
+use coral::experiments::scenarios::{ChaosScenario, TenantScenario, CHAOS_SCENARIOS};
+use coral::optimizer::Constraints;
+
+const SEED: u64 = 42;
+/// Every scheduled event must see a re-feasible window within this many
+/// windows (dropouts hold their member down for 4–6 of them, and a
+/// search→hold cycle runs ~15, so the bound leaves two full re-search
+/// cycles of slack).
+const RECOVERY_BOUND: u64 = 45;
+
+#[test]
+fn every_chaos_family_reconverges_within_bounded_windows() {
+    for s in &CHAOS_SCENARIOS {
+        let done = drive_coral(s.chaos(SEED), s.constraints(), SEED, s.windows);
+        assert!(
+            !done.recoveries().is_empty(),
+            "{}: the schedule must actually fire events",
+            s.name
+        );
+        for r in done.recoveries() {
+            let w = r.windows().unwrap_or_else(|| {
+                panic!("{}: event {} at window {} never recovered", s.name, r.label, r.at_window)
+            });
+            assert!(
+                w <= RECOVERY_BOUND,
+                "{}: event {} took {w} windows to recover (bound {RECOVERY_BOUND})",
+                s.name,
+                r.label
+            );
+        }
+        assert!(done.mean_recovery_windows().is_finite(), "{}", s.name);
+    }
+}
+
+#[test]
+fn arbitrated_multi_tenant_box_recovers_through_chaos() {
+    // The combined window of an arbitrated box is the tenant mean
+    // (`FleetEnv::combine` over per-tenant held windows), so the
+    // decorator judges recovery against mean targets and the global
+    // envelope split evenly.
+    let ts = TenantScenario::by_name("nx-pair").expect("tenant scenario exists");
+    let n = ts.tenants.len() as f64;
+    let mean_target: f64 = ts.tenants.iter().map(|t| t.target_fps).sum::<f64>() / n;
+    let cons = Constraints::dual(mean_target, ts.global_budget_mw / n);
+    let schedule = ChaosSchedule::new()
+        .at(1, ChaosEvent::ThermalEnable { model: ChaosScenario::thermal_model() })
+        .at(3, ChaosEvent::HeatSoak { power_mw: 30_000.0, soak_s: 60.0 })
+        .at(5, ChaosEvent::GlitchBurst { windows: 1, kind: GlitchKind::NonFinite });
+    let arb = ts.arbiter(BudgetPolicy::DemandWeighted, SEED);
+    let mut env = ChaosEnv::new(arb, schedule, cons);
+    let probe = env.space().midpoint(); // ignored: each window is one round
+    for _ in 0..10 {
+        env.measure(probe);
+    }
+    assert_eq!(env.recoveries().len(), 3, "all three events fired");
+    for r in env.recoveries() {
+        let w = r
+            .windows()
+            .unwrap_or_else(|| panic!("{}: never re-reached the combined targets", r.label));
+        assert!(w <= 5, "{}: {w} rounds to recover", r.label);
+    }
+}
+
+/// A scripted mixed fleet: member 0 serves a constant 30 fps at 5 W,
+/// member 1 a constant 60 fps at 3 W, both on the NX grid.
+fn scripted_fleet(sequential: bool) -> FleetEnv {
+    let a = StepEnv::constant().with_levels(30.0, 30.0).with_power(5_000.0);
+    let b = StepEnv::constant().with_levels(60.0, 60.0).with_power(3_000.0);
+    let members: Vec<Box<dyn Environment + Send>> = vec![Box::new(a), Box::new(b)];
+    let fleet = FleetEnv::new(members);
+    if sequential {
+        fleet.sequential()
+    } else {
+        fleet
+    }
+}
+
+#[test]
+fn a_down_member_is_a_survivor_aggregate_not_a_failed_round() {
+    for sequential in [false, true] {
+        let mut fleet = scripted_fleet(sequential);
+        let cfg = fleet.space().midpoint();
+        let healthy = fleet.measure(cfg);
+        assert_eq!(healthy.throughput_fps, 45.0);
+        assert_eq!(healthy.power_mw, 4_000.0);
+
+        fleet.set_member_down(0, true);
+        assert_eq!(fleet.live_members(), 1);
+        let m = fleet.measure(cfg);
+        assert!(
+            m.failed.is_none(),
+            "sequential={sequential}: one dropped member must not mark the \
+             fleet window failed: {:?}",
+            m.failed
+        );
+        assert_eq!(m.throughput_fps, 60.0, "mean over the one survivor");
+        assert_eq!(m.power_mw, 3_000.0, "mean over the one survivor");
+
+        fleet.set_member_down(0, false);
+        let back = fleet.measure(cfg);
+        assert_eq!(back.throughput_fps, 45.0, "rejoin restores the full mean");
+        assert_eq!(back.power_mw, 4_000.0);
+    }
+}
+
+/// A member whose board has died hard: every measurement panics.
+struct PanickingEnv {
+    space: ConfigSpace,
+}
+
+impl Environment for PanickingEnv {
+    fn measure(&mut self, _cfg: HwConfig) -> Measured {
+        panic!("injected member panic");
+    }
+
+    fn space(&self) -> &ConfigSpace {
+        &self.space
+    }
+
+    fn cost_s(&self) -> f64 {
+        0.0
+    }
+}
+
+#[test]
+fn a_panicking_member_never_poisons_the_fleet_round() {
+    for sequential in [false, true] {
+        let healthy = StepEnv::constant().with_levels(60.0, 60.0).with_power(3_000.0);
+        let dead = PanickingEnv { space: DeviceKind::XavierNx.space() };
+        let members: Vec<Box<dyn Environment + Send>> =
+            vec![Box::new(healthy), Box::new(dead)];
+        let mut fleet = FleetEnv::new(members);
+        if sequential {
+            fleet = fleet.sequential();
+        }
+        let cfg = fleet.space().midpoint();
+        for round in 0..3 {
+            let m = fleet.measure(cfg);
+            assert!(
+                m.failed.is_none(),
+                "sequential={sequential} round {round}: a panicked member job must \
+                 become a dropped observation, not poison the round: {:?}",
+                m.failed
+            );
+            assert_eq!(m.throughput_fps, 60.0, "aggregate over the survivor");
+            assert_eq!(m.power_mw, 3_000.0);
+        }
+    }
+}
+
+#[test]
+fn fault_free_chaos_schedule_is_byte_identical_to_the_undecorated_fleet() {
+    let s = &CHAOS_SCENARIOS[0];
+    let mut plain = s.fleet(7);
+    let mut chaos = ChaosEnv::new(s.fleet(7), ChaosSchedule::new(), s.constraints());
+    let space = plain.space().clone();
+    let mut rng = coral::util::Rng::new(13);
+    for i in 0..15 {
+        let cfg = space.random(&mut rng);
+        let a = plain.measure(cfg);
+        let b = chaos.measure(cfg);
+        assert_eq!(
+            format!("{a:?}"),
+            format!("{b:?}"),
+            "window {i}: fault-free chaos diverged from the undecorated fleet"
+        );
+    }
+    assert_eq!(plain.cost_s(), chaos.cost_s());
+    assert!(chaos.recoveries().is_empty());
+}
