@@ -104,7 +104,7 @@ fn measured_feasible_at(s: &LoadScenario, cfg: &HwConfig, rate: f64) -> bool {
     let mut env = SimEnv::new(dev).under_load(ArrivalProfile::steady(rate, SEED));
     let m = env.measure(*cfg);
     s.constraints_at(rate)
-        .satisfied(m.throughput_fps, m.power_mw, m.p99_latency_ms)
+        .satisfied(m.throughput_fps, m.power_mw, m.p99_latency_ms, m.accuracy)
 }
 
 /// Shed point of a candidate set under the measured (lottery-aware)

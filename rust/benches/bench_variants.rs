@@ -1,0 +1,395 @@
+//! Variant-axis bench: the accuracy trade-off across `ACCURACY_SCENARIOS`
+//! and the case for the model variant as a seventh search dimension
+//! (EXPERIMENTS.md §Accuracy trade-off).
+//!
+//! Self-asserting, like every bench here:
+//!
+//! * **Degradation is load-bearing** — on every accuracy scenario's
+//!   noise-free surface *no* full-model (variant 0) configuration
+//!   satisfies the throughput+power pair, so both manufacturer presets
+//!   and the best fixed-full-accuracy sweep fail, and a CORAL search
+//!   over the legacy 6-dim space never reports a feasible best; yet the
+//!   joint 7-dim search (variant axis open to the standard manifest)
+//!   finds a measured-feasible configuration, and its pick serves a
+//!   degraded rung that still clears the scenario's mAP floor.
+//! * **Arbitrated degradation** — on `nx-pair-accuracy` the fixed-model
+//!   arbiter starves its YOLO tenant every round (sub-budget below the
+//!   full model's need → floor fallback), while the variant-equipped
+//!   arbiter reaches a round where *both* tenants are feasible, the
+//!   YOLO tenant serving `variant > 0` inside its 24.0-mAP floor — the
+//!   accuracy axis absorbs the contention instead of a tenant's
+//!   throughput.
+//! * **Singleton-variant byte-identity** — pinning the variant axis to
+//!   the explicit identity manifest (`VariantManifest::full`) leaves
+//!   same-seed trajectories on the existing dual scenarios
+//!   byte-identical to the default space: identical proposal sequence,
+//!   identical measurements, every proposal carrying `variant = 0`.
+//!
+//! Reduced mode for CI: `CORAL_BENCH_VARIANT_ROUNDS` caps the
+//! arbitration rounds, `CORAL_BENCH_VARIANT_ITERS` the per-search
+//! window budget and `CORAL_BENCH_VARIANT_SEEDS` the restart seeds.
+//! Results are also written machine-readable to `BENCH_variants.json`
+//! (override the path with `CORAL_BENCH_JSON`).
+
+use coral::control::{BudgetPolicy, ControlLoop, SimEnv, TenantArbiter};
+use coral::device::Device;
+use coral::experiments::scenarios::{
+    AccuracyScenario, ACCURACY_SCENARIOS, ACCURACY_TENANT_SCENARIO, DUAL_SCENARIOS,
+};
+use coral::models::VariantManifest;
+use coral::optimizer::{BestConfig, Constraints, CoralOptimizer};
+use coral::util::json::{self, Json};
+use coral::util::table;
+
+const SEED: u64 = 0xACC;
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key)
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .filter(|&n| n >= 1)
+        .unwrap_or(default)
+}
+
+/// Arbitration rounds in the tenant leg. Each round is an independent
+/// deterministically re-seeded search, so more rounds widen the
+/// variant-equipped arbiter's chance to settle — the assertions below
+/// quantify over "some round", never a specific one.
+fn rounds() -> usize {
+    env_usize("CORAL_BENCH_VARIANT_ROUNDS", 3)
+}
+
+/// Measurement windows per CORAL search in the single-board leg. The
+/// accuracy scenarios bind the mAP floor at a *middle* rung, so the
+/// search must escape the highest-throughput rung its reward anchor
+/// favours — that takes coordinated (variant + DVFS) moves the
+/// collision nudges only reach after the anchor's neighbourhood is
+/// exhausted. 50 windows covers every scenario.
+fn iters() -> usize {
+    env_usize("CORAL_BENCH_VARIANT_ITERS", 50)
+}
+
+/// Restart seeds per scenario before declaring a search outcome.
+fn seeds() -> usize {
+    env_usize("CORAL_BENCH_VARIANT_SEEDS", 3)
+}
+
+/// One CORAL search over the scenario's 7-dim variant-equipped board.
+/// Noise-free like every searched bench leg (the ±3 % silicon lottery
+/// still applies — feasibility is certified through the same measured
+/// view the search observes).
+fn coral_best_7d(s: &AccuracyScenario, seed: u64) -> Option<BestConfig> {
+    let cons = s.constraints();
+    let dev = Device::new(s.device, s.model, seed)
+        .with_variants(s.manifest())
+        .with_noise_scale(0.0);
+    let opt = CoralOptimizer::new(dev.space().clone(), cons, seed);
+    let mut cl = ControlLoop::with_budget(SimEnv::new(dev), opt, cons, iters());
+    cl.run().best
+}
+
+/// The same search on the legacy fixed-full-accuracy board (singleton
+/// variant axis, same constraints — the mAP floor is trivially met, the
+/// throughput+power pair is what full accuracy cannot satisfy).
+fn coral_best_fixed(s: &AccuracyScenario, seed: u64) -> Option<BestConfig> {
+    let cons = s.constraints();
+    let dev = Device::new(s.device, s.model, seed).with_noise_scale(0.0);
+    let opt = CoralOptimizer::new(dev.space().clone(), cons, seed);
+    let mut cl = ControlLoop::with_budget(SimEnv::new(dev), opt, cons, iters());
+    cl.run().best
+}
+
+/// The contended pair on noise-free boards (deterministically
+/// verifiable; the scenario's own `arbiter_variants` builder — noisy
+/// boards, same seeds — is exercised by the scenario tests and the
+/// CLI). `variants` opens each tenant's standard ladder.
+fn accuracy_arbiter(variants: bool) -> TenantArbiter {
+    let s = &ACCURACY_TENANT_SCENARIO;
+    // 60 windows per round: the YOLO tenant's degraded region sits at
+    // low GPU frequencies on rungs 1–2, far from the high-throughput
+    // rung-3 anchor the reward favours, so the default 10-window round
+    // never reaches it (the fixed run parks either way).
+    let mut arb =
+        TenantArbiter::new(s.global_budget_mw, BudgetPolicy::DemandWeighted).budget_iters(60);
+    for (i, t) in s.tenants.iter().enumerate() {
+        let mut dev =
+            Device::new(s.device, t.model, SEED + i as u64).with_noise_scale(0.0);
+        if variants {
+            dev = dev.with_variants(t.model.standard_variants());
+        }
+        arb.add_tenant(*t, Box::new(SimEnv::new(dev)), SEED + 100 + i as u64);
+    }
+    arb
+}
+
+/// Same-seed trajectory digest on the first dual scenario;
+/// `explicit_manifest` builds the board through an explicit
+/// `VariantManifest::full` instead of the default singleton axis.
+fn dual_trajectory_digest(explicit_manifest: bool) -> String {
+    let s = DUAL_SCENARIOS[0];
+    let cons = Constraints::dual(s.target_fps, s.budget_mw);
+    let mut dev = Device::new(s.device, s.model, SEED);
+    if explicit_manifest {
+        dev = dev.with_variants(VariantManifest::full(s.model));
+    }
+    let opt = CoralOptimizer::new(dev.space().clone(), cons, SEED);
+    let mut cl = ControlLoop::with_budget(SimEnv::new(dev), opt, cons, 10);
+    let out = cl.run();
+    for st in &out.trace.steps {
+        assert_eq!(st.config.variant, 0, "singleton axis proposes only variant 0");
+    }
+    format!(
+        "{:?}",
+        out.trace
+            .steps
+            .iter()
+            .map(|st| (st.config, st.throughput_fps, st.power_mw))
+            .collect::<Vec<_>>()
+    )
+}
+
+fn main() {
+    println!(
+        "bench_variants — {} window budget, {} restart seeds, {} arbitration round(s)\n",
+        iters(),
+        seeds(),
+        rounds()
+    );
+
+    // ---- (c) Singleton-variant byte-identity on the existing scenarios.
+    let legacy = dual_trajectory_digest(false);
+    assert_eq!(
+        legacy,
+        dual_trajectory_digest(false),
+        "same-seed trajectories must be deterministic"
+    );
+    assert_eq!(
+        legacy,
+        dual_trajectory_digest(true),
+        "an explicit identity manifest must leave same-seed 6-dim trajectories \
+         byte-identical"
+    );
+    println!("singleton-variant byte-identity: OK (same-seed dual trajectory unchanged)\n");
+
+    // ---- (a) The accuracy trade-off on every single-board scenario.
+    let mut rows = Vec::new();
+    let mut records = Vec::new();
+    for s in &ACCURACY_SCENARIOS {
+        let manifest = s.manifest();
+        let grid = s.device.space().with_variant_axis(manifest.len()).enumerate();
+        let full_feasible = grid
+            .iter()
+            .filter(|c| c.variant == 0 && s.config_feasible(c))
+            .count();
+        let degraded_feasible = grid
+            .iter()
+            .filter(|c| c.variant > 0 && s.config_feasible(c))
+            .count();
+        assert_eq!(
+            full_feasible, 0,
+            "{}: the full model must be infeasible at {} fps inside {} mW",
+            s.name, s.target_fps, s.budget_mw
+        );
+        assert!(
+            degraded_feasible > 0,
+            "{}: some degraded rung must open a feasible region",
+            s.name
+        );
+        for (label, preset) in [
+            ("max-power", s.device.preset_max_power()),
+            ("default", s.device.preset_default()),
+        ] {
+            assert!(
+                !s.config_feasible(&preset),
+                "{}: the {label} preset serves the full model and must fail",
+                s.name
+            );
+        }
+        // The fixed-full-accuracy search has an empty region to satisfy.
+        for k in 0..seeds() as u64 {
+            let fixed = coral_best_fixed(s, SEED + k);
+            assert!(
+                fixed.map_or(true, |b| !b.feasible),
+                "{}: a fixed-full-accuracy search cannot satisfy an empty region (seed {k})",
+                s.name
+            );
+        }
+        // The joint 7-dim search finds the region the manifest opened.
+        let best = (0..seeds() as u64)
+            .filter_map(|k| coral_best_7d(s, SEED + k))
+            .find(|b| b.feasible)
+            .unwrap_or_else(|| {
+                panic!("{}: joint 7-dim CORAL found nothing feasible", s.name)
+            });
+        let v = manifest.get(best.config.variant);
+        assert!(
+            best.config.variant > 0,
+            "{}: only degraded rungs are feasible, yet CORAL picked variant 0",
+            s.name
+        );
+        assert!(
+            v.accuracy >= s.min_accuracy,
+            "{}: CORAL's rung ({}) must clear the {:.1}-mAP floor",
+            s.name,
+            v.label(),
+            s.min_accuracy
+        );
+        rows.push(vec![
+            s.name.to_string(),
+            format!("{:.0}fps/{:.0}mW/{:.1}mAP", s.target_fps, s.budget_mw, s.min_accuracy),
+            full_feasible.to_string(),
+            degraded_feasible.to_string(),
+            v.label(),
+            format!("{:.1}", best.throughput_fps),
+            format!("{:.0}", best.power_mw),
+            format!("{:.1}", best.accuracy),
+        ]);
+        records.push(json::obj(vec![
+            ("scenario", Json::Str(s.name.to_string())),
+            ("target_fps", Json::Num(s.target_fps)),
+            ("budget_mw", Json::Num(s.budget_mw)),
+            ("min_accuracy_map", Json::Num(s.min_accuracy)),
+            ("full_feasible_cfgs", Json::Num(full_feasible as f64)),
+            ("degraded_feasible_cfgs", Json::Num(degraded_feasible as f64)),
+            ("coral_variant", Json::Str(v.label())),
+            ("coral_fps", Json::Num(best.throughput_fps)),
+            ("coral_power_mw", Json::Num(best.power_mw)),
+            ("coral_accuracy_map", Json::Num(best.accuracy)),
+            ("iters", Json::Num(iters() as f64)),
+            ("seeds", Json::Num(seeds() as f64)),
+        ]));
+    }
+    print!(
+        "{}",
+        table::render(
+            &[
+                "scenario", "constraints", "full cfgs", "degraded cfgs", "coral rung",
+                "fps", "mW", "mAP",
+            ],
+            &rows
+        )
+    );
+
+    // ---- (b) Arbitrated degradation on the contended pair.
+    let s = &ACCURACY_TENANT_SCENARIO;
+    println!(
+        "\n{}: {:.1} W envelope, fixed vs variants, {} round(s)",
+        s.name,
+        s.global_budget_mw / 1000.0,
+        rounds()
+    );
+    let mut fixed = accuracy_arbiter(false);
+    let mut variants = accuracy_arbiter(true);
+    fixed.run(rounds());
+    variants.run(rounds());
+    let yolo = s.tenants[0].name;
+    let floor = s.tenants[0].min_accuracy.expect("the YOLO tenant carries a floor");
+    // Fixed arbiter: the YOLO tenant's sub-budget cannot carry the full
+    // model, so it parks at the floor (starves) every single round.
+    for r in fixed.history() {
+        let t = r.tenants.iter().find(|t| t.name == yolo).expect("tenant present");
+        assert!(
+            t.fell_back || !t.feasible,
+            "{}: round {} — the fixed arbiter cannot make the YOLO tenant feasible",
+            s.name,
+            r.round
+        );
+        assert!(
+            r.overshoot_mw == 0.0,
+            "{}: round {} — parking must not blow the envelope",
+            s.name,
+            r.round
+        );
+    }
+    // Variant arbiter: some round settles with every tenant feasible and
+    // the YOLO tenant serving a degraded rung inside its floor.
+    let manifest = s.tenants[0].model.standard_variants();
+    let settled = variants
+        .history()
+        .iter()
+        .find(|r| {
+            let y = r.tenants.iter().find(|t| t.name == yolo).expect("tenant present");
+            r.tenants.iter().all(|t| t.feasible)
+                && y.chosen.config.variant > 0
+                && r.overshoot_mw == 0.0
+        })
+        .unwrap_or_else(|| {
+            panic!(
+                "{}: no round settled with both tenants feasible and the YOLO \
+                 tenant degraded",
+                s.name
+            )
+        });
+    let y = settled.tenants.iter().find(|t| t.name == yolo).expect("tenant present");
+    let rung = manifest.get(y.chosen.config.variant);
+    assert!(
+        rung.accuracy >= floor,
+        "{}: the degraded rung ({}) must clear the tenant's {:.1}-mAP floor",
+        s.name,
+        rung.label(),
+        floor
+    );
+    let mut trows = Vec::new();
+    for (run, arb) in [("fixed", &fixed), ("variants", &variants)] {
+        for r in arb.history() {
+            for t in &r.tenants {
+                trows.push(vec![
+                    r.round.to_string(),
+                    run.to_string(),
+                    t.name.to_string(),
+                    if run == "variants" {
+                        t.model.standard_variants().get(t.chosen.config.variant).label()
+                    } else {
+                        "fixed".to_string()
+                    },
+                    format!("{:.1}", t.chosen.throughput_fps),
+                    format!("{:.0}", t.chosen.power_mw),
+                    format!("{:.1}", t.chosen.accuracy),
+                    if t.fell_back {
+                        "floor".into()
+                    } else if t.feasible {
+                        "ok".into()
+                    } else {
+                        "infeas".into()
+                    },
+                ]);
+            }
+        }
+    }
+    print!(
+        "{}",
+        table::render(
+            &["round", "run", "tenant", "variant", "fps", "mW", "mAP", "state"],
+            &trows
+        )
+    );
+    println!(
+        "round {}: both tenants feasible, {} serving {} ({:.1} mAP ≥ {:.1} floor)",
+        settled.round,
+        yolo,
+        rung.label(),
+        rung.accuracy,
+        floor
+    );
+    records.push(json::obj(vec![
+        ("scenario", Json::Str(s.name.to_string())),
+        ("global_budget_mw", Json::Num(s.global_budget_mw)),
+        ("rounds", Json::Num(rounds() as f64)),
+        ("settled_round", Json::Num(settled.round as f64)),
+        ("yolo_variant", Json::Str(rung.label())),
+        ("yolo_accuracy_map", Json::Num(rung.accuracy)),
+        ("yolo_accuracy_floor_map", Json::Num(floor)),
+        ("singleton_byte_identity", Json::Bool(true)),
+    ]));
+
+    let path =
+        std::env::var("CORAL_BENCH_JSON").unwrap_or_else(|_| "BENCH_variants.json".to_string());
+    std::fs::write(&path, Json::Arr(records).to_string_pretty() + "\n")
+        .expect("write bench json");
+    println!("\nmachine-readable results written to {path}");
+    println!(
+        "accuracy is a spendable resource: every scenario's full model is provably \
+         infeasible, every preset and fixed-accuracy search fails with it, and only \
+         the opened variant axis — bounded by the mAP floor — carries the target."
+    );
+}

@@ -34,6 +34,7 @@ USAGE:
   coral chaos     [--scenario chaos-<dropout|thermal|glitch|combined>-pair] [--windows N] [--seed N]
   coral fleetscale [--scenario fleet-<10|100|1k|10k>] [--rounds N] [--seed N] [--workers N]
   coral load      [--scenario load-<name>] [--iters N] [--seed N]
+  coral variants  [--scenario acc-<dev>-<model>|nx-pair-accuracy] [--iters N] [--rounds N] [--seed N]
   coral report    <specs|models|scenarios>
   coral artifacts-check [--dir DIR]
 
@@ -52,6 +53,7 @@ pub fn dispatch(args: &Args) -> Result<()> {
         Some("chaos") => cmd_chaos(args),
         Some("fleetscale") => cmd_fleetscale(args),
         Some("load") => cmd_load(args),
+        Some("variants") => cmd_variants(args),
         Some("report") => cmd_report(args),
         Some("artifacts-check") => cmd_artifacts_check(args),
         Some("help") | None => {
@@ -677,6 +679,143 @@ fn cmd_load(args: &Args) -> Result<()> {
     Ok(())
 }
 
+fn cmd_variants(args: &Args) -> Result<()> {
+    let name = args.opt_or("scenario", "acc-nx-yolo");
+    if name == scenarios::ACCURACY_TENANT_SCENARIO.name {
+        return cmd_variants_tenants(args);
+    }
+    let s = scenarios::AccuracyScenario::by_name(&name).with_context(|| {
+        let mut names: Vec<&str> =
+            scenarios::ACCURACY_SCENARIOS.iter().map(|s| s.name).collect();
+        names.push(scenarios::ACCURACY_TENANT_SCENARIO.name);
+        format!("unknown variant scenario '{name}' (one of: {})", names.join(", "))
+    })?;
+    let iters = args.opt_u64_or("iters", 40).map_err(anyhow::Error::msg)? as usize;
+    let seed = args.opt_u64_or("seed", 42).map_err(anyhow::Error::msg)?;
+    let cons = s.constraints();
+    println!("{}: {}/{} — {}", s.name, s.device, s.model, cons.describe());
+
+    // The degradation ladder, with the noise-free feasible-region size
+    // each rung opens under all three clauses. Rung 0 is the full model:
+    // a zero there is the whole point of the scenario.
+    let manifest = s.manifest();
+    let space = s.device.space().with_variant_axis(manifest.len());
+    let grid = space.enumerate();
+    let mut rows = Vec::new();
+    for (i, v) in manifest.variants().iter().enumerate() {
+        let feasible = grid
+            .iter()
+            .filter(|c| c.variant == i as u32 && s.config_feasible(c))
+            .count();
+        rows.push(vec![
+            i.to_string(),
+            v.label(),
+            format!("{:.1}", v.accuracy),
+            format!("x{:.2}", v.perf_mult),
+            format!("x{:.2}", v.power_mult),
+            format!("x{:.2}", v.mem_mult),
+            feasible.to_string(),
+        ]);
+    }
+    print!(
+        "{}",
+        table::render(
+            &["idx", "variant", "mAP", "perf", "power", "mem", "feasible cfgs"],
+            &rows
+        )
+    );
+
+    // CORAL over the 7-dim space (variant axis open).
+    let opt = CoralOptimizer::new(s.env(seed).space().clone(), cons, seed);
+    let mut cl = ControlLoop::with_budget(s.env(seed), opt, cons, iters);
+    let out = cl.run();
+    let best = out.best.context("no observations")?;
+    let v = manifest.get(best.config.variant);
+    println!(
+        "best after {} windows: {} ({}) -> {:.1} fps @ {:.0} mW, mAP {:.1}  feasible={}",
+        out.iters,
+        best.config,
+        v.label(),
+        best.throughput_fps,
+        best.power_mw,
+        best.accuracy,
+        best.feasible
+    );
+    Ok(())
+}
+
+/// The `nx-pair-accuracy` leg of `coral variants`: the same contended
+/// box arbitrated twice — variant axis closed (a tenant must starve or
+/// overdraw) and open (the floored tenant degrades itself instead).
+fn cmd_variants_tenants(args: &Args) -> Result<()> {
+    let s = &scenarios::ACCURACY_TENANT_SCENARIO;
+    let rounds = args.opt_u64_or("rounds", 3).map_err(anyhow::Error::msg)? as usize;
+    let seed = args.opt_u64_or("seed", 42).map_err(anyhow::Error::msg)?;
+    println!(
+        "{} — {} tenants on one {} box, {:.1} W global envelope, demand-weighted, \
+         {rounds} round(s), fixed vs variants",
+        s.name,
+        s.tenants.len(),
+        s.device,
+        s.global_budget_mw / 1000.0
+    );
+    let mut rows = Vec::new();
+    for (run, mut arb) in [
+        ("fixed", s.arbiter(BudgetPolicy::DemandWeighted, seed)),
+        ("variants", s.arbiter_variants(BudgetPolicy::DemandWeighted, seed)),
+    ] {
+        for _ in 0..rounds {
+            let report = arb.run_round();
+            for t in &report.tenants {
+                let manifest = t.model.standard_variants();
+                let v = if run == "variants" {
+                    manifest.get(t.chosen.config.variant).label()
+                } else {
+                    "fixed".to_string()
+                };
+                rows.push(vec![
+                    report.round.to_string(),
+                    run.to_string(),
+                    t.name.to_string(),
+                    v,
+                    format!("{:.1}/{:.0}", t.chosen.throughput_fps, tenant_target(s, t.name)),
+                    format!("{:.2}", t.chosen.power_mw / 1000.0),
+                    format!("{:.1}", t.chosen.accuracy),
+                    if t.fell_back {
+                        "floor".into()
+                    } else if t.feasible {
+                        "ok".into()
+                    } else {
+                        "infeas".into()
+                    },
+                ]);
+            }
+            rows.push(vec![
+                report.round.to_string(),
+                run.to_string(),
+                "= box".to_string(),
+                String::new(),
+                String::new(),
+                format!("{:.2}", report.aggregate_power_mw / 1000.0),
+                String::new(),
+                if report.overshoot_mw > 0.0 {
+                    format!("OVER +{:.2} W", report.overshoot_mw / 1000.0)
+                } else {
+                    "within".into()
+                },
+            ]);
+        }
+    }
+    print!(
+        "{}",
+        table::render(
+            &["round", "run", "tenant", "variant", "fps/target", "power W", "mAP", "state"],
+            &rows
+        )
+    );
+    Ok(())
+}
+
 fn cmd_report(args: &Args) -> Result<()> {
     match args.sub() {
         Some("specs") => {
@@ -968,5 +1107,22 @@ mod tests {
     #[test]
     fn load_validates_scenario() {
         assert!(dispatch(&args("load --scenario load-shedding-grid")).is_err());
+    }
+
+    #[test]
+    fn variants_smoke() {
+        let a = args("variants --scenario acc-nx-yolo --iters 3 --seed 7");
+        assert!(dispatch(&a).is_ok());
+    }
+
+    #[test]
+    fn variants_tenants_smoke() {
+        let a = args("variants --scenario nx-pair-accuracy --rounds 1 --seed 7");
+        assert!(dispatch(&a).is_ok());
+    }
+
+    #[test]
+    fn variants_validates_scenario() {
+        assert!(dispatch(&args("variants --scenario acc-toaster-alexnet")).is_err());
     }
 }

@@ -458,6 +458,52 @@ mod tests {
     }
 
     #[test]
+    fn variant_manifests_split_fingerprints_and_never_cross_hit() {
+        use crate::models::VariantManifest;
+        // The manifest is part of the measurement surface: a degraded
+        // variant's window depends on its multipliers and mAP, so two
+        // devices with different manifests must never answer each
+        // other's windows — even when their spaces fingerprint alike.
+        let plain = SimEnv::new(Device::new(DeviceKind::XavierNx, ModelKind::Yolo, 7));
+        let std_manifest = ModelKind::Yolo.standard_variants();
+        let varied = SimEnv::new(
+            Device::new(DeviceKind::XavierNx, ModelKind::Yolo, 7)
+                .with_variants(std_manifest.clone()),
+        );
+        assert_ne!(plain.fingerprint(), varied.fingerprint(), "singleton vs 4-variant axis");
+        // Same axis length, different content: the spaces are
+        // indistinguishable, so only the manifest words can split them.
+        let mut variants = std_manifest.variants().to_vec();
+        variants[3].accuracy -= 0.5;
+        let tweaked = VariantManifest::new(
+            ModelKind::Yolo,
+            variants,
+            std_manifest.min_runnable_depth(),
+        )
+        .expect("lowering the last variant's mAP keeps the manifest monotone");
+        let varied2 = SimEnv::new(
+            Device::new(DeviceKind::XavierNx, ModelKind::Yolo, 7).with_variants(tweaked),
+        );
+        assert_eq!(
+            space_fingerprint(varied.space()),
+            space_fingerprint(varied2.space()),
+            "premise: the spaces alone cannot tell these surfaces apart",
+        );
+        assert_ne!(varied.fingerprint(), varied2.fingerprint(), "manifest content keys the surface");
+        // And through a shared store: the same config measured under
+        // each manifest is a miss both times — no cross-replay.
+        let store = CacheStore::new();
+        let mut c1 = CachedEnv::with_store(varied, store.clone());
+        let mut c2 = CachedEnv::with_store(varied2, store.clone());
+        let cfg = c1.space().midpoint();
+        c1.measure(cfg);
+        c2.measure(cfg);
+        let stats = store.stats();
+        assert_eq!((stats.hits, stats.misses), (0, 2), "no hits across manifests");
+        assert_eq!(store.len(), 2, "one entry per manifest fingerprint");
+    }
+
+    #[test]
     fn hit_returns_byte_identical_window_at_zero_cost() {
         let mut cached = CachedEnv::new(nx_env());
         let cfg = cached.space().midpoint();

@@ -412,7 +412,7 @@ impl<E: Environment> ChaosEnv<E> {
         if m.failed.is_none()
             && self
                 .cons
-                .satisfied(m.throughput_fps, m.power_mw, m.p99_latency_ms)
+                .satisfied(m.throughput_fps, m.power_mw, m.p99_latency_ms, m.accuracy)
         {
             for r in self.recoveries.iter_mut() {
                 if r.recovered_at.is_none() {

@@ -297,14 +297,16 @@ impl<E: Environment, O: Optimizer> ControlLoop<E, O> {
         let cost_before = self.env.cost_s();
         let m = self.env.measure(config);
         self.search_cost_s += self.env.cost_s() - cost_before;
-        self.opt.observe(config, m.throughput_fps, m.power_mw, m.p99_latency_ms);
+        self.opt.observe(config, m.throughput_fps, m.power_mw, m.p99_latency_ms, m.accuracy);
         self.trace.record(config, m.throughput_fps, m.power_mw);
         self.window += 1;
         self.iter += 1;
         let this_iter = self.iter - 1;
-        // `satisfied` adds the p99 SLO clause; without an SLO it is
-        // exactly the historical Eq. 6 check.
-        let feasible = self.cons.satisfied(m.throughput_fps, m.power_mw, m.p99_latency_ms);
+        // `satisfied` adds the p99 SLO and accuracy-floor clauses;
+        // without an SLO or floor it is exactly the historical Eq. 6
+        // check.
+        let feasible =
+            self.cons.satisfied(m.throughput_fps, m.power_mw, m.p99_latency_ms, m.accuracy);
         if feasible && self.first_feasible.is_none() {
             self.first_feasible = Some(self.iter);
             self.events

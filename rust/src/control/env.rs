@@ -241,9 +241,12 @@ fn apply_device_fault(dev: &mut Device, fault: &super::chaos::ChaosFault) {
 }
 
 /// Cache identity of one simulated device (shared by [`SimEnv`] and
-/// [`LiveEnv`], whose power/DVFS side is this device).
+/// [`LiveEnv`], whose power/DVFS side is this device). The variant
+/// manifest's full content is folded in: two devices whose spaces look
+/// identical but whose manifests model different accuracy/cost surfaces
+/// must never answer each other's windows from a shared store.
 fn device_fingerprint(dev: &Device) -> u64 {
-    super::cache::stable_hash(&[
+    let mut words = vec![
         super::cache::space_fingerprint(dev.space()),
         dev.kind().id(),
         dev.model().id(),
@@ -252,7 +255,9 @@ fn device_fingerprint(dev: &Device) -> u64 {
         dev.has_thermal() as u64,
         crate::device::sim::WARMUP_S.to_bits(),
         SAMPLES_PER_WINDOW as u64,
-    ])
+    ];
+    words.extend(dev.manifest().content_words());
+    super::cache::stable_hash(&words)
 }
 
 /// Boxed environments measure through the same trait like any concrete
@@ -569,6 +574,7 @@ impl Environment for LiveEnv {
             gpu_util: sim_m.gpu_util,
             cpu_util: sim_m.cpu_util,
             mem_util: sim_m.mem_util,
+            accuracy: sim_m.accuracy,
             failed: None,
         };
         self.finish_window(m)
@@ -890,6 +896,11 @@ struct Partial {
     gpu_util: f64,
     cpu_util: f64,
     mem_util: f64,
+    /// Modeled accuracy sum over live members (mean in `finish`): the
+    /// fleet serves at the accuracy of its *average* member — for the
+    /// common one-manifest fleet every member serves the same variant,
+    /// so the mean is exactly that variant's mAP.
+    accuracy: f64,
     /// First *config* failure in fleet order (left-priority merge),
     /// regardless of which thread measured it. Dropout never lands
     /// here — a vanished member is a missing observation, not a verdict
@@ -915,6 +926,7 @@ impl Partial {
                 gpu_util: 0.0,
                 cpu_util: 0.0,
                 mem_util: 0.0,
+                accuracy: 0.0,
                 failed: None,
             };
         }
@@ -929,6 +941,7 @@ impl Partial {
             gpu_util: m.gpu_util,
             cpu_util: m.cpu_util,
             mem_util: m.mem_util,
+            accuracy: m.accuracy,
             failed: m.failed,
         }
     }
@@ -950,6 +963,7 @@ impl Partial {
             gpu_util: left.gpu_util + right.gpu_util,
             cpu_util: left.cpu_util + right.cpu_util,
             mem_util: left.mem_util + right.mem_util,
+            accuracy: left.accuracy + right.accuracy,
             failed: left.failed.or(right.failed),
         }
     }
@@ -1022,6 +1036,7 @@ fn finish(p: Partial) -> Measured {
             gpu_util: 0.0,
             cpu_util: 0.0,
             mem_util: 0.0,
+            accuracy: 0.0,
             failed: Some(failed),
         };
     }
@@ -1041,6 +1056,7 @@ fn finish(p: Partial) -> Measured {
         gpu_util: p.gpu_util / n,
         cpu_util: p.cpu_util / n,
         mem_util: p.mem_util / n,
+        accuracy: p.accuracy / n,
         failed: None,
     }
 }
@@ -1061,6 +1077,7 @@ fn dropped_window(native: HwConfig) -> Measured {
         gpu_util: 0.0,
         cpu_util: 0.0,
         mem_util: 0.0,
+        accuracy: 0.0,
         failed: Some(FailureKind::Dropout),
     }
 }
@@ -1490,6 +1507,7 @@ mod tests {
                     gpu_util: g.rng.f64(),
                     cpu_util: g.rng.f64(),
                     mem_util: g.rng.f64(),
+                    accuracy: g.rng.range_f64(20.0, 45.0),
                     failed: if g.rng.chance(0.1) {
                         Some(FailureKind::OutOfMemory)
                     } else {

@@ -78,6 +78,13 @@ pub struct Tenant {
     /// Relative demand weight (demand-weighted and water-filling base
     /// shares are proportional to it).
     pub weight: f64,
+    /// Optional accuracy floor (mAP). A tenant whose environment carries
+    /// a variant axis may degrade its served variant down to this floor
+    /// when its sub-budget tightens — trading accuracy instead of
+    /// starving a neighbour — but never below it. `None` pins nothing:
+    /// on a singleton-manifest box the search can only ever serve the
+    /// baseline variant anyway.
+    pub min_accuracy: Option<f64>,
 }
 
 /// How the global power budget is split into per-tenant sub-budgets.
@@ -280,7 +287,7 @@ impl TenantArbiter {
         } else {
             env
         };
-        let cons = Constraints::dual(spec.target_fps, self.global_budget_mw);
+        let cons = tenant_cons(&spec, self.global_budget_mw);
         let opt = CoralOptimizer::new(env.space().clone(), cons, seed);
         let cl = ControlLoop::new(env, opt, cons, ControlLoopConfig {
             budget: self.budget_iters,
@@ -420,7 +427,7 @@ impl TenantArbiter {
         // exactly what a water-filled bigger one should pick — so each
         // round searches with a clean, deterministically seeded PS.
         for (t, &sub) in self.tenants.iter_mut().zip(&subs) {
-            let cons = Constraints::dual(t.spec.target_fps, sub);
+            let cons = tenant_cons(&t.spec, sub);
             t.cl.set_cons(cons);
             let opt = CoralOptimizer::new(
                 t.cl.env().space().clone(),
@@ -548,6 +555,17 @@ impl Environment for TenantArbiter {
     }
 }
 
+/// A tenant's constraints against a given power sub-budget: the
+/// dual-constraint scenario, plus the tenant's accuracy floor when set
+/// (see [`Tenant::min_accuracy`]).
+fn tenant_cons(spec: &Tenant, budget_mw: f64) -> Constraints {
+    let cons = Constraints::dual(spec.target_fps, budget_mw);
+    match spec.min_accuracy {
+        Some(floor) => cons.with_min_accuracy(floor),
+        None => cons,
+    }
+}
+
 /// Deterministic per-(tenant, round, restart) optimizer seed: parallel
 /// scheduling can never perturb which RNG stream a search round uses.
 fn tenant_seed(base: u64, round: u64, restart: u64) -> u64 {
@@ -567,6 +585,7 @@ fn floor_config(space: &ConfigSpace) -> HwConfig {
         mem_freq_mhz: space.min(Dim::MemFreq),
         concurrency: space.min(Dim::Concurrency),
         max_batch: space.min(Dim::BatchCap),
+        variant: space.min(Dim::Variant),
     }
 }
 
@@ -611,7 +630,8 @@ fn tenant_round_job(
     // probes are transient and not part of the steady-state allocation
     // the safety invariant governs).
     let chosen = t.cl.env_mut().measure(cfg);
-    let feasible = cons.feasible(chosen.throughput_fps, chosen.power_mw);
+    let feasible = cons.feasible(chosen.throughput_fps, chosen.power_mw)
+        && cons.accuracy_ok(chosen.accuracy);
     let tr = TenantRound {
         name: t.spec.name,
         model: t.spec.model,
@@ -635,7 +655,7 @@ mod tests {
     const MODELS: [ModelKind; 3] = [ModelKind::Yolo, ModelKind::Frcnn, ModelKind::RetinaNet];
 
     fn spec(i: usize, target_fps: f64, weight: f64) -> Tenant {
-        Tenant { name: NAMES[i], model: MODELS[i], target_fps, weight }
+        Tenant { name: NAMES[i], model: MODELS[i], target_fps, weight, min_accuracy: None }
     }
 
     /// Arbiter over scripted surfaces: tenant i serves `fps[i]` at

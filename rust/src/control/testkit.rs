@@ -105,6 +105,7 @@ impl Environment for StepEnv {
             gpu_util: 0.5,
             cpu_util: 0.5,
             mem_util: 0.5,
+            accuracy: 30.0,
             failed: None,
         }
     }

@@ -1,16 +1,21 @@
 //! DVFS + concurrency configuration space (paper Eq. 5), plus the
 //! normalized encoding that lets one optimizer span different devices.
 //!
-//! A configuration is the 6-tuple `s = (s_cpu, c_cpu, s_gpu, s_mem, c,
-//! b)` — the paper's 5 DVFS/concurrency knobs (Table 2 ranges with
+//! A configuration is the 7-tuple `s = (s_cpu, c_cpu, s_gpu, s_mem, c,
+//! b, v)` — the paper's 5 DVFS/concurrency knobs (Table 2 ranges with
 //! ~100 MHz steps, §IV-A) plus `max_batch`, the coordinator's batch cap
 //! promoted into the search space (the joint batching+DVFS optimum is
-//! coupled — Xu et al., arXiv 2504.14611). Device grids default the
-//! batch axis to the singleton `[1]` (the paper's per-frame serving),
-//! so every legacy 5-dim surface is the `b = 1` slice of this space;
-//! [`ConfigSpace::with_batch_caps`] opens the axis. This module
-//! provides enumeration, clamping/rounding onto the grid (Algorithm 2's
-//! `MINMAX(ROUND(v), r)`), indexing and neighbourhood moves.
+//! coupled — Xu et al., arXiv 2504.14611), plus `variant`, the index
+//! into the model's [`crate::models::VariantManifest`] (the
+//! accuracy–energy co-design axis of Jayakodi et al., arXiv
+//! 1901.10584). Device grids default the batch axis to the singleton
+//! `[1]` (the paper's per-frame serving) and the variant axis to the
+//! singleton `[0]` (the full-accuracy baseline), so every legacy
+//! surface is the `b = 1, v = 0` slice of this space;
+//! [`ConfigSpace::with_batch_caps`] / [`ConfigSpace::with_variant_axis`]
+//! open the axes. This module provides enumeration, clamping/rounding
+//! onto the grid (Algorithm 2's `MINMAX(ROUND(v), r)`), indexing and
+//! neighbourhood moves.
 //!
 //! **Heterogeneous fleets** (ARCHITECTURE.md, EXPERIMENTS.md
 //! §Heterogeneous fleets): the paper tunes one device class at a time,
@@ -42,6 +47,10 @@ pub struct HwConfig {
     /// coordinator's `max_batch`, now a search dimension). 1 = the
     /// paper's per-frame serving.
     pub max_batch: u32,
+    /// Model-variant index into the device's
+    /// [`crate::models::VariantManifest`]. 0 = the full-accuracy
+    /// baseline (the paper's fixed model).
+    pub variant: u32,
 }
 
 /// Configuration dimensions, in the canonical order used everywhere
@@ -53,20 +62,25 @@ pub enum Dim {
     GpuFreq,
     MemFreq,
     Concurrency,
-    /// The batch cap — appended last so the first five columns keep
-    /// their historical order everywhere (window columns, dCor weight
-    /// indices, enumeration order on singleton-batch grids).
+    /// The batch cap — appended after the five hardware knobs so those
+    /// columns keep their historical order everywhere (window columns,
+    /// dCor weight indices, enumeration order on singleton-batch grids).
     BatchCap,
+    /// The model-variant index — appended last, by the same rule: the
+    /// first six columns keep their PR-8 order, and singleton-variant
+    /// grids enumerate in the historical 6-dim order.
+    Variant,
 }
 
 impl Dim {
-    pub const ALL: [Dim; 6] = [
+    pub const ALL: [Dim; 7] = [
         Dim::CpuFreq,
         Dim::CpuCores,
         Dim::GpuFreq,
         Dim::MemFreq,
         Dim::Concurrency,
         Dim::BatchCap,
+        Dim::Variant,
     ];
 
     pub fn name(self) -> &'static str {
@@ -77,6 +91,7 @@ impl Dim {
             Dim::MemFreq => "mem_freq_mhz",
             Dim::Concurrency => "concurrency",
             Dim::BatchCap => "max_batch",
+            Dim::Variant => "variant",
         }
     }
 
@@ -88,13 +103,14 @@ impl Dim {
             Dim::MemFreq => 3,
             Dim::Concurrency => 4,
             Dim::BatchCap => 5,
+            Dim::Variant => 6,
         }
     }
 }
 
 impl HwConfig {
     /// Number of tunable dimensions.
-    pub const NDIMS: usize = 6;
+    pub const NDIMS: usize = 7;
 
     /// Configuration as an f64 vector in [`Dim::ALL`] order.
     pub fn as_vec(&self) -> [f64; Self::NDIMS] {
@@ -105,6 +121,7 @@ impl HwConfig {
             self.mem_freq_mhz as f64,
             self.concurrency as f64,
             self.max_batch as f64,
+            self.variant as f64,
         ]
     }
 
@@ -117,6 +134,7 @@ impl HwConfig {
             mem_freq_mhz: v[3] as u32,
             concurrency: v[4] as u32,
             max_batch: v[5] as u32,
+            variant: v[6] as u32,
         }
     }
 
@@ -129,6 +147,7 @@ impl HwConfig {
             Dim::MemFreq => self.mem_freq_mhz,
             Dim::Concurrency => self.concurrency,
             Dim::BatchCap => self.max_batch,
+            Dim::Variant => self.variant,
         }
     }
 
@@ -142,12 +161,13 @@ impl HwConfig {
             Dim::MemFreq => c.mem_freq_mhz = value,
             Dim::Concurrency => c.concurrency = value,
             Dim::BatchCap => c.max_batch = value,
+            Dim::Variant => c.variant = value,
         }
         c
     }
 
     /// Stable hash-input encoding of the full tuple.
-    pub fn key(&self) -> [u64; 6] {
+    pub fn key(&self) -> [u64; 7] {
         [
             self.cpu_freq_mhz as u64,
             self.cpu_cores as u64,
@@ -155,14 +175,16 @@ impl HwConfig {
             self.mem_freq_mhz as u64,
             self.concurrency as u64,
             self.max_batch as u64,
+            self.variant as u64,
         ]
     }
 
     /// Stable hash-input encoding of the hardware knobs alone. The
     /// simulator's chip-lottery draw hashes this — silicon variance is
     /// a property of the DVFS state, never of the application's batch
-    /// cap — which also keeps every `max_batch = 1` measurement
-    /// bit-identical to the historical 5-dim surface.
+    /// cap or served model variant — which also keeps every
+    /// `max_batch = 1, variant = 0` measurement bit-identical to the
+    /// historical 5-dim surface.
     pub fn hw_key(&self) -> [u64; 5] {
         [
             self.cpu_freq_mhz as u64,
@@ -178,9 +200,9 @@ impl std::fmt::Display for HwConfig {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(
             f,
-            "cpu={}MHzx{} gpu={}MHz mem={}MHz conc={} batch={}",
+            "cpu={}MHzx{} gpu={}MHz mem={}MHz conc={} batch={} var={}",
             self.cpu_freq_mhz, self.cpu_cores, self.gpu_freq_mhz, self.mem_freq_mhz,
-            self.concurrency, self.max_batch
+            self.concurrency, self.max_batch, self.variant
         )
     }
 }
@@ -199,8 +221,10 @@ pub struct ConfigSpace {
 
 impl ConfigSpace {
     /// Build a grid over the paper's five knobs; the batch axis starts
-    /// as the singleton `[1]` (the legacy 5-dim surface). Open it with
-    /// [`ConfigSpace::with_batch_caps`].
+    /// as the singleton `[1]` and the variant axis as the singleton
+    /// `[0]` (the legacy 5-dim surface). Open them with
+    /// [`ConfigSpace::with_batch_caps`] /
+    /// [`ConfigSpace::with_variant_axis`].
     pub fn new(
         device: DeviceKind,
         cpu_freqs: Vec<u32>,
@@ -209,7 +233,7 @@ impl ConfigSpace {
         mem_freqs: Vec<u32>,
         concurrency: Vec<u32>,
     ) -> ConfigSpace {
-        let dims = [cpu_freqs, cpu_cores, gpu_freqs, mem_freqs, concurrency, vec![1]];
+        let dims = [cpu_freqs, cpu_cores, gpu_freqs, mem_freqs, concurrency, vec![1], vec![0]];
         for (i, d) in dims.iter().enumerate() {
             assert!(!d.is_empty(), "dimension {i} empty");
             assert!(d.windows(2).all(|w| w[0] < w[1]), "dimension {i} not sorted/unique");
@@ -225,6 +249,16 @@ impl ConfigSpace {
         assert!(caps.windows(2).all(|w| w[0] < w[1]), "batch axis not sorted/unique");
         assert!(caps[0] >= 1, "a batch cap below 1 serves nothing");
         self.dims[Dim::BatchCap.index()] = caps;
+        self
+    }
+
+    /// Open the variant axis to the indices `0..n` of an `n`-entry
+    /// [`crate::models::VariantManifest`]. The default singleton `[0]`
+    /// serves only the full-accuracy baseline (the legacy surface); any
+    /// wider axis makes the served variant a seventh search dimension.
+    pub fn with_variant_axis(mut self, n: usize) -> ConfigSpace {
+        assert!(n >= 1, "variant axis empty");
+        self.dims[Dim::Variant.index()] = (0..n as u32).collect();
         self
     }
 
@@ -304,12 +338,13 @@ impl ConfigSpace {
             mem_freq_mhz: out[3],
             concurrency: out[4],
             max_batch: out[5],
+            variant: out[6],
         }
     }
 
-    /// Enumerate the full grid in lexicographic order (the batch axis
-    /// iterates innermost, so singleton-batch grids enumerate in the
-    /// historical 5-dim order).
+    /// Enumerate the full grid in lexicographic order (the variant axis
+    /// iterates innermost, then the batch axis, so singleton-batch,
+    /// singleton-variant grids enumerate in the historical 5-dim order).
     pub fn enumerate(&self) -> Vec<HwConfig> {
         let mut out = Vec::with_capacity(self.raw_size());
         for &cf in &self.dims[0] {
@@ -318,14 +353,17 @@ impl ConfigSpace {
                     for &mf in &self.dims[3] {
                         for &c in &self.dims[4] {
                             for &b in &self.dims[5] {
-                                out.push(HwConfig {
-                                    cpu_freq_mhz: cf,
-                                    cpu_cores: cc,
-                                    gpu_freq_mhz: gf,
-                                    mem_freq_mhz: mf,
-                                    concurrency: c,
-                                    max_batch: b,
-                                });
+                                for &v in &self.dims[6] {
+                                    out.push(HwConfig {
+                                        cpu_freq_mhz: cf,
+                                        cpu_cores: cc,
+                                        gpu_freq_mhz: gf,
+                                        mem_freq_mhz: mf,
+                                        concurrency: c,
+                                        max_batch: b,
+                                        variant: v,
+                                    });
+                                }
                             }
                         }
                     }
@@ -360,6 +398,7 @@ impl ConfigSpace {
             mem_freq_mhz: mid(Dim::MemFreq),
             concurrency: mid(Dim::Concurrency),
             max_batch: mid(Dim::BatchCap),
+            variant: mid(Dim::Variant),
         }
     }
 
@@ -383,6 +422,7 @@ impl ConfigSpace {
             mem_freq_mhz: pick(Dim::MemFreq, rng),
             concurrency: pick(Dim::Concurrency, rng),
             max_batch: pick(Dim::BatchCap, rng),
+            variant: pick(Dim::Variant, rng),
         }
     }
 
@@ -429,10 +469,12 @@ impl ConfigSpace {
             let mut c = self.midpoint();
             c.concurrency = self.min(Dim::Concurrency);
             c.max_batch = self.min(Dim::BatchCap);
+            c.variant = self.min(Dim::Variant);
             c
         } else {
             let mut c = self.device.preset_default();
             c.max_batch = self.min(Dim::BatchCap);
+            c.variant = self.min(Dim::Variant);
             c
         }
     }
@@ -451,10 +493,12 @@ impl ConfigSpace {
                 mem_freq_mhz: self.max(Dim::MemFreq),
                 concurrency: self.min(Dim::Concurrency),
                 max_batch: self.min(Dim::BatchCap),
+                variant: self.min(Dim::Variant),
             }
         } else {
             let mut c = self.device.preset_max_power();
             c.max_batch = self.min(Dim::BatchCap);
+            c.variant = self.min(Dim::Variant);
             c
         }
     }
@@ -465,7 +509,7 @@ impl ConfigSpace {
     /// which leaves the application knobs at their minimum): this maxes
     /// concurrency and the batch axis too. On a normalized grid every
     /// dimension sits at rank 1.0, which decodes to each member's own
-    /// maximum. Note that `snap_config([1.0; 6])` does **not** build
+    /// maximum. Note that `snap_config([1.0; 7])` does **not** build
     /// this configuration — 1.0 is a raw grid value there and snaps to
     /// each dimension's *minimum*.
     pub fn max_config(&self) -> HwConfig {
@@ -476,6 +520,7 @@ impl ConfigSpace {
             mem_freq_mhz: self.max(Dim::MemFreq),
             concurrency: self.max(Dim::Concurrency),
             max_batch: self.max(Dim::BatchCap),
+            variant: self.max(Dim::Variant),
         }
     }
 
@@ -488,13 +533,14 @@ impl ConfigSpace {
         if self.normalized {
             let pct = |v: u32| 100.0 * v as f64 / NormSpace::RESOLUTION as f64;
             format!(
-                "norm cpu={:.0}%x{:.0}% gpu={:.0}% mem={:.0}% conc={:.0}% batch={:.0}%",
+                "norm cpu={:.0}%x{:.0}% gpu={:.0}% mem={:.0}% conc={:.0}% batch={:.0}% var={:.0}%",
                 pct(cfg.cpu_freq_mhz),
                 pct(cfg.cpu_cores),
                 pct(cfg.gpu_freq_mhz),
                 pct(cfg.mem_freq_mhz),
                 pct(cfg.concurrency),
                 pct(cfg.max_batch),
+                pct(cfg.variant),
             )
         } else {
             format!("{} {cfg}", self.device.name())
@@ -579,6 +625,7 @@ impl NormSpace {
                 dim_vals(Dim::MemFreq),
                 dim_vals(Dim::Concurrency),
                 dim_vals(Dim::BatchCap),
+                dim_vals(Dim::Variant),
             ],
             normalized: true,
         };
@@ -615,6 +662,7 @@ impl NormSpace {
             f(cfg.mem_freq_mhz),
             f(cfg.concurrency),
             f(cfg.max_batch),
+            f(cfg.variant),
         ])
         .clamped()
     }
@@ -637,6 +685,7 @@ impl NormSpace {
             v(Dim::MemFreq),
             v(Dim::Concurrency),
             v(Dim::BatchCap),
+            v(Dim::Variant),
         ])
     }
 }
@@ -705,6 +754,7 @@ mod tests {
                 g.rng.range_f64(0.0, 5000.0),
                 g.rng.range_f64(-1.0, 9.0),
                 g.rng.range_f64(-1.0, 20.0),
+                g.rng.range_f64(-1.0, 6.0),
             ];
             let cfg = s.snap_config(v);
             prop::assert_true(s.contains(&cfg), "snapped config on grid")?;
@@ -781,6 +831,7 @@ mod tests {
                 g.rng.range_f64(-0.5, 1.5),
                 g.rng.range_f64(-0.5, 1.5),
                 g.rng.range_f64(-0.5, 1.5),
+                g.rng.range_f64(-0.5, 1.5),
             ];
             let cfg = s.decode(&NormConfig(raw));
             prop::assert_true(s.contains(&cfg), "decoded config on the native grid")?;
@@ -816,9 +867,9 @@ mod tests {
         assert!(!nx().is_normalized());
         for &d in &Dim::ALL {
             assert_eq!(g.min(d), 0, "{d:?}");
-            if d == Dim::BatchCap {
-                // Both members keep the singleton batch axis, whose
-                // only rank fraction is 0.
+            if d == Dim::BatchCap || d == Dim::Variant {
+                // Both members keep the singleton batch and variant
+                // axes, whose only rank fraction is 0.
                 assert_eq!(g.values(d), &[0], "{d:?}");
             } else {
                 assert_eq!(g.max(d), NormSpace::RESOLUTION, "{d:?}");
@@ -999,5 +1050,127 @@ mod tests {
     #[should_panic(expected = "batch axis")]
     fn unsorted_batch_caps_panic() {
         let _ = nx().with_batch_caps(vec![4, 2]);
+    }
+
+    #[test]
+    fn default_variant_axis_is_the_legacy_singleton() {
+        for d in DeviceKind::ALL {
+            let s = d.space();
+            assert_eq!(s.values(Dim::Variant), &[0], "{d:?}");
+            assert_eq!(s.midpoint().variant, 0);
+            assert_eq!(s.preset_default().variant, 0);
+            assert_eq!(s.preset_max_power().variant, 0);
+            assert_eq!(s.max_config().variant, 0);
+        }
+    }
+
+    #[test]
+    fn with_variant_axis_opens_a_real_seventh_dimension() {
+        let s = nx().with_variant_axis(4);
+        assert_eq!(s.raw_size(), nx().raw_size() * 4);
+        assert_eq!(s.values(Dim::Variant), &[0, 1, 2, 3]);
+        assert_eq!(s.snap(Dim::Variant, 0.5), 0, "halfway ties to the lower index");
+        assert_eq!(s.snap(Dim::Variant, 100.0), 3);
+        assert_eq!(s.midpoint().variant, 2);
+        // Presets serve the full-accuracy baseline: the variant is an
+        // application knob, like max_batch and concurrency.
+        assert_eq!(s.preset_default().variant, 0);
+        assert_eq!(s.preset_max_power().variant, 0);
+        // Enumeration covers every variant and index_of still matches.
+        let all = s.enumerate();
+        assert_eq!(all.len(), s.raw_size());
+        for (i, cfg) in all.iter().enumerate().step_by(233) {
+            assert_eq!(s.index_of(cfg), Some(i));
+        }
+        let mut rng = Rng::new(9);
+        let drawn: std::collections::BTreeSet<u32> =
+            (0..200).map(|_| s.random(&mut rng).variant).collect();
+        assert_eq!(drawn.into_iter().collect::<Vec<_>>(), vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn singleton_variant_axis_preserves_the_random_draw_stream() {
+        // Same byte-identity argument as the batch axis: a singleton
+        // variant axis consumes no randomness, so every same-seed draw
+        // matches a batched-but-unvarianted grid's exactly.
+        let s = nx().with_batch_caps(vec![1, 2, 4]);
+        let mut a = Rng::new(41);
+        let mut b = Rng::new(41);
+        for _ in 0..50 {
+            let cfg = s.random(&mut a);
+            assert_eq!(cfg.variant, 0);
+            let mut v = [0.0f64; HwConfig::NDIMS];
+            for (i, &d) in Dim::ALL.iter().enumerate() {
+                let vals = s.values(d);
+                v[i] = if vals.len() == 1 {
+                    vals[0] as f64
+                } else {
+                    vals[b.below(vals.len())] as f64
+                };
+            }
+            assert_eq!(cfg, HwConfig::from_vec(v));
+        }
+    }
+
+    #[test]
+    fn variant_encode_decode_round_trips_exactly_on_grid() {
+        // The satellite round-trip property over manifest-sized variant
+        // axes: any validated manifest length opens an axis whose grid
+        // points encode/decode exactly.
+        prop::check("variant norm round-trip", 150, |g| {
+            let n = 1 + g.rng.below(6);
+            let s = if g.rng.chance(0.5) { nx() } else { orin() }.with_variant_axis(n);
+            let mut rng = g.rng.fork(11);
+            let cfg = s.random(&mut rng);
+            let nc = s.encode(&cfg);
+            prop::assert_true(
+                nc.0.iter().all(|f| (0.0..=1.0).contains(f)),
+                "fractions in the unit interval",
+            )?;
+            prop::assert_eq_dbg(&s.decode(&nc), &cfg)
+        });
+    }
+
+    #[test]
+    fn variant_decode_tie_breaks_to_the_lower_rank() {
+        // A 3-variant axis [0, 1, 2]: fraction 0.25 puts the rank
+        // target at exactly 0.5 — halfway between ranks 0 and 1 — and
+        // must take the lower (more accurate) variant, matching snap's
+        // value rule.
+        let s = nx().with_variant_axis(3);
+        let mut nc = s.encode(&s.preset_default());
+        nc.0[Dim::Variant.index()] = 0.25;
+        assert_eq!(s.decode(&nc).variant, 0);
+        nc.0[Dim::Variant.index()] = 0.75; // rank target 1.5: ties down to 1
+        assert_eq!(s.decode(&nc).variant, 1);
+        // Non-finite fractions collapse to the full-accuracy baseline.
+        nc.0[Dim::Variant.index()] = f64::NAN;
+        assert_eq!(s.decode(&nc).variant, 0);
+        nc.0[Dim::Variant.index()] = f64::INFINITY;
+        assert_eq!(s.decode(&nc).variant, 0);
+    }
+
+    #[test]
+    fn normalized_grid_over_variant_members_spans_the_axis() {
+        let ns = NormSpace::new(vec![
+            nx().with_variant_axis(4),
+            orin().with_variant_axis(2),
+        ]);
+        let g = ns.grid();
+        assert_eq!(g.min(Dim::Variant), 0);
+        assert_eq!(g.max(Dim::Variant), NormSpace::RESOLUTION);
+        let mut p = g.midpoint();
+        p.variant = NormSpace::RESOLUTION;
+        assert_eq!(ns.decode_for(0, &p).variant, 3);
+        assert_eq!(ns.decode_for(1, &p).variant, 1);
+        p.variant = 0;
+        assert_eq!(ns.decode_for(0, &p).variant, 0);
+        assert_eq!(ns.decode_for(1, &p).variant, 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "variant axis")]
+    fn empty_variant_axis_panics() {
+        let _ = nx().with_variant_axis(0);
     }
 }

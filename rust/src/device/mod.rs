@@ -2,7 +2,9 @@
 //!
 //! Substitutes the paper's physical Xavier NX / Orin Nano boards
 //! (DESIGN.md §2): a 5-dimensional DVFS + concurrency configuration space
-//! with the paper's exact tunable ranges (Table 2), analytic latency and
+//! with the paper's exact tunable ranges (Table 2) — extensible with a
+//! batch-cap axis (`ConfigSpace::with_batch_caps`) and a model-variant
+//! axis (`ConfigSpace::with_variant_axis`) — analytic latency and
 //! power models reproducing the paper's response-surface structure
 //! (non-linear, interacting, with the Fig. 1 iso-throughput/iso-power
 //! spreads), a config-failure model reproducing Table 4's valid-config

@@ -19,7 +19,7 @@
 
 use super::dvfs::HwConfig;
 use super::specs::DeviceKind;
-use crate::models::ModelKind;
+use crate::models::{CostProfile, ModelKind, ModelVariant};
 
 /// Deterministic performance of one configuration.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -49,8 +49,14 @@ pub struct StageTimes {
 
 /// Per-frame stage times under configuration `cfg`.
 pub fn stage_times(dev: DeviceKind, model: ModelKind, cfg: &HwConfig) -> StageTimes {
+    stage_times_profile(dev, &model.profile(), cfg)
+}
+
+/// Stage times for an explicit cost profile — the entry point a model
+/// variant shares with the fixed-model surface (a variant is just a
+/// rescaled profile, [`ModelVariant::scaled_profile`]).
+pub fn stage_times_profile(dev: DeviceKind, prof: &CostProfile, cfg: &HwConfig) -> StageTimes {
     let p = dev.model_params();
-    let prof = model.profile();
     let c = cfg.concurrency.max(1) as f64;
 
     // Memory-bandwidth efficiency saturates with the EMC clock; GPU
@@ -67,12 +73,32 @@ pub fn stage_times(dev: DeviceKind, model: ModelKind, cfg: &HwConfig) -> StageTi
     StageTimes { gpu_ms, cpu_ms, mem_ms }
 }
 
-/// Evaluate the deterministic model.
+/// Evaluate the deterministic model at its full-accuracy profile.
 pub fn evaluate(dev: DeviceKind, model: ModelKind, cfg: &HwConfig) -> PerfPoint {
+    evaluate_profile(dev, &model.profile(), cfg)
+}
+
+/// Evaluate a served model variant: the same pipeline model over the
+/// variant's rescaled cost profile, so a cheaper (int8 / shallower /
+/// lower-resolution) variant is genuinely faster on the *same* hardware
+/// state. The identity variant returns the untouched profile
+/// ([`ModelVariant::scaled_profile`]), keeping every `variant = 0`
+/// measurement bit-identical to the fixed-model surface.
+pub fn evaluate_variant(
+    dev: DeviceKind,
+    model: ModelKind,
+    v: &ModelVariant,
+    cfg: &HwConfig,
+) -> PerfPoint {
+    evaluate_profile(dev, &v.scaled_profile(model), cfg)
+}
+
+/// Evaluate the deterministic model for an explicit cost profile.
+pub fn evaluate_profile(dev: DeviceKind, prof: &CostProfile, cfg: &HwConfig) -> PerfPoint {
     let p = dev.model_params();
     let c = cfg.concurrency.max(1) as f64;
     let cores = cfg.cpu_cores.max(1) as f64;
-    let t = stage_times(dev, model, cfg);
+    let t = stage_times_profile(dev, prof, cfg);
 
     // Per-instance serial latency: an instance must pre-process, launch,
     // and post-process each frame; a quarter of the memory traffic is not
@@ -135,6 +161,7 @@ mod tests {
             mem_freq_mhz: mem,
             concurrency: c,
             max_batch: 1,
+            variant: 0,
         }
     }
 
@@ -253,6 +280,44 @@ mod tests {
                         < 1e-12);
                 }
             }
+        }
+    }
+
+    #[test]
+    fn identity_variant_is_bit_identical_to_the_fixed_model() {
+        for dev in DeviceKind::ALL {
+            for model in ModelKind::ALL {
+                let id = ModelVariant::identity(model);
+                for c in dev.space().enumerate().into_iter().step_by(131) {
+                    let fixed = evaluate(dev, model, &c);
+                    let via_variant = evaluate_variant(dev, model, &id, &c);
+                    assert_eq!(fixed, via_variant, "{dev}/{model}/{c}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn degraded_variants_scale_throughput_by_their_perf_multiplier() {
+        // Every stage time divides by the same perf multiplier, so the
+        // binding resource, the serial path and the caps all scale
+        // together: throughput is exactly ×perf_mult and utilizations
+        // are unchanged.
+        let manifest = ModelKind::RetinaNet.standard_variants();
+        let c = cfg(1908, 6, 1100, 1866, 2);
+        let base = evaluate(DeviceKind::XavierNx, ModelKind::RetinaNet, &c);
+        for v in manifest.variants().iter().skip(1) {
+            let p = evaluate_variant(DeviceKind::XavierNx, ModelKind::RetinaNet, v, &c);
+            let ratio = p.throughput_fps / base.throughput_fps;
+            assert!(
+                (ratio - v.perf_mult).abs() < 1e-9,
+                "{}: ratio {ratio} vs perf_mult {}",
+                v.label(),
+                v.perf_mult
+            );
+            assert!((p.gpu_util - base.gpu_util).abs() < 1e-9);
+            assert!((p.cpu_util - base.cpu_util).abs() < 1e-9);
+            assert!((p.mem_util - base.mem_util).abs() < 1e-9);
         }
     }
 

@@ -19,6 +19,7 @@
 use super::dvfs::HwConfig;
 use super::perf::PerfPoint;
 use super::specs::DeviceKind;
+use crate::models::ModelVariant;
 
 /// Per-rail breakdown (mW), matching the tegrastats channels the paper
 /// samples.
@@ -68,6 +69,28 @@ pub fn evaluate(dev: DeviceKind, cfg: &HwConfig, perf: &PerfPoint) -> PowerBreak
         gpu_mw,
         mem_mw,
     }
+}
+
+/// Power for a served model variant: the same rail structure, with the
+/// variant's precision/depth discount applied to the GPU dynamic rail
+/// (int8 tensor-core paths switch less silicon per cycle; shallower
+/// networks launch fewer kernels). `perf` must come from
+/// [`super::perf::evaluate_variant`] for the same variant — the variant
+/// keeps the *utilizations* unchanged (every stage rescales together),
+/// so the discount enters only through this explicit multiplier. The
+/// identity variant is structurally skipped, keeping every `variant = 0`
+/// draw bit-identical to the fixed-model surface.
+pub fn evaluate_variant(
+    dev: DeviceKind,
+    v: &ModelVariant,
+    cfg: &HwConfig,
+    perf: &PerfPoint,
+) -> PowerBreakdown {
+    let mut pw = evaluate(dev, cfg, perf);
+    if !v.is_identity() {
+        pw.gpu_mw *= v.power_mult;
+    }
+    pw
 }
 
 #[cfg(test)]
@@ -159,6 +182,29 @@ mod tests {
             epf(&pw_b, &pf_b),
             epf(&pw_a, &pf_a)
         );
+    }
+
+    #[test]
+    fn degraded_variants_discount_the_gpu_rail_only() {
+        let dev = DeviceKind::XavierNx;
+        let model = ModelKind::Yolo;
+        let manifest = model.standard_variants();
+        let cfg = dev.preset_max_power();
+        let base_pf = perf::evaluate(dev, model, &cfg);
+        let base_pw = evaluate(dev, &cfg, &base_pf);
+        // Identity variant: bit-identical to the fixed-model rails.
+        let id = crate::models::ModelVariant::identity(model);
+        assert_eq!(evaluate_variant(dev, &id, &cfg, &base_pf), base_pw);
+        for v in manifest.variants().iter().skip(1) {
+            let pf = perf::evaluate_variant(dev, model, v, &cfg);
+            let pw = evaluate_variant(dev, v, &cfg, &pf);
+            // Utilizations are invariant under the variant rescaling up
+            // to rounding, so the discount shows up only on the GPU rail.
+            assert!((pw.gpu_mw - base_pw.gpu_mw * v.power_mult).abs() < 1e-6, "{}", v.label());
+            assert!((pw.cpu_mw - base_pw.cpu_mw).abs() < 1e-6, "{}", v.label());
+            assert!((pw.mem_mw - base_pw.mem_mw).abs() < 1e-6, "{}", v.label());
+            assert!(pw.total_mw() < base_pw.total_mw(), "{}", v.label());
+        }
     }
 
     #[test]

@@ -9,7 +9,7 @@ use super::perf;
 use super::power;
 use super::specs::DeviceKind;
 use super::thermal::ThermalModel;
-use crate::models::ModelKind;
+use crate::models::{ModelKind, VariantManifest};
 use crate::util::rng::{hash_unit, Rng};
 
 /// One aggregated measurement window (what the optimizer observes).
@@ -30,6 +30,10 @@ pub struct Measured {
     pub gpu_util: f64,
     pub cpu_util: f64,
     pub mem_util: f64,
+    /// Modeled accuracy (mAP) of the model variant this window served —
+    /// the third objective next to throughput and power. 0 for failed
+    /// or dropped windows (no frames were served at any accuracy).
+    pub accuracy: f64,
     /// Set when the configuration failed to run (paper §IV-A exclusions).
     pub failed: Option<FailureKind>,
 }
@@ -44,6 +48,10 @@ pub struct Device {
     kind: DeviceKind,
     model: ModelKind,
     space: ConfigSpace,
+    /// The runnable variants of `model` this board serves;
+    /// `HwConfig::variant` indexes into it. Defaults to the singleton
+    /// identity manifest (the legacy fixed-model surface).
+    manifest: VariantManifest,
     current: HwConfig,
     rng: Rng,
     thermal: Option<ThermalModel>,
@@ -67,6 +75,7 @@ impl Device {
             kind,
             model,
             space: kind.space(),
+            manifest: VariantManifest::full(model),
             current: kind.preset_default(),
             rng: Rng::new(seed ^ (kind.id() << 32) ^ model.id()),
             thermal: None,
@@ -91,6 +100,21 @@ impl Device {
         self
     }
 
+    /// Serve `manifest`'s variant family on this board, opening the
+    /// variant axis to its indices — the served variant becomes a live
+    /// seventh search dimension (the default manifest is the singleton
+    /// [`VariantManifest::full`], the legacy fixed-model surface).
+    pub fn with_variants(mut self, manifest: VariantManifest) -> Device {
+        assert_eq!(
+            manifest.model(),
+            self.model,
+            "manifest is for a different model than this device serves"
+        );
+        self.space = self.space.with_variant_axis(manifest.len());
+        self.manifest = manifest;
+        self
+    }
+
     /// Scale measurement noise (robustness experiments): 1.0 = the
     /// calibrated tegrastats-class noise, 0.0 = noise-free oracle reads.
     pub fn with_noise_scale(mut self, scale: f64) -> Device {
@@ -109,6 +133,12 @@ impl Device {
 
     pub fn space(&self) -> &ConfigSpace {
         &self.space
+    }
+
+    /// The variant family this board serves (cache identity: two
+    /// devices with different manifests expose different surfaces).
+    pub fn manifest(&self) -> &VariantManifest {
+        &self.manifest
     }
 
     pub fn current_config(&self) -> HwConfig {
@@ -167,13 +197,14 @@ impl Device {
     /// verification — the ORACLE baseline itself measures like everyone
     /// else).
     pub fn true_point(&self, cfg: &HwConfig) -> (perf::PerfPoint, power::PowerBreakdown) {
-        let mut pf = perf::evaluate(self.kind, self.model, cfg);
+        let v = self.manifest.get(cfg.variant);
+        let mut pf = perf::evaluate_variant(self.kind, self.model, v, cfg);
         if let Some(t) = &self.thermal {
             let derate = t.clock_factor();
             pf.throughput_fps *= derate;
             pf.latency_ms /= derate;
         }
-        let pw = power::evaluate(self.kind, cfg, &pf);
+        let pw = power::evaluate_variant(self.kind, v, cfg, &pf);
         (pf, pw)
     }
 
@@ -188,7 +219,8 @@ impl Device {
         self.sim_clock_s += window_s;
         self.windows_run += 1;
 
-        if let Some(kind) = failure::check(self.kind, self.model, &applied) {
+        let variant = self.manifest.get(applied.variant);
+        if let Some(kind) = failure::check_variant(self.kind, self.model, variant, &applied) {
             let p = self.kind.model_params();
             if let Some(t) = &mut self.thermal {
                 t.step(p.static_mw, window_s);
@@ -203,6 +235,7 @@ impl Device {
                 gpu_util: 0.0,
                 cpu_util: 0.0,
                 mem_util: 0.0,
+                accuracy: 0.0,
                 failed: Some(kind),
             };
         }
@@ -243,6 +276,9 @@ impl Device {
             gpu_util: pf.gpu_util,
             cpu_util: pf.cpu_util,
             mem_util: pf.mem_util,
+            // The modeled mAP of the served variant — deterministic per
+            // variant (accuracy does not jitter with tegrastats noise).
+            accuracy: variant.accuracy,
             failed: None,
         }
     }
@@ -339,12 +375,15 @@ mod tests {
             mem_freq_mhz: 1700,
             concurrency: 2,
             max_batch: 7,
+            variant: 3,
         });
         assert!(d.space().contains(&applied));
         assert_eq!(applied.cpu_cores, 6);
         assert_eq!(applied.gpu_freq_mhz, 510);
-        // The device space carries the legacy singleton batch axis.
+        // The device space carries the legacy singleton batch and
+        // variant axes.
         assert_eq!(applied.max_batch, 1);
+        assert_eq!(applied.variant, 0);
     }
 
     #[test]
@@ -414,6 +453,49 @@ mod tests {
         let m1 = a.run(cfg);
         let m2 = a.run(cfg);
         assert_eq!(m1.throughput_fps, m2.throughput_fps, "no sampling noise");
+    }
+
+    #[test]
+    fn singleton_manifest_device_is_byte_identical_to_default() {
+        // `.with_variants(full)` is the PR-8 `with_batch_caps([1])`
+        // story for the seventh dimension: same space, same draws, same
+        // windows, bit for bit.
+        let mut plain = Device::new(DeviceKind::XavierNx, ModelKind::Frcnn, 11);
+        let mut varied = Device::new(DeviceKind::XavierNx, ModelKind::Frcnn, 11)
+            .with_variants(VariantManifest::full(ModelKind::Frcnn));
+        assert_eq!(plain.space(), varied.space());
+        let mut rng = Rng::new(23);
+        for _ in 0..20 {
+            let cfg = plain.space().random(&mut rng);
+            assert_eq!(plain.run(cfg), varied.run(cfg));
+        }
+    }
+
+    #[test]
+    fn variant_axis_trades_accuracy_for_throughput_and_power() {
+        let manifest = ModelKind::Yolo.standard_variants();
+        let mut d = Device::new(DeviceKind::XavierNx, ModelKind::Yolo, 7)
+            .with_variants(manifest.clone())
+            .with_noise_scale(0.0);
+        assert_eq!(d.space().max(Dim::Variant), manifest.len() as u32 - 1);
+        let base_cfg = d.space().midpoint().with(Dim::Variant, 0);
+        let base = d.run(base_cfg);
+        assert_eq!(base.accuracy, ModelKind::Yolo.map());
+        for idx in 1..manifest.len() as u32 {
+            let m = d.run(base_cfg.with(Dim::Variant, idx));
+            assert!(m.failed.is_none());
+            assert_eq!(m.accuracy, manifest.get(idx).accuracy);
+            assert!(m.accuracy < base.accuracy, "variant {idx} is less accurate");
+            assert!(m.throughput_fps > base.throughput_fps, "variant {idx} is faster");
+            assert!(m.power_mw < base.power_mw, "variant {idx} draws less");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "different model")]
+    fn mismatched_manifest_model_panics() {
+        let _ = Device::new(DeviceKind::XavierNx, ModelKind::Yolo, 0)
+            .with_variants(VariantManifest::full(ModelKind::Frcnn));
     }
 
     #[test]

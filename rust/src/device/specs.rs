@@ -86,6 +86,7 @@ impl DeviceKind {
             mem_freq_mhz: s.max(super::dvfs::Dim::MemFreq),
             concurrency: 1,
             max_batch: 1,
+            variant: 0,
         }
     }
 
@@ -100,6 +101,7 @@ impl DeviceKind {
                 mem_freq_mhz: 1690,
                 concurrency: 1,
                 max_batch: 1,
+                variant: 0,
             },
             DeviceKind::OrinNano => HwConfig {
                 cpu_freq_mhz: 1006,
@@ -108,6 +110,7 @@ impl DeviceKind {
                 mem_freq_mhz: 2133,
                 concurrency: 1,
                 max_batch: 1,
+                variant: 0,
             },
         }
     }

@@ -15,8 +15,9 @@ pub mod table4;
 
 pub use runner::{run_method, MethodKind, MethodOutcome};
 pub use scenarios::{
-    dual_constraints, ChaosFamily, ChaosScenario, DualScenario, HeteroScenario, CHAOS_SCENARIOS,
-    DUAL_SCENARIOS, HETERO_SCENARIOS,
+    dual_constraints, AccuracyScenario, ChaosFamily, ChaosScenario, DualScenario, HeteroScenario,
+    ACCURACY_SCENARIOS, ACCURACY_TENANT_SCENARIO, CHAOS_SCENARIOS, DUAL_SCENARIOS,
+    HETERO_SCENARIOS,
 };
 
 use std::path::Path;

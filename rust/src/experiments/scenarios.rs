@@ -132,8 +132,20 @@ pub const MULTI_TENANT_SCENARIOS: [TenantScenario; 3] = [
         device: DeviceKind::XavierNx,
         global_budget_mw: 13_500.0,
         tenants: &[
-            Tenant { name: "cam-yolo", model: ModelKind::Yolo, target_fps: 30.0, weight: 6.5 },
-            Tenant { name: "lidar-frcnn", model: ModelKind::Frcnn, target_fps: 8.0, weight: 6.0 },
+            Tenant {
+                name: "cam-yolo",
+                model: ModelKind::Yolo,
+                target_fps: 30.0,
+                weight: 6.5,
+                min_accuracy: None,
+            },
+            Tenant {
+                name: "lidar-frcnn",
+                model: ModelKind::Frcnn,
+                target_fps: 8.0,
+                weight: 6.0,
+                min_accuracy: None,
+            },
         ],
     },
     TenantScenario {
@@ -141,13 +153,26 @@ pub const MULTI_TENANT_SCENARIOS: [TenantScenario; 3] = [
         device: DeviceKind::XavierNx,
         global_budget_mw: 21_000.0,
         tenants: &[
-            Tenant { name: "cam-yolo", model: ModelKind::Yolo, target_fps: 30.0, weight: 6.5 },
-            Tenant { name: "lidar-frcnn", model: ModelKind::Frcnn, target_fps: 8.0, weight: 6.0 },
+            Tenant {
+                name: "cam-yolo",
+                model: ModelKind::Yolo,
+                target_fps: 30.0,
+                weight: 6.5,
+                min_accuracy: None,
+            },
+            Tenant {
+                name: "lidar-frcnn",
+                model: ModelKind::Frcnn,
+                target_fps: 8.0,
+                weight: 6.0,
+                min_accuracy: None,
+            },
             Tenant {
                 name: "map-retinanet",
                 model: ModelKind::RetinaNet,
                 target_fps: 4.0,
                 weight: 6.0,
+                min_accuracy: None,
             },
         ],
     },
@@ -156,13 +181,26 @@ pub const MULTI_TENANT_SCENARIOS: [TenantScenario; 3] = [
         device: DeviceKind::OrinNano,
         global_budget_mw: 16_500.0,
         tenants: &[
-            Tenant { name: "cam-yolo", model: ModelKind::Yolo, target_fps: 60.0, weight: 5.6 },
-            Tenant { name: "lidar-frcnn", model: ModelKind::Frcnn, target_fps: 15.0, weight: 4.5 },
+            Tenant {
+                name: "cam-yolo",
+                model: ModelKind::Yolo,
+                target_fps: 60.0,
+                weight: 5.6,
+                min_accuracy: None,
+            },
+            Tenant {
+                name: "lidar-frcnn",
+                model: ModelKind::Frcnn,
+                target_fps: 15.0,
+                weight: 4.5,
+                min_accuracy: None,
+            },
             Tenant {
                 name: "map-retinanet",
                 model: ModelKind::RetinaNet,
                 target_fps: 8.0,
                 weight: 4.6,
+                min_accuracy: None,
             },
         ],
     },
@@ -213,6 +251,161 @@ impl TenantScenario {
             let dev = Device::new(self.device, t.model, base_seed + i as u64);
             arb.add_tenant(*t, Box::new(SimEnv::new(dev)), base_seed + 100 + i as u64);
         }
+    }
+
+    /// [`TenantScenario::arbiter`] over variant-equipped boards: every
+    /// tenant's device carries its model's standard manifest, so a
+    /// tenant whose sub-budget cannot sustain its target at full
+    /// accuracy may degrade its served variant (down to its
+    /// [`Tenant::min_accuracy`] floor) instead of falling back and
+    /// starving — the accuracy axis becomes the arbitration pressure
+    /// valve ([`ACCURACY_TENANT_SCENARIO`]).
+    pub fn arbiter_variants(&self, policy: BudgetPolicy, base_seed: u64) -> TenantArbiter {
+        let mut arb = TenantArbiter::new(self.global_budget_mw, policy);
+        for (i, t) in self.tenants.iter().enumerate() {
+            let dev = Device::new(self.device, t.model, base_seed + i as u64)
+                .with_variants(t.model.standard_variants());
+            arb.add_tenant(*t, Box::new(SimEnv::new(dev)), base_seed + 100 + i as u64);
+        }
+        arb
+    }
+}
+
+/// The accuracy-arbitration scenario: an NX box whose global envelope
+/// is deliberately too small for both tenants at full accuracy. Under
+/// demand-weighted shares the YOLO tenant's sub-budget (5 000 mW) sits
+/// below the ~5 970 mW its full-accuracy 30 fps needs, while a degraded
+/// standard variant reaches 30 fps from ~3 500 mW — so with the variant
+/// axis open ([`TenantScenario::arbiter_variants`]) it degrades within
+/// its 24.0 mAP floor and stays feasible, and without it
+/// ([`TenantScenario::arbiter`]) it falls back and starves. The FRCNN
+/// tenant's share (5 600 mW) covers its full-accuracy ~5 250 mW need
+/// either way: its neighbour's shortfall is absorbed by the accuracy
+/// axis, not by its throughput.
+pub const ACCURACY_TENANT_SCENARIO: TenantScenario = TenantScenario {
+    name: "nx-pair-accuracy",
+    device: DeviceKind::XavierNx,
+    global_budget_mw: 10_600.0,
+    tenants: &[
+        Tenant {
+            name: "cam-yolo",
+            model: ModelKind::Yolo,
+            target_fps: 30.0,
+            weight: 5.0,
+            min_accuracy: Some(24.0),
+        },
+        Tenant {
+            name: "lidar-frcnn",
+            model: ModelKind::Frcnn,
+            target_fps: 8.0,
+            weight: 5.6,
+            min_accuracy: None,
+        },
+    ],
+};
+
+/// Accuracy trade-off scenario: one (device, model) pair whose
+/// dual-constraint region is **empty at full accuracy** — the budget
+/// cannot buy the target throughput from the baseline variant — yet
+/// nonempty at some degraded variant of the standard manifest whose
+/// mAP still clears `min_accuracy`. The seventh search dimension is
+/// what makes these solvable: a 6-dimensional search (or any fixed
+/// preset) can only fail or overdraw (`coral variants`, the
+/// `variant_switch` example, `bench_variants`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AccuracyScenario {
+    pub name: &'static str,
+    pub device: DeviceKind,
+    pub model: ModelKind,
+    /// τ_target (fps) — chosen above the full-accuracy variant's best
+    /// sustainable throughput under the budget.
+    pub target_fps: f64,
+    /// Power budget (mW).
+    pub budget_mw: f64,
+    /// mAP floor: the lowest accuracy the operator will serve. Chosen
+    /// so at least one standard variant sits *below* it — the floor is
+    /// binding, not decorative.
+    pub min_accuracy: f64,
+}
+
+/// The accuracy trade-off family. Calibrated on the noise-free
+/// surfaces (the scenario test re-derives all three properties by grid
+/// scan): full-accuracy max sustainable throughput under the budget /
+/// the first feasible variant's —
+/// `acc-nx-yolo`: 32.8 fps < 45 target; int8-640 (26.4 mAP) reaches 56.5.
+/// `acc-nx-frcnn`: 9.2 < 16; int8-512 (29.8 mAP) reaches 20.4.
+/// `acc-nx-retinanet`: 4.6 < 6.5; int8-640 (40.3 mAP) reaches 7.5.
+/// `acc-orin-yolo`: 70.2 < 100; int8-640 (26.4 mAP) reaches 112.9.
+pub const ACCURACY_SCENARIOS: [AccuracyScenario; 4] = [
+    AccuracyScenario {
+        name: "acc-nx-yolo",
+        device: DeviceKind::XavierNx,
+        model: ModelKind::Yolo,
+        target_fps: 45.0,
+        budget_mw: 6_500.0,
+        min_accuracy: 26.0,
+    },
+    AccuracyScenario {
+        name: "acc-nx-frcnn",
+        device: DeviceKind::XavierNx,
+        model: ModelKind::Frcnn,
+        target_fps: 16.0,
+        budget_mw: 6_000.0,
+        min_accuracy: 29.0,
+    },
+    AccuracyScenario {
+        name: "acc-nx-retinanet",
+        device: DeviceKind::XavierNx,
+        model: ModelKind::RetinaNet,
+        target_fps: 6.5,
+        budget_mw: 6_000.0,
+        min_accuracy: 40.0,
+    },
+    AccuracyScenario {
+        name: "acc-orin-yolo",
+        device: DeviceKind::OrinNano,
+        model: ModelKind::Yolo,
+        target_fps: 100.0,
+        budget_mw: 5_600.0,
+        min_accuracy: 26.0,
+    },
+];
+
+impl AccuracyScenario {
+    /// Find a scenario by name.
+    pub fn by_name(name: &str) -> Option<&'static AccuracyScenario> {
+        ACCURACY_SCENARIOS.iter().find(|s| s.name == name)
+    }
+
+    /// All three clauses: throughput target, power budget, mAP floor.
+    pub fn constraints(&self) -> Constraints {
+        Constraints::dual(self.target_fps, self.budget_mw).with_min_accuracy(self.min_accuracy)
+    }
+
+    /// The standard degradation ladder the scenario searches.
+    pub fn manifest(&self) -> crate::models::VariantManifest {
+        self.model.standard_variants()
+    }
+
+    /// The measured environment: a simulated board with the variant
+    /// axis opened to the standard manifest.
+    pub fn env(&self, seed: u64) -> SimEnv {
+        SimEnv::new(Device::new(self.device, self.model, seed).with_variants(self.manifest()))
+    }
+
+    /// Noise-free, lottery-free feasibility of one config (its variant
+    /// index included) against all three clauses — the scenario tests'
+    /// and benches' ground truth, bypassing measurement noise entirely.
+    pub fn config_feasible(&self, cfg: &crate::device::HwConfig) -> bool {
+        use crate::device::{failure, perf, power};
+        let manifest = self.manifest();
+        let v = manifest.get(cfg.variant);
+        if failure::check_variant(self.device, self.model, v, cfg).is_some() {
+            return false;
+        }
+        let pf = perf::evaluate_variant(self.device, self.model, v, cfg);
+        let pw = power::evaluate_variant(self.device, v, cfg, &pf).total_mw();
+        self.constraints().satisfied(pf.throughput_fps, pw, 0.0, v.accuracy)
     }
 }
 
@@ -717,12 +910,13 @@ impl LoadScenario {
             gpu_util: pf.gpu_util,
             cpu_util: pf.cpu_util,
             mem_util: pf.mem_util,
+            accuracy: self.model.map(),
             failed: None,
         };
         let loaded =
             sim::under_offered_load(m, offered_fps, self.device.model_params().static_mw);
         self.constraints_at(offered_fps)
-            .satisfied(loaded.throughput_fps, loaded.power_mw, loaded.p99_latency_ms)
+            .satisfied(loaded.throughput_fps, loaded.power_mw, loaded.p99_latency_ms, loaded.accuracy)
     }
 
     /// Shed point of a candidate set: ramp the steady offered rate from
@@ -1187,6 +1381,217 @@ mod tests {
                 s.name,
                 max_power / n,
                 s.budget_mw
+            );
+        }
+    }
+
+    #[test]
+    fn accuracy_regions_open_only_below_full_accuracy() {
+        // The family's premise, re-derived by noise-free grid scan per
+        // scenario: (a) the dual region is EMPTY at the full-accuracy
+        // baseline variant; (b) some degraded variant clearing the mAP
+        // floor opens it; (c) the floor is binding — the ladder's
+        // cheapest rung sits below it, so "degrade forever" is not an
+        // answer the constraints accept.
+        for s in &ACCURACY_SCENARIOS {
+            let manifest = s.manifest();
+            assert!(
+                manifest.variants().last().unwrap().accuracy < s.min_accuracy,
+                "{}: floor excludes no variant — it never binds",
+                s.name
+            );
+            assert!(
+                manifest.get(0).accuracy >= s.min_accuracy,
+                "{}: the baseline itself must clear the floor",
+                s.name
+            );
+            let space = s.device.space().with_variant_axis(manifest.len());
+            let mut per_variant = vec![0usize; manifest.len()];
+            for cfg in space.enumerate() {
+                if s.config_feasible(&cfg) {
+                    per_variant[cfg.variant as usize] += 1;
+                }
+            }
+            assert_eq!(
+                per_variant[0], 0,
+                "{}: the full-accuracy region must be empty",
+                s.name
+            );
+            let opened: usize = per_variant.iter().skip(1).sum();
+            assert!(opened > 0, "{}: no degraded variant opens the region", s.name);
+            // Every populated rung clears the floor (config_feasible
+            // applies it, so a populated below-floor rung would mean
+            // the clause is broken, not the calibration).
+            for (i, &n) in per_variant.iter().enumerate() {
+                if n > 0 {
+                    assert!(
+                        manifest.get(i as u32).accuracy >= s.min_accuracy,
+                        "{}: below-floor variant {i} counted as feasible",
+                        s.name
+                    );
+                }
+            }
+        }
+    }
+
+    /// Noise-free, lottery-free minimum power at which some valid
+    /// config of `v` sustains `target` fps (None if none does).
+    fn min_power_at_target(
+        dev: DeviceKind,
+        model: ModelKind,
+        v: &crate::models::ModelVariant,
+        target: f64,
+    ) -> Option<f64> {
+        dev.space()
+            .enumerate()
+            .into_iter()
+            .filter(|c| failure::check_variant(dev, model, v, c).is_none())
+            .filter_map(|c| {
+                let pf = perf::evaluate_variant(dev, model, v, &c);
+                (pf.throughput_fps >= target)
+                    .then(|| power::evaluate_variant(dev, v, &c, &pf).total_mw())
+            })
+            .min_by(|a, b| a.total_cmp(b))
+    }
+
+    #[test]
+    fn accuracy_tenant_scenario_premises_hold_on_the_noise_free_surface() {
+        // The arbitration story's three premises: under demand-weighted
+        // shares the YOLO tenant cannot reach its target at full
+        // accuracy (share < min power), it can within its mAP floor at
+        // a degraded variant (with margin for noise + lottery), and the
+        // FRCNN tenant is covered at full accuracy either way.
+        let s = &ACCURACY_TENANT_SCENARIO;
+        let total: f64 = s.tenants.iter().map(|t| t.weight).sum();
+        let share =
+            |t: &Tenant| s.global_budget_mw * t.weight / total;
+        let yolo = &s.tenants[0];
+        let frcnn = &s.tenants[1];
+        assert_eq!(yolo.model, ModelKind::Yolo);
+        let manifest = yolo.model.standard_variants();
+        let floor = yolo.min_accuracy.expect("the degrading tenant has a floor");
+        let full = min_power_at_target(s.device, yolo.model, manifest.get(0), yolo.target_fps)
+            .expect("full-accuracy target reachable at SOME power");
+        assert!(
+            full > share(yolo) * 1.05,
+            "cam-yolo full-accuracy min power {full:.0} mW must clearly exceed its share {:.0} mW",
+            share(yolo)
+        );
+        let degraded = manifest
+            .variants()
+            .iter()
+            .filter(|v| v.accuracy >= floor && !v.is_identity())
+            .filter_map(|v| min_power_at_target(s.device, yolo.model, v, yolo.target_fps))
+            .fold(f64::INFINITY, f64::min);
+        assert!(
+            degraded < share(yolo) * 0.9,
+            "cam-yolo needs a within-floor variant feasible with margin: {degraded:.0} mW vs share {:.0} mW",
+            share(yolo)
+        );
+        let frcnn_manifest = frcnn.model.standard_variants();
+        let frcnn_full = min_power_at_target(
+            s.device,
+            frcnn.model,
+            frcnn_manifest.get(0),
+            frcnn.target_fps,
+        )
+        .expect("lidar-frcnn reachable at full accuracy");
+        assert!(
+            frcnn_full < share(frcnn) * 0.97,
+            "lidar-frcnn full-accuracy min power {frcnn_full:.0} mW must fit its share {:.0} mW",
+            share(frcnn)
+        );
+    }
+
+    #[test]
+    fn singleton_variant_manifests_leave_every_trajectory_byte_identical() {
+        // The compatibility contract of the seventh dimension: a
+        // device whose manifest is the singleton identity
+        // (`VariantManifest::full`, also the `Device::new` default)
+        // produces the same bytes as the legacy construction on every
+        // driving path — ControlLoop, TenantArbiter, cached fleet
+        // sweeps. Singleton axes consume no RNG, identity variants
+        // skip every multiplier, and `hw_key` never includes the
+        // variant, so the trajectories cannot diverge.
+        use crate::control::{fleet_sweep, fleet_sweep_cached, CacheStore, FleetRunner};
+        use crate::models::VariantManifest;
+
+        // ControlLoop leg.
+        let device = DeviceKind::XavierNx;
+        let model = ModelKind::Yolo;
+        let cons = dual_constraints(device, model);
+        let drive = |explicit: bool| {
+            let mut dev = Device::new(device, model, 11);
+            if explicit {
+                dev = dev.with_variants(VariantManifest::full(model));
+            }
+            let opt = CoralOptimizer::new(dev.space().clone(), cons, 5);
+            let mut cl =
+                crate::control::ControlLoop::with_budget(SimEnv::new(dev), opt, cons, 12);
+            let out = cl.run();
+            (out.best, out.iters, cl.env().cost_s(), Environment::fingerprint(cl.env()))
+        };
+        assert_eq!(drive(false), drive(true), "ControlLoop trajectories must match bit-for-bit");
+
+        // TenantArbiter leg: the nx-pair scenario registered plainly vs
+        // with explicit singleton manifests, two rounds each.
+        let s = TenantScenario::by_name("nx-pair").unwrap();
+        let mut plain = s.arbiter(crate::control::BudgetPolicy::DemandWeighted, 9);
+        let mut explicit = {
+            let mut arb = TenantArbiter::new(
+                s.global_budget_mw,
+                crate::control::BudgetPolicy::DemandWeighted,
+            );
+            for (i, t) in s.tenants.iter().enumerate() {
+                let dev = Device::new(s.device, t.model, 9 + i as u64)
+                    .with_variants(VariantManifest::full(t.model));
+                arb.add_tenant(*t, Box::new(SimEnv::new(dev)), 9 + 100 + i as u64);
+            }
+            arb
+        };
+        for _ in 0..2 {
+            let a = plain.run_round();
+            let ac = a.combined;
+            let ap = a.aggregate_power_mw;
+            let at: Vec<crate::device::Measured> =
+                a.tenants.iter().map(|t| t.chosen).collect();
+            let b = explicit.run_round();
+            assert_eq!(ac, b.combined, "combined window must match bit-for-bit");
+            assert_eq!(ap, b.aggregate_power_mw);
+            let bt: Vec<crate::device::Measured> = b.tenants.iter().map(|t| t.chosen).collect();
+            assert_eq!(at, bt, "per-tenant held windows must match bit-for-bit");
+        }
+
+        // Cached fleet-sweep leg: the sweep's envs now all carry
+        // singleton manifests; the sweep stays deterministic, replayed
+        // passes are byte-identical, and the replay really happened
+        // (no new misses on the second pass).
+        let runner = FleetRunner::new(2);
+        let scenarios = &DUAL_SCENARIOS[..2];
+        let plain_sweep = fleet_sweep(scenarios, 2, &runner);
+        let store = CacheStore::new();
+        let first = fleet_sweep_cached(scenarios, 2, &runner, &store);
+        let misses_after_first = store.stats().misses;
+        let second = fleet_sweep_cached(scenarios, 2, &runner, &store);
+        assert_eq!(
+            store.stats().misses,
+            misses_after_first,
+            "second pass must replay entirely from the store"
+        );
+        for (a, b) in plain_sweep.iter().zip(&first) {
+            assert_eq!(a.scenario, b.scenario);
+            assert_eq!(a.feasible, b.feasible, "{}: cached != plain", a.scenario.figures);
+            assert!(
+                (a.mean_first_feasible == b.mean_first_feasible)
+                    || (a.mean_first_feasible.is_nan() && b.mean_first_feasible.is_nan())
+            );
+        }
+        for (a, b) in first.iter().zip(&second) {
+            assert_eq!(a.scenario, b.scenario);
+            assert_eq!(a.feasible, b.feasible);
+            assert!(
+                (a.mean_first_feasible == b.mean_first_feasible)
+                    || (a.mean_first_feasible.is_nan() && b.mean_first_feasible.is_nan())
             );
         }
     }

@@ -1,0 +1,566 @@
+//! Model-variant manifests: one logical model, many runnable variants.
+//!
+//! PB-AI serves a detector as an ordered family of runnable variants
+//! (depth fraction, numeric precision, input resolution) behind a
+//! `min_runnable_depth` validity floor; Jayakodi et al. (arXiv
+//! 1901.10584) show the accuracy–energy trade-off those variants open
+//! is itself worth co-optimizing. This module is that manifest:
+//! [`VariantManifest`] is a validated, ordered list of
+//! [`ModelVariant`]s — entry 0 is the full-accuracy baseline, later
+//! entries are strictly cheaper (higher throughput multiplier, no more
+//! power, no more memory) and never more accurate.
+//!
+//! The optimizer sees a manifest as one discrete axis:
+//! [`crate::device::Dim::Variant`] indexes into the list, and the
+//! device simulator applies the entry's multipliers to its
+//! throughput/power/OOM surfaces (`device::{perf,power,failure}`).
+//! The default manifest is the singleton [`VariantManifest::full`],
+//! under which every surface is byte-identical to the pre-variant
+//! model — exactly how `Dim::BatchCap` kept the 5-dim history intact.
+
+use std::fmt;
+
+use super::{CostProfile, ModelKind};
+
+/// Numeric precision a variant's engine is built at.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Precision {
+    /// Half-precision floats — the baseline TensorRT build.
+    Fp16,
+    /// Post-training-quantized 8-bit integers.
+    Int8,
+}
+
+impl Precision {
+    pub fn name(self) -> &'static str {
+        match self {
+            Precision::Fp16 => "fp16",
+            Precision::Int8 => "int8",
+        }
+    }
+
+    /// Stable small id (hash inputs).
+    pub fn id(self) -> u64 {
+        match self {
+            Precision::Fp16 => 0,
+            Precision::Int8 => 1,
+        }
+    }
+}
+
+impl fmt::Display for Precision {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// One runnable variant of a logical model.
+///
+/// The three multipliers act on the baseline surface: `perf_mult`
+/// scales throughput up (all per-frame work shrinks by that factor),
+/// `power_mult` scales the GPU dynamic rail down (int8 maths costs
+/// less energy per op), `mem_mult` scales the resident footprint down
+/// (smaller weights and activations).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ModelVariant {
+    /// Fraction of the full network depth kept, (0, 1].
+    pub depth_frac: f64,
+    /// Engine precision.
+    pub precision: Precision,
+    /// Square input resolution (pixels per side).
+    pub input_res: u32,
+    /// Modeled COCO mAP@0.5:0.95 of this variant.
+    pub accuracy: f64,
+    /// Throughput multiplier ≥ 1 (strictly increasing along a manifest).
+    pub perf_mult: f64,
+    /// GPU dynamic-power multiplier in (0, 1] (non-increasing).
+    pub power_mult: f64,
+    /// Memory-footprint multiplier in (0, 1] (non-increasing).
+    pub mem_mult: f64,
+}
+
+impl ModelVariant {
+    /// The full-accuracy baseline: unmodified depth/resolution, all
+    /// multipliers exactly 1 — the surface it produces is the
+    /// pre-variant model, bit for bit.
+    pub fn identity(model: ModelKind) -> ModelVariant {
+        ModelVariant {
+            depth_frac: 1.0,
+            precision: Precision::Fp16,
+            input_res: 640,
+            accuracy: model.map(),
+            perf_mult: 1.0,
+            power_mult: 1.0,
+            mem_mult: 1.0,
+        }
+    }
+
+    /// Whether every multiplier is exactly 1 (the structural-skip guard:
+    /// identity variants must not touch the legacy surface at all).
+    pub fn is_identity(&self) -> bool {
+        self.perf_mult == 1.0 && self.power_mult == 1.0 && self.mem_mult == 1.0
+    }
+
+    /// The baseline cost profile with this variant's multipliers
+    /// applied. Identity variants return the profile untouched.
+    pub fn scaled_profile(&self, model: ModelKind) -> CostProfile {
+        let p = model.profile();
+        if self.is_identity() {
+            return p;
+        }
+        CostProfile {
+            gpu_work: p.gpu_work / self.perf_mult,
+            cpu_work: p.cpu_work / self.perf_mult,
+            mem_work: p.mem_work / self.perf_mult,
+            mem_gb_per_instance: p.mem_gb_per_instance * self.mem_mult,
+            mem_gb_base: p.mem_gb_base * self.mem_mult,
+        }
+    }
+
+    /// Short human-readable label (`fp16-640`, `int8-416-d0.75`).
+    pub fn label(&self) -> String {
+        if self.depth_frac < 1.0 {
+            format!("{}-{}-d{:.2}", self.precision, self.input_res, self.depth_frac)
+        } else {
+            format!("{}-{}", self.precision, self.input_res)
+        }
+    }
+
+    /// Content words for cache identity (bit-exact field encoding).
+    fn words(&self) -> [u64; 7] {
+        [
+            self.depth_frac.to_bits(),
+            self.precision.id(),
+            self.input_res as u64,
+            self.accuracy.to_bits(),
+            self.perf_mult.to_bits(),
+            self.power_mult.to_bits(),
+            self.mem_mult.to_bits(),
+        ]
+    }
+}
+
+/// Why a manifest was rejected — each case names the violated invariant
+/// (and the first offending entry), so property tests can assert the
+/// *specific* failure rather than a blanket error.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ManifestError {
+    /// No variants at all.
+    Empty,
+    /// Entry 0 must be the full-accuracy baseline (all multipliers 1,
+    /// full depth).
+    BaselineNotIdentity,
+    /// A field of entry `index` is out of its domain.
+    BadValue { index: usize, field: &'static str },
+    /// Entry `index` keeps less depth than the `min_runnable` floor.
+    BelowDepthFloor { index: usize },
+    /// Entry `index` is not strictly cheaper than its predecessor
+    /// (perf_mult must strictly increase; power/memory multipliers must
+    /// not increase).
+    CostNotDecreasing { index: usize },
+    /// Entry `index` claims more accuracy than its (cheaper) predecessor.
+    AccuracyIncreased { index: usize },
+}
+
+impl fmt::Display for ManifestError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ManifestError::Empty => write!(f, "manifest has no variants"),
+            ManifestError::BaselineNotIdentity => {
+                write!(f, "variant 0 must be the identity baseline")
+            }
+            ManifestError::BadValue { index, field } => {
+                write!(f, "variant {index}: field '{field}' out of domain")
+            }
+            ManifestError::BelowDepthFloor { index } => {
+                write!(f, "variant {index}: depth below the min_runnable floor")
+            }
+            ManifestError::CostNotDecreasing { index } => {
+                write!(f, "variant {index}: not strictly cheaper than its predecessor")
+            }
+            ManifestError::AccuracyIncreased { index } => {
+                write!(f, "variant {index}: accuracy above its cheaper predecessor")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ManifestError {}
+
+/// A validated, ordered family of runnable variants of one model.
+///
+/// Invariants (checked by [`VariantManifest::new`], in this order so
+/// rejection is deterministic):
+/// 1. non-empty;
+/// 2. every entry's fields are in domain (depth ∈ (0, 1], resolution ∈
+///    [64, 2048], accuracy ∈ (0, 100], perf_mult ≥ 1, power/mem
+///    multipliers ∈ (0, 1], all finite);
+/// 3. every entry keeps at least `min_runnable` depth (the PB-AI
+///    validity floor);
+/// 4. entry 0 is the identity baseline;
+/// 5. cost strictly decreases along the list (perf_mult strictly
+///    increases, power_mult and mem_mult never increase);
+/// 6. accuracy never increases along the list.
+#[derive(Debug, Clone, PartialEq)]
+pub struct VariantManifest {
+    model: ModelKind,
+    variants: Vec<ModelVariant>,
+    min_runnable_depth: f64,
+}
+
+impl VariantManifest {
+    /// Default PB-AI-style validity floor: variants keeping less than
+    /// half the network are rejected as unrunnable.
+    pub const DEFAULT_MIN_RUNNABLE_DEPTH: f64 = 0.5;
+
+    /// Validate and build a manifest. `min_runnable_depth` is the floor
+    /// below which entries are rejected (must itself lie in (0, 1]).
+    pub fn new(
+        model: ModelKind,
+        variants: Vec<ModelVariant>,
+        min_runnable_depth: f64,
+    ) -> Result<VariantManifest, ManifestError> {
+        assert!(
+            min_runnable_depth > 0.0 && min_runnable_depth <= 1.0,
+            "min_runnable_depth must be in (0, 1]: {min_runnable_depth}"
+        );
+        if variants.is_empty() {
+            return Err(ManifestError::Empty);
+        }
+        for (i, v) in variants.iter().enumerate() {
+            let bad = |field| ManifestError::BadValue { index: i, field };
+            if !(v.depth_frac.is_finite() && v.depth_frac > 0.0 && v.depth_frac <= 1.0) {
+                return Err(bad("depth_frac"));
+            }
+            if !(64..=2048).contains(&v.input_res) {
+                return Err(bad("input_res"));
+            }
+            if !(v.accuracy.is_finite() && v.accuracy > 0.0 && v.accuracy <= 100.0) {
+                return Err(bad("accuracy"));
+            }
+            if !(v.perf_mult.is_finite() && v.perf_mult >= 1.0) {
+                return Err(bad("perf_mult"));
+            }
+            if !(v.power_mult.is_finite() && v.power_mult > 0.0 && v.power_mult <= 1.0) {
+                return Err(bad("power_mult"));
+            }
+            if !(v.mem_mult.is_finite() && v.mem_mult > 0.0 && v.mem_mult <= 1.0) {
+                return Err(bad("mem_mult"));
+            }
+            if v.depth_frac < min_runnable_depth {
+                return Err(ManifestError::BelowDepthFloor { index: i });
+            }
+        }
+        if !(variants[0].is_identity() && variants[0].depth_frac == 1.0) {
+            return Err(ManifestError::BaselineNotIdentity);
+        }
+        for i in 1..variants.len() {
+            let (prev, cur) = (&variants[i - 1], &variants[i]);
+            if cur.perf_mult <= prev.perf_mult
+                || cur.power_mult > prev.power_mult
+                || cur.mem_mult > prev.mem_mult
+            {
+                return Err(ManifestError::CostNotDecreasing { index: i });
+            }
+            if cur.accuracy > prev.accuracy {
+                return Err(ManifestError::AccuracyIncreased { index: i });
+            }
+        }
+        Ok(VariantManifest { model, variants, min_runnable_depth })
+    }
+
+    /// The singleton identity manifest — the default on every device,
+    /// under which all surfaces are byte-identical to the pre-variant
+    /// model.
+    pub fn full(model: ModelKind) -> VariantManifest {
+        VariantManifest {
+            model,
+            variants: vec![ModelVariant::identity(model)],
+            min_runnable_depth: Self::DEFAULT_MIN_RUNNABLE_DEPTH,
+        }
+    }
+
+    /// The standard degraded family used by the accuracy scenarios:
+    /// fp16 baseline, int8 at full resolution, int8 at 512 px, and a
+    /// three-quarter-depth int8 at 416 px. Multipliers follow the usual
+    /// TensorRT int8/resolution scaling on Jetson-class boards; mAP
+    /// deltas are the typical post-training-quantization and
+    /// small-input losses.
+    pub fn standard(model: ModelKind) -> VariantManifest {
+        let map = model.map();
+        let v = |depth, precision, res, acc, perf, power, mem| ModelVariant {
+            depth_frac: depth,
+            precision,
+            input_res: res,
+            accuracy: acc,
+            perf_mult: perf,
+            power_mult: power,
+            mem_mult: mem,
+        };
+        VariantManifest::new(
+            model,
+            vec![
+                ModelVariant::identity(model),
+                v(1.0, Precision::Int8, 640, map - 1.2, 1.55, 0.90, 0.72),
+                v(1.0, Precision::Int8, 512, map - 3.0, 2.15, 0.86, 0.64),
+                v(0.75, Precision::Int8, 416, map - 5.8, 2.90, 0.82, 0.50),
+            ],
+            Self::DEFAULT_MIN_RUNNABLE_DEPTH,
+        )
+        .expect("the standard family satisfies its own invariants")
+    }
+
+    pub fn model(&self) -> ModelKind {
+        self.model
+    }
+
+    pub fn variants(&self) -> &[ModelVariant] {
+        &self.variants
+    }
+
+    pub fn len(&self) -> usize {
+        self.variants.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.variants.is_empty()
+    }
+
+    /// Whether this is the trivial single-variant manifest (the variant
+    /// axis stays a legacy singleton).
+    pub fn is_singleton(&self) -> bool {
+        self.variants.len() == 1
+    }
+
+    /// The validity floor this manifest was validated against.
+    pub fn min_runnable_depth(&self) -> f64 {
+        self.min_runnable_depth
+    }
+
+    /// The variant a `Dim::Variant` grid value indexes. Panics on an
+    /// out-of-range index — the config space and manifest are built
+    /// together, so a miss is a wiring bug, not a runtime condition.
+    pub fn get(&self, index: u32) -> &ModelVariant {
+        &self.variants[index as usize]
+    }
+
+    /// Content words for cache identity: two manifests hash equal iff
+    /// every field of every variant (and the model and floor) is
+    /// bit-identical. Feeds `SimEnv::fingerprint`, so cached
+    /// measurements never replay across different manifests.
+    pub fn content_words(&self) -> Vec<u64> {
+        let mut words = vec![
+            self.model.id(),
+            self.min_runnable_depth.to_bits(),
+            self.variants.len() as u64,
+        ];
+        for v in &self.variants {
+            words.extend_from_slice(&v.words());
+        }
+        words
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    fn standard_all() -> Vec<VariantManifest> {
+        ModelKind::ALL.iter().map(|m| VariantManifest::standard(*m)).collect()
+    }
+
+    #[test]
+    fn full_manifest_is_identity_singleton() {
+        for m in ModelKind::ALL {
+            let f = VariantManifest::full(m);
+            assert!(f.is_singleton());
+            assert!(f.get(0).is_identity());
+            assert_eq!(f.get(0).accuracy, m.map());
+            assert_eq!(f.get(0).scaled_profile(m), m.profile());
+        }
+    }
+
+    #[test]
+    fn standard_manifests_validate_and_degrade() {
+        for man in standard_all() {
+            assert_eq!(man.len(), 4);
+            assert!(man.get(0).is_identity());
+            for w in man.variants().windows(2) {
+                assert!(w[1].perf_mult > w[0].perf_mult, "strictly cheaper");
+                assert!(w[1].accuracy < w[0].accuracy, "strictly less accurate here");
+                assert!(w[1].power_mult <= w[0].power_mult);
+                assert!(w[1].mem_mult <= w[0].mem_mult);
+            }
+        }
+    }
+
+    #[test]
+    fn scaled_profile_shrinks_work_and_memory() {
+        let man = VariantManifest::standard(ModelKind::RetinaNet);
+        let base = ModelKind::RetinaNet.profile();
+        let v = man.get(3);
+        let p = v.scaled_profile(ModelKind::RetinaNet);
+        assert!((p.gpu_work - base.gpu_work / v.perf_mult).abs() < 1e-9);
+        assert!((p.mem_gb_per_instance - base.mem_gb_per_instance * v.mem_mult).abs() < 1e-12);
+        assert!(p.gpu_work < base.gpu_work && p.mem_gb_base < base.mem_gb_base);
+    }
+
+    #[test]
+    fn rejections_name_the_violated_invariant() {
+        let m = ModelKind::Yolo;
+        let id = ModelVariant::identity(m);
+        let cheap = ModelVariant {
+            depth_frac: 1.0,
+            precision: Precision::Int8,
+            input_res: 640,
+            accuracy: 25.0,
+            perf_mult: 1.5,
+            power_mult: 0.9,
+            mem_mult: 0.7,
+        };
+        let floor = VariantManifest::DEFAULT_MIN_RUNNABLE_DEPTH;
+        assert_eq!(VariantManifest::new(m, vec![], floor), Err(ManifestError::Empty));
+        assert_eq!(
+            VariantManifest::new(m, vec![cheap], floor),
+            Err(ManifestError::BaselineNotIdentity)
+        );
+        let shallow = ModelVariant { depth_frac: 0.25, ..cheap };
+        assert_eq!(
+            VariantManifest::new(m, vec![id, shallow], floor),
+            Err(ManifestError::BelowDepthFloor { index: 1 })
+        );
+        let pricier = ModelVariant { perf_mult: 1.0, ..cheap };
+        assert_eq!(
+            VariantManifest::new(m, vec![id, pricier], floor),
+            Err(ManifestError::CostNotDecreasing { index: 1 })
+        );
+        let magic = ModelVariant { accuracy: 99.0, ..cheap };
+        assert_eq!(
+            VariantManifest::new(m, vec![id, magic], floor),
+            Err(ManifestError::AccuracyIncreased { index: 1 })
+        );
+        let nan = ModelVariant { power_mult: f64::NAN, ..cheap };
+        assert_eq!(
+            VariantManifest::new(m, vec![id, nan], floor),
+            Err(ManifestError::BadValue { index: 1, field: "power_mult" })
+        );
+        assert_eq!(
+            VariantManifest::new(m, vec![id, ModelVariant { input_res: 16, ..cheap }], floor),
+            Err(ManifestError::BadValue { index: 1, field: "input_res" })
+        );
+    }
+
+    #[test]
+    fn content_words_distinguish_any_field_change() {
+        let a = VariantManifest::standard(ModelKind::Yolo);
+        let b = VariantManifest::standard(ModelKind::Frcnn);
+        assert_ne!(a.content_words(), b.content_words(), "different model");
+        assert_ne!(
+            a.content_words(),
+            VariantManifest::full(ModelKind::Yolo).content_words(),
+            "different variant list"
+        );
+        // A one-ulp nudge to one multiplier of one entry must change
+        // the words — cache entries may never replay across manifests.
+        let mut tweaked = a.variants().to_vec();
+        tweaked[2].power_mult = f64::from_bits(tweaked[2].power_mult.to_bits() + 1);
+        let t = VariantManifest::new(
+            ModelKind::Yolo,
+            tweaked,
+            VariantManifest::DEFAULT_MIN_RUNNABLE_DEPTH,
+        )
+        .unwrap();
+        assert_ne!(a.content_words(), t.content_words());
+        assert_eq!(
+            a.content_words(),
+            VariantManifest::standard(ModelKind::Yolo).content_words(),
+            "reconstruction is bit-stable"
+        );
+    }
+
+    #[test]
+    fn labels_read_naturally() {
+        let man = VariantManifest::standard(ModelKind::Yolo);
+        assert_eq!(man.get(0).label(), "fp16-640");
+        assert_eq!(man.get(1).label(), "int8-640");
+        assert_eq!(man.get(3).label(), "int8-416-d0.75");
+    }
+
+    /// Satellite: ≥100-case seeded property — a randomly generated
+    /// manifest either validates, or is rejected with the *specific*
+    /// invariant its construction violated.
+    #[test]
+    fn prop_random_manifests_validate_or_name_their_violation() {
+        prop::check("manifest validation is total and specific", 300, |g| {
+            let model = *g.rng.choose(&ModelKind::ALL);
+            let floor = 0.5;
+            let n = g.rng.range_usize(1, 6);
+            // Build a valid-by-construction family...
+            let mut variants = vec![ModelVariant::identity(model)];
+            let mut perf = 1.0;
+            let mut power = 1.0;
+            let mut mem = 1.0;
+            let mut acc = model.map();
+            for _ in 1..n {
+                perf += g.rng.range_f64(0.05, 1.0);
+                power *= g.rng.range_f64(0.85, 1.0);
+                mem *= g.rng.range_f64(0.7, 1.0);
+                acc -= g.rng.range_f64(0.0, 3.0);
+                variants.push(ModelVariant {
+                    depth_frac: g.rng.range_f64(floor, 1.0),
+                    precision: Precision::Int8,
+                    input_res: 64 + 32 * g.rng.below(60) as u32,
+                    accuracy: acc.max(1.0),
+                    perf_mult: perf,
+                    power_mult: power,
+                    mem_mult: mem,
+                });
+            }
+            // ... then maybe inject one specific violation.
+            let expect = match g.rng.below(6) {
+                0 => {
+                    variants.clear();
+                    Some(ManifestError::Empty)
+                }
+                1 => {
+                    variants[0].perf_mult = 1.2;
+                    Some(ManifestError::BaselineNotIdentity)
+                }
+                2 if n > 1 => {
+                    let i = g.rng.range_usize(1, n - 1);
+                    variants[i].mem_mult = f64::NAN;
+                    Some(ManifestError::BadValue { index: i, field: "mem_mult" })
+                }
+                3 if n > 1 => {
+                    let i = g.rng.range_usize(1, n - 1);
+                    variants[i].depth_frac = floor / 2.0;
+                    Some(ManifestError::BelowDepthFloor { index: i })
+                }
+                4 if n > 1 => {
+                    let i = g.rng.range_usize(1, n - 1);
+                    variants[i].perf_mult = variants[i - 1].perf_mult;
+                    Some(ManifestError::CostNotDecreasing { index: i })
+                }
+                5 if n > 1 => {
+                    let i = g.rng.range_usize(1, n - 1);
+                    variants[i].accuracy = variants[i - 1].accuracy + 0.5;
+                    Some(ManifestError::AccuracyIncreased { index: i })
+                }
+                _ => None,
+            };
+            let got = VariantManifest::new(model, variants.clone(), floor);
+            match expect {
+                Some(err) => prop::assert_true(
+                    got == Err(err),
+                    &format!("expected {err:?}, got {got:?}"),
+                ),
+                None => {
+                    let man = got.map_err(|e| format!("valid family rejected: {e}"))?;
+                    prop::assert_true(man.len() == n, "length preserved")?;
+                    prop::assert_eq_dbg(&man.variants().to_vec(), &variants)
+                }
+            }
+        });
+    }
+}

@@ -10,10 +10,14 @@
 //!   detectors actually executed on the PJRT CPU runtime by the serving
 //!   path ([`crate::runtime`]).
 
+pub mod manifest;
+
 use std::fmt;
 use std::path::{Path, PathBuf};
 
 use crate::util::json::Json;
+
+pub use manifest::{ManifestError, ModelVariant, Precision, VariantManifest};
 
 /// The three evaluation models (paper Table 3).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
@@ -72,6 +76,21 @@ impl ModelKind {
             ModelKind::Frcnn => 1,
             ModelKind::RetinaNet => 2,
         }
+    }
+
+    /// The trivial single-variant manifest of this model (the default
+    /// on every device — surfaces stay byte-identical to the
+    /// pre-variant model).
+    pub fn full_variants(self) -> VariantManifest {
+        VariantManifest::full(self)
+    }
+
+    /// The standard degraded-variant family of this model (int8 /
+    /// reduced-resolution / reduced-depth entries; see
+    /// [`VariantManifest::standard`]) — what the accuracy scenarios
+    /// and `coral variants` search over.
+    pub fn standard_variants(self) -> VariantManifest {
+        VariantManifest::standard(self)
     }
 
     /// Jetson-class cost profile consumed by the device simulator.
@@ -278,6 +297,30 @@ mod tests {
             .is_err());
         assert!(Manifest::parse("{}", Path::new(".")).is_err());
         assert!(Manifest::parse("not json", Path::new(".")).is_err());
+    }
+
+    #[test]
+    fn variant_manifests_wire_through_the_registry() {
+        // `models::manifest` is reached through `ModelKind`, not beside
+        // it: the registry hands out both families, anchored on its own
+        // Table-3 numbers.
+        for m in ModelKind::ALL {
+            let full = m.full_variants();
+            assert!(full.is_singleton());
+            assert_eq!(full.model(), m);
+            assert_eq!(full.get(0).accuracy, m.map());
+            let std = m.standard_variants();
+            assert_eq!(std.model(), m);
+            assert!(std.len() > 1);
+            assert_eq!(std.get(0).accuracy, m.map(), "baseline = Table 3 mAP");
+            let worst = std.variants().last().unwrap();
+            assert!(worst.accuracy < m.map() && worst.accuracy > 0.0);
+            // The degraded profiles feed the same simulator fields the
+            // full profile does, just scaled.
+            let p = worst.scaled_profile(m);
+            assert!(p.gpu_work < m.profile().gpu_work);
+            assert!(p.mem_gb_per_instance < m.profile().mem_gb_per_instance);
+        }
     }
 
     #[test]

@@ -109,6 +109,7 @@ impl Optimizer for AlertOptimizer {
         throughput_fps: f64,
         power_mw: f64,
         p99_latency_ms: f64,
+        accuracy: f64,
     ) {
         if let Some(i) = self.last_idx.take() {
             let e = self.profile[i];
@@ -117,12 +118,13 @@ impl Optimizer for AlertOptimizer {
                 self.kp.update(power_mw / e.power_mw);
             }
         }
-        let out = reward(&self.cons, throughput_fps, power_mw, p99_latency_ms);
+        let out = reward(&self.cons, throughput_fps, power_mw, p99_latency_ms, accuracy);
         let cand = BestConfig {
             config,
             throughput_fps,
             power_mw,
             p99_latency_ms,
+            accuracy,
             reward: out.reward,
             feasible: out.feasible,
         };
@@ -213,7 +215,7 @@ mod tests {
         let mut opt = AlertOptimizer::new(profile, Constraints::none(), 1);
         for _ in 0..50 {
             let c = opt.propose();
-            opt.observe(c, 24.0, 6600.0, 10.0); // env runs 20 % slower, 10 % hotter
+            opt.observe(c, 24.0, 6600.0, 10.0, 27.6); // env runs 20 % slower, 10 % hotter
         }
         assert!((opt.kt.estimate() - 0.8).abs() < 0.05);
         assert!((opt.kp.estimate() - 1.1).abs() < 0.05);

@@ -49,14 +49,16 @@ impl Optimizer for AlertOnlineOptimizer {
         throughput_fps: f64,
         power_mw: f64,
         p99_latency_ms: f64,
+        accuracy: f64,
     ) {
         self.tried.push(config);
-        let out = reward(&self.cons, throughput_fps, power_mw, p99_latency_ms);
+        let out = reward(&self.cons, throughput_fps, power_mw, p99_latency_ms, accuracy);
         let cand = BestConfig {
             config,
             throughput_fps,
             power_mw,
             p99_latency_ms,
+            accuracy,
             reward: out.reward,
             feasible: out.feasible,
         };
@@ -128,7 +130,7 @@ mod tests {
             let c = opt.propose();
             assert!(seen.insert(c), "repeat proposal {c}");
             let m = dev.run(c);
-            opt.observe(c, m.throughput_fps, m.power_mw, m.p99_latency_ms);
+            opt.observe(c, m.throughput_fps, m.power_mw, m.p99_latency_ms, m.accuracy);
         }
     }
 }

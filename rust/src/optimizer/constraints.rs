@@ -35,6 +35,10 @@ pub struct Constraints {
     /// p99 latency SLO (ms): p99(s) ≤ slo required. `None` disables the
     /// clause — closed-loop scenarios never set it.
     pub latency_slo_ms: Option<f64>,
+    /// Accuracy floor (modeled mAP): acc(s) ≥ floor required. `None`
+    /// disables the clause — fixed-model scenarios never set it; it only
+    /// bites when the configuration space carries a real variant axis.
+    pub min_accuracy: Option<f64>,
     /// Ranking objective.
     pub objective: Objective,
 }
@@ -55,6 +59,7 @@ impl Constraints {
             power_budget_mw: None,
             power_floor_mw: 0.0,
             latency_slo_ms: None,
+            min_accuracy: None,
             objective: Objective::Throughput,
         }
     }
@@ -66,6 +71,7 @@ impl Constraints {
             power_budget_mw: finite(Some(power_mw)),
             power_floor_mw: 0.0,
             latency_slo_ms: None,
+            min_accuracy: None,
             objective: Objective::Efficiency,
         }
     }
@@ -78,6 +84,7 @@ impl Constraints {
             power_budget_mw: None,
             power_floor_mw: 0.0,
             latency_slo_ms: None,
+            min_accuracy: None,
             objective: Objective::Efficiency,
         }
     }
@@ -89,6 +96,7 @@ impl Constraints {
             power_budget_mw: None,
             power_floor_mw: 0.0,
             latency_slo_ms: None,
+            min_accuracy: None,
             objective: Objective::Efficiency,
         }
     }
@@ -101,6 +109,13 @@ impl Constraints {
     /// Add a p99 latency SLO (ms). Non-finite values disable the clause.
     pub fn with_latency_slo(mut self, slo_ms: f64) -> Constraints {
         self.latency_slo_ms = finite(Some(slo_ms));
+        self
+    }
+
+    /// Add an accuracy floor (modeled mAP). Non-finite values disable
+    /// the clause.
+    pub fn with_min_accuracy(mut self, map: f64) -> Constraints {
+        self.min_accuracy = finite(Some(map));
         self
     }
 
@@ -126,17 +141,34 @@ impl Constraints {
         true
     }
 
-    /// Full satisfaction check for arrival-driven measurements: Eq. 6
-    /// plus the p99 latency clause. A shed configuration (p99 = ∞)
-    /// fails any active SLO.
-    pub fn satisfied(&self, throughput_fps: f64, power_mw: f64, p99_latency_ms: f64) -> bool {
-        self.feasible(throughput_fps, power_mw) && self.latency_ok(p99_latency_ms)
+    /// Full satisfaction check for one measurement: Eq. 6 plus the p99
+    /// latency clause plus the accuracy floor. A shed configuration
+    /// (p99 = ∞) fails any active SLO; a failed window (accuracy 0)
+    /// fails any active floor.
+    pub fn satisfied(
+        &self,
+        throughput_fps: f64,
+        power_mw: f64,
+        p99_latency_ms: f64,
+        accuracy: f64,
+    ) -> bool {
+        self.feasible(throughput_fps, power_mw)
+            && self.latency_ok(p99_latency_ms)
+            && self.accuracy_ok(accuracy)
     }
 
     /// The p99 latency clause alone (`true` when no SLO is set).
     pub fn latency_ok(&self, p99_latency_ms: f64) -> bool {
         match self.latency_slo_ms {
             Some(slo) => p99_latency_ms <= slo,
+            None => true,
+        }
+    }
+
+    /// The accuracy clause alone (`true` when no floor is set).
+    pub fn accuracy_ok(&self, accuracy: f64) -> bool {
+        match self.min_accuracy {
+            Some(floor) => accuracy >= floor,
             None => true,
         }
     }
@@ -175,6 +207,9 @@ impl Constraints {
         }
         if let Some(l) = self.latency_slo_ms {
             parts.push(format!("p99<={l:.0}ms"));
+        }
+        if let Some(a) = self.min_accuracy {
+            parts.push(format!("acc>={a:.1}mAP"));
         }
         if parts.is_empty() {
             parts.push(match self.objective {
@@ -250,14 +285,34 @@ mod tests {
     fn latency_slo_clause() {
         let c = Constraints::dual(25.0, 6500.0).with_latency_slo(80.0);
         assert_eq!(c.latency_slo_ms, Some(80.0));
-        assert!(c.satisfied(30.0, 6000.0, 79.9));
-        assert!(c.satisfied(30.0, 6000.0, 80.0), "boundary is inclusive");
-        assert!(!c.satisfied(30.0, 6000.0, 80.1), "tail too long");
-        assert!(!c.satisfied(30.0, 6000.0, f64::INFINITY), "shed violates the SLO");
-        assert!(!c.satisfied(20.0, 6000.0, 10.0), "Eq. 6 still applies");
+        assert!(c.satisfied(30.0, 6000.0, 79.9, 30.0));
+        assert!(c.satisfied(30.0, 6000.0, 80.0, 30.0), "boundary is inclusive");
+        assert!(!c.satisfied(30.0, 6000.0, 80.1, 30.0), "tail too long");
+        assert!(!c.satisfied(30.0, 6000.0, f64::INFINITY, 30.0), "shed violates the SLO");
+        assert!(!c.satisfied(20.0, 6000.0, 10.0, 30.0), "Eq. 6 still applies");
         // Without an SLO, satisfied == feasible for any p99.
         let d = Constraints::dual(25.0, 6500.0);
-        assert!(d.satisfied(30.0, 6000.0, f64::INFINITY));
+        assert!(d.satisfied(30.0, 6000.0, f64::INFINITY, 30.0));
+    }
+
+    #[test]
+    fn accuracy_floor_clause() {
+        let c = Constraints::dual(25.0, 6500.0).with_min_accuracy(26.0);
+        assert_eq!(c.min_accuracy, Some(26.0));
+        assert!(c.accuracy_ok(27.6));
+        assert!(c.accuracy_ok(26.0), "boundary is inclusive");
+        assert!(!c.accuracy_ok(24.6), "degraded below the floor");
+        assert!(!c.accuracy_ok(0.0), "failed windows carry accuracy 0");
+        assert!(c.satisfied(30.0, 6000.0, 0.0, 27.6));
+        assert!(!c.satisfied(30.0, 6000.0, 0.0, 24.6), "floor is a fourth clause");
+        assert!(!c.satisfied(20.0, 6000.0, 0.0, 27.6), "Eq. 6 still applies");
+        // Non-finite floors disable the clause; no floor accepts anything.
+        for bad in [f64::INFINITY, f64::NEG_INFINITY, f64::NAN] {
+            let s = Constraints::none().with_min_accuracy(bad);
+            assert_eq!(s.min_accuracy, None);
+            assert!(s.accuracy_ok(0.0), "disabled floor passes even failures");
+        }
+        assert!(Constraints::dual(25.0, 6500.0).accuracy_ok(0.0));
     }
 
     #[test]
@@ -271,6 +326,10 @@ mod tests {
     fn describe_lists_active_clauses() {
         let c = Constraints::dual(30.0, 6500.0).with_latency_slo(80.0);
         assert_eq!(c.describe(), "tput>=30fps power<=6500mW p99<=80ms");
+        assert_eq!(
+            Constraints::dual(30.0, 6500.0).with_min_accuracy(26.4).describe(),
+            "tput>=30fps power<=6500mW acc>=26.4mAP"
+        );
         assert_eq!(Constraints::max_throughput().describe(), "max-throughput");
         assert_eq!(Constraints::none().describe(), "unconstrained");
     }

@@ -119,6 +119,7 @@ struct Scored {
     throughput_fps: f64,
     power_mw: f64,
     p99_latency_ms: f64,
+    accuracy: f64,
     reward: f64,
     feasible: bool,
 }
@@ -244,6 +245,11 @@ impl CoralOptimizer {
                     // never explore batching. On legacy singleton axes
                     // max = min = 1 — the probe is unchanged there.
                     c.max_batch = self.space.max(Dim::BatchCap);
+                    // Same discipline for the variant axis: probe the
+                    // most-degraded variant so |best − second| spans the
+                    // seventh dimension and the search can trade accuracy.
+                    // Singleton (legacy) axes leave the probe unchanged.
+                    c.variant = self.space.max(Dim::Variant);
                     c
                 };
                 return self.next_untried(z);
@@ -403,6 +409,7 @@ impl Optimizer for CoralOptimizer {
         throughput_fps: f64,
         power_mw: f64,
         p99_latency_ms: f64,
+        accuracy: f64,
     ) {
         self.iter += 1;
         self.pending = None;
@@ -412,7 +419,7 @@ impl Optimizer for CoralOptimizer {
         // that violates the latency SLO joins PS like any other
         // constraint violation — the tail is a property of the
         // configuration under the current offered load.
-        let out = reward(&self.cons, throughput_fps, power_mw, p99_latency_ms);
+        let out = reward(&self.cons, throughput_fps, power_mw, p99_latency_ms, accuracy);
         if !out.feasible {
             self.prohibited.insert(config); // PS.APPEND(x)
         }
@@ -421,6 +428,7 @@ impl Optimizer for CoralOptimizer {
             throughput_fps,
             power_mw,
             p99_latency_ms,
+            accuracy,
             reward: out.reward,
             feasible: out.feasible,
         };
@@ -471,6 +479,7 @@ impl Optimizer for CoralOptimizer {
             throughput_fps: b.throughput_fps,
             power_mw: b.power_mw,
             p99_latency_ms: b.p99_latency_ms,
+            accuracy: b.accuracy,
             reward: b.reward,
             feasible: b.feasible,
         })
@@ -583,8 +592,8 @@ mod tests {
                     "re-proposed a prohibited config",
                 )?;
                 let m = device.run(cfg);
-                opt.observe(cfg, m.throughput_fps, m.power_mw, m.p99_latency_ms);
-                if !reward(&dual_cons(dev), m.throughput_fps, m.power_mw, m.p99_latency_ms)
+                opt.observe(cfg, m.throughput_fps, m.power_mw, m.p99_latency_ms, m.accuracy);
+                if !reward(&dual_cons(dev), m.throughput_fps, m.power_mw, m.p99_latency_ms, m.accuracy)
                     .feasible
                 {
                     seen_prohibited.push(cfg);
@@ -607,7 +616,7 @@ mod tests {
                 let cfg = opt.propose();
                 prop::assert_true(space.contains(&cfg), "on grid")?;
                 let m = device.run(cfg);
-                opt.observe(cfg, m.throughput_fps, m.power_mw, m.p99_latency_ms);
+                opt.observe(cfg, m.throughput_fps, m.power_mw, m.p99_latency_ms, m.accuracy);
             }
             Ok(())
         });
@@ -642,9 +651,9 @@ mod tests {
         let mut opt = CoralOptimizer::new(space.clone(), Constraints::none(), 1);
         let a = space.midpoint();
         let b = a.with(Dim::GpuFreq, 510);
-        opt.observe(a, 30.0, 6000.0, 10.0);
-        opt.observe(a, 31.0, 6000.0, 10.0); // same config better score
-        opt.observe(b, 20.0, 5000.0, 10.0);
+        opt.observe(a, 30.0, 6000.0, 10.0, 27.6);
+        opt.observe(a, 31.0, 6000.0, 10.0, 27.6); // same config better score
+        opt.observe(b, 20.0, 5000.0, 10.0, 27.6);
         assert_eq!(opt.best().unwrap().config, a);
         assert_eq!(opt.second.unwrap().config, b);
     }
@@ -655,7 +664,7 @@ mod tests {
         let mut opt =
             CoralOptimizer::new(space.clone(), Constraints::dual(30.0, 6500.0), 1);
         let c = space.midpoint();
-        opt.observe(c, 0.0, 2350.0, f64::INFINITY);
+        opt.observe(c, 0.0, 2350.0, f64::INFINITY, 0.0);
         assert_eq!(opt.prohibited_len(), 1);
         assert_eq!(opt.window.len(), 0);
         assert_eq!(opt.best().unwrap().reward, f64::NEG_INFINITY);
@@ -678,7 +687,7 @@ mod tests {
         for _ in 0..140 {
             let c = opt.propose();
             let m = device.run(c);
-            opt.observe(c, m.throughput_fps, m.power_mw, m.p99_latency_ms);
+            opt.observe(c, m.throughput_fps, m.power_mw, m.p99_latency_ms, m.accuracy);
         }
         assert!(
             opt.window_len() > crate::stats::dcov::FAST_PATH_MIN_N,
@@ -700,8 +709,8 @@ mod tests {
         let mut opt = CoralOptimizer::new(space.clone(), cons, 7);
         let a = space.midpoint();
         let b = a.with(Dim::GpuFreq, 510);
-        opt.observe(a, 10.0, 9000.0, 10.0); // infeasible both ways -> PS
-        opt.observe(b, 35.0, 6000.0, 10.0); // feasible
+        opt.observe(a, 10.0, 9000.0, 10.0, 27.6); // infeasible both ways -> PS
+        opt.observe(b, 35.0, 6000.0, 10.0, 27.6); // feasible
         assert_eq!(opt.prohibited_len(), 1);
         assert_eq!(opt.window_len(), 2);
         assert!(opt.best().is_some());
@@ -717,7 +726,7 @@ mod tests {
         for _ in 0..12 {
             let cfg = opt.propose();
             assert_ne!(cfg, a, "prohibited config re-proposed after reset");
-            opt.observe(cfg, 20.0, 5000.0, 10.0);
+            opt.observe(cfg, 20.0, 5000.0, 10.0, 27.6);
         }
     }
 
@@ -726,9 +735,9 @@ mod tests {
         let space = DeviceKind::XavierNx.space();
         let mut opt = CoralOptimizer::new(space.clone(), Constraints::none(), 1);
         let c = space.midpoint();
-        opt.observe(c, 30.0, 6000.0, 10.0);
-        opt.observe(c, 0.0, 2000.0, f64::INFINITY); // crashed window: not recorded
-        opt.observe(c, 28.0, 5900.0, 10.0);
+        opt.observe(c, 30.0, 6000.0, 10.0, 27.6);
+        opt.observe(c, 0.0, 2000.0, f64::INFINITY, 0.0); // crashed window: not recorded
+        opt.observe(c, 28.0, 5900.0, 10.0, 27.6);
         assert_eq!(opt.window_throughputs(), &[30.0, 28.0]);
     }
 
@@ -753,7 +762,7 @@ mod tests {
             // A smooth synthetic response keeps the search moving.
             let fps = 30.0 + cfg.gpu_freq_mhz as f64 / 50.0;
             let mw = 4000.0 + 2.0 * cfg.gpu_freq_mhz as f64 + cfg.concurrency as f64;
-            opt.observe(cfg, fps, mw, 10.0);
+            opt.observe(cfg, fps, mw, 10.0, 27.6);
         }
         assert!(opt.best().is_some());
         // Probe 0 is the normalized default (mid knobs, min concurrency),
@@ -762,6 +771,40 @@ mod tests {
         for w in alpha.iter().chain(beta.iter()) {
             assert!((0.0..=1.0).contains(w), "weight {w}");
         }
+    }
+
+    #[test]
+    fn bootstrap_probe_spans_the_variant_axis() {
+        // On a space with a real variant axis the second bootstrap probe
+        // must pin `variant` to the axis max — otherwise the |best −
+        // second| spread along the seventh dimension is zero and Eq. 10
+        // never explores degraded variants.
+        let space = DeviceKind::XavierNx.space().with_variant_axis(4);
+        let mut opt = CoralOptimizer::new(space.clone(), Constraints::none(), 2);
+        let p0 = opt.propose();
+        assert_eq!(p0.variant, 0, "probe 0 is the full-accuracy default");
+        opt.observe(p0, 30.0, 6000.0, 10.0, 27.6);
+        let p1 = opt.propose();
+        assert_eq!(p1.variant, 3, "probe 1 spans the variant axis");
+        // Legacy singleton axis: the probe is unchanged (variant 0).
+        let legacy = DeviceKind::XavierNx.space();
+        let mut opt = CoralOptimizer::new(legacy, Constraints::none(), 2);
+        let p0 = opt.propose();
+        opt.observe(p0, 30.0, 6000.0, 10.0, 27.6);
+        assert_eq!(opt.propose().variant, 0);
+    }
+
+    #[test]
+    fn accuracy_floor_prohibits_variants_below_it() {
+        // A window served below the accuracy floor joins PS like any
+        // other constraint violation.
+        let space = DeviceKind::XavierNx.space().with_variant_axis(4);
+        let cons = Constraints::dual(30.0, 6500.0).with_min_accuracy(26.0);
+        let mut opt = CoralOptimizer::new(space.clone(), cons, 3);
+        let c = space.midpoint().with(Dim::Variant, 3);
+        opt.observe(c, 50.0, 5000.0, 10.0, 21.8); // fast, cheap, too coarse
+        assert_eq!(opt.prohibited_len(), 1);
+        assert!(!opt.best().unwrap().feasible);
     }
 
     #[test]

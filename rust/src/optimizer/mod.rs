@@ -41,6 +41,10 @@ pub struct BestConfig {
     /// latency under closed-loop measurement; carries the queueing tail
     /// under open-loop load (∞ for a shed window).
     pub p99_latency_ms: f64,
+    /// Modeled accuracy (mAP) of the variant the winning window served;
+    /// 0 for failed windows. Equals the model's full mAP everywhere on a
+    /// singleton-variant (legacy) space.
+    pub accuracy: f64,
     /// Reward score (efficiency τ/p for feasible configurations).
     pub reward: f64,
     /// Whether the configuration met all active constraints when measured.
@@ -57,7 +61,7 @@ pub struct BestConfig {
 /// for _ in 0..budget {
 ///     let cfg = opt.propose();
 ///     let m = env.measure(cfg);            // sim, live server, or fleet
-///     opt.observe(cfg, m.throughput_fps, m.power_mw, m.p99_latency_ms);
+///     opt.observe(cfg, m.throughput_fps, m.power_mw, m.p99_latency_ms, m.accuracy);
 /// }
 /// let chosen = opt.best();
 /// ```
@@ -67,13 +71,16 @@ pub trait Optimizer {
 
     /// Feed back the measured metrics of a proposed configuration.
     /// Failed configurations report `throughput_fps == 0.0`; shed
-    /// open-loop windows report `p99_latency_ms == f64::INFINITY`.
+    /// open-loop windows report `p99_latency_ms == f64::INFINITY`;
+    /// `accuracy` is the modeled mAP of the variant the window served
+    /// (0 for failed windows).
     fn observe(
         &mut self,
         config: HwConfig,
         throughput_fps: f64,
         power_mw: f64,
         p99_latency_ms: f64,
+        accuracy: f64,
     );
 
     /// Best configuration found so far (feasible preferred).
@@ -122,8 +129,9 @@ impl<T: Optimizer + ?Sized> Optimizer for Box<T> {
         throughput_fps: f64,
         power_mw: f64,
         p99_latency_ms: f64,
+        accuracy: f64,
     ) {
-        (**self).observe(config, throughput_fps, power_mw, p99_latency_ms)
+        (**self).observe(config, throughput_fps, power_mw, p99_latency_ms, accuracy)
     }
 
     fn best(&self) -> Option<BestConfig> {
@@ -162,7 +170,7 @@ mod tests {
         for _ in 0..iters {
             let cfg = opt.propose();
             let m = dev.run(cfg);
-            opt.observe(cfg, m.throughput_fps, m.power_mw, m.p99_latency_ms);
+            opt.observe(cfg, m.throughput_fps, m.power_mw, m.p99_latency_ms, m.accuracy);
         }
         opt.best()
     }

@@ -62,14 +62,16 @@ impl Optimizer for OracleOptimizer {
         throughput_fps: f64,
         power_mw: f64,
         p99_latency_ms: f64,
+        accuracy: f64,
     ) {
         self.measured += 1;
-        let out = reward(&self.cons, throughput_fps, power_mw, p99_latency_ms);
+        let out = reward(&self.cons, throughput_fps, power_mw, p99_latency_ms, accuracy);
         let cand = BestConfig {
             config,
             throughput_fps,
             power_mw,
             p99_latency_ms,
+            accuracy,
             reward: out.reward,
             feasible: out.feasible,
         };
@@ -107,7 +109,7 @@ mod tests {
         for _ in 0..n {
             let c = o.propose();
             let m = dev.run(c);
-            o.observe(c, m.throughput_fps, m.power_mw, m.p99_latency_ms);
+            o.observe(c, m.throughput_fps, m.power_mw, m.p99_latency_ms, m.accuracy);
         }
         assert!(o.done());
         let best = o.best().unwrap();
@@ -126,7 +128,7 @@ mod tests {
         for _ in 0..o.sweep_len() {
             let c = o.propose();
             let m = dev.run(c);
-            o.observe(c, m.throughput_fps, m.power_mw, m.p99_latency_ms);
+            o.observe(c, m.throughput_fps, m.power_mw, m.p99_latency_ms, m.accuracy);
         }
         assert!(!o.best().unwrap().feasible);
     }

@@ -73,14 +73,16 @@ impl Optimizer for PresetOptimizer {
         throughput_fps: f64,
         power_mw: f64,
         p99_latency_ms: f64,
+        accuracy: f64,
     ) {
-        let out = reward(&self.cons, throughput_fps, power_mw, p99_latency_ms);
+        let out = reward(&self.cons, throughput_fps, power_mw, p99_latency_ms, accuracy);
         // Keep the latest measurement (steady-state view of the preset).
         self.best = Some(BestConfig {
             config,
             throughput_fps,
             power_mw,
             p99_latency_ms,
+            accuracy,
             reward: out.reward,
             feasible: out.feasible,
         });
@@ -107,7 +109,7 @@ mod tests {
         let mut opt =
             PresetOptimizer::max_power(DeviceKind::XavierNx, Constraints::none());
         let first = opt.propose();
-        opt.observe(first, 10.0, 9000.0, 10.0);
+        opt.observe(first, 10.0, 9000.0, 10.0, 27.6);
         assert_eq!(opt.propose(), first);
     }
 

@@ -39,13 +39,15 @@ impl Optimizer for RandomOptimizer {
         throughput_fps: f64,
         power_mw: f64,
         p99_latency_ms: f64,
+        accuracy: f64,
     ) {
-        let out = reward(&self.cons, throughput_fps, power_mw, p99_latency_ms);
+        let out = reward(&self.cons, throughput_fps, power_mw, p99_latency_ms, accuracy);
         let cand = BestConfig {
             config,
             throughput_fps,
             power_mw,
             p99_latency_ms,
+            accuracy,
             reward: out.reward,
             feasible: out.feasible,
         };

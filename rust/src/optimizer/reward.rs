@@ -30,14 +30,23 @@ pub struct RewardOutcome {
 /// badly the tail missed (`p99 / slo`), so among violators the search
 /// still feels a gradient toward the SLO region and a shed window
 /// (p99 = ∞) ranks with crashes. With no SLO the score is untouched.
+///
+/// The variant extension adds the accuracy floor: when
+/// [`Constraints::min_accuracy`] is set, a window served below the floor
+/// is infeasible with the plain Eq. 8 penalty — the variant axis is
+/// discrete, so no shaped gradient is needed; the search simply learns
+/// which variants clear the floor. With no floor the `accuracy`
+/// argument is inert.
 pub fn reward(
     cons: &Constraints,
     throughput_fps: f64,
     power_mw: f64,
     p99_latency_ms: f64,
+    accuracy: f64,
 ) -> RewardOutcome {
     let p = power_mw.max(1e-9);
     let latency_ok = cons.latency_ok(p99_latency_ms);
+    let accuracy_ok = cons.accuracy_ok(accuracy);
     // Eq. 8 penalty, amplified by the SLO miss ratio when that is the
     // violated clause (ratio > 1 by construction; ∞ p99 → −∞ reward).
     let penalty = |t: f64| -> f64 {
@@ -50,8 +59,13 @@ pub fn reward(
     if cons.objective == Objective::Throughput {
         // Single-constraint throughput maximization (Figs 3–4): no
         // reachable target, so ranking is raw throughput among
-        // configurations that run within budget (and SLO, if any).
-        return if throughput_fps > 0.0 && power_mw <= cons.budget_or_inf() && latency_ok {
+        // configurations that run within budget (and SLO / accuracy
+        // floor, if any).
+        return if throughput_fps > 0.0
+            && power_mw <= cons.budget_or_inf()
+            && latency_ok
+            && accuracy_ok
+        {
             RewardOutcome { reward: throughput_fps, feasible: true }
         } else if throughput_fps <= 0.0 {
             RewardOutcome { reward: f64::NEG_INFINITY, feasible: false }
@@ -59,7 +73,7 @@ pub fn reward(
             RewardOutcome { reward: penalty(throughput_fps), feasible: false }
         };
     }
-    if cons.feasible(throughput_fps, power_mw) && latency_ok {
+    if cons.feasible(throughput_fps, power_mw) && latency_ok && accuracy_ok {
         RewardOutcome { reward: throughput_fps / p, feasible: true }
     } else if throughput_fps <= 0.0 {
         RewardOutcome { reward: f64::NEG_INFINITY, feasible: false }
@@ -76,7 +90,7 @@ mod tests {
     #[test]
     fn feasible_reward_is_efficiency() {
         let c = Constraints::dual(30.0, 6500.0);
-        let r = reward(&c, 33.0, 5500.0, 0.0);
+        let r = reward(&c, 33.0, 5500.0, 0.0, 30.0);
         assert!(r.feasible);
         assert!((r.reward - 33.0 / 5500.0).abs() < 1e-12);
     }
@@ -84,7 +98,7 @@ mod tests {
     #[test]
     fn infeasible_reward_is_negative_inverse() {
         let c = Constraints::dual(30.0, 6500.0);
-        let r = reward(&c, 20.0, 7000.0, 0.0);
+        let r = reward(&c, 20.0, 7000.0, 0.0, 30.0);
         assert!(!r.feasible);
         assert!((r.reward + 7000.0 / 20.0).abs() < 1e-12);
     }
@@ -92,7 +106,7 @@ mod tests {
     #[test]
     fn crashed_config_is_worst() {
         let c = Constraints::dual(30.0, 6500.0);
-        let r = reward(&c, 0.0, 2350.0, 0.0);
+        let r = reward(&c, 0.0, 2350.0, 0.0, 30.0);
         assert!(!r.feasible);
         assert_eq!(r.reward, f64::NEG_INFINITY);
     }
@@ -100,43 +114,66 @@ mod tests {
     #[test]
     fn throughput_objective_ranks_by_fps() {
         let c = Constraints::max_throughput();
-        let hi = reward(&c, 40.0, 9000.0, 0.0);
-        let lo = reward(&c, 30.0, 3000.0, 0.0);
+        let hi = reward(&c, 40.0, 9000.0, 0.0, 30.0);
+        let lo = reward(&c, 30.0, 3000.0, 0.0, 30.0);
         assert!(hi.feasible && lo.feasible);
         assert!(hi.reward > lo.reward, "raw fps ranking");
-        assert_eq!(reward(&c, 0.0, 2000.0, 0.0).reward, f64::NEG_INFINITY);
+        assert_eq!(reward(&c, 0.0, 2000.0, 0.0, 30.0).reward, f64::NEG_INFINITY);
     }
 
     #[test]
     fn slo_violation_is_infeasible_and_shaped() {
         let c = Constraints::dual(25.0, 6500.0).with_latency_slo(80.0);
-        let ok = reward(&c, 30.0, 6000.0, 50.0);
+        let ok = reward(&c, 30.0, 6000.0, 50.0, 30.0);
         assert!(ok.feasible);
         assert!((ok.reward - 30.0 / 6000.0).abs() < 1e-12);
         // Same window, tail past the SLO: infeasible, penalty scaled by
         // the miss ratio — a worse miss ranks strictly lower.
-        let near = reward(&c, 30.0, 6000.0, 100.0);
-        let far = reward(&c, 30.0, 6000.0, 400.0);
+        let near = reward(&c, 30.0, 6000.0, 100.0, 30.0);
+        let far = reward(&c, 30.0, 6000.0, 400.0, 30.0);
         assert!(!near.feasible && !far.feasible);
         assert!((near.reward + (6000.0 / 30.0) * (100.0 / 80.0)).abs() < 1e-9);
         assert!(far.reward < near.reward, "deeper SLO miss ranks lower");
         // A shed window (p99 = ∞) ranks with crashes.
-        assert_eq!(reward(&c, 30.0, 6000.0, f64::INFINITY).reward, f64::NEG_INFINITY);
+        assert_eq!(reward(&c, 30.0, 6000.0, f64::INFINITY, 30.0).reward, f64::NEG_INFINITY);
         // No SLO set: the p99 argument is inert.
         let d = Constraints::dual(25.0, 6500.0);
         assert_eq!(
-            reward(&d, 30.0, 6000.0, f64::INFINITY),
-            reward(&d, 30.0, 6000.0, 0.0),
+            reward(&d, 30.0, 6000.0, f64::INFINITY, 30.0),
+            reward(&d, 30.0, 6000.0, 0.0, 30.0),
         );
     }
 
     #[test]
     fn slo_applies_to_throughput_objective_too() {
         let c = Constraints::max_throughput().with_latency_slo(80.0);
-        assert!(reward(&c, 40.0, 9000.0, 50.0).feasible);
-        let miss = reward(&c, 40.0, 9000.0, 160.0);
+        assert!(reward(&c, 40.0, 9000.0, 50.0, 30.0).feasible);
+        let miss = reward(&c, 40.0, 9000.0, 160.0, 30.0);
         assert!(!miss.feasible);
         assert!((miss.reward + (9000.0 / 40.0) * 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn accuracy_floor_gates_feasibility() {
+        let c = Constraints::dual(25.0, 6500.0).with_min_accuracy(26.0);
+        let full = reward(&c, 30.0, 6000.0, 0.0, 27.6);
+        assert!(full.feasible);
+        assert!((full.reward - 30.0 / 6000.0).abs() < 1e-12);
+        // Same window served by a variant below the floor: infeasible
+        // with the plain Eq. 8 penalty (no latency shaping involved).
+        let degraded = reward(&c, 30.0, 6000.0, 0.0, 24.6);
+        assert!(!degraded.feasible);
+        assert!((degraded.reward + 6000.0 / 30.0).abs() < 1e-12);
+        // The floor applies under the throughput objective too.
+        let t = Constraints::max_throughput().with_min_accuracy(26.0);
+        assert!(reward(&t, 40.0, 9000.0, 0.0, 27.6).feasible);
+        assert!(!reward(&t, 40.0, 9000.0, 0.0, 24.6).feasible);
+        // No floor set: the accuracy argument is inert.
+        let d = Constraints::dual(25.0, 6500.0);
+        assert_eq!(
+            reward(&d, 30.0, 6000.0, 0.0, 0.0),
+            reward(&d, 30.0, 6000.0, 0.0, 41.5),
+        );
     }
 
     #[test]
@@ -147,14 +184,19 @@ mod tests {
             if g.rng.below(2) == 0 {
                 c = c.with_latency_slo(g.rng.range_f64(50.0, 300.0));
             }
+            if g.rng.below(2) == 0 {
+                c = c.with_min_accuracy(g.rng.range_f64(20.0, 40.0));
+            }
             let t1 = g.rng.range_f64(0.0, 120.0);
             let p1 = g.rng.range_f64(2000.0, 10_000.0);
             let t2 = g.rng.range_f64(0.0, 120.0);
             let p2 = g.rng.range_f64(2000.0, 10_000.0);
             let l1 = if g.rng.below(2) == 0 { g.rng.range_f64(1.0, 500.0) } else { 0.0 };
             let l2 = if g.rng.below(2) == 0 { g.rng.range_f64(1.0, 500.0) } else { 0.0 };
-            let r1 = reward(&c, t1, p1, l1);
-            let r2 = reward(&c, t2, p2, l2);
+            let a1 = g.rng.range_f64(15.0, 45.0);
+            let a2 = g.rng.range_f64(15.0, 45.0);
+            let r1 = reward(&c, t1, p1, l1, a1);
+            let r2 = reward(&c, t2, p2, l2, a2);
             if r1.feasible && !r2.feasible {
                 prop::assert_true(r1.reward > r2.reward, "feasible outranks")?;
             }
@@ -173,8 +215,8 @@ mod tests {
             let p1 = g.rng.range_f64(2000.0, 10_000.0);
             let t2 = g.rng.range_f64(1.0, 100.0);
             let p2 = g.rng.range_f64(2000.0, 10_000.0);
-            let r1 = reward(&c, t1, p1, 0.0).reward;
-            let r2 = reward(&c, t2, p2, 0.0).reward;
+            let r1 = reward(&c, t1, p1, 0.0, 30.0).reward;
+            let r2 = reward(&c, t2, p2, 0.0, 30.0).reward;
             prop::assert_true(
                 (r1 > r2) == (t1 / p1 > t2 / p2),
                 "efficiency ordering",

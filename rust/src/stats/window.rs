@@ -135,6 +135,7 @@ mod tests {
                 mem_freq_mhz: 1600,
                 concurrency: 2,
                 max_batch: 1,
+                variant: 0,
             },
             throughput_fps: fps,
             power_mw: mw,

@@ -72,7 +72,7 @@ impl Trace {
     pub fn to_csv(&self) -> Csv {
         let mut csv = Csv::new(&[
             "iter", "cpu_freq_mhz", "cpu_cores", "gpu_freq_mhz", "mem_freq_mhz",
-            "concurrency", "max_batch", "throughput_fps", "power_mw", "failed",
+            "concurrency", "max_batch", "variant", "throughput_fps", "power_mw", "failed",
         ]);
         for s in &self.steps {
             csv.push(vec![
@@ -83,6 +83,7 @@ impl Trace {
                 s.config.mem_freq_mhz.to_string(),
                 s.config.concurrency.to_string(),
                 s.config.max_batch.to_string(),
+                s.config.variant.to_string(),
                 format!("{:.3}", s.throughput_fps),
                 format!("{:.1}", s.power_mw),
                 (s.failed as u8).to_string(),
@@ -110,9 +111,11 @@ impl Trace {
             col("mem_freq_mhz")?,
             col("concurrency")?,
         );
-        // Traces recorded before the batch dimension existed have no
-        // `max_batch` column; they were measured at the implicit cap of 1.
+        // Traces recorded before the batch/variant dimensions existed
+        // lack those columns; they were measured at the implicit cap of
+        // 1 serving the full-accuracy baseline variant.
         let cb = csv.col("max_batch");
+        let cv = csv.col("variant");
         let (ti, pi, fi, ii) = (
             col("throughput_fps")?,
             col("power_mw")?,
@@ -135,6 +138,10 @@ impl Trace {
                     max_batch: match cb {
                         Some(i) => f(i)? as u32,
                         None => 1,
+                    },
+                    variant: match cv {
+                        Some(i) => f(i)? as u32,
+                        None => 0,
                     },
                 },
                 throughput_fps: f(ti)?,
@@ -245,6 +252,7 @@ mod tests {
             mem_freq_mhz: 1,
             concurrency: 1,
             max_batch: 1,
+            variant: 0,
         };
         assert!(replay.measure(&unseen).is_err());
     }
@@ -255,6 +263,7 @@ mod tests {
                     0,1390,4,630,1690,2,31.500,6400.0,0\n";
         let t = Trace::parse(text).unwrap();
         assert_eq!(t.steps[0].config.max_batch, 1);
+        assert_eq!(t.steps[0].config.variant, 0, "legacy traces served the baseline variant");
         assert_eq!(t.steps[0].config.concurrency, 2);
     }
 

@@ -112,6 +112,7 @@ impl Environment for CounterEnv {
             gpu_util: 0.5,
             cpu_util: 0.5,
             mem_util: 0.5,
+            accuracy: 30.0,
             failed: None,
         }
     }
@@ -258,6 +259,7 @@ fn property_tenant_drift_restarts_stay_per_tenant() {
                     model: ModelKind::ALL[i],
                     target_fps: 20.0,
                     weight: 1.0,
+                    min_accuracy: None,
                 },
                 Box::new(env.with_power(2000.0)),
                 base_seed + i as u64,

@@ -21,12 +21,12 @@ pub fn scripted_pair(global_budget_mw: f64, power_mw: f64) -> TenantArbiter {
         .budget_iters(3)
         .hold_windows(0);
     arb.add_tenant(
-        Tenant { name: "cam", model: ModelKind::Yolo, target_fps: 20.0, weight: 1.0 },
+        Tenant { name: "cam", model: ModelKind::Yolo, target_fps: 20.0, weight: 1.0, min_accuracy: None },
         Box::new(StepEnv::constant().with_power(power_mw)),
         1,
     );
     arb.add_tenant(
-        Tenant { name: "lidar", model: ModelKind::Frcnn, target_fps: 20.0, weight: 1.0 },
+        Tenant { name: "lidar", model: ModelKind::Frcnn, target_fps: 20.0, weight: 1.0, min_accuracy: None },
         Box::new(StepEnv::constant().with_power(power_mw)),
         2,
     );

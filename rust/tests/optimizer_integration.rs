@@ -123,6 +123,6 @@ fn prohibited_list_shrinks_wasted_iterations() {
         let cfg = opt.propose();
         assert!(seen.insert(cfg), "proposal repeated: {cfg}");
         let m = dev.run(cfg);
-        opt.observe(cfg, m.throughput_fps, m.power_mw, m.p99_latency_ms);
+        opt.observe(cfg, m.throughput_fps, m.power_mw, m.p99_latency_ms, m.accuracy);
     }
 }
